@@ -1,0 +1,115 @@
+//! Coordinator benchmarks: dispatch overhead, batching behaviour, and —
+//! when artifacts are present — end-to-end serving latency/throughput
+//! over real compiled models (the paper-system-as-deployed numbers in
+//! EXPERIMENTS.md §Perf).
+
+use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, MockExecutor, Quality};
+use ppc::util::bench::{black_box, Bencher};
+use ppc::util::prng::Rng;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn mock_coordinator(batch_wait_ms: u64) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        queue_capacity: 256,
+        batch_size: 16,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(batch_wait_ms),
+    };
+    Coordinator::start(cfg, || {
+        Ok(MockExecutor::new(&[
+            "gdf/conv", "gdf/ds16", "gdf/ds32",
+            "blend/conv", "blend/ds16", "blend/ds32",
+            "frnn/conv", "frnn/th48ds16", "frnn/ds32",
+        ]))
+    })
+    .unwrap()
+}
+
+fn main() {
+    let b = Bencher::from_env();
+
+    // dispatch overhead (mock executor, no model time)
+    let coord = mock_coordinator(1);
+    let image: Vec<i32> = (0..4096).collect();
+    b.run("dispatch: denoise round-trip (mock)", || {
+        let t = coord
+            .submit_blocking(Job::Denoise { image: image.clone() }, Quality::Precise)
+            .unwrap();
+        black_box(t.wait().unwrap());
+    });
+
+    // batching throughput: 256 classify requests through the batcher
+    let mut rng = Rng::new(9);
+    let faces: Vec<Vec<i32>> = (0..256)
+        .map(|_| (0..960).map(|_| rng.below(160) as i32).collect())
+        .collect();
+    b.run("batcher: 256 classifies (mock, batch=16)", || {
+        let tickets: Vec<_> = faces
+            .iter()
+            .map(|f| {
+                coord
+                    .submit_blocking(Job::Classify { pixels: f.clone() }, Quality::Precise)
+                    .unwrap()
+            })
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    println!("\nmock metrics:\n{}", coord.metrics().report());
+
+    // real artifacts, when built
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let coord = Coordinator::with_artifacts(&dir, CoordinatorConfig::default()).unwrap();
+        let img_len = 256 * 256;
+        let img: Vec<i32> = (0..img_len).map(|_| rng.below(256) as i32).collect();
+        b.run("e2e: denoise 256x256 (precise route)", || {
+            let t = coord
+                .submit_blocking(Job::Denoise { image: img.clone() }, Quality::Precise)
+                .unwrap();
+            black_box(t.wait().unwrap());
+        });
+        b.run("e2e: denoise 256x256 (economy route)", || {
+            let t = coord
+                .submit_blocking(Job::Denoise { image: img.clone() }, Quality::Economy)
+                .unwrap();
+            black_box(t.wait().unwrap());
+        });
+        b.run("e2e: blend 256x256", || {
+            let t = coord
+                .submit_blocking(
+                    Job::Blend { p1: img.clone(), p2: img.clone(), alpha: 64 },
+                    Quality::Balanced,
+                )
+                .unwrap();
+            black_box(t.wait().unwrap());
+        });
+        // saturated classify throughput (full batches)
+        let t0 = Instant::now();
+        let n = 512;
+        let tickets: Vec<_> = (0..n)
+            .map(|i| {
+                coord
+                    .submit_blocking(
+                        Job::Classify { pixels: faces[i % faces.len()].clone() },
+                        Quality::Balanced,
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "\ne2e classify: {n} faces in {dt:.2}s = {:.0} faces/s (batch={})",
+            n as f64 / dt,
+            coord.metrics().mean_batch_size()
+        );
+        println!("\ne2e metrics:\n{}", coord.metrics().report());
+    } else {
+        println!("\n(artifacts not built — skipping e2e section; run `make artifacts`)");
+    }
+}

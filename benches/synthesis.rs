@@ -1,0 +1,118 @@
+//! Micro-benchmarks of the synthesis substrate — the perf-pass targets:
+//! ISOP, the Espresso polish loop, AIG construction and technology
+//! mapping on the paper's standard blocks, plus the supplementary-table
+//! composed multiplier.
+
+use ppc::logic::espresso::{minimize, Options};
+use ppc::logic::factor::factor;
+use ppc::logic::map::{map_aig, Objective};
+use ppc::logic::library::cells90;
+use ppc::logic::synth::{self, BlockSpec};
+use ppc::logic::tt::Tt;
+use ppc::logic::{aig::Aig, isop};
+use ppc::ppc::blocks;
+use ppc::ppc::preprocess::{Chain, Preproc, ValueSet};
+use ppc::util::bench::{black_box, Bencher};
+
+fn adder_spec(care: impl FnMut(u64) -> bool) -> BlockSpec {
+    BlockSpec::from_fn(9, 5, "add4c", |m| (m & 15) + ((m >> 4) & 15) + (m >> 8), care)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+
+    // ISOP on the hardest single output of the flat 8×8 multiplier
+    let mult_bit7 = Tt::from_fn(16, |m| (((m & 0xff) * (m >> 8)) >> 7) & 1 == 1);
+    b.run("isop: flat 8x8 mult, output bit 7 (16 vars)", || {
+        black_box(isop::isop(&mult_bit7, &mult_bit7));
+    });
+
+    // Espresso loop on a 4-bit adder segment (full + DS4-sparse)
+    let full_seg = adder_spec(|_| true);
+    b.run("two_level: 4-bit adder segment (full care)", || {
+        black_box(synth::two_level(&full_seg, Options::default()));
+    });
+    let sparse_seg = adder_spec(|m| (m & 15) % 4 == 0 && ((m >> 4) & 15) % 4 == 0);
+    b.run("two_level: 4-bit adder segment (DS4 care)", || {
+        black_box(synth::two_level(&sparse_seg, Options::default()));
+    });
+
+    // multi-level: factoring + AIG + mapping of a 4×4 multiplier
+    let mul4 = BlockSpec::from_fn(8, 8, "mul4", |m| (m & 15) * (m >> 4), |_| true);
+    let two = synth::two_level(&mul4, Options::default());
+    b.run("factor+aig: 4x4 multiplier", || {
+        let mut g = Aig::new(8);
+        for cover in &two.covers {
+            let e = factor(cover);
+            let out = g.add_expr(&e);
+            g.outputs.push(out);
+        }
+        black_box(g.num_ands());
+    });
+    let mut g = Aig::new(8);
+    for cover in &two.covers {
+        let e = factor(cover);
+        let out = g.add_expr(&e);
+        g.outputs.push(out);
+    }
+    b.run("techmap: 4x4 multiplier AIG", || {
+        black_box(map_aig(&g, &cells90(), Objective::Area));
+    });
+
+    // full flow: composed 8×8 multiplier with DS16 sparsity
+    let ds16 = ValueSet::full(8).map_chain(&Chain::of(Preproc::Ds(16)));
+    b.run("full flow: composed 8x8 PPM (DS16)", || {
+        black_box(ppc::ppc::flow::composed_mult8(
+            "bench_mult",
+            &ds16,
+            &ds16,
+            Objective::Area,
+        ));
+    });
+
+    // care-set propagation (value-set machinery)
+    let full = ValueSet::full(8);
+    b.run("adder_segment_specs: 8+8 full range", || {
+        black_box(blocks::adder_segment_specs(8, 8, &full, &full));
+    });
+
+    ablation();
+}
+
+/// Ablation: the DESIGN.md §multi-level design choices, measured.
+/// Run via `cargo bench --bench synthesis` (appended output section).
+#[allow(dead_code)]
+fn ablation() {
+    use ppc::logic::espresso::Options as EOpts;
+    use ppc::logic::library::cells90;
+    println!("\n== ablation: multi-level path (area GE, Objective::Area) ==");
+    println!("{:<30} {:>10} {:>10} {:>10}", "block", "algebraic", "shannon", "best-of");
+    let lib = cells90();
+    let cases: Vec<(&str, BlockSpec)> = vec![
+        ("4-bit adder segment (full)", adder_spec(|_| true)),
+        (
+            "4-bit adder segment (DS4)",
+            adder_spec(|m| (m & 15) % 4 == 0 && ((m >> 4) & 15) % 4 == 0),
+        ),
+        (
+            "4x4 multiplier (full)",
+            BlockSpec::from_fn(8, 8, "mul4", |m| (m & 15) * (m >> 4), |_| true),
+        ),
+    ];
+    for (name, mut spec) in cases {
+        if name.contains("adder") {
+            spec.bdd_order = Some(vec![3, 7, 2, 6, 1, 5, 0, 4, 8]);
+        }
+        let two = synth::two_level(&spec, EOpts::default());
+        let alg = synth::multi_level_algebraic(&spec, &two, Objective::Area, &lib);
+        let sh = synth::multi_level_shannon(&spec, Objective::Area, &lib);
+        let best = synth::multi_level(&spec, &two, Objective::Area);
+        println!(
+            "{:<30} {:>10.1} {:>10.1} {:>10.1}",
+            name,
+            alg.area_ge(),
+            sh.area_ge(),
+            best.area_ge()
+        );
+    }
+}

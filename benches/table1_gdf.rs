@@ -1,0 +1,38 @@
+//! Bench + regenerator for Table 1 (Gaussian denoising filter).
+//!
+//! Default: quick configuration. Set `PPC_BENCH_FULL=1` for the paper's
+//! full row set. Also micro-benches the bit-accurate filter datapath
+//! (the L3 hot loop a deployed GDF would run in software simulation).
+
+use ppc::apps::gdf;
+use ppc::apps::image::{add_gaussian_noise, synthetic_photo};
+use ppc::ppc::preprocess::{Chain, Preproc};
+use ppc::tables::table1;
+use ppc::util::bench::{black_box, Bencher};
+
+fn main() {
+    let full = std::env::var("PPC_BENCH_FULL").map_or(false, |v| v == "1");
+    let cfg = if full {
+        table1::Config::default()
+    } else {
+        table1::Config { image_size: 96, ds_rates: vec![2, 4, 8, 16] }
+    };
+    let t0 = std::time::Instant::now();
+    let table = table1::generate(&cfg);
+    println!("{}", table.render());
+    println!("table 1 regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let b = Bencher::from_env();
+    let img = add_gaussian_noise(&synthetic_photo(256, 256, 1), 10.0, 2);
+    b.run("gdf_filter 256x256 conventional", || {
+        black_box(gdf::gdf_filter(&img, &Chain::id()));
+    });
+    let ds16 = Chain::of(Preproc::Ds(16));
+    b.run("gdf_filter 256x256 DS16", || {
+        black_box(gdf::gdf_filter(&img, &ds16));
+    });
+    let px = [10u8, 20, 30, 40, 50, 60, 70, 80, 90];
+    b.run("gdf_window single", || {
+        black_box(gdf::gdf_window(black_box(px), &Chain::id()));
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench + regenerator for Table 2 (image blending).
+//!
+//! `PPC_BENCH_FULL=1` regenerates all 11 paper rows with flat 16-input
+//! two-level literal counts; the default keeps the structure but trims
+//! the row set for CI-speed.
+
+use ppc::apps::blend::{self, Alpha};
+use ppc::apps::image::synthetic_photo;
+use ppc::ppc::preprocess::{Chain, Preproc};
+use ppc::tables::table2;
+use ppc::util::bench::{black_box, Bencher};
+
+fn main() {
+    let full = std::env::var("PPC_BENCH_FULL").map_or(false, |v| v == "1");
+    let cfg = if full {
+        table2::Config::default()
+    } else {
+        table2::Config {
+            image_size: 96,
+            ds_rates: vec![8, 16, 32],
+            natural_ds_rates: vec![8, 16],
+            flat_literals: false,
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let table = table2::generate(&cfg);
+    println!("{}", table.render());
+    println!("table 2 regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let b = Bencher::from_env();
+    let p1 = synthetic_photo(256, 256, 3);
+    let p2 = synthetic_photo(256, 256, 4);
+    let alpha = Alpha::from_ratio(0.5);
+    b.run("blend 256x256 conventional", || {
+        black_box(blend::blend_images(&p1, &p2, alpha, &Chain::id(), &Chain::id()));
+    });
+    let ds16 = Chain::of(Preproc::Ds(16));
+    b.run("blend 256x256 DS16", || {
+        black_box(blend::blend_images(&p1, &p2, alpha, &ds16, &ds16));
+    });
+    // flat two-level of the natural-sparsity multiplier — the heavy
+    // two-level workload of this table
+    if full {
+        let cfgn = blend::BlendConfig::of(true, Chain::of(Preproc::Ds(16)));
+        b.run("flat literals natural+DS16", || {
+            black_box(blend::blend_flat_literals(&cfgn));
+        });
+    }
+}

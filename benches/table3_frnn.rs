@@ -1,0 +1,47 @@
+//! Bench + regenerator for Table 3 (face-recognition network).
+//!
+//! `PPC_BENCH_FULL=1` runs all nine paper rows with full training
+//! budgets and flat literal counts; the default regenerates a
+//! representative subset quickly. Also micro-benches the fixed-point
+//! forward pass (the serving hot loop).
+
+use ppc::apps::frnn::{dataset, net};
+use ppc::ppc::preprocess::Chain;
+use ppc::tables::table3;
+use ppc::util::bench::{black_box, Bencher};
+
+fn main() {
+    let full = std::env::var("PPC_BENCH_FULL").map_or(false, |v| v == "1");
+    let cfg = if full {
+        table3::Config::default()
+    } else {
+        table3::Config {
+            samples_per_combo: 2,
+            max_epochs: 50,
+            flat_literals: false,
+            rows: vec![1, 2, 4, 5, 9],
+            ..Default::default()
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let table = table3::generate(&cfg);
+    println!("{}", table.render());
+    println!("table 3 regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    // micro-benches: training epoch + quantized forward
+    let b = Bencher::from_env();
+    let ds = dataset::generate(2, 1);
+    let tc = net::TrainConfig { max_epochs: 1, ..Default::default() };
+    b.run("frnn train 1 epoch (128 faces)", || {
+        black_box(net::train(&ds, &tc));
+    });
+    let r = net::train(&ds, &net::TrainConfig { max_epochs: 5, ..Default::default() });
+    let q = net::quantize(&r.net);
+    let face = &ds.test[0];
+    b.run("frnn fixed-point forward (1 face)", || {
+        black_box(net::forward_fx(&q, face, &Chain::id(), &Chain::id()));
+    });
+    b.run("frnn evaluate test split", || {
+        black_box(net::evaluate_fx(&q, &ds.test, &Chain::id(), &Chain::id()));
+    });
+}

@@ -1,0 +1,69 @@
+//! The paper's error equations (2)–(10), demonstrated: closed forms vs
+//! exhaustive enumeration for PPA/PPM under DS and TH preprocessing,
+//! plus the DC-count identities of eqs. (1) and (6).
+//!
+//! Run: `cargo run --release --example error_models`
+
+use ppc::ppc::blocks;
+use ppc::ppc::error;
+use ppc::ppc::preprocess::{Chain, Preproc, ValueSet};
+
+fn main() {
+    println!("eq. (1): DC rows from DS_x ⊗ DS_x' on a 2×WL-input block");
+    println!("{:>4} {:>4} {:>12} {:>12}", "x", "x'", "measured", "eq.(1)");
+    for (x, xp) in [(2u32, 2u32), (4, 4), (8, 8), (2, 8)] {
+        let a = ValueSet::full(4).map_chain(&Chain::of(Preproc::Ds(x)));
+        let b = ValueSet::full(4).map_chain(&Chain::of(Preproc::Ds(xp)));
+        let spec = blocks::ppa_flat_spec(4, 4, &a, &b);
+        let measured = spec.dc_fraction();
+        let eq1 = 1.0 - (1.0 / x as f64) * (1.0 / xp as f64);
+        println!("{x:>4} {xp:>4} {measured:>12.4} {eq1:>12.4}");
+        assert!((measured - eq1).abs() < 1e-12);
+    }
+
+    println!("\neq. (6): DC rows from TH_x ⊗ TH_x (y ≥ x keeps 2^WL − x values)");
+    for x in [16u32, 48] {
+        let s = ValueSet::full(8).map_chain(&Chain::of(Preproc::Th { x, y: x }));
+        let spec = blocks::ppa_flat_spec(8, 8, &s, &s);
+        let kept = (256 - x) as f64 / 256.0;
+        println!(
+            "  TH{x}: measured DC fraction {:.4}, expected {:.4}",
+            spec.dc_fraction(),
+            1.0 - kept * kept
+        );
+    }
+
+    println!("\neqs. (2)-(5): DS closed forms vs exhaustive (WL = 8)");
+    println!("{:>6} {:>26} {:>26}", "x", "PPA (PE, ME=MAE)", "PPM (PE, ME=MAE)");
+    for k in 1..=5u32 {
+        let x = 1 << k;
+        let ds = Chain::of(Preproc::Ds(x));
+        let ea = error::exhaustive_adder(8, &ds, &ds);
+        let ca = error::ds_adder(8, x);
+        let em = error::exhaustive_mult(8, &ds, &ds);
+        let cm = error::ds_mult(8, x);
+        println!(
+            "{x:>6} ({:.4}={:.4}, {:>7.1}={:<7.1}) ({:.4}={:.4}, {:>8.1}={:<8.1})",
+            ea.pe, ca.pe, ea.mae, ca.mae, em.pe, cm.pe, em.mae, cm.mae
+        );
+        assert!((ea.pe - ca.pe).abs() < 1e-12 && (em.mae - cm.mae).abs() < 1e-6);
+    }
+
+    println!("\neqs. (7)-(10): TH closed forms vs exhaustive (WL = 8, paper configs)");
+    for (x, y) in [(48u32, 0u32), (48, 48), (16, 16)] {
+        let th = Chain::of(Preproc::Th { x, y });
+        let ea = error::exhaustive_adder(8, &th, &th);
+        let ca = error::th_adder(8, x, y);
+        let pm = error::th_mult_pe(8, x, y);
+        let em = error::exhaustive_mult(8, &th, &th);
+        println!(
+            "  TH{x}^{y}: adder PE {:.4} (closed {:.4}), MAE {:.2} (closed {:.2}); mult PE {:.4} (closed {:.4})",
+            ea.pe, ca.pe, ea.mae, ca.mae, em.pe, pm
+        );
+        assert!((ea.pe - ca.pe).abs() < 1e-12 && (em.pe - pm).abs() < 1e-12);
+    }
+
+    println!("\nNOTE: the printed eqs. 3/5/7/8/10 in the paper contain OCR");
+    println!("corruption; see EXPERIMENTS.md §Equation-notes for the");
+    println!("re-derivations (eq. 5 matches after the 2^(2WL-2) → 2^(2k-2) fix).");
+}

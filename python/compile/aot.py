@@ -1,0 +1,125 @@
+"""AOT compilation: lower every (app, config) graph to HLO *text* for the
+rust PJRT runtime.
+
+HLO text — NOT `lowered.compile()` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (behind the published `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides
+    # big literals as `constant({...})`, which the text parser on the
+    # rust side would silently turn into zeros — the baked FRNN weights
+    # must survive the text round trip.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO text contains elided constants"
+    return text
+
+
+def lower_to_file(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def default_weights():
+    """Deterministic fallback weights when training hasn't run: the
+    serving path still exercises the full stack (documented in
+    artifacts/manifest.json so accuracy-bearing results aren't read off
+    untrained weights)."""
+    rng = np.random.default_rng(42)
+    return {
+        "w1": (rng.standard_normal(40 * 960) * 0.03).tolist(),
+        "b1": np.zeros(40).tolist(),
+        "w2": (rng.standard_normal(7 * 40) * 0.18).tolist(),
+        "b2": np.zeros(7).tolist(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="limit to one app (gdf|blend|frnn)")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    h, w = model.SERVE_H, model.SERVE_W
+    img_spec = jax.ShapeDtypeStruct((h, w), jnp.int32)
+    manifest = {"artifacts": []}
+
+    if args.only in (None, "gdf"):
+        for name, chain in model.GDF_CONFIGS.items():
+            path = os.path.join(out, f"gdf_{name}.hlo.txt")
+            n = lower_to_file(model.gdf_model(chain), (img_spec,), path)
+            manifest["artifacts"].append(
+                {"app": "gdf", "config": name, "file": os.path.basename(path),
+                 "inputs": [["i32", [h, w]]], "outputs": [["i32", [h, w]]], "bytes": n}
+            )
+            print(f"gdf_{name}: {n} chars")
+
+    if args.only in (None, "blend"):
+        alpha_spec = jax.ShapeDtypeStruct((1,), jnp.int32)
+        for name, chain in model.BLEND_CONFIGS.items():
+            path = os.path.join(out, f"blend_{name}.hlo.txt")
+            n = lower_to_file(
+                model.blend_model(chain, chain), (img_spec, img_spec, alpha_spec), path
+            )
+            manifest["artifacts"].append(
+                {"app": "blend", "config": name, "file": os.path.basename(path),
+                 "inputs": [["i32", [h, w]], ["i32", [h, w]], ["i32", [1]]],
+                 "outputs": [["i32", [h, w]]], "bytes": n}
+            )
+            print(f"blend_{name}: {n} chars")
+
+    if args.only in (None, "frnn"):
+        px_spec = jax.ShapeDtypeStruct((model.FRNN_BATCH, 960), jnp.int32)
+        for name, (ci, cw) in model.FRNN_CONFIGS.items():
+            # per-config fine-tuned weights (train_frnn.py exports one
+            # file per serving configuration)
+            suffix = "" if name == "conv" else f"_{name}"
+            wpath = os.path.join(out, f"frnn_weights{suffix}.json")
+            fw = model.load_float_weights(wpath)
+            trained = fw is not None
+            if fw is None:
+                fw = default_weights()
+            weights = model.quantize_weights(fw)
+            path = os.path.join(out, f"frnn_{name}.hlo.txt")
+            n = lower_to_file(model.frnn_model(weights, ci, cw), (px_spec,), path)
+            manifest["artifacts"].append(
+                {"app": "frnn", "config": name, "file": os.path.basename(path),
+                 "inputs": [["i32", [model.FRNN_BATCH, 960]]],
+                 "outputs": [["i32", [model.FRNN_BATCH, 7]]],
+                 "trained_weights": trained, "bytes": n}
+            )
+            print(f"frnn_{name}: {n} chars (trained={trained})")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts -> {out}")
+
+
+if __name__ == "__main__":
+    main()

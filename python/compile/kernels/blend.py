@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: the Fig. 7 image-blending datapath.
+
+Two 8x8->16 multiplies, each truncated to its top 8 bits, then an 8-bit
+add — per pixel, tiled in row strips. The coefficients arrive as (1, 1)
+scalar blocks (SMEM-resident on TPU)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+STRIP = 8
+
+
+def _blend_strip(p1_ref, p2_ref, c1_ref, c2_ref, out_ref):
+    c1 = c1_ref[0, 0]
+    c2 = c2_ref[0, 0]
+    m1 = (p1_ref[...] * c1) >> 8
+    m2 = (p2_ref[...] * c2) >> 8
+    out_ref[...] = jnp.minimum(m1 + m2, 255)
+
+
+def blend(p1_i32, p2_i32, c1, c2):
+    """Blend two (H, W) int32 images with int32 scalar coefficients
+    (already preprocessed by the caller)."""
+    h, w = p1_i32.shape
+    strip = STRIP if h % STRIP == 0 else 1
+    c1a = jnp.asarray(c1, jnp.int32).reshape(1, 1)
+    c2a = jnp.asarray(c2, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        _blend_strip,
+        grid=(h // strip,),
+        in_specs=[
+            pl.BlockSpec((strip, w), lambda i: (i, 0)),
+            pl.BlockSpec((strip, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((strip, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.int32),
+        interpret=True,
+    )(p1_i32, p2_i32, c1a, c2a)

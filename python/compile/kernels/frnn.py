@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: the FRNN quantized MAC layer (Fig. 10).
+
+One kernel computes a full quantized layer for a batch: int32 matmul
+(the MAC array), bias add, then the shared sigmoid LUT via gather. The
+matmul is the MXU-shaped part; on TPU the natural mapping is an int8
+matmul on the MXU with int32 accumulation — here the operands are int32
+lanes under interpret=True (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _layer_kernel(x_ref, w_ref, b_ref, lut_ref, out_ref, *, d):
+    # x: (B, IN), w: (OUT, IN), b: (OUT,), out: (B, OUT)
+    acc = jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ) + b_ref[...][None, :]
+    # truncating division toward zero (rust i64 `/`)
+    sign = jnp.sign(acc)
+    idx = jnp.clip(sign * (jnp.abs(acc) // d), -128, 127) + 128
+    out_ref[...] = lut_ref[...][idx]
+
+
+def quant_layer(x, w, b, d):
+    """Quantized layer: sigmoid_fx(x @ w.T + b, d). x: (B, IN) int32,
+    w: (OUT, IN) int32 (already weight-preprocessed), b: (OUT,) int32,
+    d the static accumulator divisor."""
+    batch, _ = x.shape
+    out = w.shape[0]
+    lut = ref.sigmoid_lut()
+    return pl.pallas_call(
+        functools.partial(_layer_kernel, d=int(d)),
+        out_shape=jax.ShapeDtypeStruct((batch, out), jnp.int32),
+        interpret=True,
+    )(x, w, b, lut)
+
+
+def forward_fx(pixels, w1q, b1q, w2q, b2q, d1, d2, chain_img=(), chain_w=()):
+    """Batched bit-accurate forward: pixels (B, 960) int32 -> (B, 7)."""
+    px = ref.apply_chain(pixels.astype(jnp.int32), chain_img)
+    w1p = ref.preprocess_weight_bytes(w1q.astype(jnp.int32), chain_w)
+    w2p = ref.preprocess_weight_bytes(w2q.astype(jnp.int32), chain_w)
+    h = quant_layer(px, w1p, b1q, d1)
+    return quant_layer(h, w2p, b2q, d2)

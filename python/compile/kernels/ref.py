@@ -1,0 +1,140 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These implement the paper's bit-accurate datapaths in plain jax.numpy so
+pytest can assert the Pallas kernels (and, transitively, the HLO the rust
+runtime executes) match the hardware semantics the rust simulators use.
+"""
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------
+# Preprocessings (paper Section II): DS_x and TH_x^y
+# ---------------------------------------------------------------------
+
+
+def ds(v, x: int):
+    """DS_x: i -> i - (i mod x); x a power of two. Integer input."""
+    assert x >= 1 and (x & (x - 1)) == 0, "DS parameter must be a power of 2"
+    return v - (v % x)
+
+
+def th(v, x: int, y: int):
+    """TH_x^y: values < x map to y."""
+    return jnp.where(v < x, jnp.asarray(y, v.dtype), v)
+
+
+def apply_chain(v, chain):
+    """chain: tuple of ("ds", x) / ("th", x, y) tuples."""
+    for op in chain:
+        if op[0] == "ds":
+            v = ds(v, op[1])
+        elif op[0] == "th":
+            v = th(v, op[1], op[2])
+        else:
+            raise ValueError(f"unknown preprocessing {op}")
+    return v
+
+
+# ---------------------------------------------------------------------
+# Gaussian denoising filter (paper Fig. 5 adder tree, bit-accurate)
+# ---------------------------------------------------------------------
+
+
+def gdf(img, chain=()):
+    """3x3 Gaussian 1/16[1 2 1; 2 4 2; 1 2 1] as the Fig. 5 shift-add
+    tree with border replication. img: (H, W) int32 in [0, 255]."""
+    p = apply_chain(img.astype(jnp.int32), chain)
+    pad = jnp.pad(p, 1, mode="edge")
+
+    def w(dy, dx):
+        return pad[1 + dy : 1 + dy + img.shape[0], 1 + dx : 1 + dx + img.shape[1]]
+
+    a1, a2, a3 = w(-1, -1), w(-1, 0), w(-1, 1)
+    a4, a5, a6 = w(0, -1), w(0, 0), w(0, 1)
+    a7, a8, a9 = w(1, -1), w(1, 0), w(1, 1)
+    adder1 = a1 + a3
+    adder2 = a7 + a9
+    adder3 = (a2 << 1) + (a4 << 1)
+    adder4 = (a6 << 1) + (a8 << 1)
+    adder5 = adder1 + adder2
+    adder6 = adder3 + adder4
+    adder7 = adder5 + adder6
+    adder8 = adder7 + (a5 << 2)
+    return jnp.minimum(adder8 >> 4, 255)
+
+
+# ---------------------------------------------------------------------
+# Image blending (paper Fig. 7, bit-accurate)
+# ---------------------------------------------------------------------
+
+
+def blend(p1, p2, alpha: int, chain_img=(), chain_coef=()):
+    """alpha in [0,127]; coefficients alpha and 255-alpha; 16-bit products
+    truncated to their top 8 bits; 8-bit adder."""
+    assert 0 <= alpha <= 127
+    c1 = int(apply_chain(jnp.asarray(alpha, jnp.int32), chain_coef))
+    c2 = int(apply_chain(jnp.asarray(255 - alpha, jnp.int32), chain_coef))
+    q1 = apply_chain(p1.astype(jnp.int32), chain_img)
+    q2 = apply_chain(p2.astype(jnp.int32), chain_img)
+    m1 = (q1 * c1) >> 8
+    m2 = (q2 * c2) >> 8
+    return jnp.minimum(m1 + m2, 255)
+
+
+# ---------------------------------------------------------------------
+# FRNN fixed-point forward (paper Figs. 9-10, bit-accurate)
+# ---------------------------------------------------------------------
+
+LUT_Z_STEP = 16.0 / 255.0  # must match rust apps::frnn::net::LUT_Z_STEP
+
+
+def sigmoid_lut():
+    """256-entry sigmoid LUT, identical to rust apps::frnn::net::sigmoid_lut."""
+    idx = jnp.arange(256, dtype=jnp.float32) - 128.0
+    z = (idx * LUT_Z_STEP).astype(jnp.float32)
+    return jnp.round(255.0 / (1.0 + jnp.exp(-z))).astype(jnp.int32)
+
+
+def trunc_div(acc, d: int):
+    """Integer division truncating toward zero (rust i64 `/` semantics;
+    jnp `//` floors, so negatives need the sign dance)."""
+    sign = jnp.sign(acc)
+    return sign * (jnp.abs(acc) // d)
+
+
+def sigmoid_fx(acc, d: int):
+    """d = layer accumulator divisor (rust QuantFrnn::d1/d2)."""
+    lut = sigmoid_lut()
+    idx = jnp.clip(trunc_div(acc, d), -128, 127) + 128
+    return lut[idx]
+
+
+def preprocess_weight_bytes(w_q, chain):
+    """Apply a preprocessing chain to signed weight bytes via their
+    two's-complement bit pattern (matches rust `apps::frnn::net::mac`)."""
+    if not chain:
+        return w_q
+    byte = jnp.where(w_q < 0, w_q + 256, w_q)
+    byte = apply_chain(byte, chain) & 0xFF
+    return jnp.where(byte >= 128, byte - 256, byte)
+
+
+def frnn_forward_fx(pixels, w1q, b1q, w2q, b2q, d1, d2, chain_img=(), chain_w=()):
+    """Bit-accurate quantized forward. pixels: (960,) int32 in [0,255];
+    w1q: (40, 960) int32 in [-128,127]; b1q: (40,) int32; similarly w2q
+    (7, 40), b2q (7,); d1/d2 the per-layer accumulator divisors.
+    Returns (7,) int32 u8 outputs."""
+    px = apply_chain(pixels.astype(jnp.int32), chain_img)
+    w1p = preprocess_weight_bytes(w1q.astype(jnp.int32), chain_w)
+    acc1 = w1p @ px + b1q
+    h = sigmoid_fx(acc1, d1)
+    w2p = preprocess_weight_bytes(w2q.astype(jnp.int32), chain_w)
+    acc2 = w2p @ h + b2q
+    return sigmoid_fx(acc2, d2)
+
+
+def frnn_forward_float(x, w1, b1, w2, b2):
+    """Float reference forward (training-time semantics)."""
+    h = 1.0 / (1.0 + jnp.exp(-(w1 @ x + b1)))
+    o = 1.0 / (1.0 + jnp.exp(-(w2 @ h + b2)))
+    return o

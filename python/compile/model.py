@@ -1,0 +1,120 @@
+"""L2: the application compute graphs, composed from the L1 Pallas
+kernels. These are the functions `aot.py` lowers to HLO text for the
+rust runtime — python never runs at request time.
+
+Preprocessing chains are *static* configuration: each (app, chain)
+pair lowers to its own artifact, mirroring the paper where each PPC
+configuration is a distinct piece of hardware.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+
+from .kernels import blend as blend_k
+from .kernels import frnn as frnn_k
+from .kernels import gaussian as gaussian_k
+from .kernels import preprocess as pre_k
+from .kernels import ref
+
+# The PPC configurations baked into serving artifacts.
+GDF_CONFIGS = {
+    "conv": (),
+    "ds16": (("ds", 16),),
+    "ds32": (("ds", 32),),
+}
+BLEND_CONFIGS = {
+    "conv": (),
+    "ds16": (("ds", 16),),
+    "ds32": (("ds", 32),),
+}
+FRNN_CONFIGS = {
+    "conv": ((), ()),
+    "th48ds16": ((("th", 48, 48), ("ds", 16)), (("ds", 16),)),
+    "ds32": ((("ds", 32),), (("ds", 32),)),
+}
+
+SERVE_H, SERVE_W = 256, 256
+FRNN_BATCH = 16
+
+
+def gdf_model(chain):
+    """(H, W) int32 image -> filtered int32 image."""
+
+    def fn(img):
+        q = pre_k.preprocess(img, chain)
+        return (gaussian_k.gdf(q),)
+
+    return fn
+
+
+def blend_model(chain_img, chain_coef):
+    """(p1, p2, alpha) -> blended image. alpha: (1,) int32 in [0, 127]."""
+
+    def fn(p1, p2, alpha):
+        a = alpha[0]
+        c1 = ref.apply_chain(a, chain_coef)
+        c2 = ref.apply_chain(255 - a, chain_coef)
+        q1 = pre_k.preprocess(p1, chain_img)
+        q2 = pre_k.preprocess(p2, chain_img)
+        return (blend_k.blend(q1, q2, c1, c2),)
+
+    return fn
+
+
+def frnn_model(weights, chain_img, chain_w):
+    """(B, 960) int32 pixel batch -> (B, 7) int32 u8 outputs, with the
+    quantized weights baked in as constants."""
+    w1q = jnp.asarray(weights["w1q"], jnp.int32)
+    b1q = jnp.asarray(weights["b1q"], jnp.int32)
+    w2q = jnp.asarray(weights["w2q"], jnp.int32)
+    b2q = jnp.asarray(weights["b2q"], jnp.int32)
+    d1, d2 = int(weights["d1"]), int(weights["d2"])
+
+    def fn(pixels):
+        return (
+            frnn_k.forward_fx(pixels, w1q, b1q, w2q, b2q, d1, d2, chain_img, chain_w),
+        )
+
+    return fn
+
+
+def quantize_weights(float_weights):
+    """Float weights dict (w1, b1, w2, b2 flat lists, rust io schema) ->
+    quantized arrays, bit-identical to rust apps::frnn::net::quantize:
+    per-layer dynamic scale (byte range fully used), round-half-away in
+    f64, truncating LUT divisors d = round(S*16)."""
+    import numpy as np
+
+    w1 = np.asarray(float_weights["w1"], np.float32).reshape(40, 960)
+    b1 = np.asarray(float_weights["b1"], np.float32)
+    w2 = np.asarray(float_weights["w2"], np.float32).reshape(7, 40)
+    b2 = np.asarray(float_weights["b2"], np.float32)
+
+    def scale(w):
+        m = float(np.max(np.abs(w.astype(np.float64))))
+        return 64.0 if m <= 0.0 else 127.0 / m
+
+    def rha(x):  # round half away from zero, f64
+        return np.sign(x) * np.floor(np.abs(x) + 0.5)
+
+    def q(w, s):
+        return np.clip(rha(w.astype(np.float64) * s), -128, 127).astype(np.int32)
+
+    def qb(b, s):
+        return rha(b.astype(np.float64) * s * 255.0).astype(np.int32)
+
+    s1, s2 = scale(w1), scale(w2)
+    return {
+        "w1q": q(w1, s1), "b1q": qb(b1, s1),
+        "w2q": q(w2, s2), "b2q": qb(b2, s2),
+        "d1": int(max(1.0, rha(s1 * 16.0))), "d2": int(max(1.0, rha(s2 * 16.0))),
+    }
+
+
+def load_float_weights(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,195 @@
+"""L2 fwd/bwd: JAX training of the 960-40-7 face-recognition network.
+
+Reads the face dataset exported by the rust generator
+(`ppc gen-faces --out artifacts/faces.json`), trains the float network
+with full-batch gradient descent + momentum on MSE loss (targets
+0.1/0.9), and writes the float weights in the rust `apps::frnn::io`
+schema plus the loss curve.
+
+This is the canonical L2 forward/backward of the stack; the rust side
+carries an equivalent reference trainer for self-contained benches — the
+two are cross-validated by `python/tests/test_train.py`.
+
+Usage: python -m compile.train_frnn [--epochs 400] [--faces ...] [--out ...]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIDDEN = 40
+OUTPUTS = 7
+PIXELS = 960
+
+
+def load_faces(path):
+    with open(path) as f:
+        data = json.load(f)
+
+    def split(part):
+        xs = np.asarray([f["pixels"] for f in data[part]], np.float32) / 255.0
+        ts = []
+        for f in data[part]:
+            i, p, g = f["id"], f["pose"], f["sunglasses"]
+            bits = [i & 1, i & 2, i & 4, i & 8, p & 1, p & 2, int(g)]
+            ts.append([0.9 if b else 0.1 for b in bits])
+        return xs, np.asarray(ts, np.float32)
+
+    return split("train"), split("test")
+
+
+def init_params(key):
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / np.sqrt(PIXELS)
+    s2 = 1.0 / np.sqrt(HIDDEN)
+    return {
+        "w1": jax.random.normal(k1, (HIDDEN, PIXELS)) * s1,
+        "b1": jnp.zeros(HIDDEN),
+        "w2": jax.random.normal(k2, (OUTPUTS, HIDDEN)) * s2,
+        "b2": jnp.zeros(OUTPUTS),
+    }
+
+
+def preprocess_weights_ste(w, chain):
+    """Quantize -> byte-pattern preprocess -> dequantize, with a
+    straight-through estimator (matches rust net::preprocess_weight /
+    two-phase quantization-aware training)."""
+    if not chain:
+        return w
+    max_abs = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+    s = 127.0 / max_abs
+    q = jnp.clip(jnp.sign(w) * jnp.floor(jnp.abs(w) * s + 0.5), -128, 127)
+    byte = jnp.where(q < 0, q + 256, q).astype(jnp.int32)
+    for op in chain:
+        if op[0] == "ds":
+            byte = byte & ~(op[1] - 1)
+        elif op[0] == "th":
+            byte = jnp.where(byte < op[1], op[2], byte)
+    byte = byte & 0xFF
+    signed = jnp.where(byte >= 128, byte - 256, byte).astype(w.dtype)
+    w_pre = signed / s
+    return jax.lax.stop_gradient(w_pre - w) + w
+
+
+def forward(params, x, chain_w=()):
+    w1 = preprocess_weights_ste(params["w1"], chain_w)
+    w2 = preprocess_weights_ste(params["w2"], chain_w)
+    h = jax.nn.sigmoid(x @ w1.T + params["b1"])
+    return jax.nn.sigmoid(h @ w2.T + params["b2"])
+
+
+def loss_fn(params, x, t, chain_w=()):
+    o = forward(params, x, chain_w)
+    return jnp.mean((o - t) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "momentum", "chain_w"))
+def step(params, vel, x, t, lr=0.5, momentum=0.9, chain_w=()):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, t, chain_w)
+    vel = jax.tree.map(lambda v, g: momentum * v - lr * g, vel, grads)
+    params = jax.tree.map(lambda p, v: p + v, params, vel)
+    return params, vel, loss
+
+
+def ccr(params, x, t, chain_w=()):
+    o = np.asarray(forward(params, x, chain_w))
+    pred = o >= 0.5
+    want = t >= 0.5
+    return float(np.mean(np.all(pred == want, axis=1)))
+
+
+# Serving configurations: name -> (image chain, weight chain). Must match
+# compile/model.py FRNN_CONFIGS.
+CONFIGS = {
+    "conv": ((), ()),
+    "th48ds16": ((("th", 48, 48), ("ds", 16)), (("ds", 16),)),
+    "ds32": ((("ds", 32),), (("ds", 32),)),
+}
+
+
+def apply_pixel_chain(x255, chain):
+    """x255: float pixels in [0,1] scaled back to ints for preprocessing."""
+    v = np.round(x255 * 255.0).astype(np.int64)
+    for op in chain:
+        if op[0] == "ds":
+            v = v & ~(op[1] - 1)
+        elif op[0] == "th":
+            v = np.where(v < op[1], op[2], v)
+    return (v / 255.0).astype(np.float32)
+
+
+def train_config(xtr, ttr, xte, tte, chain_img, chain_w, epochs, target_mse, seed):
+    """Two-phase training (warmup without weight preprocessing, then
+    quantization-aware fine-tune) — mirrors the rust trainer."""
+    xtr_p = apply_pixel_chain(xtr, chain_img)
+    xte_p = apply_pixel_chain(xte, chain_img)
+    params = init_params(jax.random.PRNGKey(seed))
+    vel = jax.tree.map(jnp.zeros_like, params)
+    warmup = 0 if not chain_w else max(1, epochs // 2)
+    curve = []
+    epochs_used = epochs
+    for epoch in range(epochs):
+        cw = () if epoch < warmup else tuple(chain_w)
+        params, vel, loss = step(params, vel, xtr_p, ttr, chain_w=cw)
+        curve.append(float(loss))
+        if loss < target_mse and epoch >= warmup:
+            epochs_used = epoch + 1
+            break
+    return params, curve, epochs_used, ccr(params, xtr_p, ttr, tuple(chain_w)), ccr(
+        params, xte_p, tte, tuple(chain_w)
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    ap.add_argument("--faces", default=os.path.join(root, "faces.json"))
+    ap.add_argument("--out", default=os.path.join(root, "frnn_weights.json"))
+    ap.add_argument("--log", default=os.path.join(root, "frnn_train_log.json"))
+    ap.add_argument("--epochs", type=int, default=400)
+    ap.add_argument("--target-mse", type=float, default=0.012)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    (xtr, ttr), (xte, tte) = load_faces(args.faces)
+    print(f"dataset: train {xtr.shape}, test {xte.shape}")
+
+    t0 = time.time()
+    log = {}
+    for name, (chain_img, chain_w) in CONFIGS.items():
+        params, curve, te, tr_ccr, te_ccr = train_config(
+            xtr, ttr, xte, tte, chain_img, chain_w,
+            args.epochs, args.target_mse, args.seed,
+        )
+        print(f"[{name}] TE={te} mse={curve[-1]:.5f} "
+              f"train CCR={tr_ccr:.3f} test CCR={te_ccr:.3f}")
+        out = {
+            "hidden": HIDDEN,
+            "inputs": PIXELS,
+            "outputs": OUTPUTS,
+            "config": name,
+            "w1": np.asarray(params["w1"], np.float64).reshape(-1).tolist(),
+            "b1": np.asarray(params["b1"], np.float64).tolist(),
+            "w2": np.asarray(params["w2"], np.float64).reshape(-1).tolist(),
+            "b2": np.asarray(params["b2"], np.float64).tolist(),
+        }
+        path = args.out if name == "conv" else args.out.replace(
+            ".json", f"_{name}.json")
+        with open(path, "w") as f:
+            json.dump(out, f)
+        log[name] = {"epochs": te, "mse_curve": curve, "train_ccr": tr_ccr,
+                     "test_ccr": te_ccr, "weights": path}
+    log["seconds"] = time.time() - t0
+    with open(args.log, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"done in {log['seconds']:.1f}s; weights -> {args.out}[, _th48ds16, _ds32]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes, preprocessing parameters and pixel contents;
+every kernel must match its ref bit-for-bit (these are integer
+datapaths — no tolerance)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import blend as blend_k
+from compile.kernels import frnn as frnn_k
+from compile.kernels import gaussian as gaussian_k
+from compile.kernels import preprocess as pre_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand_img(rng, h, w, hi=256):
+    return rng.integers(0, hi, size=(h, w)).astype(np.int32)
+
+
+chains = st.lists(
+    st.one_of(
+        st.sampled_from([("ds", 2), ("ds", 4), ("ds", 8), ("ds", 16), ("ds", 32)]),
+        st.tuples(st.just("th"), st.integers(1, 128), st.integers(0, 128)).map(
+            lambda t: ("th", t[1], min(t[2], t[1]))
+        ),
+    ),
+    min_size=0,
+    max_size=2,
+)
+
+
+class TestPreprocess:
+    @settings(**SETTINGS)
+    @given(
+        h=st.sampled_from([1, 3, 8, 16]),
+        w=st.sampled_from([1, 5, 32]),
+        chain=chains,
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, h, w, chain, seed):
+        rng = np.random.default_rng(seed)
+        img = rand_img(rng, h, w)
+        got = pre_k.preprocess(jnp.asarray(img), tuple(chain))
+        want = ref.apply_chain(jnp.asarray(img), tuple(chain))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_ds_is_bitmask(self):
+        img = jnp.arange(64, dtype=jnp.int32).reshape(8, 8)
+        got = np.asarray(pre_k.preprocess(img, (("ds", 8),)))
+        assert (got == (np.arange(64).reshape(8, 8) & ~7)).all()
+
+    def test_identity_chain_is_noop(self):
+        img = jnp.arange(16, dtype=jnp.int32).reshape(4, 4)
+        assert pre_k.preprocess(img, ()) is img
+
+
+class TestGaussian:
+    @settings(**SETTINGS)
+    @given(
+        h=st.sampled_from([2, 8, 16, 24]),
+        w=st.sampled_from([3, 8, 32]),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, h, w, seed):
+        rng = np.random.default_rng(seed)
+        img = rand_img(rng, h, w)
+        got = gaussian_k.gdf(jnp.asarray(img))
+        want = ref.gdf(jnp.asarray(img))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_constant_image_fixed_point(self):
+        img = jnp.full((8, 8), 100, jnp.int32)
+        out = np.asarray(gaussian_k.gdf(img))
+        assert (out == 100).all()
+
+    def test_known_window(self):
+        # center pixel of a 3x3 with the classic weights
+        img = jnp.asarray(
+            [[10, 20, 30], [40, 50, 60], [70, 80, 90]], jnp.int32
+        )
+        out = np.asarray(ref.gdf(img))
+        want = (10 + 2 * 20 + 30 + 2 * 40 + 4 * 50 + 2 * 60 + 70 + 2 * 80 + 90) // 16
+        assert out[1, 1] == want
+
+
+class TestBlend:
+    @settings(**SETTINGS)
+    @given(
+        h=st.sampled_from([1, 8, 16]),
+        w=st.sampled_from([4, 32]),
+        alpha=st.integers(0, 127),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, h, w, alpha, seed):
+        rng = np.random.default_rng(seed)
+        p1 = rand_img(rng, h, w)
+        p2 = rand_img(rng, h, w)
+        got = blend_k.blend(jnp.asarray(p1), jnp.asarray(p2), alpha, 255 - alpha)
+        want = ref.blend(jnp.asarray(p1), jnp.asarray(p2), alpha)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_alpha_zero_keeps_p2(self):
+        p1 = jnp.full((8, 8), 200, jnp.int32)
+        p2 = jnp.full((8, 8), 60, jnp.int32)
+        out = np.asarray(ref.blend(p1, p2, 0))
+        # (60*255)>>8 = 59 — truncation semantics
+        assert (out == 59).all()
+
+    @settings(**SETTINGS)
+    @given(chain=chains, seed=st.integers(0, 2**31))
+    def test_preprocessed_blend_matches_ref(self, chain, seed):
+        rng = np.random.default_rng(seed)
+        p1 = rand_img(rng, 8, 8)
+        p2 = rand_img(rng, 8, 8)
+        alpha = 64
+        c = tuple(chain)
+        c1 = int(ref.apply_chain(jnp.asarray(alpha, jnp.int32), c))
+        c2 = int(ref.apply_chain(jnp.asarray(255 - alpha, jnp.int32), c))
+        q1 = pre_k.preprocess(jnp.asarray(p1), c)
+        q2 = pre_k.preprocess(jnp.asarray(p2), c)
+        got = blend_k.blend(q1, q2, c1, c2)
+        want = ref.blend(jnp.asarray(p1), jnp.asarray(p2), alpha, c, c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def rand_weights(rng):
+    return (
+        rng.integers(-128, 128, size=(40, 960)).astype(np.int32),
+        rng.integers(-(2**16), 2**16, size=(40,)).astype(np.int32),
+        rng.integers(-128, 128, size=(7, 40)).astype(np.int32),
+        rng.integers(-(2**12), 2**12, size=(7,)).astype(np.int32),
+    )
+
+
+class TestFrnn:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        batch=st.sampled_from([1, 4, 16]),
+        seed=st.integers(0, 2**31),
+        cfg=st.sampled_from(
+            [((), ()), ((("th", 48, 48),), ()), ((("ds", 16),), (("ds", 16),)),
+             ((("th", 48, 48), ("ds", 32)), (("ds", 32),))]
+        ),
+    )
+    def test_matches_ref(self, batch, seed, cfg):
+        chain_img, chain_w = cfg
+        rng = np.random.default_rng(seed)
+        w1, b1, w2, b2 = rand_weights(rng)
+        px = rng.integers(0, 160, size=(batch, 960)).astype(np.int32)
+        got = frnn_k.forward_fx(
+            jnp.asarray(px), jnp.asarray(w1), jnp.asarray(b1),
+            jnp.asarray(w2), jnp.asarray(b2), 1024, 1024, chain_img, chain_w
+        )
+        want = np.stack(
+            [
+                np.asarray(
+                    ref.frnn_forward_fx(
+                        jnp.asarray(px[i]), jnp.asarray(w1), jnp.asarray(b1),
+                        jnp.asarray(w2), jnp.asarray(b2), 1024, 1024, chain_img, chain_w
+                    )
+                )
+                for i in range(batch)
+            ]
+        )
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_outputs_are_bytes(self):
+        rng = np.random.default_rng(0)
+        w1, b1, w2, b2 = rand_weights(rng)
+        px = rng.integers(0, 160, size=(4, 960)).astype(np.int32)
+        out = np.asarray(
+            frnn_k.forward_fx(jnp.asarray(px), jnp.asarray(w1), jnp.asarray(b1),
+                              jnp.asarray(w2), jnp.asarray(b2), 1024, 1024)
+        )
+        assert out.min() >= 0 and out.max() <= 255
+
+    def test_sigmoid_lut_monotone(self):
+        lut = np.asarray(ref.sigmoid_lut())
+        assert (np.diff(lut) >= 0).all()
+        assert lut[0] < 10 and lut[-1] > 245
+        assert abs(int(lut[128]) - 128) <= 1

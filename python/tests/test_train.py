@@ -1,0 +1,102 @@
+"""JAX trainer tests: learning happens, and the quantization/export path
+is consistent with the fixed-point forward the rust side runs."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, train_frnn
+from compile.kernels import ref
+
+
+def tiny_faces(n_per_class=2, seed=0):
+    """A small random-but-learnable dataset in the faces.json schema:
+    class signal = a per-id mean intensity pattern."""
+    rng = np.random.default_rng(seed)
+    patterns = rng.integers(50, 160, size=(4, 960))
+    data = {"width": 32, "height": 30, "train": [], "test": []}
+    for id_ in range(4):
+        for s in range(n_per_class + 1):
+            px = np.clip(patterns[id_] + rng.normal(0, 6, 960), 0, 159).astype(int)
+            face = {"id": int(id_), "pose": 0, "sunglasses": False,
+                    "pixels": px.tolist()}
+            (data["test"] if s == n_per_class else data["train"]).append(face)
+    return data
+
+
+class TestTrain:
+    def test_loss_decreases_and_weights_export(self):
+        with tempfile.TemporaryDirectory() as td:
+            faces = os.path.join(td, "faces.json")
+            with open(faces, "w") as f:
+                json.dump(tiny_faces(), f)
+            out = os.path.join(td, "w.json")
+            log = os.path.join(td, "log.json")
+            import sys
+            argv = sys.argv
+            sys.argv = ["train", "--faces", faces, "--out", out, "--log", log,
+                        "--epochs", "60", "--target-mse", "0.0001"]
+            try:
+                train_frnn.main()
+            finally:
+                sys.argv = argv
+            with open(log) as f:
+                lg = json.load(f)
+            curve = lg["conv"]["mse_curve"]
+            assert curve[-1] < curve[0], "training must reduce MSE"
+            with open(out) as f:
+                w = json.load(f)
+            assert len(w["w1"]) == 40 * 960
+            assert len(w["w2"]) == 7 * 40
+            # per-config weights exported too
+            assert os.path.exists(out.replace(".json", "_th48ds16.json"))
+            assert os.path.exists(out.replace(".json", "_ds32.json"))
+
+    def test_quantized_forward_consistent_with_float(self):
+        # a trained-ish random net: float forward and fx forward must
+        # agree on thresholded outputs for confident activations
+        rng = np.random.default_rng(3)
+        fw = {
+            "w1": (rng.standard_normal(40 * 960) * 0.05).tolist(),
+            "b1": np.zeros(40).tolist(),
+            "w2": (rng.standard_normal(7 * 40) * 0.5).tolist(),
+            "b2": np.zeros(7).tolist(),
+        }
+        q = model.quantize_weights(fw)
+        px = rng.integers(0, 160, size=960).astype(np.int32)
+        o_fx = np.asarray(
+            ref.frnn_forward_fx(
+                jnp.asarray(px),
+                jnp.asarray(q["w1q"]), jnp.asarray(q["b1q"]),
+                jnp.asarray(q["w2q"]), jnp.asarray(q["b2q"]),
+                q["d1"], q["d2"],
+            )
+        ) / 255.0
+        w1 = np.asarray(fw["w1"]).reshape(40, 960)
+        w2 = np.asarray(fw["w2"]).reshape(7, 40)
+        o_f = np.asarray(
+            ref.frnn_forward_float(
+                jnp.asarray(px / 255.0),
+                jnp.asarray(w1), jnp.asarray(fw["b1"], dtype=jnp.float32),
+                jnp.asarray(w2), jnp.asarray(fw["b2"], dtype=jnp.float32),
+            )
+        )
+        confident = np.abs(o_f - 0.5) > 0.15
+        agree = (o_fx >= 0.5) == (o_f >= 0.5)
+        assert agree[confident].all(), (o_f, o_fx)
+
+
+class TestDatasetSchema:
+    def test_loader_shapes(self):
+        with tempfile.TemporaryDirectory() as td:
+            faces = os.path.join(td, "faces.json")
+            with open(faces, "w") as f:
+                json.dump(tiny_faces(), f)
+            (xtr, ttr), (xte, tte) = train_frnn.load_faces(faces)
+            assert xtr.shape[1] == 960 and ttr.shape[1] == 7
+            assert set(np.unique(ttr)) <= {np.float32(0.1), np.float32(0.9)}

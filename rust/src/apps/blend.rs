@@ -1,0 +1,218 @@
+//! Image Blending hardware (paper Section V, Fig. 7).
+//!
+//! `P(i,j) = α·P1(i,j) + (1−α)·P2(i,j)` with an 8-bit α: the α input of
+//! Multiplier-1 is restricted to `[0,127]` and the `(1−α)` input of
+//! Multiplier-2 to `[128,255]` — the *natural sparsity* rows of Table 2.
+//! Each 16-bit product is truncated to its top 8 bits and the two are
+//! combined by an 8-bit adder, exactly as Fig. 7 draws it.
+
+use super::image::Image;
+use crate::logic::map::Objective;
+use crate::ppc::flow::{self, BlockReport};
+use crate::ppc::preprocess::{Chain, ValueSet};
+
+/// Quantized blending ratio: `alpha ∈ [0,127]`, the complementary
+/// coefficient is `255 − alpha ∈ [128,255]`.
+#[derive(Clone, Copy, Debug)]
+pub struct Alpha(pub u8);
+
+impl Alpha {
+    pub fn from_ratio(r: f64) -> Alpha {
+        Alpha((r.clamp(0.0, 0.5) * 255.0).round() as u8)
+    }
+    #[inline]
+    pub fn coeff1(&self) -> u32 {
+        self.0 as u32
+    }
+    #[inline]
+    pub fn coeff2(&self) -> u32 {
+        255 - self.0 as u32
+    }
+}
+
+/// Bit-accurate blend of one pixel pair. `pre_img` preprocesses both
+/// image inputs; `pre_coef` both coefficient inputs (the paper's
+/// intentional-sparsity configs preprocess *both* multiplier inputs).
+#[inline]
+pub fn blend_pixel(p1: u8, p2: u8, alpha: Alpha, pre_img: &Chain, pre_coef: &Chain) -> u8 {
+    let c1 = pre_coef.apply(alpha.coeff1());
+    let c2 = pre_coef.apply(alpha.coeff2());
+    let m1 = (pre_img.apply(p1 as u32) * c1) >> 8; // truncate to 8 bits
+    let m2 = (pre_img.apply(p2 as u32) * c2) >> 8;
+    (m1 + m2).min(255) as u8
+}
+
+/// Blend two images of equal size.
+pub fn blend_images(p1: &Image, p2: &Image, alpha: Alpha, pre_img: &Chain, pre_coef: &Chain) -> Image {
+    assert_eq!(p1.width, p2.width);
+    assert_eq!(p1.height, p2.height);
+    let pixels = p1
+        .pixels
+        .iter()
+        .zip(&p2.pixels)
+        .map(|(&a, &b)| blend_pixel(a, b, alpha, pre_img, pre_coef))
+        .collect();
+    Image { width: p1.width, height: p1.height, pixels }
+}
+
+/// Value sets of the two multipliers' inputs under a configuration.
+pub struct BlendSignals {
+    /// (image_set, coeff_set) for Multiplier-1 and Multiplier-2.
+    pub mult1: (ValueSet, ValueSet),
+    pub mult2: (ValueSet, ValueSet),
+    /// Adder input value sets (truncated products).
+    pub adder: (ValueSet, ValueSet),
+}
+
+/// Configuration of a Table-2 row.
+#[derive(Clone, Debug)]
+pub struct BlendConfig {
+    /// Exploit the natural half-range coefficient sparsity?
+    pub natural: bool,
+    /// Intentional preprocessing on image & coefficient inputs.
+    pub pre: Chain,
+    pub name: String,
+}
+
+impl BlendConfig {
+    pub fn conventional() -> BlendConfig {
+        BlendConfig { natural: false, pre: Chain::id(), name: "conventional".into() }
+    }
+    pub fn of(natural: bool, pre: Chain) -> BlendConfig {
+        let name = match (natural, pre.0.is_empty()) {
+            (false, true) => "conventional".to_string(),
+            (true, true) => "natural".to_string(),
+            (false, false) => format!("intentional({})", pre.label()),
+            (true, false) => format!("natural+intentional({})", pre.label()),
+        };
+        BlendConfig { natural, pre, name }
+    }
+}
+
+/// Derive the multiplier/adder input value sets for a config.
+pub fn blend_signal_sets(cfg: &BlendConfig) -> BlendSignals {
+    let full = ValueSet::full(8);
+    let img = full.map_chain(&cfg.pre);
+    let (c1_raw, c2_raw) = if cfg.natural {
+        (
+            ValueSet::from_values(256, 0..=127u32),
+            ValueSet::from_values(256, 128..=255u32),
+        )
+    } else {
+        (full.clone(), full.clone())
+    };
+    let c1 = c1_raw.map_chain(&cfg.pre);
+    let c2 = c2_raw.map_chain(&cfg.pre);
+    let prod1 = img.product(&c1).shr(8).truncate(8);
+    let prod2 = img.product(&c2).shr(8).truncate(8);
+    BlendSignals { mult1: (img.clone(), c1), mult2: (img, c2), adder: (prod1, prod2) }
+}
+
+/// Hardware report of the IB datapath: two composed 8×8 multipliers plus
+/// the 8-bit adder (the paper keeps the adder precise — its cost is
+/// negligible next to the multipliers; we synthesize it anyway).
+pub fn blend_ppc_hardware(cfg: &BlendConfig, objective: Objective) -> Vec<BlockReport> {
+    let sig = blend_signal_sets(cfg);
+    let m1 = flow::composed_mult8("ib_mult1", &sig.mult1.0, &sig.mult1.1, objective);
+    let m2 = flow::composed_mult8("ib_mult2", &sig.mult2.0, &sig.mult2.1, objective);
+    let add = flow::segmented_adder("ib_adder", 8, 8, &sig.adder.0, &sig.adder.1, objective);
+    vec![m1, m2, add]
+}
+
+/// Conventional IB hardware: two array multipliers + ripple adder.
+pub fn blend_conventional_hardware(objective: Objective) -> Vec<BlockReport> {
+    vec![
+        flow::conventional_mult("ib_mult1", 8, 8, objective),
+        flow::conventional_mult("ib_mult2", 8, 8, objective),
+        flow::conventional_adder("ib_adder", 8, 8, objective),
+    ]
+}
+
+/// Flat two-level literal count of the whole IB datapath (the paper's
+/// "# of literals" column uses the flat multiplier TTs).
+pub fn blend_flat_literals(cfg: &BlendConfig) -> u64 {
+    let sig = blend_signal_sets(cfg);
+    let m1 = flow::flat_mult_literals(&sig.mult1.0, &sig.mult1.1);
+    let m2 = flow::flat_mult_literals(&sig.mult2.0, &sig.mult2.1);
+    let add = flow::segmented_adder_literals(8, 8, &sig.adder.0, &sig.adder.1);
+    m1 + m2 + add
+}
+
+/// Aggregate component reports into one row.
+pub fn aggregate(reports: &[BlockReport]) -> BlockReport {
+    let mut out = BlockReport { name: "ib_total".into(), ..Default::default() };
+    for r in reports {
+        out.literals += r.literals;
+        out.area_ge += r.area_ge;
+        out.power_uw += r.power_uw;
+        out.verify_errors += r.verify_errors;
+    }
+    // critical path: slower multiplier, then the adder
+    let mul_delay = reports[0].delay_ns.max(reports[1].delay_ns);
+    out.delay_ns = mul_delay + reports[2].delay_ns;
+    out.dc_fraction = reports.iter().map(|r| r.dc_fraction).sum::<f64>() / reports.len() as f64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::image::synthetic_photo;
+    use crate::ppc::preprocess::Preproc;
+
+    #[test]
+    fn alpha_half_blend_averages() {
+        let a = Alpha::from_ratio(0.5);
+        assert_eq!(a.coeff1() + a.coeff2(), 255);
+        // blending identical images ~ identity (up to truncation)
+        let v = blend_pixel(200, 200, a, &Chain::id(), &Chain::id());
+        assert!((v as i32 - 199).abs() <= 1, "v={v}");
+    }
+
+    #[test]
+    fn blend_between_sources() {
+        let a = Alpha::from_ratio(0.5);
+        let v = blend_pixel(0, 200, a, &Chain::id(), &Chain::id());
+        assert!((90..=110).contains(&v), "v={v}");
+    }
+
+    #[test]
+    fn natural_sparsity_halves_coeff_sets() {
+        let cfg = BlendConfig::of(true, Chain::id());
+        let sig = blend_signal_sets(&cfg);
+        assert!((sig.mult1.1.sparsity() - 0.5).abs() < 0.01);
+        assert!((sig.mult2.1.sparsity() - 0.5).abs() < 0.01);
+        // natural sparsity leaves pixels bit-identical
+        let p1 = synthetic_photo(32, 32, 1);
+        let p2 = synthetic_photo(32, 32, 2);
+        let alpha = Alpha::from_ratio(0.5);
+        let base = blend_images(&p1, &p2, alpha, &Chain::id(), &Chain::id());
+        // "natural" config has no preprocessing → identical output
+        let nat = blend_images(&p1, &p2, alpha, &cfg.pre, &cfg.pre);
+        assert_eq!(base, nat);
+    }
+
+    #[test]
+    fn ds_degrades_psnr_monotonically() {
+        let p1 = synthetic_photo(48, 48, 3);
+        let p2 = synthetic_photo(48, 48, 4);
+        let alpha = Alpha::from_ratio(0.5);
+        let base = blend_images(&p1, &p2, alpha, &Chain::id(), &Chain::id());
+        let mut prev = f64::INFINITY;
+        for x in [2u32, 8, 32] {
+            let c = Chain::of(Preproc::Ds(x));
+            let out = blend_images(&p1, &p2, alpha, &c, &c);
+            let p = base.psnr(&out);
+            assert!(p < prev, "x={x}: {p} !< {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn product_truncation_sets_bounded() {
+        let cfg = BlendConfig::of(true, Chain::of(Preproc::Ds(16)));
+        let sig = blend_signal_sets(&cfg);
+        assert!(sig.adder.0.capacity() <= 256);
+        assert!(sig.adder.0.len() < 256, "truncated product set should be sparse-ish");
+    }
+}

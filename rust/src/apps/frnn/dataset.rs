@@ -1,0 +1,213 @@
+//! Synthetic face dataset — stand-in for the CMU `faceimages` set the
+//! paper uses (32×30 grayscale, person id / head direction / sunglasses
+//! labels). See DESIGN.md's substitution table: the generator reproduces
+//! the *distributional* facts the paper exploits —
+//!
+//! - dark background (< 48) → the `TH_48^48` preprocessing target,
+//! - no pixel ever reaches [160, 255] → the natural sparsity on the
+//!   multiplier image input (Fig. 10),
+//! - id / direction / sunglasses factors that a 960-40-7 MLP can learn.
+
+use crate::util::prng::Rng;
+
+pub const IMG_W: usize = 32;
+pub const IMG_H: usize = 30;
+pub const IMG_PIXELS: usize = IMG_W * IMG_H; // 960, the paper's input count
+pub const NUM_IDS: usize = 16; // 4 output bits
+pub const NUM_POSES: usize = 4; // 2 output bits: left/straight/right/up
+pub const NUM_OUTPUTS: usize = 7; // 4 id + 2 pose + 1 sunglasses
+
+/// Maximum pixel value the generator emits (exclusive): reproduces the
+/// paper's observed natural sparsity "values between 160 and 255 do not
+/// appear on the multiplier image input".
+pub const MAX_PIXEL: u8 = 160;
+/// Background pixels stay strictly below the paper's threshold of 48.
+pub const BG_MAX: u8 = 47;
+
+/// One labeled face image.
+#[derive(Clone, Debug)]
+pub struct Face {
+    pub pixels: Vec<u8>, // 960 bytes
+    pub id: u8,
+    pub pose: u8,
+    pub sunglasses: bool,
+}
+
+impl Face {
+    /// The 7 target bits in network output order: id b0..b3, pose b0..b1,
+    /// sunglasses.
+    pub fn targets(&self) -> [bool; NUM_OUTPUTS] {
+        [
+            self.id & 1 != 0,
+            self.id & 2 != 0,
+            self.id & 4 != 0,
+            self.id & 8 != 0,
+            self.pose & 1 != 0,
+            self.pose & 2 != 0,
+            self.sunglasses,
+        ]
+    }
+}
+
+/// Train/test split of the generated dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub train: Vec<Face>,
+    pub test: Vec<Face>,
+}
+
+/// Deterministic id-specific appearance: a coarse intensity pattern
+/// derived from the id bits plus an id-salted fine texture.
+fn face_pixel(id: u8, fx: f64, fy: f64, rng_tex: &mut Rng) -> f64 {
+    // quadrant offsets from id bits
+    let qx = if fx < 0.5 { 0 } else { 1 };
+    let qy = if fy < 0.5 { 0 } else { 1 };
+    let q = (qy << 1) | qx;
+    let bit = (id >> q) & 1;
+    let base = 92.0 + if bit == 1 { 22.0 } else { -18.0 };
+    // radial shading toward the ellipse rim
+    let r2 = (fx - 0.5) * (fx - 0.5) + (fy - 0.5) * (fy - 0.5);
+    base - 55.0 * r2 + 3.0 * rng_tex.next_gaussian()
+}
+
+/// Render one face.
+pub fn render_face(id: u8, pose: u8, sunglasses: bool, noise_seed: u64) -> Face {
+    let mut rng = Rng::new(
+        0xFACE_0000
+            ^ (id as u64)
+            ^ ((pose as u64) << 8)
+            ^ ((sunglasses as u64) << 16)
+            ^ (noise_seed << 24),
+    );
+    let mut px = vec![0u8; IMG_PIXELS];
+    // pose determines ellipse center
+    let (cx, cy) = match pose {
+        0 => (11.0, 16.0), // left
+        1 => (16.0, 16.0), // straight
+        2 => (21.0, 16.0), // right
+        _ => (16.0, 11.0), // up
+    };
+    let (rx, ry) = (8.5, 11.0);
+    for y in 0..IMG_H {
+        for x in 0..IMG_W {
+            let dx = (x as f64 - cx) / rx;
+            let dy = (y as f64 - cy) / ry;
+            let inside = dx * dx + dy * dy <= 1.0;
+            let v = if inside {
+                let fx = (dx + 1.0) / 2.0;
+                let fy = (dy + 1.0) / 2.0;
+                let mut v = face_pixel(id, fx, fy, &mut rng);
+                // eye band
+                let eye_y = cy - 0.35 * ry;
+                if (y as f64 - eye_y).abs() < 1.6 {
+                    if sunglasses {
+                        v = 52.0 + 2.0 * rng.next_gaussian(); // dark band
+                    } else if ((x as f64 - (cx - 0.4 * rx)).abs() < 1.2)
+                        || ((x as f64 - (cx + 0.4 * rx)).abs() < 1.2)
+                    {
+                        v = 140.0 + 4.0 * rng.next_gaussian(); // bright eyes
+                    }
+                }
+                // mouth
+                let mouth_y = cy + 0.45 * ry;
+                if (y as f64 - mouth_y).abs() < 1.0 && (x as f64 - cx).abs() < 0.35 * rx {
+                    v = 60.0;
+                }
+                v.clamp(48.0, (MAX_PIXEL - 1) as f64)
+            } else {
+                (22.0 + 6.0 * rng.next_gaussian()).clamp(8.0, BG_MAX as f64)
+            };
+            px[y * IMG_W + x] = v as u8;
+        }
+    }
+    Face { pixels: px, id, pose, sunglasses }
+}
+
+/// Generate the full dataset: every (id, pose, sunglasses) combination
+/// with `samples_per_combo` noise instances; the last instance of each
+/// combination goes to the test split.
+pub fn generate(samples_per_combo: usize, seed: u64) -> Dataset {
+    assert!(samples_per_combo >= 2);
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for id in 0..NUM_IDS as u8 {
+        for pose in 0..NUM_POSES as u8 {
+            for glasses in [false, true] {
+                for s in 0..samples_per_combo {
+                    let f = render_face(id, pose, glasses, seed.wrapping_add(s as u64));
+                    if s + 1 == samples_per_combo {
+                        test.push(f);
+                    } else {
+                        train.push(f);
+                    }
+                }
+            }
+        }
+    }
+    Dataset { train, test }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixel_ranges_match_paper_sparsity() {
+        let ds = generate(3, 1);
+        for f in ds.train.iter().chain(&ds.test) {
+            assert!(f.pixels.iter().all(|&p| p < MAX_PIXEL), "pixel ≥ 160 found");
+        }
+        // background exists and is dark
+        let f = &ds.train[0];
+        let dark = f.pixels.iter().filter(|&&p| p < 48).count();
+        assert!(dark > 200, "expected substantial dark background, got {dark}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = render_face(3, 1, true, 7);
+        let b = render_face(3, 1, true, 7);
+        assert_eq!(a.pixels, b.pixels);
+        let c = render_face(3, 1, true, 8);
+        assert_ne!(a.pixels, c.pixels);
+    }
+
+    #[test]
+    fn ids_are_distinguishable() {
+        // different ids must differ substantially inside the face
+        let a = render_face(0, 1, false, 1);
+        let b = render_face(15, 1, false, 1);
+        let diff: u64 = a
+            .pixels
+            .iter()
+            .zip(&b.pixels)
+            .map(|(&x, &y)| (x as i64 - y as i64).unsigned_abs())
+            .sum();
+        assert!(diff > 10_000, "ids too similar: {diff}");
+    }
+
+    #[test]
+    fn split_sizes() {
+        let ds = generate(5, 2);
+        assert_eq!(ds.train.len(), 16 * 4 * 2 * 4);
+        assert_eq!(ds.test.len(), 16 * 4 * 2);
+    }
+
+    #[test]
+    fn targets_encode_labels() {
+        let f = render_face(0b1010, 0b10, true, 1);
+        let t = f.targets();
+        assert_eq!(t, [false, true, false, true, false, true, true]);
+    }
+
+    #[test]
+    fn sunglasses_darken_eye_band() {
+        let plain = render_face(5, 1, false, 3);
+        let shades = render_face(5, 1, true, 3);
+        let mean = |f: &Face| -> f64 {
+            // eye band rows around y = 16 - 3.85 ≈ 12
+            (0..IMG_W).map(|x| f.pixels[12 * IMG_W + x] as f64).sum::<f64>() / IMG_W as f64
+        };
+        assert!(mean(&shades) < mean(&plain), "sunglasses should darken the band");
+    }
+}

@@ -1,0 +1,131 @@
+//! FRNN neuron (MAC) hardware reports — the implementation-results
+//! columns of Table 3.
+//!
+//! A neuron (Fig. 10) = one 8×8 multiplier + one wide accumulator adder.
+//! The paper synthesizes the *multiplier* as a PPC block (natural
+//! sparsity: pixels never in [160,255]; intentional: TH/DS on the image
+//! input and DS on the weight input) while keeping the adder precise; we
+//! do the same.
+
+use crate::apps::frnn::dataset::MAX_PIXEL;
+use crate::logic::map::Objective;
+use crate::ppc::flow::{self, BlockReport};
+use crate::ppc::preprocess::{Chain, ValueSet};
+
+/// A Table-3 row configuration for the MAC hardware.
+#[derive(Clone, Debug)]
+pub struct MacConfig {
+    /// Exploit natural pixel sparsity (no pixel ≥ 160)?
+    pub natural: bool,
+    /// Intentional preprocessing on the image input.
+    pub pre_image: Chain,
+    /// Intentional preprocessing on the weight input (byte pattern).
+    pub pre_weight: Chain,
+    pub name: String,
+}
+
+impl MacConfig {
+    pub fn conventional() -> MacConfig {
+        MacConfig {
+            natural: false,
+            pre_image: Chain::id(),
+            pre_weight: Chain::id(),
+            name: "conventional".into(),
+        }
+    }
+}
+
+/// Image-input value set under a config.
+pub fn image_value_set(cfg: &MacConfig) -> ValueSet {
+    let base = if cfg.natural {
+        ValueSet::from_values(256, 0..MAX_PIXEL as u32)
+    } else {
+        ValueSet::full(8)
+    };
+    base.map_chain(&cfg.pre_image)
+}
+
+/// Weight-input value set (weights cover the full byte range — the
+/// paper's Fig. 10 weight histogram spans the entire range).
+pub fn weight_value_set(cfg: &MacConfig) -> ValueSet {
+    ValueSet::full(8).map_chain(&cfg.pre_weight)
+}
+
+/// Hardware report of a single neuron MAC: PPC multiplier (composed
+/// 8×8) + precise accumulator adder (16-bit product + 23-bit feedback).
+pub fn mac_hardware(cfg: &MacConfig, objective: Objective) -> (BlockReport, BlockReport) {
+    let img = image_value_set(cfg);
+    let wgt = weight_value_set(cfg);
+    let mult = flow::composed_mult8(&format!("mac_mult[{}]", cfg.name), &img, &wgt, objective);
+    let adder = flow::conventional_adder("mac_acc_adder", 16, 23, objective);
+    (mult, adder)
+}
+
+/// Aggregate into the table row (single-neuron implementation results).
+pub fn aggregate(mult: &BlockReport, adder: &BlockReport) -> BlockReport {
+    BlockReport {
+        name: mult.name.clone(),
+        literals: mult.literals, // adder kept precise; flat-literal column
+        area_ge: mult.area_ge + adder.area_ge,
+        delay_ns: mult.delay_ns + adder.delay_ns,
+        power_uw: mult.power_uw + adder.power_uw,
+        dc_fraction: mult.dc_fraction,
+        verify_errors: mult.verify_errors + adder.verify_errors,
+    }
+}
+
+/// Flat two-level literal count of the MAC multiplier (the paper's
+/// "# of literals" for Table 3).
+pub fn mac_flat_literals(cfg: &MacConfig) -> u64 {
+    flow::flat_mult_literals(&image_value_set(cfg), &weight_value_set(cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ppc::preprocess::Preproc;
+
+    #[test]
+    fn natural_sparsity_shrinks_image_set() {
+        let conv = MacConfig::conventional();
+        let nat = MacConfig { natural: true, name: "natural".into(), ..MacConfig::conventional() };
+        assert_eq!(image_value_set(&conv).len(), 256);
+        assert_eq!(image_value_set(&nat).len(), MAX_PIXEL as u32);
+    }
+
+    #[test]
+    fn ds16_much_cheaper_than_conventional() {
+        let conv = MacConfig::conventional();
+        let ds16 = MacConfig {
+            natural: false,
+            pre_image: Chain::of(Preproc::Ds(16)),
+            pre_weight: Chain::of(Preproc::Ds(16)),
+            name: "DS16".into(),
+        };
+        let (mc, ac) = mac_hardware(&conv, Objective::Area);
+        let (md, ad) = mac_hardware(&ds16, Objective::Area);
+        assert_eq!(md.verify_errors, 0);
+        let base = aggregate(&mc, &ac);
+        let ppc = aggregate(&md, &ad);
+        assert!(ppc.area_ge < base.area_ge, "{} !< {}", ppc.area_ge, base.area_ge);
+        assert!(ppc.power_uw < base.power_uw);
+    }
+
+    #[test]
+    fn th48_keeps_upper_range() {
+        let th = MacConfig {
+            natural: true,
+            pre_image: Chain::of(Preproc::Th { x: 48, y: 48 }),
+            pre_weight: Chain::id(),
+            name: "TH48".into(),
+        };
+        let s = image_value_set(&th);
+        assert!(!s.contains(0));
+        assert!(s.contains(48));
+        assert!(s.contains(MAX_PIXEL as u32 - 1));
+        assert!(!s.contains(200));
+        // sparsity ≈ 48/256 + (256-160)/256
+        let expect = 1.0 - (MAX_PIXEL as f64 - 48.0) / 256.0;
+        assert!((s.sparsity() - expect).abs() < 0.01);
+    }
+}

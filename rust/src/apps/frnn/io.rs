@@ -1,0 +1,152 @@
+//! JSON interop for FRNN weights and datasets — the exchange format
+//! between the rust side and the python build layer (`python/compile/
+//! train_frnn.py` reads/writes the same schema).
+
+use super::dataset::{Dataset, Face, IMG_PIXELS, NUM_OUTPUTS};
+use super::net::{Frnn, HIDDEN};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Serialize float weights.
+pub fn weights_to_json(net: &Frnn) -> Json {
+    let f = |v: &[f32]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+    Json::obj(vec![
+        ("hidden", Json::Num(HIDDEN as f64)),
+        ("inputs", Json::Num(IMG_PIXELS as f64)),
+        ("outputs", Json::Num(NUM_OUTPUTS as f64)),
+        ("w1", f(&net.w1)),
+        ("b1", f(&net.b1)),
+        ("w2", f(&net.w2)),
+        ("b2", f(&net.b2)),
+    ])
+}
+
+pub fn weights_from_json(j: &Json) -> Result<Frnn> {
+    let get = |k: &str| -> Result<Vec<f32>> {
+        Ok(j.get(k)
+            .ok_or_else(|| anyhow!("missing key {k}"))?
+            .flat_f64()
+            .into_iter()
+            .map(|x| x as f32)
+            .collect())
+    };
+    let net = Frnn { w1: get("w1")?, b1: get("b1")?, w2: get("w2")?, b2: get("b2")? };
+    if net.w1.len() != HIDDEN * IMG_PIXELS || net.w2.len() != NUM_OUTPUTS * HIDDEN {
+        return Err(anyhow!(
+            "weight shape mismatch: w1={} w2={}",
+            net.w1.len(),
+            net.w2.len()
+        ));
+    }
+    Ok(net)
+}
+
+pub fn save_weights(net: &Frnn, path: &Path) -> Result<()> {
+    std::fs::write(path, weights_to_json(net).to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn load_weights(path: &Path) -> Result<Frnn> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    weights_from_json(&j)
+}
+
+/// Serialize a dataset (pixels as arrays of ints — bulky but portable;
+/// the dataset is small: ~1000 × 960 bytes).
+pub fn dataset_to_json(ds: &Dataset) -> Json {
+    let face = |f: &Face| {
+        Json::obj(vec![
+            ("id", Json::Num(f.id as f64)),
+            ("pose", Json::Num(f.pose as f64)),
+            ("sunglasses", Json::Bool(f.sunglasses)),
+            (
+                "pixels",
+                Json::Arr(f.pixels.iter().map(|&p| Json::Num(p as f64)).collect()),
+            ),
+        ])
+    };
+    Json::obj(vec![
+        ("width", Json::Num(super::dataset::IMG_W as f64)),
+        ("height", Json::Num(super::dataset::IMG_H as f64)),
+        ("train", Json::Arr(ds.train.iter().map(face).collect())),
+        ("test", Json::Arr(ds.test.iter().map(face).collect())),
+    ])
+}
+
+pub fn dataset_from_json(j: &Json) -> Result<Dataset> {
+    let faces = |k: &str| -> Result<Vec<Face>> {
+        j.get(k)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing {k}"))?
+            .iter()
+            .map(|f| {
+                let pixels: Vec<u8> = f
+                    .get("pixels")
+                    .ok_or_else(|| anyhow!("face missing pixels"))?
+                    .flat_f64()
+                    .into_iter()
+                    .map(|x| x as u8)
+                    .collect();
+                if pixels.len() != IMG_PIXELS {
+                    return Err(anyhow!("face has {} pixels", pixels.len()));
+                }
+                Ok(Face {
+                    pixels,
+                    id: f.get("id").and_then(|v| v.as_f64()).unwrap_or(0.0) as u8,
+                    pose: f.get("pose").and_then(|v| v.as_f64()).unwrap_or(0.0) as u8,
+                    sunglasses: matches!(f.get("sunglasses"), Some(Json::Bool(true))),
+                })
+            })
+            .collect()
+    };
+    Ok(Dataset { train: faces("train")?, test: faces("test")? })
+}
+
+pub fn save_dataset(ds: &Dataset, path: &Path) -> Result<()> {
+    std::fs::write(path, dataset_to_json(ds).to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    dataset_from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::frnn::dataset::generate;
+    use crate::apps::frnn::net::Frnn;
+
+    #[test]
+    fn weights_roundtrip() {
+        let net = Frnn::random(3);
+        let j = weights_to_json(&net);
+        let back = weights_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(net.w1, back.w1);
+        assert_eq!(net.b2, back.b2);
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = generate(2, 5);
+        let j = dataset_to_json(&ds);
+        let back = dataset_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(ds.train.len(), back.train.len());
+        assert_eq!(ds.train[0].pixels, back.train[0].pixels);
+        assert_eq!(ds.test[3].id, back.test[3].id);
+        assert_eq!(ds.test[3].sunglasses, back.test[3].sunglasses);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(weights_from_json(&Json::parse("{}").unwrap()).is_err());
+        let short = r#"{"w1":[1,2],"b1":[0],"w2":[1],"b2":[0]}"#;
+        assert!(weights_from_json(&Json::parse(short).unwrap()).is_err());
+    }
+}

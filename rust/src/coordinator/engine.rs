@@ -1,0 +1,218 @@
+//! The engine thread: exclusive owner of the (non-`Send`) PJRT runtime.
+//!
+//! [`Engine::spawn`] takes a *factory* closure that constructs the
+//! executor on the engine thread itself; other threads talk to it
+//! through an mpsc command channel. [`Executor`] abstracts the runtime
+//! so coordinator logic is testable without artifacts
+//! ([`MockExecutor`]).
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// Anything that can execute a named artifact on i32 tensors.
+pub trait Executor {
+    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>>;
+    /// Known artifact keys (for router validation).
+    fn keys(&self) -> Vec<String>;
+}
+
+impl Executor for crate::runtime::Runtime {
+    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        self.exec_i32(key, inputs)
+    }
+    fn keys(&self) -> Vec<String> {
+        self.keys()
+    }
+}
+
+/// Deterministic stand-in executor for coordinator tests: echoes inputs
+/// through simple integer transforms per app.
+pub struct MockExecutor {
+    pub keys: Vec<String>,
+    /// artificial per-exec latency (for batching tests)
+    pub delay: std::time::Duration,
+}
+
+impl MockExecutor {
+    pub fn new(keys: &[&str]) -> MockExecutor {
+        MockExecutor {
+            keys: keys.iter().map(|s| s.to_string()).collect(),
+            delay: std::time::Duration::ZERO,
+        }
+    }
+}
+
+impl Executor for MockExecutor {
+    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        if !self.keys.iter().any(|k| k == key) {
+            return Err(anyhow!("unknown key {key}"));
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        // denoise/classify: halve every element; blend: average inputs
+        if key.starts_with("blend") {
+            let out: Vec<i32> = inputs[0]
+                .iter()
+                .zip(inputs[1])
+                .map(|(&a, &b)| (a + b) / 2)
+                .collect();
+            Ok(vec![out])
+        } else {
+            Ok(vec![inputs[0].iter().map(|&v| v / 2).collect()])
+        }
+    }
+    fn keys(&self) -> Vec<String> {
+        self.keys.clone()
+    }
+}
+
+/// Command executed on the engine thread.
+pub struct ExecRequest {
+    pub key: String,
+    pub inputs: Vec<Vec<i32>>,
+    pub reply: mpsc::Sender<Result<Vec<Vec<i32>>>>,
+}
+
+enum Cmd {
+    Exec(ExecRequest),
+    Keys(mpsc::Sender<Vec<String>>),
+    Shutdown,
+}
+
+/// Handle to the engine thread.
+pub struct Engine {
+    tx: mpsc::Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine; `factory` runs on the engine thread (the place
+    /// where the non-Send PJRT client must be created). Fails if the
+    /// factory fails.
+    pub fn spawn<E, F>(factory: F) -> Result<Engine>
+    where
+        E: Executor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("ppc-engine".into())
+            .spawn(move || {
+                let executor = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // simple executable-key cache of exec counts (metrics can
+                // be derived by the server; kept here for debugging)
+                let mut counts: HashMap<String, u64> = HashMap::new();
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Exec(req) => {
+                            let refs: Vec<&[i32]> =
+                                req.inputs.iter().map(|v| v.as_slice()).collect();
+                            let result = executor.exec(&req.key, &refs);
+                            *counts.entry(req.key).or_default() += 1;
+                            let _ = req.reply.send(result);
+                        }
+                        Cmd::Keys(reply) => {
+                            let _ = reply.send(executor.keys());
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Engine { tx, handle: Some(handle) })
+    }
+
+    /// Execute synchronously (blocks the calling thread, not the engine
+    /// queue — other callers' requests are serialized behind it).
+    pub fn exec(&self, key: &str, inputs: Vec<Vec<i32>>) -> Result<Vec<Vec<i32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Exec(ExecRequest { key: key.to_string(), inputs, reply }))
+            .map_err(|_| anyhow!("engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Fire an async execution; the reply lands on `reply`.
+    pub fn exec_async(
+        &self,
+        key: &str,
+        inputs: Vec<Vec<i32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<i32>>>>,
+    ) -> Result<()> {
+        self.tx
+            .send(Cmd::Exec(ExecRequest { key: key.to_string(), inputs, reply }))
+            .map_err(|_| anyhow!("engine is down"))
+    }
+
+    pub fn keys(&self) -> Result<Vec<String>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Cmd::Keys(tx)).map_err(|_| anyhow!("engine is down"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_exec_shutdown() {
+        let engine = Engine::spawn(|| Ok(MockExecutor::new(&["gdf/conv"]))).unwrap();
+        let out = engine.exec("gdf/conv", vec![vec![10, 20, 30]]).unwrap();
+        assert_eq!(out, vec![vec![5, 10, 15]]);
+        assert_eq!(engine.keys().unwrap(), vec!["gdf/conv"]);
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let engine = Engine::spawn(|| Ok(MockExecutor::new(&["gdf/conv"]))).unwrap();
+        assert!(engine.exec("nope", vec![vec![1]]).is_err());
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let r = Engine::spawn(|| -> Result<MockExecutor> { Err(anyhow!("boom")) });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn concurrent_callers_serialize() {
+        let engine =
+            std::sync::Arc::new(Engine::spawn(|| Ok(MockExecutor::new(&["frnn/conv"]))).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let e = engine.clone();
+            handles.push(std::thread::spawn(move || {
+                let out = e.exec("frnn/conv", vec![vec![t * 2]]).unwrap();
+                assert_eq!(out[0][0], t);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

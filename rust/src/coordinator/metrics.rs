@@ -1,0 +1,120 @@
+//! Coordinator metrics: request counters, latency records, batch-size
+//! histogram. Shared across threads behind a mutex (request rates here
+//! are far below contention territory; the hot path is model execution).
+
+use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+struct Inner {
+    /// per route ("gdf/ds16"): latencies in seconds
+    latencies: BTreeMap<String, Vec<f64>>,
+    completed: u64,
+    rejected: u64,
+    errors: u64,
+    batch_sizes: Vec<usize>,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, route: &str, d: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        m.latencies.entry(route.to_string()).or_default().push(d.as_secs_f64());
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.inner.lock().unwrap().batch_sizes.push(size);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.inner.lock().unwrap().completed
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.inner.lock().unwrap().errors
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        if m.batch_sizes.is_empty() {
+            0.0
+        } else {
+            m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+        }
+    }
+
+    /// Per-route latency summaries (seconds).
+    pub fn latency_summaries(&self) -> BTreeMap<String, Summary> {
+        let m = self.inner.lock().unwrap();
+        m.latencies
+            .iter()
+            .map(|(k, v)| (k.clone(), Summary::of(v.clone())))
+            .collect()
+    }
+
+    /// Human-readable report block.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "completed={} rejected={} errors={} mean_batch={:.2}\n",
+            self.completed(),
+            self.rejected(),
+            self.errors(),
+            self.mean_batch_size()
+        ));
+        for (route, sum) in self.latency_summaries() {
+            s.push_str(&format!(
+                "  {route:<16} n={:<6} mean={:.3}ms p50={:.3}ms p99={:.3}ms\n",
+                sum.n,
+                sum.mean * 1e3,
+                sum.p50 * 1e3,
+                sum.p99 * 1e3
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.record_latency("gdf/conv", Duration::from_millis(2));
+        m.record_latency("gdf/conv", Duration::from_millis(4));
+        m.record_batch(8);
+        m.record_rejected();
+        assert_eq!(m.completed(), 2);
+        assert_eq!(m.rejected(), 1);
+        assert_eq!(m.mean_batch_size(), 8.0);
+        let sums = m.latency_summaries();
+        assert!((sums["gdf/conv"].mean - 0.003).abs() < 1e-9);
+        assert!(m.report().contains("gdf/conv"));
+    }
+}

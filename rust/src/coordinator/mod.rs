@@ -1,0 +1,30 @@
+//! L3 coordinator: the embedded-inference runtime that serves the three
+//! PPC applications from AOT-compiled artifacts.
+//!
+//! Architecture (the paper's contribution lives at the block level, so
+//! L3 is the serving harness a deployed PPC system would ship with):
+//!
+//! ```text
+//!   clients ──submit()──► bounded queue ──► engine thread (owns PJRT)
+//!                              │                   │
+//!                         backpressure      router: (job, quality) → artifact
+//!                                                   │
+//!                                            dynamic batcher (classify)
+//!                                                   │
+//!                                            PJRT execute → reply channels
+//! ```
+//!
+//! The engine thread owns the [`crate::runtime::Runtime`] because the
+//! `xla` crate's client is not `Send`; requests and replies cross
+//! threads over `std::sync::mpsc` channels. Quality routing maps each
+//! request to a PPC configuration — the serving-time analogue of
+//! choosing how much sparsity a deployment tolerates.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use engine::{Engine, Executor, MockExecutor};
+pub use metrics::Metrics;
+pub use server::{Coordinator, CoordinatorConfig, Job, Quality, Response, SubmitError};

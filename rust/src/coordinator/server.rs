@@ -1,0 +1,430 @@
+//! The coordinator: request routing, quality policy, backpressure,
+//! dynamic batching, metrics — in front of the engine thread.
+
+use super::batcher::{Batcher, Pending};
+use super::engine::{Engine, Executor};
+use super::metrics::Metrics;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Serving quality tier — the deployment's sparsity-tolerance knob.
+/// Maps to the PPC configuration baked into each artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quality {
+    /// Conventional precise datapath.
+    Precise,
+    /// Moderate sparsity (DS16-class; FRNN uses TH48+DS16).
+    Balanced,
+    /// Aggressive sparsity (DS32-class).
+    Economy,
+}
+
+/// A unit of work.
+#[derive(Clone, Debug)]
+pub enum Job {
+    /// Gaussian-denoise an image (flat i32 pixels, artifact shape).
+    Denoise { image: Vec<i32> },
+    /// Blend two images with quantized alpha in [0, 127].
+    Blend { p1: Vec<i32>, p2: Vec<i32>, alpha: i32 },
+    /// Classify one face (960 pixels).
+    Classify { pixels: Vec<i32> },
+}
+
+impl Job {
+    fn app(&self) -> &'static str {
+        match self {
+            Job::Denoise { .. } => "gdf",
+            Job::Blend { .. } => "blend",
+            Job::Classify { .. } => "frnn",
+        }
+    }
+}
+
+/// Completed result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub outputs: Vec<Vec<i32>>,
+    pub route: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue full — caller should back off.
+    Busy,
+    /// Coordinator shut down.
+    Down,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Bounded submit queue (backpressure boundary).
+    pub queue_capacity: usize,
+    /// FRNN artifact batch dimension.
+    pub batch_size: usize,
+    /// FRNN input row length.
+    pub classify_row: usize,
+    /// Max time a classify request waits for batch-mates.
+    pub batch_max_wait: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            queue_capacity: 64,
+            batch_size: 16,
+            classify_row: 960,
+            batch_max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Map (app, quality) to the artifact config name.
+pub fn route_config(app: &str, q: Quality) -> &'static str {
+    match (app, q) {
+        (_, Quality::Precise) => "conv",
+        ("frnn", Quality::Balanced) => "th48ds16",
+        (_, Quality::Balanced) => "ds16",
+        (_, Quality::Economy) => "ds32",
+    }
+}
+
+struct WorkItem {
+    job: Job,
+    quality: Quality,
+    reply: mpsc::Sender<Result<Response>>,
+    submitted: Instant,
+}
+
+/// Handle to an in-flight request.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Response>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response> {
+        self.rx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+    }
+    pub fn wait_timeout(self, d: Duration) -> Result<Response> {
+        self.rx
+            .recv_timeout(d)
+            .map_err(|_| anyhow!("timeout waiting for response"))?
+    }
+}
+
+/// The coordinator front-end.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<WorkItem>,
+    metrics: Arc<Metrics>,
+    down: Arc<AtomicBool>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start with a custom executor factory (runs on the engine thread).
+    pub fn start<E, F>(config: CoordinatorConfig, factory: F) -> Result<Coordinator>
+    where
+        E: Executor,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let engine = Engine::spawn(factory)?;
+        let (tx, rx) = mpsc::sync_channel::<WorkItem>(config.queue_capacity);
+        let metrics = Arc::new(Metrics::new());
+        let down = Arc::new(AtomicBool::new(false));
+        let m = metrics.clone();
+        let d = down.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("ppc-dispatch".into())
+            .spawn(move || dispatch_loop(config, engine, rx, m, d))?;
+        Ok(Coordinator { tx, metrics, down, dispatcher: Some(dispatcher) })
+    }
+
+    /// Start against the artifact directory (production path).
+    pub fn with_artifacts(dir: &std::path::Path, config: CoordinatorConfig) -> Result<Coordinator> {
+        let dir = dir.to_path_buf();
+        Coordinator::start(config, move || crate::runtime::Runtime::load(&dir))
+    }
+
+    /// Submit a job; `Err(Busy)` when the bounded queue is full.
+    pub fn submit(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
+        if self.down.load(Ordering::Relaxed) {
+            return Err(SubmitError::Down);
+        }
+        let (reply, rx) = mpsc::channel();
+        let item = WorkItem { job, quality, reply, submitted: Instant::now() };
+        match self.tx.try_send(item) {
+            Ok(()) => Ok(Ticket { rx }),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.record_rejected();
+                Err(SubmitError::Busy)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Down),
+        }
+    }
+
+    /// Blocking submit (waits for queue space).
+    pub fn submit_blocking(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
+        let (reply, rx) = mpsc::channel();
+        let item = WorkItem { job, quality, reply, submitted: Instant::now() };
+        self.tx.send(item).map_err(|_| SubmitError::Down)?;
+        Ok(Ticket { rx })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.down.store(true, Ordering::Relaxed);
+        // close the channel by replacing tx? dropping self.tx happens
+        // after dispatcher join; force-disconnect by taking the handle
+        // only after the sender is dropped — so drop order: we can't
+        // drop tx early (borrowed), but dispatcher exits when all
+        // senders are gone; the handle join happens in a scoped drop:
+        if let Some(h) = self.dispatcher.take() {
+            // replace tx with a dummy to disconnect the queue
+            let (dummy, _rx) = mpsc::sync_channel(1);
+            let old = std::mem::replace(&mut self.tx, dummy);
+            drop(old);
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    config: CoordinatorConfig,
+    engine: Engine,
+    rx: mpsc::Receiver<WorkItem>,
+    metrics: Arc<Metrics>,
+    down: Arc<AtomicBool>,
+) {
+    let mut batcher: Batcher<Result<Response>> =
+        Batcher::new(config.batch_size, config.classify_row, config.batch_max_wait);
+    loop {
+        // wait until next batch deadline (or idle poll)
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(20));
+        match rx.recv_timeout(timeout) {
+            Ok(item) => {
+                handle_item(&config, &engine, &mut batcher, &metrics, item);
+                // Drain everything already queued before flushing:
+                // under backlog the oldest classify is always past its
+                // deadline, and flushing per-item would degrade batches
+                // to size 1.
+                while let Ok(item) = rx.try_recv() {
+                    handle_item(&config, &engine, &mut batcher, &metrics, item);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        flush_due(&engine, &mut batcher, &metrics);
+    }
+    // drain remaining batches before exit
+    let routes: Vec<String> = batcher.due(Instant::now() + Duration::from_secs(3600));
+    for route in routes {
+        flush_route(&engine, &mut batcher, &metrics, &route);
+    }
+    down.store(true, Ordering::Relaxed);
+}
+
+fn handle_item(
+    config: &CoordinatorConfig,
+    engine: &Engine,
+    batcher: &mut Batcher<Result<Response>>,
+    metrics: &Metrics,
+    item: WorkItem,
+) {
+    let app = item.job.app();
+    let route = format!("{}/{}", app, route_config(app, item.quality));
+    match item.job {
+        Job::Denoise { image } => {
+            let result = engine.exec(&route, vec![image]).map(|outputs| Response {
+                outputs,
+                route: route.clone(),
+            });
+            if result.is_err() {
+                metrics.record_error();
+            } else {
+                metrics.record_latency(&route, item.submitted.elapsed());
+            }
+            let _ = item.reply.send(result);
+        }
+        Job::Blend { p1, p2, alpha } => {
+            let result = engine
+                .exec(&route, vec![p1, p2, vec![alpha]])
+                .map(|outputs| Response { outputs, route: route.clone() });
+            if result.is_err() {
+                metrics.record_error();
+            } else {
+                metrics.record_latency(&route, item.submitted.elapsed());
+            }
+            let _ = item.reply.send(result);
+        }
+        Job::Classify { pixels } => {
+            if pixels.len() != config.classify_row {
+                metrics.record_error();
+                let _ = item
+                    .reply
+                    .send(Err(anyhow!("classify row must be {} pixels", config.classify_row)));
+                return;
+            }
+            batcher.push(
+                &route,
+                Pending { input: pixels, reply: item.reply, enqueued: item.submitted },
+            );
+        }
+    }
+}
+
+fn flush_due(engine: &Engine, batcher: &mut Batcher<Result<Response>>, metrics: &Metrics) {
+    for route in batcher.due(Instant::now()) {
+        flush_route(engine, batcher, metrics, &route);
+    }
+}
+
+fn flush_route(
+    engine: &Engine,
+    batcher: &mut Batcher<Result<Response>>,
+    metrics: &Metrics,
+    route: &str,
+) {
+    let (pendings, flat) = batcher.take_batch(route);
+    if pendings.is_empty() {
+        return;
+    }
+    metrics.record_batch(pendings.len());
+    match engine.exec(route, vec![flat]) {
+        Ok(outputs) => {
+            // outputs[0] is (batch, out_row) flattened; scatter rows
+            let total = outputs[0].len();
+            let rows = batcher.batch_size;
+            let out_row = total / rows;
+            for (i, p) in pendings.into_iter().enumerate() {
+                let row = outputs[0][i * out_row..(i + 1) * out_row].to_vec();
+                metrics.record_latency(route, p.enqueued.elapsed());
+                let _ = p.reply.send(Ok(Response {
+                    outputs: vec![row],
+                    route: route.to_string(),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in pendings {
+                metrics.record_error();
+                let _ = p.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockExecutor;
+
+    fn mock_coordinator(capacity: usize, delay_ms: u64) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            queue_capacity: capacity,
+            batch_size: 4,
+            classify_row: 8,
+            batch_max_wait: Duration::from_millis(2),
+        };
+        Coordinator::start(cfg, move || {
+            let mut m = MockExecutor::new(&[
+                "gdf/conv", "gdf/ds16", "gdf/ds32",
+                "blend/conv", "blend/ds16", "blend/ds32",
+                "frnn/conv", "frnn/th48ds16", "frnn/ds32",
+            ]);
+            m.delay = Duration::from_millis(delay_ms);
+            Ok(m)
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn denoise_round_trip() {
+        let c = mock_coordinator(8, 0);
+        let t = c
+            .submit(Job::Denoise { image: vec![10, 20, 30, 40] }, Quality::Balanced)
+            .unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.route, "gdf/ds16");
+        assert_eq!(r.outputs[0], vec![5, 10, 15, 20]);
+        assert_eq!(c.metrics().completed(), 1);
+    }
+
+    #[test]
+    fn blend_routes_by_quality() {
+        let c = mock_coordinator(8, 0);
+        let t = c
+            .submit(
+                Job::Blend { p1: vec![10, 20], p2: vec![30, 40], alpha: 64 },
+                Quality::Economy,
+            )
+            .unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.route, "blend/ds32");
+        assert_eq!(r.outputs[0], vec![20, 30]);
+    }
+
+    #[test]
+    fn classify_batches_and_scatters() {
+        let c = mock_coordinator(32, 0);
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                c.submit(Job::Classify { pixels: vec![i * 2; 8] }, Quality::Precise).unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().unwrap();
+            assert_eq!(r.route, "frnn/conv");
+            assert_eq!(r.outputs[0], vec![i as i32; 8]);
+        }
+        assert!(c.metrics().mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let c = mock_coordinator(8, 0);
+        let t = c.submit(Job::Classify { pixels: vec![6; 8] }, Quality::Balanced).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(r.route, "frnn/th48ds16");
+        assert_eq!(r.outputs[0], vec![3; 8]);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // slow engine + tiny queue → Busy
+        let c = mock_coordinator(1, 30);
+        let _t1 = c.submit(Job::Denoise { image: vec![1] }, Quality::Precise).unwrap();
+        let mut saw_busy = false;
+        for _ in 0..50 {
+            match c.submit(Job::Denoise { image: vec![1] }, Quality::Precise) {
+                Err(SubmitError::Busy) => {
+                    saw_busy = true;
+                    break;
+                }
+                Ok(_t) => {}
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(saw_busy, "bounded queue never pushed back");
+        assert!(c.metrics().rejected() >= 1);
+    }
+
+    #[test]
+    fn bad_classify_row_errors() {
+        let c = mock_coordinator(8, 0);
+        let t = c.submit(Job::Classify { pixels: vec![1, 2] }, Quality::Precise).unwrap();
+        assert!(t.wait().is_err());
+        assert_eq!(c.metrics().errors(), 1);
+    }
+}

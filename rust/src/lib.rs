@@ -1,0 +1,31 @@
+//! # Partially-Precise Computing (PPC)
+//!
+//! Reproduction of *"Partially-Precise Computing Paradigm for Efficient
+//! Hardware Implementation of Application-Specific Embedded Systems"*.
+//!
+//! A PPC block is an adder/multiplier that is only required to be correct
+//! on the task-relevant subset of its input space; omitted inputs become
+//! don't-cares that the synthesis flow exploits. This crate carries:
+//!
+//! - [`logic`] — the full synthesis substrate (truth tables, ISOP +
+//!   Espresso-style two-level minimization, algebraic factoring, AIG,
+//!   technology mapping onto a 90 nm-flavored cell library, gate-level
+//!   netlists with area/delay/power reports),
+//! - `ppc` — the paper's contribution (DS/TH preprocessings, PPC block
+//!   generators, closed-form + exhaustive error analysis, the Fig. 3
+//!   design flow),
+//! - `apps` — the three applications (Gaussian denoising filter, image
+//!   blending, face-recognition NN) in bit-accurate fixed point,
+//! - [`runtime`] + [`coordinator`] — the embedded-inference runtime that
+//!   loads the AOT-compiled JAX/Pallas artifacts and serves batched
+//!   requests (python never runs on the request path),
+//! - [`util`] — offline-friendly stand-ins for rand/serde/rayon/clap/
+//!   criterion/proptest.
+
+pub mod apps;
+pub mod coordinator;
+pub mod logic;
+pub mod ppc;
+pub mod runtime;
+pub mod tables;
+pub mod util;

@@ -1,0 +1,294 @@
+//! And-Inverter Graph with structural hashing.
+//!
+//! The library-independent intermediate form between algebraic factoring
+//! ([`super::factor`]) and technology mapping ([`super::map`]): every
+//! function becomes 2-input AND nodes plus complemented edges. Structural
+//! hashing shares identical subgraphs across all outputs of a block —
+//! this is where the cross-output sharing the paper gets from SIS shows
+//! up in our flow.
+
+use super::factor::Expr;
+use std::collections::HashMap;
+
+/// Edge = node index << 1 | complement bit. Node 0 is constant FALSE,
+/// so edge 0 = false, edge 1 = true.
+pub type Edge = u32;
+
+pub const FALSE_EDGE: Edge = 0;
+pub const TRUE_EDGE: Edge = 1;
+
+#[inline]
+pub fn node_of(e: Edge) -> usize {
+    (e >> 1) as usize
+}
+
+#[inline]
+pub fn is_compl(e: Edge) -> bool {
+    e & 1 == 1
+}
+
+#[inline]
+pub fn compl(e: Edge) -> Edge {
+    e ^ 1
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    Const,          // node 0
+    Input(usize),   // primary input index
+    And(Edge, Edge),
+}
+
+/// Structurally-hashed AIG.
+#[derive(Clone, Debug, Default)]
+pub struct Aig {
+    pub nodes: Vec<Node>,
+    strash: HashMap<(Edge, Edge), Edge>,
+    inputs: Vec<Edge>,
+    pub outputs: Vec<Edge>,
+}
+
+impl Aig {
+    pub fn new(num_inputs: usize) -> Aig {
+        let mut g = Aig {
+            nodes: vec![Node::Const],
+            strash: HashMap::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        };
+        for i in 0..num_inputs {
+            g.nodes.push(Node::Input(i));
+            g.inputs.push((g.nodes.len() as u32 - 1) << 1);
+        }
+        g
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.inputs.len()
+    }
+
+    pub fn input(&self, i: usize) -> Edge {
+        self.inputs[i]
+    }
+
+    /// AND with constant folding and structural hashing.
+    pub fn and(&mut self, a: Edge, b: Edge) -> Edge {
+        // constant folding
+        if a == FALSE_EDGE || b == FALSE_EDGE {
+            return FALSE_EDGE;
+        }
+        if a == TRUE_EDGE {
+            return b;
+        }
+        if b == TRUE_EDGE {
+            return a;
+        }
+        if a == b {
+            return a;
+        }
+        if a == compl(b) {
+            return FALSE_EDGE;
+        }
+        let key = if a <= b { (a, b) } else { (b, a) };
+        if let Some(&e) = self.strash.get(&key) {
+            return e;
+        }
+        self.nodes.push(Node::And(key.0, key.1));
+        let e = ((self.nodes.len() - 1) as u32) << 1;
+        self.strash.insert(key, e);
+        e
+    }
+
+    pub fn or(&mut self, a: Edge, b: Edge) -> Edge {
+        compl(self.and(compl(a), compl(b)))
+    }
+
+    pub fn xor(&mut self, a: Edge, b: Edge) -> Edge {
+        let nand_ab = compl(self.and(a, b));
+        let or_ab = self.or(a, b);
+        self.and(nand_ab, or_ab)
+    }
+
+    pub fn mux(&mut self, sel: Edge, t: Edge, f: Edge) -> Edge {
+        let a = self.and(sel, t);
+        let b = self.and(compl(sel), f);
+        self.or(a, b)
+    }
+
+    /// Add a factored expression; returns its edge.
+    pub fn add_expr(&mut self, e: &Expr) -> Edge {
+        match e {
+            Expr::Const(false) => FALSE_EDGE,
+            Expr::Const(true) => TRUE_EDGE,
+            Expr::Lit(v, neg) => {
+                let edge = self.input(*v);
+                if *neg {
+                    compl(edge)
+                } else {
+                    edge
+                }
+            }
+            Expr::And(parts) => {
+                let mut acc = TRUE_EDGE;
+                for p in parts {
+                    let pe = self.add_expr(p);
+                    acc = self.and(acc, pe);
+                }
+                acc
+            }
+            Expr::Or(parts) => {
+                let mut acc = FALSE_EDGE;
+                for p in parts {
+                    let pe = self.add_expr(p);
+                    acc = self.or(acc, pe);
+                }
+                acc
+            }
+        }
+    }
+
+    /// Number of AND nodes (the classic AIG size metric).
+    pub fn num_ands(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::And(..)))
+            .count()
+    }
+
+    /// Logic depth in AND levels (complemented edges are free).
+    pub fn depth(&self) -> usize {
+        let mut level = vec![0usize; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Node::And(a, b) = n {
+                level[i] = 1 + level[node_of(*a)].max(level[node_of(*b)]);
+            }
+        }
+        self.outputs
+            .iter()
+            .map(|&e| level[node_of(e)])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Evaluate all outputs for an input minterm (bit `i` of `m` drives
+    /// input `i`).
+    pub fn eval(&self, m: u64) -> Vec<bool> {
+        let mut val = vec![false; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            val[i] = match n {
+                Node::Const => false,
+                Node::Input(k) => (m >> k) & 1 == 1,
+                Node::And(a, b) => {
+                    let av = val[node_of(*a)] != is_compl(*a);
+                    let bv = val[node_of(*b)] != is_compl(*b);
+                    av && bv
+                }
+            };
+        }
+        self.outputs
+            .iter()
+            .map(|&e| val[node_of(e)] != is_compl(e))
+            .collect()
+    }
+
+    /// Nodes reachable from the outputs (dead-node count excluded from
+    /// costs).
+    pub fn live_mask(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack: Vec<usize> = self.outputs.iter().map(|&e| node_of(e)).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            if let Node::And(a, b) = self.nodes[i] {
+                stack.push(node_of(a));
+                stack.push(node_of(b));
+            }
+        }
+        live
+    }
+
+    pub fn num_live_ands(&self) -> usize {
+        let live = self.live_mask();
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, n)| live[*i] && matches!(n, Node::And(..)))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::cover::Cover;
+    use crate::logic::espresso::{minimize, Options};
+    use crate::logic::factor::factor;
+    use crate::logic::tt::Tt;
+
+    #[test]
+    fn strash_shares() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.input(0), g.input(1));
+        let x = g.and(a, b);
+        let y = g.and(b, a);
+        assert_eq!(x, y);
+        assert_eq!(g.num_ands(), 1);
+    }
+
+    #[test]
+    fn constant_folding() {
+        let mut g = Aig::new(1);
+        let a = g.input(0);
+        assert_eq!(g.and(a, FALSE_EDGE), FALSE_EDGE);
+        assert_eq!(g.and(a, TRUE_EDGE), a);
+        assert_eq!(g.and(a, compl(a)), FALSE_EDGE);
+        assert_eq!(g.or(a, compl(a)), TRUE_EDGE);
+        assert_eq!(g.num_ands(), 0);
+    }
+
+    #[test]
+    fn xor_truth() {
+        let mut g = Aig::new(2);
+        let (a, b) = (g.input(0), g.input(1));
+        let x = g.xor(a, b);
+        g.outputs.push(x);
+        for m in 0..4u64 {
+            assert_eq!(g.eval(m)[0], ((m & 1) ^ ((m >> 1) & 1)) == 1);
+        }
+    }
+
+    #[test]
+    fn expr_roundtrip_through_aig() {
+        let f = Tt::from_fn(5, |m| (m * 7 + 3) % 5 < 2);
+        let cov: Cover = minimize(&f, &f, Options::default());
+        let e = factor(&cov);
+        let mut g = Aig::new(5);
+        let out = g.add_expr(&e);
+        g.outputs.push(out);
+        for m in 0..32u64 {
+            assert_eq!(g.eval(m)[0], f.get(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn depth_counts_levels() {
+        let mut g = Aig::new(4);
+        let ab = g.and(g.input(0), g.input(1));
+        let cd = g.and(g.input(2), g.input(3));
+        let all = g.and(ab, cd);
+        g.outputs.push(all);
+        assert_eq!(g.depth(), 2);
+    }
+
+    #[test]
+    fn live_mask_excludes_dead() {
+        let mut g = Aig::new(3);
+        let ab = g.and(g.input(0), g.input(1));
+        let _dead = g.and(g.input(1), g.input(2));
+        g.outputs.push(ab);
+        assert_eq!(g.num_ands(), 2);
+        assert_eq!(g.num_live_ands(), 1);
+    }
+}

@@ -1,0 +1,313 @@
+//! Cubes and covers (sum-of-products) over ≤ 64 input variables.
+//!
+//! A [`Cube`] is a product term stored as two literal bitmasks
+//! (`pos` = variables appearing positively, `neg` = negatively). A
+//! [`Cover`] is a list of cubes — the SOP form the two-level engine
+//! produces and the multi-level synthesis consumes.
+
+use super::tt::Tt;
+
+/// A product term. A variable may appear in `pos`, in `neg`, or in
+/// neither (don't-care within the cube); never in both.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Cube {
+    pub pos: u64,
+    pub neg: u64,
+}
+
+impl std::fmt::Debug for Cube {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.pos == 0 && self.neg == 0 {
+            return write!(f, "1");
+        }
+        let mut first = true;
+        for v in 0..64 {
+            let bit = 1u64 << v;
+            if self.pos & bit != 0 || self.neg & bit != 0 {
+                if !first {
+                    write!(f, "·")?;
+                }
+                write!(f, "x{v}{}", if self.neg & bit != 0 { "'" } else { "" })?;
+                first = false;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Cube {
+    /// The universal cube (constant 1).
+    pub const UNIVERSE: Cube = Cube { pos: 0, neg: 0 };
+
+    /// Cube for a single minterm over `nvars` variables.
+    pub fn minterm(nvars: usize, m: u64) -> Cube {
+        let mask = if nvars >= 64 { u64::MAX } else { (1u64 << nvars) - 1 };
+        Cube { pos: m & mask, neg: !m & mask }
+    }
+
+    /// Number of literals.
+    #[inline]
+    pub fn literals(&self) -> u32 {
+        self.pos.count_ones() + self.neg.count_ones()
+    }
+
+    /// Does this cube contain the given minterm?
+    #[inline]
+    pub fn covers(&self, m: u64) -> bool {
+        (m & self.pos) == self.pos && (m & self.neg) == 0
+    }
+
+    /// Cube containment: `self ⊆ other` (other is more general).
+    #[inline]
+    pub fn subset_of(&self, other: &Cube) -> bool {
+        (other.pos & !self.pos) == 0 && (other.neg & !self.neg) == 0
+    }
+
+    /// Add literal `x_v` (positive) or `x_v'` (negative).
+    pub fn with_literal(mut self, v: usize, positive: bool) -> Cube {
+        let bit = 1u64 << v;
+        debug_assert_eq!(self.pos & bit, 0);
+        debug_assert_eq!(self.neg & bit, 0);
+        if positive {
+            self.pos |= bit;
+        } else {
+            self.neg |= bit;
+        }
+        self
+    }
+
+    /// Remove any literal on variable `v`.
+    pub fn without_var(mut self, v: usize) -> Cube {
+        let bit = !(1u64 << v);
+        self.pos &= bit;
+        self.neg &= bit;
+        self
+    }
+
+    /// Intersection; `None` if the cubes are disjoint (opposing literals).
+    pub fn intersect(&self, other: &Cube) -> Option<Cube> {
+        let pos = self.pos | other.pos;
+        let neg = self.neg | other.neg;
+        if pos & neg != 0 {
+            None
+        } else {
+            Some(Cube { pos, neg })
+        }
+    }
+
+    /// Expand into a truth-table bitset over `nvars` variables.
+    pub fn to_tt(&self, nvars: usize) -> Tt {
+        let mut t = Tt::ones(nvars);
+        for v in 0..nvars {
+            let bit = 1u64 << v;
+            if self.pos & bit != 0 {
+                t.and_assign(&Tt::var(nvars, v));
+            } else if self.neg & bit != 0 {
+                t.and_assign(&Tt::var(nvars, v).not());
+            }
+        }
+        t
+    }
+
+    /// Number of minterms (over `nvars` vars) this cube covers.
+    pub fn size(&self, nvars: usize) -> u64 {
+        1u64 << (nvars as u32 - self.literals())
+    }
+
+    /// PLA text for this cube's input part (`0`, `1`, `-` per variable,
+    /// most-significant variable first, espresso convention).
+    pub fn pla_row(&self, nvars: usize) -> String {
+        (0..nvars)
+            .rev()
+            .map(|v| {
+                let bit = 1u64 << v;
+                if self.pos & bit != 0 {
+                    '1'
+                } else if self.neg & bit != 0 {
+                    '0'
+                } else {
+                    '-'
+                }
+            })
+            .collect()
+    }
+}
+
+/// A sum of products.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Cover {
+    pub cubes: Vec<Cube>,
+}
+
+impl Cover {
+    pub fn empty() -> Cover {
+        Cover { cubes: Vec::new() }
+    }
+
+    pub fn tautology_cover() -> Cover {
+        Cover { cubes: vec![Cube::UNIVERSE] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cubes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cubes.is_empty()
+    }
+
+    /// Total literal count — the paper's two-level cost metric.
+    pub fn literals(&self) -> u64 {
+        self.cubes.iter().map(|c| c.literals() as u64).sum()
+    }
+
+    pub fn covers(&self, m: u64) -> bool {
+        self.cubes.iter().any(|c| c.covers(m))
+    }
+
+    /// Union of all cube bitsets.
+    pub fn to_tt(&self, nvars: usize) -> Tt {
+        let mut t = Tt::zeros(nvars);
+        for c in &self.cubes {
+            t.or_assign(&c.to_tt(nvars));
+        }
+        t
+    }
+
+    /// Drop cubes single-cube-contained in another cube of the cover.
+    pub fn remove_contained(&mut self) {
+        let cubes = std::mem::take(&mut self.cubes);
+        let mut kept: Vec<Cube> = Vec::with_capacity(cubes.len());
+        // sort by ascending literal count so general cubes come first
+        let mut sorted = cubes;
+        sorted.sort_by_key(|c| c.literals());
+        'next: for c in sorted {
+            for k in &kept {
+                if c.subset_of(k) {
+                    continue 'next;
+                }
+            }
+            kept.push(c);
+        }
+        self.cubes = kept;
+    }
+
+    /// Emit espresso `.pla` format (single output).
+    pub fn to_pla(&self, nvars: usize, name: &str) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("# {name}\n.i {nvars}\n.o 1\n.p {}\n", self.cubes.len()));
+        for c in &self.cubes {
+            s.push_str(&c.pla_row(nvars));
+            s.push_str(" 1\n");
+        }
+        s.push_str(".e\n");
+        s
+    }
+}
+
+/// Emit a multi-output PLA (shared input plane; `covers[k]` drives
+/// output `k`). Type `fr` semantics: rows list each cube once per output
+/// set via an output part of `1`/`0` markers.
+pub fn to_pla_multi(covers: &[Cover], nvars: usize, name: &str) -> String {
+    use std::collections::BTreeMap;
+    // Merge identical cubes across outputs into one row with an output part.
+    let mut rows: BTreeMap<Cube, Vec<bool>> = BTreeMap::new();
+    for (k, cover) in covers.iter().enumerate() {
+        for c in &cover.cubes {
+            rows.entry(*c).or_insert_with(|| vec![false; covers.len()])[k] = true;
+        }
+    }
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# {name}\n.i {nvars}\n.o {}\n.p {}\n",
+        covers.len(),
+        rows.len()
+    ));
+    for (cube, outs) in &rows {
+        s.push_str(&cube.pla_row(nvars));
+        s.push(' ');
+        for &o in outs {
+            s.push(if o { '1' } else { '0' });
+        }
+        s.push('\n');
+    }
+    s.push_str(".e\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minterm_cube() {
+        let c = Cube::minterm(4, 0b1010);
+        assert!(c.covers(0b1010));
+        assert!(!c.covers(0b1011));
+        assert_eq!(c.literals(), 4);
+    }
+
+    #[test]
+    fn containment() {
+        let gen = Cube::UNIVERSE.with_literal(1, true); // x1
+        let spec = gen.with_literal(3, false); // x1·x3'
+        assert!(spec.subset_of(&gen));
+        assert!(!gen.subset_of(&spec));
+    }
+
+    #[test]
+    fn intersect_disjoint() {
+        let a = Cube::UNIVERSE.with_literal(0, true);
+        let b = Cube::UNIVERSE.with_literal(0, false);
+        assert!(a.intersect(&b).is_none());
+        let c = Cube::UNIVERSE.with_literal(1, true);
+        assert_eq!(a.intersect(&c).unwrap().literals(), 2);
+    }
+
+    #[test]
+    fn cube_to_tt_counts() {
+        let c = Cube::UNIVERSE.with_literal(2, true); // x2 over 5 vars
+        let t = c.to_tt(5);
+        assert_eq!(t.count_ones(), 16);
+        assert_eq!(c.size(5), 16);
+    }
+
+    #[test]
+    fn cover_tt_union() {
+        let mut cov = Cover::empty();
+        cov.cubes.push(Cube::UNIVERSE.with_literal(0, true));
+        cov.cubes.push(Cube::UNIVERSE.with_literal(1, true));
+        let t = cov.to_tt(2); // x0 + x1 over 2 vars: minterms 1,2,3
+        assert_eq!(t.count_ones(), 3);
+        assert!(!cov.covers(0));
+        assert!(cov.covers(3));
+    }
+
+    #[test]
+    fn remove_contained_keeps_general() {
+        let gen = Cube::UNIVERSE.with_literal(0, true);
+        let spec = gen.with_literal(1, true);
+        let mut cov = Cover { cubes: vec![spec, gen] };
+        cov.remove_contained();
+        assert_eq!(cov.cubes, vec![gen]);
+    }
+
+    #[test]
+    fn pla_format() {
+        let c = Cube::UNIVERSE.with_literal(0, true).with_literal(3, false);
+        assert_eq!(c.pla_row(4), "0--1");
+        let cov = Cover { cubes: vec![c] };
+        let pla = cov.to_pla(4, "t");
+        assert!(pla.contains(".i 4"));
+        assert!(pla.contains("0--1 1"));
+    }
+
+    #[test]
+    fn pla_multi_merges_shared_cubes() {
+        let c = Cube::UNIVERSE.with_literal(0, true);
+        let covers = vec![Cover { cubes: vec![c] }, Cover { cubes: vec![c] }];
+        let pla = to_pla_multi(&covers, 2, "t");
+        assert!(pla.contains(".p 1"));
+        assert!(pla.contains("-1 11"));
+    }
+}

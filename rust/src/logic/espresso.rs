@@ -1,0 +1,271 @@
+//! Espresso-style two-level minimization.
+//!
+//! The classic Espresso-II loop — EXPAND, IRREDUNDANT, REDUCE — applied to
+//! the cover seeded by the Minato–Morreale ISOP ([`super::isop`]). All
+//! checks run on bit-packed truth tables, which is exact (no heuristic
+//! containment) for the block sizes the paper synthesizes (≤ 16 inputs
+//! flat; larger blocks are composed from 4-bit segments exactly as the
+//! paper's supplementary prescribes).
+//!
+//! Entry point: [`minimize`] — give it the ON-set `L` and the upper bound
+//! `U = ON ∪ DC` and get a small SOP cover back.
+
+use super::cover::{Cover, Cube};
+use super::isop;
+use super::tt::Tt;
+
+/// Options for the minimization loop.
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    /// Maximum EXPAND→IRREDUNDANT→REDUCE round trips.
+    pub max_iters: usize,
+    /// Skip the polish loop entirely (raw ISOP output).
+    pub isop_only: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { max_iters: 2, isop_only: false }
+    }
+}
+
+/// Minimize the incompletely-specified function `[L, U]` into an SOP.
+pub fn minimize(l: &Tt, u: &Tt, opts: Options) -> Cover {
+    let mut cover = isop::isop(l, u);
+    if opts.isop_only || cover.is_empty() {
+        return cover;
+    }
+    let offset = u.not(); // minterms no cube may touch
+    let mut best = cover.clone();
+    let mut best_cost = cost(&best);
+    for _ in 0..opts.max_iters {
+        expand(&mut cover, &offset);
+        cover.remove_contained();
+        irredundant(&mut cover, l);
+        let c = cost(&cover);
+        if c < best_cost {
+            best_cost = c;
+            best = cover.clone();
+        } else {
+            break; // no progress
+        }
+        reduce(&mut cover, l);
+    }
+    debug_assert!(l.subset_of(&best.to_tt(l.nvars())));
+    debug_assert!(best.to_tt(l.nvars()).subset_of(u));
+    best
+}
+
+/// Cost order: primary = cube count, secondary = literal count
+/// (Espresso's own objective).
+fn cost(c: &Cover) -> (usize, u64) {
+    (c.len(), c.literals())
+}
+
+/// EXPAND: greedily drop literals from each cube while the cube stays
+/// disjoint from the OFF-set. Cubes are visited largest-first (more
+/// general cubes first maximizes the chance of containment removals).
+fn expand(cover: &mut Cover, offset: &Tt) {
+    let n = offset.nvars();
+    cover.cubes.sort_by_key(|c| std::cmp::Reverse(c.literals()));
+    for cube in cover.cubes.iter_mut() {
+        let mut current = *cube;
+        // Try dropping literals one variable at a time.
+        for v in 0..n {
+            let bit = 1u64 << v;
+            if current.pos & bit == 0 && current.neg & bit == 0 {
+                continue;
+            }
+            let cand = current.without_var(v);
+            if !cand.to_tt(n).intersects(offset) {
+                current = cand;
+            }
+        }
+        *cube = current;
+    }
+}
+
+/// IRREDUNDANT: drop cubes whose required minterms (ON-set ∩ cube) are
+/// already covered by the rest. Uses prefix/suffix unions so the
+/// union-of-others is O(|cover|) tables total.
+fn irredundant(cover: &mut Cover, l: &Tt) {
+    let n = l.nvars();
+    let k = cover.cubes.len();
+    if k <= 1 {
+        return;
+    }
+    let tts: Vec<Tt> = cover.cubes.iter().map(|c| c.to_tt(n)).collect();
+    // prefix[i] = union of tts[0..i]; suffix[i] = union of tts[i+1..]
+    let mut prefix = Vec::with_capacity(k + 1);
+    prefix.push(Tt::zeros(n));
+    for t in &tts {
+        let mut nxt = prefix.last().unwrap().clone();
+        nxt.or_assign(t);
+        prefix.push(nxt);
+    }
+    let mut suffix = vec![Tt::zeros(n); k + 1];
+    for i in (0..k).rev() {
+        let mut s = suffix[i + 1].clone();
+        s.or_assign(&tts[i]);
+        suffix[i] = s;
+    }
+    // Greedy scan: a cube is redundant if its ON minterms are covered by
+    // (kept earlier cubes) ∪ (all later cubes). Track the kept-prefix
+    // union incrementally.
+    let mut kept_union = Tt::zeros(n);
+    let mut kept = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut others = kept_union.clone();
+        others.or_assign(&suffix[i + 1]);
+        let required = tts[i].and(l);
+        if required.subset_of(&others) {
+            continue; // redundant
+        }
+        kept_union.or_assign(&tts[i]);
+        kept.push(cover.cubes[i]);
+    }
+    cover.cubes = kept;
+}
+
+/// REDUCE: shrink each cube to the supercube of the ON minterms only it
+/// covers, opening room for a different EXPAND direction next round.
+fn reduce(cover: &mut Cover, l: &Tt) {
+    let n = l.nvars();
+    let k = cover.cubes.len();
+    if k <= 1 {
+        return;
+    }
+    let tts: Vec<Tt> = cover.cubes.iter().map(|c| c.to_tt(n)).collect();
+    let mut union_all = Tt::zeros(n);
+    for t in &tts {
+        union_all.or_assign(t);
+    }
+    let mut out = Vec::with_capacity(k);
+    for (i, cube) in cover.cubes.iter().enumerate() {
+        // minterms only this cube covers (within ON-set)
+        let mut others = Tt::zeros(n);
+        for (j, t) in tts.iter().enumerate() {
+            if j != i {
+                others.or_assign(t);
+            }
+        }
+        let exclusive = tts[i].and(l).and_not(&others);
+        if exclusive.is_zero() {
+            // fully shared: keep as-is (irredundant will handle it)
+            out.push(*cube);
+            continue;
+        }
+        out.push(supercube_of(&exclusive, n));
+    }
+    cover.cubes = out;
+}
+
+/// Smallest cube containing every ON minterm of `t`.
+pub fn supercube_of(t: &Tt, nvars: usize) -> Cube {
+    let mut pos = 0u64;
+    let mut neg = 0u64;
+    for v in 0..nvars {
+        let var = Tt::var(nvars, v);
+        if !t.intersects(&var.not()) {
+            pos |= 1 << v; // every minterm has x_v = 1
+        } else if !t.intersects(&var) {
+            neg |= 1 << v; // every minterm has x_v = 0
+        }
+    }
+    Cube { pos, neg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn check_sound(l: &Tt, u: &Tt, c: &Cover) {
+        let set = c.to_tt(l.nvars());
+        assert!(l.subset_of(&set));
+        assert!(set.subset_of(u));
+    }
+
+    #[test]
+    fn exact_majority() {
+        // 3-input majority: minimal SOP = ab + ac + bc (6 literals)
+        let f = Tt::from_fn(3, |m| m.count_ones() >= 2);
+        let c = minimize(&f, &f, Options::default());
+        check_sound(&f, &f, &c);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.literals(), 6);
+    }
+
+    #[test]
+    fn dc_allows_cheaper_cover() {
+        // ON = {m : m == 3}, DC = everything else except 0:
+        // cover should expand to at most 1 literal.
+        let n = 3;
+        let on = Tt::from_fn(n, |m| m == 3);
+        let u = Tt::from_fn(n, |m| m != 0);
+        let c = minimize(&on, &u, Options::default());
+        check_sound(&on, &u, &c);
+        assert!(c.literals() <= 1, "literals = {}", c.literals());
+    }
+
+    #[test]
+    fn random_equivalence() {
+        let mut rng = Rng::new(0xE5);
+        for _ in 0..40 {
+            let n = 2 + rng.below(7) as usize;
+            let mut on = Tt::zeros(n);
+            let mut dc = Tt::zeros(n);
+            for m in 0..(1u64 << n) {
+                match rng.below(4) {
+                    0 | 1 => on.set(m),
+                    2 => dc.set(m),
+                    _ => {}
+                }
+            }
+            let u = on.or(&dc);
+            let c = minimize(&on, &u, Options::default());
+            check_sound(&on, &u, &c);
+            // never worse than raw ISOP
+            let raw = isop::isop(&on, &u);
+            assert!(cost(&c) <= cost(&raw), "polish regressed: {:?} vs {:?}", cost(&c), cost(&raw));
+        }
+    }
+
+    #[test]
+    fn more_dc_never_more_literals() {
+        // Monotonicity the paper's eq. (1) discussion relies on:
+        // growing the DC set cannot force a larger minimum cover
+        // (our heuristic should respect that on simple blocks).
+        let n = 6;
+        let f = Tt::from_fn(n, |m| {
+            let a = m & 7;
+            let b = m >> 3;
+            (a + b) & 1 == 1
+        });
+        let mut prev = u64::MAX;
+        for ds in [1u64, 2, 4, 8] {
+            // DS_x on both 3-bit inputs: care set = multiples of x
+            let care = Tt::from_fn(n, |m| (m & 7) % ds == 0 && (m >> 3) % ds == 0);
+            let on = f.and(&care);
+            let u = f.or(&care.not());
+            let c = minimize(&on, &u, Options::default());
+            check_sound(&on, &u, &c);
+            assert!(
+                c.literals() <= prev,
+                "DS{ds} grew literals: {} > {prev}",
+                c.literals()
+            );
+            prev = c.literals();
+        }
+    }
+
+    #[test]
+    fn supercube_basic() {
+        let t = Tt::from_fn(4, |m| m == 0b0101 || m == 0b0111);
+        let sc = supercube_of(&t, 4);
+        // x3' x0 x2? -> bits: minterms 5,7 share x0=1, x1 differs? 5=0101,7=0111
+        // x0=1 both, x1: 0 vs 1 -> free, x2=1 both, x3=0 both
+        assert_eq!(sc.pos, 0b0101);
+        assert_eq!(sc.neg, 0b1000);
+    }
+}

@@ -1,0 +1,186 @@
+//! Algebraic factoring of SOP covers ("quick factor").
+//!
+//! Converts a two-level cover into a factored Boolean expression — the
+//! SIS step that turns Espresso's SOP into multi-level structure. The
+//! recursion picks the most frequent literal as a divisor, algebraically
+//! divides `F = l·Q + R`, and recurses on quotient and remainder.
+
+use super::cover::{Cover, Cube};
+
+/// A factored Boolean expression over input variables.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Expr {
+    Const(bool),
+    /// Literal: variable index, complemented?
+    Lit(usize, bool),
+    And(Vec<Expr>),
+    Or(Vec<Expr>),
+}
+
+impl Expr {
+    /// Literal count of the factored form (the SIS "factored literals"
+    /// cost function).
+    pub fn literals(&self) -> u64 {
+        match self {
+            Expr::Const(_) => 0,
+            Expr::Lit(..) => 1,
+            Expr::And(v) | Expr::Or(v) => v.iter().map(|e| e.literals()).sum(),
+        }
+    }
+
+    /// Evaluate under an input minterm.
+    pub fn eval(&self, m: u64) -> bool {
+        match self {
+            Expr::Const(b) => *b,
+            Expr::Lit(v, neg) => ((m >> v) & 1 == 1) != *neg,
+            Expr::And(es) => es.iter().all(|e| e.eval(m)),
+            Expr::Or(es) => es.iter().any(|e| e.eval(m)),
+        }
+    }
+
+    fn flat_and(mut parts: Vec<Expr>) -> Expr {
+        let mut out = Vec::new();
+        for p in parts.drain(..) {
+            match p {
+                Expr::Const(true) => {}
+                Expr::Const(false) => return Expr::Const(false),
+                Expr::And(inner) => out.extend(inner),
+                e => out.push(e),
+            }
+        }
+        match out.len() {
+            0 => Expr::Const(true),
+            1 => out.pop().unwrap(),
+            _ => Expr::And(out),
+        }
+    }
+
+    fn flat_or(mut parts: Vec<Expr>) -> Expr {
+        let mut out = Vec::new();
+        for p in parts.drain(..) {
+            match p {
+                Expr::Const(false) => {}
+                Expr::Const(true) => return Expr::Const(true),
+                Expr::Or(inner) => out.extend(inner),
+                e => out.push(e),
+            }
+        }
+        match out.len() {
+            0 => Expr::Const(false),
+            1 => out.pop().unwrap(),
+            _ => Expr::Or(out),
+        }
+    }
+}
+
+/// Factor a cover into an expression tree.
+pub fn factor(cover: &Cover) -> Expr {
+    if cover.is_empty() {
+        return Expr::Const(false);
+    }
+    if cover.cubes.iter().any(|c| c.literals() == 0) {
+        return Expr::Const(true);
+    }
+    factor_rec(&cover.cubes)
+}
+
+fn cube_expr(c: &Cube) -> Expr {
+    let mut lits = Vec::new();
+    for v in 0..64 {
+        let bit = 1u64 << v;
+        if c.pos & bit != 0 {
+            lits.push(Expr::Lit(v, false));
+        } else if c.neg & bit != 0 {
+            lits.push(Expr::Lit(v, true));
+        }
+    }
+    Expr::flat_and(lits)
+}
+
+fn factor_rec(cubes: &[Cube]) -> Expr {
+    if cubes.len() == 1 {
+        return cube_expr(&cubes[0]);
+    }
+    // Most frequent literal (appearing in ≥ 2 cubes) becomes the divisor.
+    let mut best: Option<(usize, bool, usize)> = None; // (var, neg, count)
+    for v in 0..64usize {
+        let bit = 1u64 << v;
+        let pos_n = cubes.iter().filter(|c| c.pos & bit != 0).count();
+        let neg_n = cubes.iter().filter(|c| c.neg & bit != 0).count();
+        for (neg, n) in [(false, pos_n), (true, neg_n)] {
+            if n >= 2 && best.map_or(true, |(_, _, bn)| n > bn) {
+                best = Some((v, neg, n));
+            }
+        }
+    }
+    let Some((v, neg, _)) = best else {
+        // no sharing: plain OR of cube expressions
+        return Expr::flat_or(cubes.iter().map(cube_expr).collect());
+    };
+    let bit = 1u64 << v;
+    let mut quotient = Vec::new();
+    let mut remainder = Vec::new();
+    for c in cubes {
+        let has = if neg { c.neg & bit != 0 } else { c.pos & bit != 0 };
+        if has {
+            quotient.push(c.without_var(v));
+        } else {
+            remainder.push(*c);
+        }
+    }
+    let q = factor_rec(&quotient);
+    let head = Expr::flat_and(vec![Expr::Lit(v, neg), q]);
+    if remainder.is_empty() {
+        head
+    } else {
+        let r = factor_rec(&remainder);
+        Expr::flat_or(vec![head, r])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::espresso::{minimize, Options};
+    use crate::logic::tt::Tt;
+    use crate::util::prng::Rng;
+
+    fn cover_of(f: &Tt) -> Cover {
+        minimize(f, f, Options::default())
+    }
+
+    #[test]
+    fn factoring_preserves_function() {
+        let mut rng = Rng::new(0xFAC);
+        for _ in 0..30 {
+            let n = 2 + rng.below(7) as usize;
+            let f = Tt::from_fn(n, |_| rng.bool_with(0.4));
+            let cov = cover_of(&f);
+            let e = factor(&cov);
+            for m in 0..(1u64 << n) {
+                assert_eq!(e.eval(m), f.get(m), "mismatch at m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn factoring_reduces_literals() {
+        // F = a·b + a·c + a·d  ->  a·(b+c+d): 6 -> 4 literals
+        let cov = Cover {
+            cubes: vec![
+                Cube::UNIVERSE.with_literal(0, false).with_literal(1, false),
+                Cube::UNIVERSE.with_literal(0, false).with_literal(2, false),
+                Cube::UNIVERSE.with_literal(0, false).with_literal(3, false),
+            ],
+        };
+        let e = factor(&cov);
+        assert_eq!(e.literals(), 4);
+        assert!(e.literals() < cov.literals());
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(factor(&Cover::empty()), Expr::Const(false));
+        assert_eq!(factor(&Cover::tautology_cover()), Expr::Const(true));
+    }
+}

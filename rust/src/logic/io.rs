@@ -1,0 +1,312 @@
+//! PLA / BLIF interchange — the read side.
+//!
+//! The paper's tool chain moves designs through espresso `.pla` and SIS
+//! `.blif` files; [`super::cover`] and [`super::netlist`] emit them, and
+//! this module parses them back, so externally-minimized covers (or
+//! hand-written truth tables) can enter the flow and everything
+//! round-trips under test.
+
+use super::cover::{Cover, Cube};
+use super::synth::BlockSpec;
+use super::tt::Tt;
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed multi-output PLA: shared input plane, one cover per output.
+#[derive(Clone, Debug)]
+pub struct Pla {
+    pub num_inputs: usize,
+    pub covers: Vec<Cover>,
+    /// Rows whose output column was `-` (output don't-care), per output.
+    pub dc_covers: Vec<Cover>,
+}
+
+/// Parse espresso PLA text (`.i/.o/.p/.e`, rows of `01-` input part and
+/// `01-~` output part; `type fd` semantics: `1` = ON, `-`/`d` = DC,
+/// `0`/`~` = unspecified/OFF).
+pub fn parse_pla(text: &str) -> Result<Pla> {
+    let mut num_inputs = 0usize;
+    let mut num_outputs = 0usize;
+    let mut covers: Vec<Cover> = Vec::new();
+    let mut dc_covers: Vec<Cover> = Vec::new();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('.') {
+            let mut parts = rest.split_whitespace();
+            match parts.next() {
+                Some("i") => {
+                    num_inputs = parts
+                        .next()
+                        .ok_or_else(|| anyhow!(".i needs a count"))?
+                        .parse()?;
+                    if num_inputs > 64 {
+                        bail!("more than 64 inputs unsupported");
+                    }
+                }
+                Some("o") => {
+                    num_outputs = parts
+                        .next()
+                        .ok_or_else(|| anyhow!(".o needs a count"))?
+                        .parse()?;
+                    covers = vec![Cover::empty(); num_outputs];
+                    dc_covers = vec![Cover::empty(); num_outputs];
+                }
+                Some("e") | Some("end") => break,
+                _ => {} // .p, .ilb, .ob etc — ignored
+            }
+            continue;
+        }
+        // data row
+        let mut parts = line.split_whitespace();
+        let in_part = parts.next().ok_or_else(|| anyhow!("empty row"))?;
+        let out_part = parts.next().unwrap_or("1");
+        if in_part.len() != num_inputs {
+            bail!("row '{line}': input part has {} chars, expected {num_inputs}", in_part.len());
+        }
+        let mut cube = Cube::UNIVERSE;
+        // PLA convention: leftmost char = most significant input
+        for (pos, ch) in in_part.chars().enumerate() {
+            let v = num_inputs - 1 - pos;
+            match ch {
+                '1' => cube = cube.with_literal(v, true),
+                '0' => cube = cube.with_literal(v, false),
+                '-' | '2' => {}
+                _ => bail!("bad input char {ch:?} in '{line}'"),
+            }
+        }
+        if covers.is_empty() {
+            covers = vec![Cover::empty()];
+            dc_covers = vec![Cover::empty()];
+        }
+        for (k, ch) in out_part.chars().enumerate() {
+            if k >= covers.len() {
+                bail!("row '{line}': more output columns than .o");
+            }
+            match ch {
+                '1' | '4' => covers[k].cubes.push(cube),
+                '-' | 'd' | '2' => dc_covers[k].cubes.push(cube),
+                '0' | '~' | '3' => {}
+                _ => bail!("bad output char {ch:?} in '{line}'"),
+            }
+        }
+    }
+    if num_inputs == 0 {
+        bail!("missing .i header");
+    }
+    Ok(Pla { num_inputs, covers, dc_covers })
+}
+
+impl Pla {
+    /// Materialize as a [`BlockSpec`] (care = everything not marked
+    /// output-DC; for multi-output PLAs the care sets intersect).
+    pub fn to_block_spec(&self, name: &str) -> BlockSpec {
+        let n = self.num_inputs;
+        let mut care = Tt::ones(n);
+        for dc in &self.dc_covers {
+            care.and_assign(&dc.to_tt(n).not());
+        }
+        let on = self.covers.iter().map(|c| c.to_tt(n)).collect();
+        BlockSpec { nvars: n, on, care, name: name.to_string(), bdd_order: None }
+    }
+}
+
+// ---------------------------------------------------------------------
+// BLIF reading (the .names subset our emitter produces)
+// ---------------------------------------------------------------------
+
+/// A parsed BLIF model as truth tables (flattened; for verification of
+/// emitted netlists rather than general BLIF support).
+#[derive(Clone, Debug)]
+pub struct BlifModel {
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    /// Output functions over the primary inputs.
+    pub functions: Vec<Tt>,
+}
+
+/// Parse and flatten a single-model BLIF with `.names` tables
+/// (supports the constructs `Netlist::to_blif` emits).
+pub fn parse_blif(text: &str) -> Result<BlifModel> {
+    let mut name = String::new();
+    let mut inputs: Vec<String> = Vec::new();
+    let mut outputs: Vec<String> = Vec::new();
+    // gate list: (output net, input nets, set of input patterns -> 1)
+    let mut gates: Vec<(String, Vec<String>, Vec<String>)> = Vec::new();
+    let mut lines = text.lines().peekable();
+    while let Some(raw) = lines.next() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(".model") {
+            name = rest.trim().to_string();
+        } else if let Some(rest) = line.strip_prefix(".inputs") {
+            inputs.extend(rest.split_whitespace().map(String::from));
+        } else if let Some(rest) = line.strip_prefix(".outputs") {
+            outputs.extend(rest.split_whitespace().map(String::from));
+        } else if let Some(rest) = line.strip_prefix(".names") {
+            let nets: Vec<String> = rest.split_whitespace().map(String::from).collect();
+            let (out_net, in_nets) =
+                nets.split_last().ok_or_else(|| anyhow!(".names with no nets"))?;
+            let mut rows = Vec::new();
+            while let Some(peek) = lines.peek() {
+                let p = peek.trim();
+                if p.is_empty() || p.starts_with('.') || p.starts_with('#') {
+                    break;
+                }
+                rows.push(p.to_string());
+                lines.next();
+            }
+            gates.push((out_net.clone(), in_nets.to_vec(), rows));
+        } else if line.starts_with(".end") {
+            break;
+        }
+    }
+    if inputs.is_empty() || outputs.is_empty() {
+        bail!("blif missing .inputs/.outputs");
+    }
+    let n = inputs.len();
+    if n > super::tt::MAX_VARS {
+        bail!("too many primary inputs to flatten");
+    }
+    // resolve nets to truth tables in declaration order (topological for
+    // our emitter)
+    use std::collections::HashMap;
+    let mut net_tt: HashMap<String, Tt> = HashMap::new();
+    for (i, pin) in inputs.iter().enumerate() {
+        net_tt.insert(pin.clone(), Tt::var(n, i));
+    }
+    for (out_net, in_nets, rows) in &gates {
+        let mut f = Tt::zeros(n);
+        if in_nets.is_empty() {
+            // constant: `.names x` = const 0; a row "1" makes it const 1
+            if rows.iter().any(|r| r.trim() == "1") {
+                f = Tt::ones(n);
+            }
+        }
+        for row in rows {
+            let mut parts = row.split_whitespace();
+            let pattern = parts.next().unwrap_or("");
+            let val = parts.next().unwrap_or("1");
+            if val != "1" {
+                continue; // only ON rows are emitted by our writer
+            }
+            if in_nets.is_empty() {
+                f = Tt::ones(n);
+                continue;
+            }
+            if pattern.len() != in_nets.len() {
+                bail!("row '{row}' arity mismatch for {out_net}");
+            }
+            // conjunction of input conditions
+            let mut term = Tt::ones(n);
+            for (k, ch) in pattern.chars().enumerate() {
+                let src = net_tt
+                    .get(&in_nets[k])
+                    .ok_or_else(|| anyhow!("net {} used before definition", in_nets[k]))?;
+                match ch {
+                    '1' => term.and_assign(src),
+                    '0' => term.and_assign(&src.not()),
+                    '-' => {}
+                    _ => bail!("bad blif char {ch:?}"),
+                }
+            }
+            f.or_assign(&term);
+        }
+        net_tt.insert(out_net.clone(), f);
+    }
+    let functions = outputs
+        .iter()
+        .map(|o| {
+            net_tt
+                .get(o)
+                .cloned()
+                .ok_or_else(|| anyhow!("output {o} undriven"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BlifModel { name, inputs, outputs, functions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::cover::to_pla_multi;
+    use crate::logic::espresso::{minimize, Options};
+    use crate::logic::map::{map_aig, Objective};
+    use crate::logic::library::cells90;
+    use crate::logic::synth;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn pla_round_trip_single_output() {
+        let f = Tt::from_fn(5, |m| m % 3 == 0);
+        let cover = minimize(&f, &f, Options::default());
+        let pla = cover.to_pla(5, "t");
+        let parsed = parse_pla(&pla).unwrap();
+        assert_eq!(parsed.num_inputs, 5);
+        assert_eq!(parsed.covers[0].to_tt(5), f);
+    }
+
+    #[test]
+    fn pla_round_trip_multi_output() {
+        let spec = synth::BlockSpec::from_fn(6, 4, "add3", |m| (m & 7) + (m >> 3), |_| true);
+        let two = synth::two_level(&spec, Options::default());
+        let pla = to_pla_multi(&two.covers, 6, "add3");
+        let parsed = parse_pla(&pla).unwrap();
+        assert_eq!(parsed.covers.len(), 4);
+        for (k, c) in parsed.covers.iter().enumerate() {
+            assert_eq!(c.to_tt(6), spec.on[k], "output {k}");
+        }
+    }
+
+    #[test]
+    fn pla_with_dc_rows_to_block_spec() {
+        let text = "# dc demo\n.i 2\n.o 1\n11 1\n10 -\n00 0\n.e\n";
+        let pla = parse_pla(text).unwrap();
+        let spec = pla.to_block_spec("demo");
+        assert!(spec.on[0].get(0b11));
+        assert!(!spec.care.get(0b10), "DC row must leave the care set");
+        assert!(spec.care.get(0b00));
+    }
+
+    #[test]
+    fn pla_rejects_malformed() {
+        assert!(parse_pla("11 1\n").is_err()); // no .i
+        assert!(parse_pla(".i 2\n.o 1\n1 1\n").is_err()); // arity
+        assert!(parse_pla(".i 2\n.o 1\nxy 1\n").is_err()); // bad char
+    }
+
+    #[test]
+    fn blif_round_trip_through_netlist() {
+        let mut rng = Rng::new(0xB11F);
+        for _ in 0..5 {
+            let n = 3 + rng.below(3) as usize;
+            let f = Tt::from_fn(n, |_| rng.bool_with(0.45));
+            let cover = minimize(&f, &f, Options::default());
+            let e = crate::logic::factor::factor(&cover);
+            let mut g = crate::logic::aig::Aig::new(n);
+            let out = g.add_expr(&e);
+            g.outputs.push(out);
+            let nl = map_aig(&g, &cells90(), Objective::Area);
+            let blif = nl.to_blif("rt");
+            let model = parse_blif(&blif).unwrap();
+            assert_eq!(model.inputs.len(), n);
+            assert_eq!(model.functions[0], f, "blif round trip changed the function");
+        }
+    }
+
+    #[test]
+    fn blif_constant_outputs() {
+        // a netlist whose output is constant false
+        let g = crate::logic::aig::Aig::new(2);
+        let mut g = g;
+        g.outputs.push(crate::logic::aig::FALSE_EDGE);
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        let blif = nl.to_blif("konst");
+        let model = parse_blif(&blif).unwrap();
+        assert!(model.functions[0].is_zero());
+    }
+}

@@ -1,0 +1,131 @@
+//! Synthetic standard-cell library.
+//!
+//! Stands in for the TSMC 90 nm library behind Synopsys Design Compiler
+//! in the paper's flow (proprietary — see DESIGN.md substitution table).
+//! Numbers are modeled on public 90 nm-class data: area in gate
+//! equivalents (GE, 1 GE = NAND2), pin-to-pin delay in ns, and a
+//! per-output switched-capacitance proxy used by the power estimator.
+//! What the tables compare is *relative* cost across PPC configs, which a
+//! consistent cell model preserves.
+
+use super::tt::Tt;
+
+/// One combinational cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub name: &'static str,
+    pub num_inputs: usize,
+    /// Truth table over `num_inputs` vars (row = input minterm).
+    pub tt: u64,
+    /// Area in gate equivalents.
+    pub area_ge: f64,
+    /// Pin-to-pin delay, ns (single worst-case arc; load-independent
+    /// first-order model).
+    pub delay_ns: f64,
+    /// Switched-capacitance proxy for dynamic power (fF-ish scale).
+    pub cap: f64,
+}
+
+impl Cell {
+    pub fn eval(&self, inputs: u64) -> bool {
+        (self.tt >> inputs) & 1 == 1
+    }
+
+    /// Truth table as a `Tt` over `vars` ≥ num_inputs variables with the
+    /// cell's inputs bound to variables `0..num_inputs`.
+    pub fn tt_struct(&self) -> Tt {
+        let mut t = Tt::zeros(self.num_inputs);
+        for m in 0..(1u64 << self.num_inputs) {
+            if self.eval(m) {
+                t.set(m);
+            }
+        }
+        t
+    }
+}
+
+fn tt_of(num_inputs: usize, f: impl Fn(u64) -> bool) -> u64 {
+    let mut t = 0u64;
+    for m in 0..(1u64 << num_inputs) {
+        if f(m) {
+            t |= 1 << m;
+        }
+    }
+    t
+}
+
+/// The library: a small, realistic 90 nm-flavored cell set. Delay/area
+/// ratios follow the usual ordering (INV fastest/smallest; XOR costly;
+/// AOI cheaper than discrete AND+NOR).
+pub fn cells90() -> Vec<Cell> {
+    let b = |m: u64, v: usize| (m >> v) & 1 == 1;
+    vec![
+        Cell { name: "INV", num_inputs: 1, tt: tt_of(1, |m| !b(m, 0)), area_ge: 0.67, delay_ns: 0.018, cap: 0.8 },
+        Cell { name: "BUF", num_inputs: 1, tt: tt_of(1, |m| b(m, 0)), area_ge: 1.00, delay_ns: 0.035, cap: 1.0 },
+        Cell { name: "NAND2", num_inputs: 2, tt: tt_of(2, |m| !(b(m, 0) && b(m, 1))), area_ge: 1.00, delay_ns: 0.030, cap: 1.2 },
+        Cell { name: "NOR2", num_inputs: 2, tt: tt_of(2, |m| !(b(m, 0) || b(m, 1))), area_ge: 1.00, delay_ns: 0.036, cap: 1.2 },
+        Cell { name: "AND2", num_inputs: 2, tt: tt_of(2, |m| b(m, 0) && b(m, 1)), area_ge: 1.33, delay_ns: 0.045, cap: 1.4 },
+        Cell { name: "OR2", num_inputs: 2, tt: tt_of(2, |m| b(m, 0) || b(m, 1)), area_ge: 1.33, delay_ns: 0.048, cap: 1.4 },
+        Cell { name: "NAND3", num_inputs: 3, tt: tt_of(3, |m| !(b(m, 0) && b(m, 1) && b(m, 2))), area_ge: 1.33, delay_ns: 0.041, cap: 1.6 },
+        Cell { name: "NOR3", num_inputs: 3, tt: tt_of(3, |m| !(b(m, 0) || b(m, 1) || b(m, 2))), area_ge: 1.33, delay_ns: 0.051, cap: 1.6 },
+        Cell { name: "NAND4", num_inputs: 4, tt: tt_of(4, |m| !(b(m, 0) && b(m, 1) && b(m, 2) && b(m, 3))), area_ge: 1.67, delay_ns: 0.053, cap: 2.0 },
+        Cell { name: "NOR4", num_inputs: 4, tt: tt_of(4, |m| !(b(m, 0) || b(m, 1) || b(m, 2) || b(m, 3))), area_ge: 1.67, delay_ns: 0.067, cap: 2.0 },
+        // AOI/OAI — the workhorses of mapped arithmetic
+        Cell { name: "AOI21", num_inputs: 3, tt: tt_of(3, |m| !((b(m, 0) && b(m, 1)) || b(m, 2))), area_ge: 1.33, delay_ns: 0.042, cap: 1.6 },
+        Cell { name: "OAI21", num_inputs: 3, tt: tt_of(3, |m| !((b(m, 0) || b(m, 1)) && b(m, 2))), area_ge: 1.33, delay_ns: 0.043, cap: 1.6 },
+        Cell { name: "AOI22", num_inputs: 4, tt: tt_of(4, |m| !((b(m, 0) && b(m, 1)) || (b(m, 2) && b(m, 3)))), area_ge: 1.67, delay_ns: 0.052, cap: 1.9 },
+        Cell { name: "OAI22", num_inputs: 4, tt: tt_of(4, |m| !((b(m, 0) || b(m, 1)) && (b(m, 2) || b(m, 3)))), area_ge: 1.67, delay_ns: 0.054, cap: 1.9 },
+        Cell { name: "XOR2", num_inputs: 2, tt: tt_of(2, |m| b(m, 0) != b(m, 1)), area_ge: 2.33, delay_ns: 0.058, cap: 2.2 },
+        Cell { name: "XNOR2", num_inputs: 2, tt: tt_of(2, |m| b(m, 0) == b(m, 1)), area_ge: 2.33, delay_ns: 0.060, cap: 2.2 },
+        // 3-input parity — the full-adder sum arc; essential for covering
+        // carry-chain logic compactly
+        Cell { name: "XOR3", num_inputs: 3, tt: tt_of(3, |m| (m & 7).count_ones() % 2 == 1), area_ge: 3.67, delay_ns: 0.082, cap: 3.4 },
+        Cell { name: "XNOR3", num_inputs: 3, tt: tt_of(3, |m| (m & 7).count_ones() % 2 == 0), area_ge: 3.67, delay_ns: 0.084, cap: 3.4 },
+        // MUX and majority: common in adder mapping
+        Cell { name: "MUX2", num_inputs: 3, tt: tt_of(3, |m| if b(m, 2) { b(m, 1) } else { b(m, 0) }), area_ge: 2.00, delay_ns: 0.056, cap: 2.1 },
+        Cell { name: "MAJ3", num_inputs: 3, tt: tt_of(3, |m| (m & 7).count_ones() >= 2), area_ge: 2.33, delay_ns: 0.062, cap: 2.4 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_truth_tables() {
+        let lib = cells90();
+        let get = |n: &str| lib.iter().find(|c| c.name == n).unwrap().clone();
+        let nand2 = get("NAND2");
+        assert!(nand2.eval(0b00));
+        assert!(nand2.eval(0b01));
+        assert!(!nand2.eval(0b11));
+        let xor2 = get("XOR2");
+        assert!(!xor2.eval(0b00));
+        assert!(xor2.eval(0b10));
+        let maj = get("MAJ3");
+        assert!(maj.eval(0b011) && maj.eval(0b110) && !maj.eval(0b100));
+        let mux = get("MUX2");
+        assert!(mux.eval(0b001)); // sel=0 -> input0=1
+        assert!(mux.eval(0b110)); // sel=1 -> input1=1
+        assert!(!mux.eval(0b101)); // sel=1 -> input1=0
+    }
+
+    #[test]
+    fn library_is_consistent() {
+        for c in cells90() {
+            assert!(c.num_inputs >= 1 && c.num_inputs <= 4);
+            assert!(c.area_ge > 0.0 && c.delay_ns > 0.0 && c.cap > 0.0);
+            // truth table must not be constant (except BUF/INV are fine)
+            let rows = 1u64 << c.num_inputs;
+            let ones = (0..rows).filter(|&m| c.eval(m)).count() as u64;
+            assert!(ones > 0 && ones < rows, "{} is constant", c.name);
+        }
+    }
+
+    #[test]
+    fn nand2_is_unit_ge() {
+        let lib = cells90();
+        let nand2 = lib.iter().find(|c| c.name == "NAND2").unwrap();
+        assert_eq!(nand2.area_ge, 1.0);
+    }
+}

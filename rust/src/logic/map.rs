@@ -1,0 +1,516 @@
+//! Cut-based technology mapping: AIG → standard-cell netlist.
+//!
+//! Priority-cut enumeration (k ≤ 4) followed by a two-phase dynamic
+//! program: `cost[node][phase]` is the cheapest way to realize the node
+//! in positive/negative polarity. Matches bind library cells to cut
+//! functions under all pin permutations and leaf-phase assignments;
+//! polarity conversions pay an INV. This mirrors the tree-covering
+//! mapper inside a commercial synthesis tool closely enough that
+//! *relative* area/delay across PPC configs is meaningful — which is all
+//! the paper's tables compare.
+
+use super::aig::{self, Aig, Node};
+use super::library::Cell;
+use super::netlist::{Driver, Gate, Netlist};
+use std::collections::HashMap;
+
+/// Mapping objective: minimize total area (GE) or critical-path delay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    Area,
+    Delay,
+}
+
+const MAX_CUT: usize = 4;
+const CUTS_PER_NODE: usize = 8;
+
+type Cut = Vec<usize>; // sorted leaf node indices
+
+fn merge_cuts(a: &Cut, b: &Cut) -> Option<Cut> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let take_a = j >= b.len() || (i < a.len() && a[i] <= b[j]);
+        let v = if take_a {
+            let v = a[i];
+            i += 1;
+            if j < b.len() && b[j] == v {
+                j += 1;
+            }
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        out.push(v);
+        if out.len() > MAX_CUT {
+            return None;
+        }
+    }
+    Some(out)
+}
+
+/// Enumerate priority cuts for every node.
+fn enumerate_cuts(g: &Aig) -> Vec<Vec<Cut>> {
+    let mut cuts: Vec<Vec<Cut>> = vec![Vec::new(); g.nodes.len()];
+    for (i, n) in g.nodes.iter().enumerate() {
+        match n {
+            Node::Const => cuts[i] = vec![vec![i]],
+            Node::Input(_) => cuts[i] = vec![vec![i]],
+            Node::And(a, b) => {
+                let (na, nb) = (aig::node_of(*a), aig::node_of(*b));
+                let mut set: Vec<Cut> = Vec::new();
+                for ca in &cuts[na] {
+                    for cb in &cuts[nb] {
+                        if let Some(m) = merge_cuts(ca, cb) {
+                            if !set.contains(&m) {
+                                set.push(m);
+                            }
+                        }
+                    }
+                }
+                set.push(vec![i]); // trivial cut
+                set.sort_by_key(|c| c.len());
+                set.truncate(CUTS_PER_NODE);
+                cuts[i] = set;
+            }
+        }
+    }
+    cuts
+}
+
+/// Elementary truth tables for ≤ 4 cut leaves (leaf k's table over the
+/// 16-row space; masked down for smaller cuts).
+const LEAF_TT: [u64; 4] = [0xAAAA, 0xCCCC, 0xF0F0, 0xFF00];
+
+/// Local function of `root` over the cut leaves, as a truth table packed
+/// in a u64 (cut has ≤ 4 leaves → ≤ 16 rows). Computed by *bitwise
+/// truth-table simulation* of the cone — one pass over the cone instead
+/// of 2^k single-minterm evaluations (perf-pass iteration #1: ~4-8×
+/// faster mapping; see EXPERIMENTS.md §Perf).
+fn cut_function(g: &Aig, root: usize, cut: &Cut) -> u64 {
+    let mask = (1u64 << (1u64 << cut.len())) - 1;
+    let mut memo: HashMap<usize, u64> = HashMap::new();
+    for (k, &leaf) in cut.iter().enumerate() {
+        memo.insert(leaf, LEAF_TT[k] & mask);
+    }
+    eval_cone_tt(g, root, mask, &mut memo)
+}
+
+fn eval_cone_tt(g: &Aig, node: usize, mask: u64, memo: &mut HashMap<usize, u64>) -> u64 {
+    if let Some(&v) = memo.get(&node) {
+        return v;
+    }
+    let v = match g.nodes[node] {
+        Node::Const => 0,
+        Node::Input(_) => panic!("cone escapes its cut"),
+        Node::And(a, b) => {
+            let mut av = eval_cone_tt(g, aig::node_of(a), mask, memo);
+            if aig::is_compl(a) {
+                av = !av & mask;
+            }
+            let mut bv = eval_cone_tt(g, aig::node_of(b), mask, memo);
+            if aig::is_compl(b) {
+                bv = !bv & mask;
+            }
+            av & bv
+        }
+    };
+    memo.insert(node, v);
+    v
+}
+
+/// All permutations of 0..n (n ≤ 4).
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut idx: Vec<usize> = (0..n).collect();
+    permute(&mut idx, 0, &mut out);
+    out
+}
+
+fn permute(idx: &mut Vec<usize>, k: usize, out: &mut Vec<Vec<usize>>) {
+    if k == idx.len() {
+        out.push(idx.clone());
+        return;
+    }
+    for i in k..idx.len() {
+        idx.swap(k, i);
+        permute(idx, k + 1, out);
+        idx.swap(k, i);
+    }
+}
+
+/// One realized match: cell pin `p` is driven by leaf `pins[p].0` in
+/// phase `pins[p].1` (true = complemented).
+#[derive(Clone, Debug)]
+struct Match {
+    cell: usize,
+    pins: Vec<(usize, bool)>,
+}
+
+#[derive(Clone, Debug)]
+enum Choice {
+    /// Primary input / const in requested phase directly.
+    Direct,
+    /// INV on the opposite phase of the same node.
+    Invert,
+    /// A library-cell match.
+    Cell(Match),
+}
+
+/// One precomputed cell binding: realize a cut whose function equals the
+/// table key by wiring cell pin `p` to leaf `perm[p]` with phase
+/// `(ph_mask >> p) & 1`.
+#[derive(Clone, Debug)]
+struct Binding {
+    cell: usize,
+    perm: Vec<usize>,
+    ph_mask: u64,
+}
+
+/// Match table: (cut arity, cut-local truth table) → candidate bindings.
+/// Built once per mapping (perf-pass iteration #2 — removes the
+/// cells×perms×phases loop from the per-cut hot path).
+fn build_match_table(lib: &[Cell]) -> HashMap<(usize, u64), Vec<Binding>> {
+    let perms_by_n: Vec<Vec<Vec<usize>>> = (0..=MAX_CUT).map(permutations).collect();
+    let mut table: HashMap<(usize, u64), Vec<Binding>> = HashMap::new();
+    for (ci, cell) in lib.iter().enumerate() {
+        let j = cell.num_inputs;
+        if j > MAX_CUT {
+            continue;
+        }
+        let rows = 1u64 << j;
+        for perm in &perms_by_n[j] {
+            for ph_mask in 0..(1u64 << j) {
+                // truth table over cut-leaf variables
+                let mut ctt = 0u64;
+                for m in 0..rows {
+                    let mut pv = 0u64;
+                    for (p, &lx) in perm.iter().enumerate() {
+                        let bit = ((m >> lx) & 1) ^ ((ph_mask >> p) & 1);
+                        pv |= bit << p;
+                    }
+                    if cell.eval(pv) {
+                        ctt |= 1 << m;
+                    }
+                }
+                table
+                    .entry((j, ctt))
+                    .or_default()
+                    .push(Binding { cell: ci, perm: perm.clone(), ph_mask });
+            }
+        }
+    }
+    table
+}
+
+/// Map an AIG onto `lib`. Outputs of the netlist correspond 1:1 to
+/// `g.outputs`.
+pub fn map_aig(g: &Aig, lib: &[Cell], objective: Objective) -> Netlist {
+    let cuts = enumerate_cuts(g);
+    let inv_cell = lib
+        .iter()
+        .position(|c| c.name == "INV")
+        .expect("library must contain INV");
+    let inv_cost = match objective {
+        Objective::Area => lib[inv_cell].area_ge,
+        Objective::Delay => lib[inv_cell].delay_ns,
+    };
+    let match_table = build_match_table(lib);
+
+    // cost[node][phase]: best cost to produce node in phase (0=pos,1=neg)
+    let nn = g.nodes.len();
+    let mut cost = vec![[f64::INFINITY; 2]; nn];
+    let mut choice: Vec<[Option<Choice>; 2]> = vec![[None, None]; nn];
+
+    for i in 0..nn {
+        match g.nodes[i] {
+            Node::Const | Node::Input(_) => {
+                cost[i][0] = 0.0;
+                choice[i][0] = Some(Choice::Direct);
+                cost[i][1] = inv_cost;
+                choice[i][1] = Some(Choice::Invert);
+            }
+            Node::And(..) => {
+                for cut in &cuts[i] {
+                    if cut.len() == 1 && cut[0] == i {
+                        continue; // trivial cut matches nothing
+                    }
+                    let j = cut.len();
+                    let f = cut_function(g, i, cut);
+                    let rows = 1u64 << j;
+                    let full = (1u64 << rows) - 1;
+                    for (out_compl, key) in [(false, f), (true, full & !f)] {
+                        let Some(binds) = match_table.get(&(j, key)) else {
+                            continue;
+                        };
+                        let slot = out_compl as usize;
+                        for bind in binds {
+                            // leaf costs honor phases
+                            let mut leaves_cost = 0.0f64;
+                            let mut ok = true;
+                            for (p, &lx) in bind.perm.iter().enumerate() {
+                                let leaf = cut[lx];
+                                let lph = ((bind.ph_mask >> p) & 1) as usize;
+                                let lc = cost[leaf][lph];
+                                if !lc.is_finite() {
+                                    ok = false;
+                                    break;
+                                }
+                                match objective {
+                                    Objective::Area => leaves_cost += lc,
+                                    Objective::Delay => leaves_cost = leaves_cost.max(lc),
+                                }
+                            }
+                            if !ok {
+                                continue;
+                            }
+                            let cell = &lib[bind.cell];
+                            let gate_cost = match objective {
+                                Objective::Area => cell.area_ge,
+                                Objective::Delay => cell.delay_ns,
+                            };
+                            let total = leaves_cost + gate_cost;
+                            if total < cost[i][slot] {
+                                cost[i][slot] = total;
+                                let pins: Vec<(usize, bool)> = bind
+                                    .perm
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(p, &lx)| {
+                                        (cut[lx], (bind.ph_mask >> p) & 1 == 1)
+                                    })
+                                    .collect();
+                                choice[i][slot] =
+                                    Some(Choice::Cell(Match { cell: bind.cell, pins }));
+                            }
+                        }
+                    }
+                }
+                // phase conversion through INV (run twice for fixpoint)
+                for _ in 0..2 {
+                    for ph in 0..2 {
+                        let alt = cost[i][1 - ph] + inv_cost;
+                        if alt < cost[i][ph] {
+                            cost[i][ph] = alt;
+                            choice[i][ph] = Some(Choice::Invert);
+                        }
+                    }
+                }
+                assert!(
+                    cost[i][0].is_finite() && cost[i][1].is_finite(),
+                    "node {i} unmatched — library incomplete"
+                );
+            }
+        }
+    }
+
+    // Extraction: realize (node, phase) pairs demanded by the outputs.
+    let mut nl = Netlist {
+        lib: lib.to_vec(),
+        num_inputs: g.num_inputs(),
+        gates: Vec::new(),
+        outputs: Vec::new(),
+    };
+    let mut realized: HashMap<(usize, bool), Driver> = HashMap::new();
+    let outs: Vec<(usize, bool)> = g
+        .outputs
+        .iter()
+        .map(|&e| (aig::node_of(e), aig::is_compl(e)))
+        .collect();
+    for (node, compl_out) in outs {
+        let d = realize(g, &choice, node, compl_out, inv_cell, &mut nl, &mut realized);
+        nl.outputs.push(d);
+    }
+    nl
+}
+
+fn realize(
+    g: &Aig,
+    choice: &[[Option<Choice>; 2]],
+    node: usize,
+    phase: bool,
+    inv_cell: usize,
+    nl: &mut Netlist,
+    realized: &mut HashMap<(usize, bool), Driver>,
+) -> Driver {
+    if let Some(&d) = realized.get(&(node, phase)) {
+        return d;
+    }
+    let d = match g.nodes[node] {
+        Node::Const => {
+            if phase {
+                Driver::ConstTrue
+            } else {
+                Driver::ConstFalse
+            }
+        }
+        Node::Input(i) => {
+            if phase {
+                let src = Driver::Input(i);
+                nl.gates.push(Gate { cell: inv_cell, inputs: vec![src] });
+                Driver::Gate(nl.gates.len() - 1)
+            } else {
+                Driver::Input(i)
+            }
+        }
+        Node::And(..) => {
+            match choice[node][phase as usize]
+                .as_ref()
+                .expect("unmatched node in extraction")
+            {
+                Choice::Direct => unreachable!("AND nodes have no direct choice"),
+                Choice::Invert => {
+                    let inner = realize(g, choice, node, !phase, inv_cell, nl, realized);
+                    nl.gates.push(Gate { cell: inv_cell, inputs: vec![inner] });
+                    Driver::Gate(nl.gates.len() - 1)
+                }
+                Choice::Cell(m) => {
+                    let m = m.clone();
+                    let inputs: Vec<Driver> = m
+                        .pins
+                        .iter()
+                        .map(|&(leaf, lph)| {
+                            realize(g, choice, leaf, lph, inv_cell, nl, realized)
+                        })
+                        .collect();
+                    nl.gates.push(Gate { cell: m.cell, inputs });
+                    Driver::Gate(nl.gates.len() - 1)
+                }
+            }
+        }
+    };
+    realized.insert((node, phase), d);
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::library::cells90;
+    use crate::util::prng::Rng;
+
+    fn check_equiv(g: &Aig, nl: &Netlist, nvars: usize) {
+        let exhaustive = nvars <= 12;
+        let mut rng = Rng::new(1);
+        let trials: Vec<u64> = if exhaustive {
+            (0..(1u64 << nvars)).collect()
+        } else {
+            (0..4096).map(|_| rng.below(1 << nvars)).collect()
+        };
+        for m in trials {
+            let want = g.eval(m);
+            let got = nl.eval(m);
+            for (k, &w) in want.iter().enumerate() {
+                assert_eq!((got >> k) & 1 == 1, w, "output {k} differs at m={m:b}");
+            }
+        }
+    }
+
+    #[test]
+    fn maps_xor_to_xor_cell() {
+        let mut g = Aig::new(2);
+        let x = g.xor(g.input(0), g.input(1));
+        g.outputs.push(x);
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        check_equiv(&g, &nl, 2);
+        // area mapping should find the single XOR2 cell
+        assert_eq!(nl.gates.len(), 1);
+        assert_eq!(nl.lib[nl.gates[0].cell].name, "XOR2");
+    }
+
+    #[test]
+    fn maps_and_with_complemented_input() {
+        // f = a AND (NOT b): needs a leaf-phase match (or INV+AND2)
+        let mut g = Aig::new(2);
+        let f = g.and(g.input(0), aig::compl(g.input(1)));
+        g.outputs.push(f);
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        check_equiv(&g, &nl, 2);
+        assert!(nl.gates.len() <= 2);
+    }
+
+    #[test]
+    fn maps_full_adder() {
+        // sum = a^b^cin, carry = maj(a,b,cin)
+        let mut g = Aig::new(3);
+        let (a, b, c) = (g.input(0), g.input(1), g.input(2));
+        let ab = g.xor(a, b);
+        let sum = g.xor(ab, c);
+        let t1 = g.and(a, b);
+        let t2 = g.and(a, c);
+        let t3 = g.and(b, c);
+        let t12 = g.or(t1, t2);
+        let carry = g.or(t12, t3);
+        g.outputs.push(sum);
+        g.outputs.push(carry);
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        check_equiv(&g, &nl, 3);
+        // good mapping: ~2 XORs + MAJ3 (+ slack); definitely < 8 gates
+        assert!(nl.gates.len() <= 8, "got {} gates", nl.gates.len());
+    }
+
+    #[test]
+    fn delay_objective_not_slower() {
+        let mut g = Aig::new(6);
+        let mut acc = g.input(0);
+        for i in 1..6 {
+            let x = g.input(i);
+            acc = g.xor(acc, x);
+        }
+        g.outputs.push(acc);
+        let lib = cells90();
+        let a = map_aig(&g, &lib, Objective::Area);
+        let d = map_aig(&g, &lib, Objective::Delay);
+        check_equiv(&g, &a, 6);
+        check_equiv(&g, &d, 6);
+        assert!(d.delay_ns() <= a.delay_ns() + 1e-9);
+    }
+
+    #[test]
+    fn complemented_output() {
+        let mut g = Aig::new(2);
+        let x = g.and(g.input(0), g.input(1));
+        g.outputs.push(aig::compl(x)); // NAND
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        check_equiv(&g, &nl, 2);
+        assert_eq!(nl.gates.len(), 1);
+        assert_eq!(nl.lib[nl.gates[0].cell].name, "NAND2");
+    }
+
+    #[test]
+    fn random_functions_map_correctly() {
+        use crate::logic::espresso::{minimize, Options};
+        use crate::logic::factor::factor;
+        use crate::logic::tt::Tt;
+        let mut rng = Rng::new(0xABCD);
+        for _ in 0..10 {
+            let n = 3 + rng.below(4) as usize;
+            let f = Tt::from_fn(n, |_| rng.bool_with(0.45));
+            let cov = minimize(&f, &f, Options::default());
+            let e = factor(&cov);
+            let mut g = Aig::new(n);
+            let out = g.add_expr(&e);
+            g.outputs.push(out);
+            let nl = map_aig(&g, &cells90(), Objective::Area);
+            for m in 0..(1u64 << n) {
+                assert_eq!(nl.eval(m) & 1 == 1, f.get(m), "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_nodes_not_duplicated() {
+        // two outputs sharing a subexpression should share gates
+        let mut g = Aig::new(3);
+        let shared = g.and(g.input(0), g.input(1));
+        let o1 = g.and(shared, g.input(2));
+        let o2 = g.or(shared, g.input(2));
+        g.outputs.push(o1);
+        g.outputs.push(o2);
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        check_equiv(&g, &nl, 3);
+        assert!(nl.gates.len() <= 5);
+    }
+}

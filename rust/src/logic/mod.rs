@@ -1,0 +1,26 @@
+//! The logic-synthesis substrate: everything between a truth table with
+//! don't-cares and a mapped gate-level netlist with area/delay/power.
+//!
+//! Pipeline (the paper's Fig. 3(b)+(c) implementation process):
+//!
+//! ```text
+//!  Tt + DC  ──isop──►  Cover  ──espresso──►  Cover (min literals)   [two-level]
+//!     │                                        │
+//!     │                                    factor (SIS-style)
+//!     │                                        ▼
+//!     │                                    Expr ──► Aig (strash) ──map──► Netlist
+//!     └── verification: netlist ≡ Tt on the care set (sim)
+//! ```
+
+pub mod aig;
+pub mod cover;
+pub mod espresso;
+pub mod factor;
+pub mod io;
+pub mod isop;
+pub mod library;
+pub mod map;
+pub mod netlist;
+pub mod shannon;
+pub mod synth;
+pub mod tt;

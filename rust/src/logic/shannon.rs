@@ -1,0 +1,208 @@
+//! DC-aware Shannon (BDD-style) decomposition: truth-table interval →
+//! multiplexer AIG.
+//!
+//! The algebraic-factoring path (`factor` → AIG) inherits SOP structure,
+//! which is weak on XOR/carry-chain logic (adders): the minimal SOP of a
+//! sum bit has exponentially many cubes and no good algebraic divisors.
+//! Shannon decomposition with interval memoization recovers the
+//! mux/xor structure instead — exactly why SIS scripts mix algebraic
+//! and Boolean steps. [`super::synth::multi_level`] builds *both* AIGs
+//! and keeps the cheaper mapped netlist.
+//!
+//! Don't-cares are exploited two ways:
+//! - interval terminals: if `[L, U]` admits a constant, emit it;
+//! - variable elision: if merging both cofactor intervals is feasible
+//!   (`L0∨L1 ⊆ U0∧U1`), the variable is skipped entirely — this is what
+//!   makes DS-preprocessed blocks collapse (their low input bits become
+//!   irrelevant).
+
+use super::aig::{self, Aig, Edge};
+use super::tt::Tt;
+use std::collections::HashMap;
+
+/// Build an edge computing some function within `[l, u]` over the AIG's
+/// inputs, splitting variables in `order` (a permutation of `0..nvars`;
+/// `order[0]` is split first / is the top decision).
+pub fn shannon_edge(g: &mut Aig, l: &Tt, u: &Tt, order: &[usize]) -> Edge {
+    assert_eq!(l.nvars(), u.nvars());
+    assert!(l.subset_of(u));
+    let mut memo: HashMap<(Tt, Tt), Edge> = HashMap::new();
+    rec(g, l, u, order, 0, &mut memo)
+}
+
+/// Build all outputs of a multi-output block with one shared memo (the
+/// BDD-style sharing across outputs — carry logic is reused between sum
+/// bits).
+pub fn shannon_block(g: &mut Aig, intervals: &[(Tt, Tt)], order: &[usize]) -> Vec<Edge> {
+    let mut memo: HashMap<(Tt, Tt), Edge> = HashMap::new();
+    intervals
+        .iter()
+        .map(|(l, u)| {
+            debug_assert!(l.subset_of(u));
+            rec(g, l, u, order, 0, &mut memo)
+        })
+        .collect()
+}
+
+fn rec(
+    g: &mut Aig,
+    l: &Tt,
+    u: &Tt,
+    order: &[usize],
+    depth: usize,
+    memo: &mut HashMap<(Tt, Tt), Edge>,
+) -> Edge {
+    if l.is_zero() {
+        return aig::FALSE_EDGE;
+    }
+    if u.is_ones() {
+        return aig::TRUE_EDGE;
+    }
+    let key = (l.clone(), u.clone());
+    if let Some(&e) = memo.get(&key) {
+        return e;
+    }
+    debug_assert!(depth < order.len(), "non-constant interval with no vars left");
+    let v = order[depth];
+    // Cofactor on variable v. Cofactoring reduces the variable count, so
+    // remaining variables shift: we keep tables full-width instead —
+    // cofactor by *restriction*: rows where x_v=0/1, with the var made
+    // irrelevant. This keeps `order` indices stable.
+    let var = Tt::var(l.nvars(), v);
+    let nvar = var.not();
+    // restrict: L0 = minterms of L with v=0, mirrored onto v=1 rows too
+    let (l0, u0) = restrict(l, u, &nvar, v, false);
+    let (l1, u1) = restrict(l, u, &var, v, true);
+
+    // variable elision via DC merge
+    let lm = l0.or(&l1);
+    let um = u0.and(&u1);
+    let e = if lm.subset_of(&um) {
+        rec(g, &lm, &um, order, depth + 1, memo)
+    } else {
+        let lo = rec(g, &l0, &u0, order, depth + 1, memo);
+        let hi = rec(g, &l1, &u1, order, depth + 1, memo);
+        let sel = g.input(v);
+        g.mux(sel, hi, lo)
+    };
+    memo.insert(key, e);
+    e
+}
+
+/// Restriction cofactor: keep rows with x_v = val, then duplicate them
+/// across both halves of v so the result is independent of v.
+fn restrict(l: &Tt, u: &Tt, _mask: &Tt, v: usize, val: bool) -> (Tt, Tt) {
+    let n = l.nvars();
+    let lc = if val { l.cofactor1(v) } else { l.cofactor0(v) };
+    let uc = if val { u.cofactor1(v) } else { u.cofactor0(v) };
+    (expand(&lc, n, v), expand(&uc, n, v))
+}
+
+/// Inverse of cofactor: lift an (n-1)-var table back to n vars with
+/// variable v irrelevant.
+fn expand(t: &Tt, nvars: usize, v: usize) -> Tt {
+    Tt::from_fn(nvars, |m| {
+        // delete bit v from m
+        let low = m & ((1u64 << v) - 1);
+        let high = (m >> (v + 1)) << v;
+        t.get(high | low)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::map::{map_aig, Objective};
+    use crate::logic::library::cells90;
+    use crate::util::prng::Rng;
+
+    fn build(f: &Tt, order: &[usize]) -> Aig {
+        let mut g = Aig::new(f.nvars());
+        let e = shannon_edge(&mut g, f, f, order);
+        g.outputs.push(e);
+        g
+    }
+
+    #[test]
+    fn exact_functions() {
+        let mut rng = Rng::new(0x5A);
+        for _ in 0..20 {
+            let n = 2 + rng.below(6) as usize;
+            let f = Tt::from_fn(n, |_| rng.bool_with(0.4));
+            let order: Vec<usize> = (0..n).rev().collect();
+            let g = build(&f, &order);
+            for m in 0..(1u64 << n) {
+                assert_eq!(g.eval(m)[0], f.get(m), "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_interval_allows_any_inside() {
+        let n = 4;
+        let l = Tt::from_fn(n, |m| m == 5);
+        let u = Tt::from_fn(n, |m| m % 2 == 1); // all odd rows allowed
+        let order: Vec<usize> = (0..n).rev().collect();
+        let mut g = Aig::new(n);
+        let e = shannon_edge(&mut g, &l, &u, &order);
+        g.outputs.push(e);
+        for m in 0..(1u64 << n) {
+            let got = g.eval(m)[0];
+            if l.get(m) {
+                assert!(got, "must cover ON minterm {m}");
+            }
+            if !u.get(m) {
+                assert!(!got, "must avoid OFF minterm {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn irrelevant_variable_elided() {
+        // f = x0 (x3..x1 irrelevant): BDD path must produce just the input
+        let f = Tt::var(4, 0);
+        let order: Vec<usize> = (0..4).rev().collect();
+        let g = build(&f, &order);
+        assert_eq!(g.num_live_ands(), 0, "pure variable needs no gates");
+    }
+
+    #[test]
+    fn adder_sum_maps_to_xor_cells() {
+        // 2-bit+2-bit adder sum bit 1 ≈ xor chain; Shannon + mapping
+        // should land near the XOR-cell implementation, far below the
+        // SOP-factored size.
+        let f = Tt::from_fn(5, |m| {
+            let a = m & 3;
+            let b = (m >> 2) & 3;
+            let c = m >> 4;
+            (((a + b + c) >> 1) & 1) == 1
+        });
+        let order = [1usize, 3, 0, 2, 4]; // (a1,b1),(a0,b0),cin — MSB first
+        let g = build(&f, &order);
+        let nl = map_aig(&g, &cells90(), Objective::Area);
+        for m in 0..32u64 {
+            assert_eq!(nl.eval(m) & 1 == 1, f.get(m));
+        }
+        assert!(nl.gates.len() <= 8, "mapped to {} gates", nl.gates.len());
+    }
+
+    #[test]
+    fn ds_sparsity_collapses_low_bits() {
+        // adder on DS4 inputs: low 2 bits of each operand irrelevant →
+        // Shannon path should elide them entirely
+        let n = 8;
+        let care = Tt::from_fn(n, |m| (m & 15) % 4 == 0 && ((m >> 4) & 15) % 4 == 0);
+        let f = Tt::from_fn(n, |m| (((m & 15) + (m >> 4)) >> 2) & 1 == 1);
+        let l = f.and(&care);
+        let u = f.or(&care.not());
+        let order: Vec<usize> = (0..n).rev().collect();
+        let mut g = Aig::new(n);
+        let e = shannon_edge(&mut g, &l, &u, &order);
+        g.outputs.push(e);
+        // function realized must not depend on bits 0,1,4,5
+        for m in 0..256u64 {
+            let base = g.eval(m & !0b00110011)[0];
+            assert_eq!(g.eval(m)[0], base, "depends on an elided bit at m={m:08b}");
+        }
+    }
+}

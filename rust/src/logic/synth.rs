@@ -1,0 +1,268 @@
+//! High-level synthesis drivers: multi-output two-level minimization and
+//! the full TT→netlist "proposed synthesis process" of the paper, plus
+//! care-set verification.
+
+use super::aig::Aig;
+use super::cover::Cover;
+use super::espresso::{self, Options};
+use super::factor;
+use super::library::{cells90, Cell};
+use super::map::{map_aig, Objective};
+use super::netlist::Netlist;
+use super::tt::Tt;
+use crate::util::pool;
+
+/// An incompletely-specified multi-output block: per output `k`,
+/// `on[k]` must be 1, and rows outside `care` are don't-care.
+#[derive(Clone, Debug)]
+pub struct BlockSpec {
+    pub nvars: usize,
+    /// ON-set per output (values on DC rows are ignored).
+    pub on: Vec<Tt>,
+    /// Care set (shared across outputs): rows where outputs are specified.
+    pub care: Tt,
+    pub name: String,
+    /// Preferred variable order for the Shannon decomposition path
+    /// (`order[0]` split first). Builders that know the block structure
+    /// (e.g. interleaved adder operands) set this; `None` = descending.
+    pub bdd_order: Option<Vec<usize>>,
+}
+
+impl BlockSpec {
+    /// Build from an integer function `f(inputs) -> outputs` and a care
+    /// predicate, over `nvars` input bits and `nouts` output bits.
+    pub fn from_fn(
+        nvars: usize,
+        nouts: usize,
+        name: &str,
+        mut f: impl FnMut(u64) -> u64,
+        mut care: impl FnMut(u64) -> bool,
+    ) -> BlockSpec {
+        let mut on = vec![Tt::zeros(nvars); nouts];
+        let mut care_tt = Tt::zeros(nvars);
+        for m in 0..(1u64 << nvars) {
+            if care(m) {
+                care_tt.set(m);
+                let y = f(m);
+                for (k, t) in on.iter_mut().enumerate() {
+                    if (y >> k) & 1 == 1 {
+                        t.set(m);
+                    }
+                }
+            }
+        }
+        BlockSpec { nvars, on, care: care_tt, name: name.to_string(), bdd_order: None }
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.on.len()
+    }
+
+    /// Fraction of TT rows that are don't-care — the paper's eq. (1)/(6)
+    /// quantity.
+    pub fn dc_fraction(&self) -> f64 {
+        let dc = self.care.num_rows() - self.care.count_ones();
+        dc as f64 / self.care.num_rows() as f64
+    }
+}
+
+/// Result of two-level minimization of a block.
+#[derive(Clone, Debug)]
+pub struct TwoLevel {
+    pub covers: Vec<Cover>,
+    pub literals: u64,
+    pub cubes: usize,
+}
+
+/// Minimize every output of the block (outputs in parallel — each is an
+/// independent `[L, U]` interval sharing the care set).
+pub fn two_level(spec: &BlockSpec, opts: Options) -> TwoLevel {
+    let dc = spec.care.not();
+    let covers: Vec<Cover> = pool::par_map_index(spec.on.len(), pool::default_threads(), |k| {
+        let l = spec.on[k].and(&spec.care);
+        let u = l.or(&dc);
+        espresso::minimize(&l, &u, opts)
+    });
+    let literals = covers.iter().map(|c| c.literals()).sum();
+    let cubes = covers.iter().map(|c| c.len()).sum();
+    TwoLevel { covers, literals, cubes }
+}
+
+/// Multi-level synthesis: build *two* candidate AIGs — the algebraic
+/// path (factor each Espresso cover) and the Boolean path (DC-aware
+/// Shannon decomposition, strong on XOR/carry logic) — map both, and
+/// keep the cheaper netlist. This mirrors SIS practice of running
+/// several scripts and keeping the best result.
+pub fn multi_level(spec: &BlockSpec, two: &TwoLevel, objective: Objective) -> Netlist {
+    multi_level_with(spec, two, objective, &cells90())
+}
+
+pub fn multi_level_with(
+    spec: &BlockSpec,
+    two: &TwoLevel,
+    objective: Objective,
+    lib: &[Cell],
+) -> Netlist {
+    let nl_alg = multi_level_algebraic(spec, two, objective, lib);
+    // Boolean (Shannon) path — skipped for wide blocks where the
+    // full-width interval recursion gets expensive.
+    if spec.nvars > 12 {
+        return nl_alg;
+    }
+    let nl_sh = multi_level_shannon(spec, objective, lib);
+    let better_sh = match objective {
+        Objective::Area => nl_sh.area_ge() < nl_alg.area_ge(),
+        Objective::Delay => nl_sh.delay_ns() < nl_alg.delay_ns(),
+    };
+    if better_sh {
+        nl_sh
+    } else {
+        nl_alg
+    }
+}
+
+/// The algebraic path alone (factor each cover → shared AIG → map).
+/// Public for the ablation benches.
+pub fn multi_level_algebraic(
+    spec: &BlockSpec,
+    two: &TwoLevel,
+    objective: Objective,
+    lib: &[Cell],
+) -> Netlist {
+    let mut ga = Aig::new(spec.nvars);
+    for cover in &two.covers {
+        let e = factor::factor(cover);
+        let out = ga.add_expr(&e);
+        ga.outputs.push(out);
+    }
+    map_aig(&ga, lib, objective)
+}
+
+/// The Boolean (DC-aware Shannon) path alone. Public for the ablation
+/// benches.
+pub fn multi_level_shannon(spec: &BlockSpec, objective: Objective, lib: &[Cell]) -> Netlist {
+    let order: Vec<usize> = spec
+        .bdd_order
+        .clone()
+        .unwrap_or_else(|| (0..spec.nvars).rev().collect());
+    let dc = spec.care.not();
+    let intervals: Vec<(Tt, Tt)> = spec
+        .on
+        .iter()
+        .map(|on| {
+            let l = on.and(&spec.care);
+            let u = l.or(&dc);
+            (l, u)
+        })
+        .collect();
+    let mut gs = Aig::new(spec.nvars);
+    let outs = super::shannon::shannon_block(&mut gs, &intervals, &order);
+    gs.outputs = outs;
+    map_aig(&gs, lib, objective)
+}
+
+/// The full "proposed synthesis process": TT+DC → two-level → multi-level.
+pub fn synthesize(spec: &BlockSpec, objective: Objective) -> (TwoLevel, Netlist) {
+    let two = two_level(spec, Options::default());
+    let nl = multi_level(spec, &two, objective);
+    (two, nl)
+}
+
+/// Verify a netlist implements the block on its care set (exhaustive for
+/// `nvars ≤ 20`). Returns the number of mismatching care rows.
+pub fn verify_on_care_set(spec: &BlockSpec, nl: &Netlist) -> u64 {
+    assert!(spec.nvars <= 20, "exhaustive verify too large");
+    let mut bad = 0;
+    for m in 0..(1u64 << spec.nvars) {
+        if !spec.care.get(m) {
+            continue;
+        }
+        let got = nl.eval(m);
+        for (k, t) in spec.on.iter().enumerate() {
+            if ((got >> k) & 1 == 1) != t.get(m) {
+                bad += 1;
+            }
+        }
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adder_spec(wl: usize, care: impl FnMut(u64) -> bool) -> BlockSpec {
+        let mask = (1u64 << wl) - 1;
+        BlockSpec::from_fn(
+            2 * wl,
+            wl + 1,
+            &format!("add{wl}"),
+            move |m| (m & mask) + ((m >> wl) & mask),
+            care,
+        )
+    }
+
+    #[test]
+    fn full_adder_block() {
+        let spec = adder_spec(2, |_| true);
+        let (two, nl) = synthesize(&spec, Objective::Area);
+        assert!(two.literals > 0);
+        assert_eq!(verify_on_care_set(&spec, &nl), 0);
+    }
+
+    #[test]
+    fn four_bit_adder_synthesizes_and_verifies() {
+        let spec = adder_spec(4, |_| true);
+        let (two, nl) = synthesize(&spec, Objective::Area);
+        assert_eq!(verify_on_care_set(&spec, &nl), 0);
+        assert!(nl.area_ge() > 5.0);
+        assert!(two.literals > 50);
+    }
+
+    #[test]
+    fn dc_reduces_two_level_literals() {
+        // DS_4 on both inputs of a 4-bit adder
+        let full = adder_spec(4, |_| true);
+        let sparse = adder_spec(4, |m| (m & 15) % 4 == 0 && ((m >> 4) & 15) % 4 == 0);
+        let t_full = two_level(&full, Options::default());
+        let t_sparse = two_level(&sparse, Options::default());
+        assert!(
+            t_sparse.literals < t_full.literals / 2,
+            "sparse {} vs full {}",
+            t_sparse.literals,
+            t_full.literals
+        );
+    }
+
+    #[test]
+    fn dc_reduces_mapped_area() {
+        let full = adder_spec(3, |_| true);
+        let sparse = adder_spec(3, |m| (m & 7) % 4 == 0 && ((m >> 3) & 7) % 4 == 0);
+        let (_, nf) = synthesize(&full, Objective::Area);
+        let (_, ns) = synthesize(&sparse, Objective::Area);
+        assert_eq!(verify_on_care_set(&sparse, &ns), 0);
+        assert!(ns.area_ge() < nf.area_ge(), "{} !< {}", ns.area_ge(), nf.area_ge());
+    }
+
+    #[test]
+    fn multiplier_2x3_matches_paper_kmap_setup() {
+        // the Fig. 2 example: 2-bit × 3-bit multiplier, 5 outputs
+        let spec = BlockSpec::from_fn(
+            5,
+            5,
+            "mul2x3",
+            |m| (m & 3) * ((m >> 2) & 7),
+            |_| true,
+        );
+        let (two, nl) = synthesize(&spec, Objective::Area);
+        assert_eq!(verify_on_care_set(&spec, &nl), 0);
+        assert!(two.literals > 10);
+    }
+
+    #[test]
+    fn dc_fraction_matches_eq1() {
+        // DS_2 on both inputs of a 3-bit block: eq. (1) says 75% DCs
+        let spec = adder_spec(3, |m| (m & 7) % 2 == 0 && ((m >> 3) & 7) % 2 == 0);
+        assert!((spec.dc_fraction() - 0.75).abs() < 1e-12);
+    }
+}

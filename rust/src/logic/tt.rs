@@ -1,0 +1,385 @@
+//! Bit-packed truth tables over `n ≤ 24` input variables.
+//!
+//! A [`Tt`] holds one bit per input minterm (row), packed 64 rows per
+//! word. The two-level engine ([`crate::logic::isop`],
+//! [`crate::logic::espresso`]) operates directly on these bitsets: a
+//! function with don't-cares is an *interval* `[L, U]` of truth tables
+//! (`L` = must-cover ON-set, `U` = may-cover ON ∪ DC set), exactly the
+//! representation the Minato–Morreale ISOP recursion wants.
+
+/// Maximum supported input count (2^24 rows = 2 MiB/table). The paper's
+/// flat two-level blocks top out at 16 inputs (8×8 multiplier).
+pub const MAX_VARS: usize = 24;
+
+/// A truth table: one bit per minterm of an `nvars`-input function.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Tt {
+    nvars: usize,
+    words: Vec<u64>,
+}
+
+impl std::fmt::Debug for Tt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.nvars <= 6 {
+            write!(f, "Tt({}v, {:#b})", self.nvars, self.words[0])
+        } else {
+            write!(f, "Tt({}v, {} ones)", self.nvars, self.count_ones())
+        }
+    }
+}
+
+#[inline]
+fn words_for(nvars: usize) -> usize {
+    if nvars >= 6 {
+        1usize << (nvars - 6)
+    } else {
+        1
+    }
+}
+
+/// Mask of valid bits in the single word of a small (<6 var) table.
+#[inline]
+fn tail_mask(nvars: usize) -> u64 {
+    if nvars >= 6 {
+        u64::MAX
+    } else {
+        (1u64 << (1usize << nvars)) - 1
+    }
+}
+
+impl Tt {
+    /// All-zeros table.
+    pub fn zeros(nvars: usize) -> Tt {
+        assert!(nvars <= MAX_VARS, "nvars {nvars} > MAX_VARS");
+        Tt { nvars, words: vec![0; words_for(nvars)] }
+    }
+
+    /// All-ones table.
+    pub fn ones(nvars: usize) -> Tt {
+        assert!(nvars <= MAX_VARS);
+        let mut words = vec![u64::MAX; words_for(nvars)];
+        if nvars < 6 {
+            words[0] = tail_mask(nvars);
+        }
+        Tt { nvars, words }
+    }
+
+    /// Build from a predicate over minterms.
+    pub fn from_fn<F: FnMut(u64) -> bool>(nvars: usize, mut f: F) -> Tt {
+        let mut t = Tt::zeros(nvars);
+        for m in 0..(1u64 << nvars) {
+            if f(m) {
+                t.set(m);
+            }
+        }
+        t
+    }
+
+    /// The single-variable function `x_v`.
+    pub fn var(nvars: usize, v: usize) -> Tt {
+        assert!(v < nvars);
+        if v >= 6 {
+            // whole words alternate in blocks of 2^(v-6)
+            let block = 1usize << (v - 6);
+            let mut t = Tt::zeros(nvars);
+            let n = t.words.len();
+            let mut i = 0;
+            while i < n {
+                let on = (i / block) % 2 == 1;
+                if on {
+                    t.words[i] = u64::MAX;
+                }
+                i += 1;
+            }
+            t
+        } else {
+            // pattern within each word
+            const PAT: [u64; 6] = [
+                0xAAAA_AAAA_AAAA_AAAA,
+                0xCCCC_CCCC_CCCC_CCCC,
+                0xF0F0_F0F0_F0F0_F0F0,
+                0xFF00_FF00_FF00_FF00,
+                0xFFFF_0000_FFFF_0000,
+                0xFFFF_FFFF_0000_0000,
+            ];
+            let mut t = Tt::zeros(nvars);
+            let m = tail_mask(nvars);
+            for w in t.words.iter_mut() {
+                *w = PAT[v] & m;
+            }
+            t
+        }
+    }
+
+    pub fn nvars(&self) -> usize {
+        self.nvars
+    }
+
+    pub fn num_rows(&self) -> u64 {
+        1u64 << self.nvars
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, minterm: u64) -> bool {
+        (self.words[(minterm >> 6) as usize] >> (minterm & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, minterm: u64) {
+        self.words[(minterm >> 6) as usize] |= 1 << (minterm & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, minterm: u64) {
+        self.words[(minterm >> 6) as usize] &= !(1 << (minterm & 63));
+    }
+
+    pub fn count_ones(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    pub fn is_ones(&self) -> bool {
+        if self.nvars < 6 {
+            self.words[0] == tail_mask(self.nvars)
+        } else {
+            self.words.iter().all(|&w| w == u64::MAX)
+        }
+    }
+
+    fn zip(&self, other: &Tt, f: impl Fn(u64, u64) -> u64) -> Tt {
+        assert_eq!(self.nvars, other.nvars);
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| f(a, b))
+            .collect();
+        let mut t = Tt { nvars: self.nvars, words };
+        if self.nvars < 6 {
+            t.words[0] &= tail_mask(self.nvars);
+        }
+        t
+    }
+
+    pub fn and(&self, other: &Tt) -> Tt {
+        self.zip(other, |a, b| a & b)
+    }
+    pub fn or(&self, other: &Tt) -> Tt {
+        self.zip(other, |a, b| a | b)
+    }
+    pub fn xor(&self, other: &Tt) -> Tt {
+        self.zip(other, |a, b| a ^ b)
+    }
+    pub fn and_not(&self, other: &Tt) -> Tt {
+        self.zip(other, |a, b| a & !b)
+    }
+    pub fn not(&self) -> Tt {
+        let words = self.words.iter().map(|&w| !w).collect();
+        let mut t = Tt { nvars: self.nvars, words };
+        if self.nvars < 6 {
+            t.words[0] &= tail_mask(self.nvars);
+        }
+        t
+    }
+
+    pub fn or_assign(&mut self, other: &Tt) {
+        assert_eq!(self.nvars, other.nvars);
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn and_assign(&mut self, other: &Tt) {
+        assert_eq!(self.nvars, other.nvars);
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// `self ⊆ other` as sets of minterms.
+    pub fn subset_of(&self, other: &Tt) -> bool {
+        self.words.iter().zip(&other.words).all(|(&a, &b)| a & !b == 0)
+    }
+
+    pub fn intersects(&self, other: &Tt) -> bool {
+        self.words.iter().zip(&other.words).any(|(&a, &b)| a & b != 0)
+    }
+
+    /// Negative cofactor (rows where `x_v = 0`), as a table over
+    /// `nvars - 1` variables. `v` must be the *top* variable
+    /// (`v == nvars-1`) for O(n) word-level split; for general `v` the
+    /// rows are gathered bit by bit.
+    pub fn cofactor0(&self, v: usize) -> Tt {
+        self.cofactor(v, false)
+    }
+
+    /// Positive cofactor (rows where `x_v = 1`).
+    pub fn cofactor1(&self, v: usize) -> Tt {
+        self.cofactor(v, true)
+    }
+
+    fn cofactor(&self, v: usize, val: bool) -> Tt {
+        assert!(v < self.nvars);
+        let n = self.nvars;
+        if v == n - 1 && n >= 7 {
+            // top variable, word-aligned split
+            let half = self.words.len() / 2;
+            let words = if val {
+                self.words[half..].to_vec()
+            } else {
+                self.words[..half].to_vec()
+            };
+            return Tt { nvars: n - 1, words };
+        }
+        let mut t = Tt::zeros(n - 1);
+        let bit = 1u64 << v;
+        let low = bit - 1;
+        for m in 0..(1u64 << (n - 1)) {
+            // reinsert v at position v with value `val`
+            let full = ((m & !low) << 1) | (if val { bit } else { 0 }) | (m & low);
+            if self.get(full) {
+                t.set(m);
+            }
+        }
+        t
+    }
+
+    /// Join two `n-1`-var tables into an `n`-var table on a new top
+    /// variable: rows with `x_{n-1}=0` come from `lo`, rows with
+    /// `x_{n-1}=1` from `hi`.
+    pub fn join(lo: &Tt, hi: &Tt) -> Tt {
+        assert_eq!(lo.nvars, hi.nvars);
+        let n = lo.nvars + 1;
+        if lo.nvars >= 6 {
+            let mut words = Vec::with_capacity(lo.words.len() * 2);
+            words.extend_from_slice(&lo.words);
+            words.extend_from_slice(&hi.words);
+            Tt { nvars: n, words }
+        } else {
+            let half = 1u64 << lo.nvars;
+            let mask = (1u64 << half) - 1;
+            let w = (lo.words[0] & mask) | ((hi.words[0] & mask) << half);
+            let mut t = Tt { nvars: n, words: vec![w] };
+            if n < 6 {
+                t.words[0] &= tail_mask(n);
+            }
+            t
+        }
+    }
+
+    /// Stable 64-bit content hash (FNV-1a over words), used as a memo key
+    /// component by the ISOP recursion.
+    pub fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &w in &self.words {
+            h ^= w;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^ (self.nvars as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn var_tables() {
+        for n in 1..=8 {
+            for v in 0..n {
+                let t = Tt::var(n, v);
+                for m in 0..(1u64 << n) {
+                    assert_eq!(t.get(m), (m >> v) & 1 == 1, "n={n} v={v} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ones_zeros() {
+        for n in 0..=10 {
+            assert!(Tt::zeros(n).is_zero());
+            assert!(Tt::ones(n).is_ones());
+            assert_eq!(Tt::ones(n).count_ones(), 1u64 << n);
+        }
+    }
+
+    #[test]
+    fn boolean_ops() {
+        let n = 7;
+        let a = Tt::var(n, 2);
+        let b = Tt::var(n, 6);
+        let and = a.and(&b);
+        let or = a.or(&b);
+        for m in 0..(1u64 << n) {
+            let (av, bv) = ((m >> 2) & 1 == 1, (m >> 6) & 1 == 1);
+            assert_eq!(and.get(m), av && bv);
+            assert_eq!(or.get(m), av || bv);
+        }
+        assert!(and.subset_of(&or));
+        assert!(!or.subset_of(&and));
+    }
+
+    #[test]
+    fn cofactor_top_and_middle() {
+        // f = x0 XOR x3 over 4 vars
+        let f = Tt::from_fn(4, |m| ((m ^ (m >> 3)) & 1) == 1);
+        let c1 = f.cofactor1(3); // = NOT x0
+        let c0 = f.cofactor0(3); // = x0
+        for m in 0..8u64 {
+            assert_eq!(c1.get(m), (m & 1) == 0);
+            assert_eq!(c0.get(m), (m & 1) == 1);
+        }
+        // middle variable
+        let g = Tt::from_fn(4, |m| (m >> 1) & 1 == 1); // x1
+        assert!(g.cofactor1(1).is_ones());
+        assert!(g.cofactor0(1).is_zero());
+    }
+
+    #[test]
+    fn cofactor_word_aligned_matches_generic() {
+        let f = Tt::from_fn(8, |m| m.count_ones() % 3 == 0);
+        // top var via both paths must agree
+        let fast = f.cofactor1(7);
+        let mut slow = Tt::zeros(7);
+        for m in 0..128u64 {
+            if f.get(m | 128) {
+                slow.set(m);
+            }
+        }
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn hash_distinguishes() {
+        let a = Tt::var(10, 0);
+        let b = Tt::var(10, 1);
+        assert_ne!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash(), a.clone().content_hash());
+    }
+}
+
+#[cfg(test)]
+mod join_tests {
+    use super::*;
+
+    #[test]
+    fn join_then_cofactor_roundtrip() {
+        for n in 1..=8usize {
+            let lo = Tt::from_fn(n, |m| m % 3 == 0);
+            let hi = Tt::from_fn(n, |m| m % 5 == 0);
+            let j = Tt::join(&lo, &hi);
+            assert_eq!(j.nvars(), n + 1);
+            assert_eq!(j.cofactor0(n), lo);
+            assert_eq!(j.cofactor1(n), hi);
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! `ppc` — the command-line entry point: regenerate every table and
+//! figure from the paper, generate the face dataset, train the FRNN,
+//! synthesize ad-hoc PPC blocks, and run the serving coordinator.
+
+use anyhow::{anyhow, bail, Result};
+use ppc::apps::frnn::{dataset, io as frnn_io, net};
+use ppc::logic::map::Objective;
+use ppc::ppc::preprocess::{Chain, Preproc};
+use ppc::tables::{figures, supp, table1, table2, table3};
+use ppc::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "ppc — Partially-Precise Computing reproduction
+
+USAGE: ppc <command> [options]
+
+Paper artifacts:
+  table1 [--quick] [--json FILE]     Table 1  (Gaussian denoising filter)
+  table2 [--quick] [--json FILE]     Table 2  (image blending)
+  table3 [--quick] [--rows 1,2,4]    Table 3  (face-recognition NN)
+  supp-table1                        Supp. Table 1 (8×8 mult, two processes)
+  fig1                               Fig. 1   (preprocessed histograms, CSV)
+  fig2                               Fig. 2   (2×3 multiplier K-maps)
+  fig5 | fig7 | fig10                signal WL/sparsity summaries
+  fig6 | fig8 | fig11 [--out DIR]    sample images (PGM) + PSNR
+  fig12a [--quick]                   CCR/MSE vs TH threshold sweep
+  fig12bc [--quick]                  CCR/MSE vs (DS img × DS wgt) heat map
+
+Pipeline:
+  gen-faces [--out FILE] [--samples N]   synthetic face dataset (JSON)
+  train-frnn [--faces F] [--out F]       rust reference trainer
+  serve [--artifacts DIR] [--requests N] run the coordinator demo
+  synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn maybe_json(args: &Args, table: &ppc::tables::Table) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, table.to_json().to_string())?;
+        println!("json -> {path}");
+    }
+    Ok(())
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    match cmd {
+        "table1" => {
+            let cfg = if quick {
+                table1::Config { image_size: 64, ds_rates: vec![2, 8, 16] }
+            } else {
+                table1::Config::default()
+            };
+            let t = table1::generate(&cfg);
+            println!("{}", t.render());
+            maybe_json(args, &t)
+        }
+        "table2" => {
+            let cfg = if quick {
+                table2::Config {
+                    image_size: 64,
+                    ds_rates: vec![8, 16],
+                    natural_ds_rates: vec![8],
+                    flat_literals: false,
+                }
+            } else {
+                table2::Config::default()
+            };
+            let t = table2::generate(&cfg);
+            println!("{}", t.render());
+            maybe_json(args, &t)
+        }
+        "table3" => {
+            let rows: Vec<usize> = args
+                .get("rows")
+                .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+                .unwrap_or_else(|| (1..=9).collect());
+            let cfg = if quick {
+                table3::Config {
+                    samples_per_combo: 2,
+                    max_epochs: 40,
+                    flat_literals: false,
+                    rows,
+                    ..Default::default()
+                }
+            } else {
+                table3::Config { rows, ..Default::default() }
+            };
+            let t = table3::generate(&cfg);
+            println!("{}", t.render());
+            maybe_json(args, &t)
+        }
+        "supp-table1" => {
+            let rows = supp::generate(&[16, 12, 8]);
+            println!("{}", supp::render(&rows));
+            Ok(())
+        }
+        "fig1" => {
+            let series = figures::fig1();
+            println!(
+                "value,{}",
+                series.iter().map(|(l, _)| l.clone()).collect::<Vec<_>>().join(",")
+            );
+            for v in 0..256 {
+                let row: Vec<String> =
+                    series.iter().map(|(_, h)| format!("{:.5}", h[v])).collect();
+                println!("{v},{}", row.join(","));
+            }
+            Ok(())
+        }
+        "fig2" => {
+            for (label, k) in figures::fig2(2) {
+                println!("{label}  [{} DCs]", figures::kmap_dc_count(&k));
+                println!("{}", figures::render_kmap(&k));
+            }
+            Ok(())
+        }
+        "fig5" | "fig7" | "fig10" => {
+            let rows = match cmd {
+                "fig5" => figures::fig5_signals(),
+                "fig7" => figures::fig7_signals(),
+                _ => figures::fig10_signals(&dataset::generate(3, 7)),
+            };
+            println!("{:<16} {:>4} {:>8} {:>10}", "signal", "WL", "#values", "sparsity");
+            for (name, wl, n, sp) in rows {
+                println!("{name:<16} {wl:>4} {n:>8} {sp:>9.1}%", sp = sp * 100.0);
+            }
+            Ok(())
+        }
+        "fig6" | "fig8" => {
+            let dir = PathBuf::from(args.get_or("out", "artifacts/figures"));
+            let rows = if cmd == "fig6" { figures::fig6(&dir)? } else { figures::fig8(&dir)? };
+            for (label, psnr) in rows {
+                println!("{label:<16} PSNR = {}", ppc::tables::fmt_psnr(psnr));
+            }
+            println!("images -> {}", dir.display());
+            Ok(())
+        }
+        "fig11" => {
+            let dir = PathBuf::from(args.get_or("out", "artifacts/figures"));
+            for path in figures::fig11(&dir)? {
+                println!("{path}");
+            }
+            Ok(())
+        }
+        "fig12a" => {
+            let cfg = if quick {
+                figures::SweepConfig { samples_per_combo: 2, max_epochs: 30, seed: 7 }
+            } else {
+                figures::SweepConfig::default()
+            };
+            let thresholds = [0u32, 16, 32, 48, 64, 80, 96, 112, 128];
+            println!("threshold_x,ccr_percent,mse");
+            for (x, ccr, mse) in figures::fig12a(&thresholds, &cfg) {
+                println!("{x},{ccr:.1},{mse:.4}");
+            }
+            Ok(())
+        }
+        "fig12bc" => {
+            let cfg = if quick {
+                figures::SweepConfig { samples_per_combo: 2, max_epochs: 30, seed: 7 }
+            } else {
+                figures::SweepConfig::default()
+            };
+            let rates = if quick {
+                vec![1u32, 8, 32, 64]
+            } else {
+                vec![1u32, 2, 4, 8, 16, 32, 64]
+            };
+            let (ri, _rw, ccr, mse) = figures::fig12bc(&rates, &cfg);
+            println!("# CCR% (rows = DS on image, cols = DS on weights)");
+            print_matrix(&ri, &ccr);
+            println!("# MSE");
+            print_matrix(&ri, &mse);
+            if let Some(path) = args.get("json") {
+                std::fs::write(path, figures::sweep_to_json(&ri, &ccr, &mse).to_string())?;
+            }
+            Ok(())
+        }
+        "gen-faces" => {
+            let out = PathBuf::from(args.get_or("out", "artifacts/faces.json"));
+            if let Some(parent) = out.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let samples = args.usize_or("samples", 5);
+            let ds = dataset::generate(samples, args.u64_or("seed", 7));
+            frnn_io::save_dataset(&ds, &out)?;
+            println!(
+                "faces: {} train / {} test -> {}",
+                ds.train.len(),
+                ds.test.len(),
+                out.display()
+            );
+            Ok(())
+        }
+        "train-frnn" => {
+            let faces = args.get_or("faces", "artifacts/faces.json");
+            let ds = if Path::new(faces).exists() {
+                frnn_io::load_dataset(Path::new(faces))?
+            } else {
+                println!("{faces} not found; generating in-memory dataset");
+                dataset::generate(4, 7)
+            };
+            let cfg = net::TrainConfig {
+                max_epochs: args.usize_or("epochs", 250),
+                ..Default::default()
+            };
+            let r = net::train(&ds, &cfg);
+            let q = net::quantize(&r.net);
+            let ev = net::evaluate_fx(&q, &ds.test, &Chain::id(), &Chain::id());
+            println!(
+                "TE={} mse={:.4} fixed-point test CCR={:.1}%",
+                r.epochs,
+                r.mse,
+                ev.ccr * 100.0
+            );
+            let out = PathBuf::from(args.get_or("out", "artifacts/frnn_weights_rust.json"));
+            if let Some(parent) = out.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            frnn_io::save_weights(&r.net, &out)?;
+            println!("weights -> {}", out.display());
+            Ok(())
+        }
+        "serve" => serve_demo(args),
+        "synth" => synth_adhoc(args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("{USAGE}");
+            bail!("unknown command {other:?}")
+        }
+    }
+}
+
+fn print_matrix(rates: &[u32], m: &[Vec<f64>]) {
+    print!("ds\\ds,");
+    println!("{}", rates.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","));
+    for (i, row) in m.iter().enumerate() {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:.2}")).collect();
+        println!("{},{}", rates[i], cells.join(","));
+    }
+}
+
+/// Run the coordinator against real artifacts with a mixed workload.
+fn serve_demo(args: &Args) -> Result<()> {
+    use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
+    let dir = artifacts_dir(args);
+    let n = args.usize_or("requests", 64);
+    let coord = Coordinator::with_artifacts(&dir, CoordinatorConfig::default())
+        .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` first"))?;
+    let mut rng = ppc::util::prng::Rng::new(0x5E12);
+    let img_len = 256 * 256;
+    let mut tickets = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let quality = match i % 3 {
+            0 => Quality::Precise,
+            1 => Quality::Balanced,
+            _ => Quality::Economy,
+        };
+        let job = match i % 3 {
+            0 => Job::Denoise {
+                image: (0..img_len).map(|_| rng.below(256) as i32).collect(),
+            },
+            1 => Job::Blend {
+                p1: (0..img_len).map(|_| rng.below(256) as i32).collect(),
+                p2: (0..img_len).map(|_| rng.below(256) as i32).collect(),
+                alpha: 64,
+            },
+            _ => Job::Classify {
+                pixels: (0..960).map(|_| rng.below(160) as i32).collect(),
+            },
+        };
+        tickets.push(coord.submit_blocking(job, quality).map_err(|e| anyhow!("{e:?}"))?);
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n} requests in {:.2}s ({:.1} req/s)",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64()
+    );
+    println!("{}", coord.metrics().report());
+    Ok(())
+}
+
+/// Ad-hoc PPC block synthesis (the Fig. 3 design flow as a tool).
+fn synth_adhoc(args: &Args) -> Result<()> {
+    use ppc::ppc::flow;
+    use ppc::ppc::preprocess::ValueSet;
+    let block = args.get_or("block", "adder");
+    let wl = args.usize_or("wl", 8) as u32;
+    let mut chain = Chain::id();
+    if let Some(x) = args.get("ds") {
+        chain = chain.then(Preproc::Ds(x.parse()?));
+    }
+    if let Some(th) = args.get("th") {
+        let (x, y) = th.split_once(',').ok_or_else(|| anyhow!("--th wants X,Y"))?;
+        chain = chain.then(Preproc::Th { x: x.parse()?, y: y.parse()? });
+    }
+    let set = ValueSet::full(wl.min(8)).map_chain(&chain);
+    println!(
+        "block={block} wl={wl} preprocessing={} sparsity={:.1}%",
+        chain.label(),
+        set.sparsity() * 100.0
+    );
+    let report = match block {
+        "adder" => flow::segmented_adder("adhoc_adder", wl, wl, &set, &set, Objective::Area),
+        "mult" => {
+            if wl != 8 {
+                bail!("composed multiplier supports wl=8");
+            }
+            flow::composed_mult8("adhoc_mult", &set, &set, Objective::Area)
+        }
+        other => bail!("unknown block {other} (adder|mult)"),
+    };
+    println!(
+        "literals={} area={:.0}GE delay={:.2}ns power={:.1}uW dc={:.1}% verify_errors={}",
+        report.literals,
+        report.area_ge,
+        report.delay_ns,
+        report.power_uw,
+        report.dc_fraction * 100.0,
+        report.verify_errors
+    );
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! The paper's contribution: partially-precise computing.
+//!
+//! - [`preprocess`] — `DS_x` / `TH_x^y` preprocessings, value sets,
+//!   natural-sparsity range analysis (Section II).
+//! - [`blocks`] — PPA/PPM truth-table generators with DC sets, and the
+//!   conventional structural baselines (Section III + supplementary).
+//! - [`error`] — PE/ME/MAE closed forms and exhaustive validation
+//!   (eqs. 2–10).
+//! - [`flow`] — the Fig. 3 design flow: range analysis → preprocessing →
+//!   TT+DC → two-level → multi-level → report.
+//!
+//! ## Example: the whole paradigm in six lines
+//!
+//! ```
+//! use ppc::ppc::preprocess::{Chain, Preproc, ValueSet};
+//! use ppc::ppc::flow;
+//! use ppc::logic::map::Objective;
+//!
+//! let sparse = ValueSet::full(8).map_chain(&Chain::of(Preproc::Ds(16)));
+//! let block = flow::segmented_adder("add8", 8, 8, &sparse, &sparse, Objective::Area);
+//! assert_eq!(block.verify_errors, 0); // exact on every care input
+//! ```
+
+pub mod blocks;
+pub mod error;
+pub mod flow;
+pub mod preprocess;

@@ -1,0 +1,336 @@
+//! Preprocessings and value sets — Section II of the paper.
+//!
+//! A *preprocessing* is the cheap input transform that creates
+//! intentional sparsity: [`Preproc::Ds`] (down-sampling, `i → i - (i mod
+//! x)`) and [`Preproc::Th`] (thresholding, `i < x → y`), composable and
+//! parameterized exactly as `DS_x` / `TH_x^y` in the paper.
+//!
+//! A [`ValueSet`] tracks which values a signal can actually take — the
+//! machinery behind both *natural sparsity* (range analysis of Fig. 3(a))
+//! and its *propagation to deeper blocks* (Section II.A): sets flow
+//! through adds/shifts/products so inner blocks inherit their care sets.
+
+/// A preprocessing applied to an unsigned fixed-point input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preproc {
+    /// Identity (conventional path).
+    Id,
+    /// `DS_x`: map `i` to `i - (i mod x)`; `x` must be a power of two.
+    Ds(u32),
+    /// `TH_x^y`: map `i < x` to `y`.
+    Th { x: u32, y: u32 },
+}
+
+impl Preproc {
+    /// Apply to a value.
+    #[inline]
+    pub fn apply(&self, v: u32) -> u32 {
+        match *self {
+            Preproc::Id => v,
+            Preproc::Ds(x) => {
+                debug_assert!(x.is_power_of_two());
+                v & !(x - 1)
+            }
+            Preproc::Th { x, y } => {
+                if v < x {
+                    y
+                } else {
+                    v
+                }
+            }
+        }
+    }
+
+    /// Human-readable name matching the paper's notation.
+    pub fn label(&self) -> String {
+        match *self {
+            Preproc::Id => "none".into(),
+            Preproc::Ds(x) => format!("DS{x}"),
+            Preproc::Th { x, y } => format!("TH{x}^{y}"),
+        }
+    }
+}
+
+/// A chain of preprocessings (e.g. the paper's `TH_48^48 + DS_32`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Chain(pub Vec<Preproc>);
+
+impl Chain {
+    pub fn id() -> Chain {
+        Chain(Vec::new())
+    }
+    pub fn of(p: Preproc) -> Chain {
+        Chain(vec![p])
+    }
+    pub fn then(mut self, p: Preproc) -> Chain {
+        self.0.push(p);
+        self
+    }
+    #[inline]
+    pub fn apply(&self, v: u32) -> u32 {
+        self.0.iter().fold(v, |acc, p| p.apply(acc))
+    }
+    pub fn label(&self) -> String {
+        if self.0.is_empty() {
+            "none".into()
+        } else {
+            self.0
+                .iter()
+                .map(|p| p.label())
+                .collect::<Vec<_>>()
+                .join("+")
+        }
+    }
+}
+
+/// The set of values a signal can take (bitset over `0..capacity`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ValueSet {
+    bits: Vec<u64>,
+    capacity: u32,
+}
+
+impl ValueSet {
+    pub fn empty(capacity: u32) -> ValueSet {
+        ValueSet { bits: vec![0; (capacity as usize).div_ceil(64)], capacity }
+    }
+
+    /// Full range `0..2^wl`.
+    pub fn full(wl: u32) -> ValueSet {
+        let capacity = 1u32 << wl;
+        let mut s = ValueSet::empty(capacity);
+        for w in s.bits.iter_mut() {
+            *w = u64::MAX;
+        }
+        s.trim();
+        s
+    }
+
+    pub fn from_values(capacity: u32, values: impl IntoIterator<Item = u32>) -> ValueSet {
+        let mut s = ValueSet::empty(capacity);
+        for v in values {
+            s.insert(v);
+        }
+        s
+    }
+
+    fn trim(&mut self) {
+        let cap = self.capacity as usize;
+        let last_bits = cap % 64;
+        if last_bits != 0 {
+            let n = self.bits.len();
+            self.bits[n - 1] &= (1u64 << last_bits) - 1;
+        }
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: u32) {
+        assert!(v < self.capacity, "value {v} out of range {}", self.capacity);
+        self.bits[(v / 64) as usize] |= 1 << (v % 64);
+    }
+
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        v < self.capacity && (self.bits[(v / 64) as usize] >> (v % 64)) & 1 == 1
+    }
+
+    pub fn len(&self) -> u32 {
+        self.bits.iter().map(|w| w.count_ones()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.iter().all(|&w| w == 0)
+    }
+
+    /// Sparsity = fraction of the range that never occurs.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.len() as f64 / self.capacity as f64
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.capacity).filter(move |&v| self.contains(v))
+    }
+
+    /// Image under a preprocessing chain.
+    pub fn map_chain(&self, chain: &Chain) -> ValueSet {
+        let mut out = ValueSet::empty(self.capacity);
+        for v in self.iter() {
+            out.insert(chain.apply(v).min(self.capacity - 1));
+        }
+        out
+    }
+
+    /// Minkowski sum (value set of `a + b`), capacity grows to cover it.
+    pub fn sum(&self, other: &ValueSet) -> ValueSet {
+        let cap = self.capacity + other.capacity - 1;
+        let mut out = ValueSet::empty(cap);
+        for a in self.iter() {
+            for b in other.iter() {
+                out.insert(a + b);
+            }
+        }
+        out
+    }
+
+    /// Value set of `a * b`.
+    pub fn product(&self, other: &ValueSet) -> ValueSet {
+        let cap = ((self.capacity as u64 - 1) * (other.capacity as u64 - 1) + 1) as u32;
+        let mut out = ValueSet::empty(cap.max(1));
+        for a in self.iter() {
+            for b in other.iter() {
+                out.insert(a * b);
+            }
+        }
+        out
+    }
+
+    /// Value set of `v << k` (capacity grows).
+    pub fn shl(&self, k: u32) -> ValueSet {
+        let cap = ((self.capacity as u64 - 1) << k) + 1;
+        let mut out = ValueSet::empty(cap as u32);
+        for v in self.iter() {
+            out.insert(v << k);
+        }
+        out
+    }
+
+    /// Value set of `v >> k`.
+    pub fn shr(&self, k: u32) -> ValueSet {
+        let cap = ((self.capacity - 1) >> k) + 1;
+        let mut out = ValueSet::empty(cap.max(1));
+        for v in self.iter() {
+            out.insert(v >> k);
+        }
+        out
+    }
+
+    /// Value set of the low `wl` bits (truncation).
+    pub fn truncate(&self, wl: u32) -> ValueSet {
+        let cap = 1u32 << wl;
+        let mut out = ValueSet::empty(cap);
+        for v in self.iter() {
+            out.insert(v & (cap - 1));
+        }
+        out
+    }
+
+    /// Histogram of a `u8` sample restricted/normalized — used by the
+    /// Fig. 1 regenerator.
+    pub fn of_samples(samples: &[u8]) -> ValueSet {
+        let mut s = ValueSet::empty(256);
+        for &v in samples {
+            s.insert(v as u32);
+        }
+        s
+    }
+}
+
+/// Normalized 256-bin histogram (Fig. 1 / Figs. 5,7,10 signal views).
+pub fn histogram256(samples: impl Iterator<Item = u32>) -> Vec<f64> {
+    let mut h = vec![0u64; 256];
+    let mut n = 0u64;
+    for v in samples {
+        h[(v.min(255)) as usize] += 1;
+        n += 1;
+    }
+    if n == 0 {
+        return vec![0.0; 256];
+    }
+    h.into_iter().map(|c| c as f64 / n as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn ds_matches_definition() {
+        // DS_x maps i -> i - (i MOD x)
+        forall(1, 2000, |r| (r.below(256) as u32, 1u32 << r.below(6)), |&(v, x)| {
+            Preproc::Ds(x).apply(v) == v - (v % x)
+        });
+    }
+
+    #[test]
+    fn ds_idempotent() {
+        forall(2, 2000, |r| (r.below(1 << 12) as u32, 1u32 << r.below(8)), |&(v, x)| {
+            let p = Preproc::Ds(x);
+            p.apply(p.apply(v)) == p.apply(v)
+        });
+    }
+
+    #[test]
+    fn th_matches_definition() {
+        let p = Preproc::Th { x: 48, y: 48 };
+        assert_eq!(p.apply(0), 48);
+        assert_eq!(p.apply(47), 48);
+        assert_eq!(p.apply(48), 48);
+        assert_eq!(p.apply(49), 49);
+        assert_eq!(p.apply(255), 255);
+    }
+
+    #[test]
+    fn chain_label_and_apply() {
+        let c = Chain::of(Preproc::Th { x: 48, y: 48 }).then(Preproc::Ds(32));
+        assert_eq!(c.label(), "TH48^48+DS32");
+        assert_eq!(c.apply(5), 32); // th -> 48, ds32 -> 32
+        assert_eq!(c.apply(100), 96);
+    }
+
+    #[test]
+    fn ds_reduces_count_by_x() {
+        // paper: "applying DS_x decreases the number of values by 1/x"
+        for k in 0..6 {
+            let x = 1u32 << k;
+            let s = ValueSet::full(8).map_chain(&Chain::of(Preproc::Ds(x)));
+            assert_eq!(s.len(), 256 / x);
+        }
+    }
+
+    #[test]
+    fn th_sparsity_matches_eq6_factor() {
+        // TH_x leaves (2^WL - x + 1) values (y = x maps into the kept range)
+        let s = ValueSet::full(8).map_chain(&Chain::of(Preproc::Th { x: 48, y: 48 }));
+        assert_eq!(s.len(), 256 - 48);
+        let s0 = ValueSet::full(8).map_chain(&Chain::of(Preproc::Th { x: 48, y: 0 }));
+        assert_eq!(s0.len(), 256 - 48 + 1);
+    }
+
+    #[test]
+    fn value_set_ops() {
+        let a = ValueSet::from_values(4, [0, 2]);
+        let b = ValueSet::from_values(4, [1, 3]);
+        let s = a.sum(&b);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1, 3, 5]);
+        let p = a.product(&b);
+        assert_eq!(p.iter().collect::<Vec<_>>(), vec![0, 2, 6]);
+        let sh = a.shl(2);
+        assert_eq!(sh.iter().collect::<Vec<_>>(), vec![0, 8]);
+        assert_eq!(sh.shr(2), ValueSet::from_values(sh.shr(2).capacity(), [0, 2]));
+    }
+
+    #[test]
+    fn truncate_wraps() {
+        let a = ValueSet::from_values(1 << 10, [255, 256, 511, 513]);
+        let t = a.truncate(8);
+        assert_eq!(t.iter().collect::<Vec<_>>(), vec![0, 1, 255]);
+    }
+
+    #[test]
+    fn sparsity_value() {
+        let half = ValueSet::from_values(256, 0..128u32);
+        assert!((half.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_normalized() {
+        let h = histogram256([0u32, 0, 1, 3].into_iter());
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((h[0] - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute
+//! them on the CPU PJRT client. Python never runs here — artifacts are
+//! produced once by `make artifacts` and this module is self-contained
+//! afterwards.
+//!
+//! NOTE: the `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so a
+//! [`Runtime`] must stay on the thread that created it. The coordinator
+//! wraps it in a dedicated engine thread (see
+//! [`crate::coordinator`]).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one artifact port (only i32 tensors are used by the
+/// three applications).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Port {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl Port {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub app: String,
+    pub config: String,
+    pub file: String,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+}
+
+/// Parse the manifest written by `python -m compile.aot`.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let arts = j
+        .get("artifacts")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?;
+    let port = |v: &Json| -> Result<Port> {
+        let arr = v.as_arr().ok_or_else(|| anyhow!("bad port"))?;
+        Ok(Port {
+            dtype: arr[0].as_str().unwrap_or("i32").to_string(),
+            dims: arr[1].flat_f64().iter().map(|&d| d as usize).collect(),
+        })
+    };
+    arts.iter()
+        .map(|a| {
+            Ok(ArtifactMeta {
+                app: a.get("app").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                config: a.get("config").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                file: a.get("file").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                inputs: a
+                    .get("inputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(port)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(port)
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+/// A loaded executable plus its metadata.
+pub struct Loaded {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact registry: a PJRT CPU client plus every compiled model
+/// variant, keyed `"{app}/{config}"`.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    executables: HashMap<String, Loaded>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Compile every artifact in `dir` (per the manifest).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Runtime::load_filtered(dir, |_| true)
+    }
+
+    /// Load only artifacts for one app (faster startup for examples).
+    pub fn load_app(dir: &Path, app: &str) -> Result<Runtime> {
+        let rt = Runtime::load_filtered(dir, |m| m.app == app)?;
+        if rt.executables.is_empty() {
+            bail!("no artifacts for app {app} in {}", dir.display());
+        }
+        Ok(rt)
+    }
+
+    pub fn load_filtered(dir: &Path, keep: impl Fn(&ArtifactMeta) -> bool) -> Result<Runtime> {
+        let metas = read_manifest(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for meta in metas.into_iter().filter(|m| keep(m)) {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
+            executables.insert(format!("{}/{}", meta.app, meta.config), Loaded { meta, exe });
+        }
+        Ok(Runtime { client, executables, dir: dir.to_path_buf() })
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.executables.keys().cloned().collect();
+        k.sort();
+        k
+    }
+
+    pub fn meta(&self, key: &str) -> Option<&ArtifactMeta> {
+        self.executables.get(key).map(|l| &l.meta)
+    }
+
+    /// Execute an artifact on i32 tensors. `inputs[k]` must match the
+    /// manifest's k-th input port (row-major). Returns one Vec<i32> per
+    /// output port.
+    pub fn exec_i32(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+        let loaded = self
+            .executables
+            .get(key)
+            .ok_or_else(|| anyhow!("unknown artifact {key}; have {:?}", self.keys()))?;
+        if inputs.len() != loaded.meta.inputs.len() {
+            bail!(
+                "{key}: expected {} inputs, got {}",
+                loaded.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, port) in inputs.iter().zip(&loaded.meta.inputs) {
+            if data.len() != port.elements() {
+                bail!("{key}: input size {} != port {:?}", data.len(), port.dims);
+            }
+            let dims: Vec<i64> = port.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {key}: {e:?}"))?;
+        let first = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // jax lowers with return_tuple=True → unpack the tuple
+        let parts = first.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("ppc_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"app":"gdf","config":"conv","file":"g.hlo.txt",
+                "inputs":[["i32",[4,4]]],"outputs":[["i32",[4,4]]]}]}"#,
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].app, "gdf");
+        assert_eq!(m[0].inputs[0].dims, vec![4, 4]);
+        assert_eq!(m[0].inputs[0].elements(), 16);
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = read_manifest(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,367 @@
+//! Regenerators for the paper's figures (1, 2, 5, 6, 7, 8, 10, 11, 12).
+//!
+//! Numeric figures return series/matrices (printed as CSV by the CLI);
+//! image figures write PGM files.
+
+use crate::apps::blend::{self, Alpha};
+use crate::apps::frnn::dataset::{self, Dataset};
+use crate::apps::frnn::net::{self, TrainConfig};
+use crate::apps::gdf;
+use crate::apps::image::{add_gaussian_noise, gaussian_histogram_image, synthetic_photo, Image};
+use crate::ppc::preprocess::{histogram256, Chain, Preproc, ValueSet};
+use crate::util::json::Json;
+use std::path::Path;
+
+// ---------------------------------------------------------------------
+// Fig. 1 — histograms of an image under DS/TH preprocessing
+// ---------------------------------------------------------------------
+
+/// Returns (label, 256-bin normalized histogram) series.
+pub fn fig1() -> Vec<(String, Vec<f64>)> {
+    let img = gaussian_histogram_image(256, 256, 128.0, 40.0, 0xF16);
+    let mk = |label: &str, chain: Chain| {
+        let h = histogram256(img.pixels.iter().map(|&p| chain.apply(p as u32)));
+        (label.to_string(), h)
+    };
+    vec![
+        mk("(a) original", Chain::id()),
+        mk("(b) DS2", Chain::of(Preproc::Ds(2))),
+        mk("(c) DS4", Chain::of(Preproc::Ds(4))),
+        mk("(d) DS8", Chain::of(Preproc::Ds(8))),
+        mk("(e) TH48^0", Chain::of(Preproc::Th { x: 48, y: 0 })),
+        mk("(f) TH48^48", Chain::of(Preproc::Th { x: 48, y: 48 })),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 — Karnaugh maps of the 2×3 multiplier's third output bit
+// ---------------------------------------------------------------------
+
+/// One K-map cell: Some(bit) or None for don't-care.
+pub type Kmap = Vec<Vec<Option<bool>>>; // 4 rows (a1a0) × 8 cols (b2b1b0)
+
+fn kmap_of(bit: usize, care: impl Fn(u64, u64) -> bool) -> Kmap {
+    // gray-code order, paper-style
+    let gray2 = [0b00u64, 0b01, 0b11, 0b10];
+    let gray3 = [0b000u64, 0b001, 0b011, 0b010, 0b110, 0b111, 0b101, 0b100];
+    gray2
+        .iter()
+        .map(|&a| {
+            gray3
+                .iter()
+                .map(|&b| {
+                    if care(a, b) {
+                        Some(((a * b) >> bit) & 1 == 1)
+                    } else {
+                        None
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The four Fig. 2 K-maps for output bit `bit` (paper shows bit index 2,
+/// "the third output bit").
+pub fn fig2(bit: usize) -> Vec<(String, Kmap)> {
+    vec![
+        ("(a) precise".into(), kmap_of(bit, |_, _| true)),
+        (
+            "(b) PPM, DS2 on both inputs".into(),
+            kmap_of(bit, |a, b| a % 2 == 0 && b % 2 == 0),
+        ),
+        (
+            "(c) PPM, TH5^0 on 3-bit input".into(),
+            kmap_of(bit, |_, b| b >= 5 || b == 0),
+        ),
+        (
+            "(d) PPM, TH5^6 on 3-bit input".into(),
+            kmap_of(bit, |_, b| b >= 5),
+        ),
+    ]
+}
+
+/// Count DCs in a K-map (the eq. 1/6 cross-check).
+pub fn kmap_dc_count(k: &Kmap) -> usize {
+    k.iter().flatten().filter(|c| c.is_none()).count()
+}
+
+/// Render a K-map as ASCII (1/0/- per cell).
+pub fn render_kmap(k: &Kmap) -> String {
+    let mut s = String::from("        b2b1b0: 000 001 011 010 110 111 101 100\n");
+    let rows = ["00", "01", "11", "10"];
+    for (i, row) in k.iter().enumerate() {
+        s.push_str(&format!("  a1a0={}:      ", rows[i]));
+        for cell in row {
+            s.push_str(match cell {
+                Some(true) => "  1 ",
+                Some(false) => "  0 ",
+                None => "  - ",
+            });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Figs. 5 / 7 / 10 — signal word-lengths and sparsity summaries
+// ---------------------------------------------------------------------
+
+/// Per-signal summary row: name, WL, #values, sparsity.
+pub fn fig5_signals() -> Vec<(String, u32, u32, f64)> {
+    let full = ValueSet::full(8);
+    let sig = gdf::gdf_signal_sets(&full);
+    let mut out = Vec::new();
+    for (i, (l, r, wl_l, wl_r)) in sig.adders.iter().enumerate() {
+        out.push((format!("adder{} left", i + 1), *wl_l, l.len(), l.sparsity()));
+        out.push((format!("adder{} right", i + 1), *wl_r, r.len(), r.sparsity()));
+    }
+    out.push(("output".into(), 8, sig.output.len(), sig.output.sparsity()));
+    out
+}
+
+pub fn fig7_signals() -> Vec<(String, u32, u32, f64)> {
+    let cfg = blend::BlendConfig::of(true, Chain::id());
+    let sig = blend::blend_signal_sets(&cfg);
+    vec![
+        ("mult1 image".into(), 8, sig.mult1.0.len(), sig.mult1.0.sparsity()),
+        ("mult1 coeff".into(), 8, sig.mult1.1.len(), sig.mult1.1.sparsity()),
+        ("mult2 image".into(), 8, sig.mult2.0.len(), sig.mult2.0.sparsity()),
+        ("mult2 coeff".into(), 8, sig.mult2.1.len(), sig.mult2.1.sparsity()),
+        ("adder left".into(), 8, sig.adder.0.len(), sig.adder.0.sparsity()),
+        ("adder right".into(), 8, sig.adder.1.len(), sig.adder.1.sparsity()),
+    ]
+}
+
+pub fn fig10_signals(ds: &Dataset) -> Vec<(String, u32, u32, f64)> {
+    // union of pixel histograms across the dataset (the paper's image
+    // input histogram for the MAC multiplier)
+    let mut pixels = ValueSet::empty(256);
+    for f in ds.train.iter().chain(&ds.test) {
+        for &p in &f.pixels {
+            pixels.insert(p as u32);
+        }
+    }
+    let weights = ValueSet::full(8); // weight bytes span the range
+    vec![
+        ("mult image in".into(), 8, pixels.len(), pixels.sparsity()),
+        ("mult weight in".into(), 8, weights.len(), weights.sparsity()),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// Figs. 6 / 8 / 11 — sample input/output images
+// ---------------------------------------------------------------------
+
+/// Fig. 6: GDF input/output for conventional, DS16, DS32. Writes PGMs
+/// into `out_dir`; returns (config, psnr-vs-conventional).
+pub fn fig6(out_dir: &Path) -> anyhow::Result<Vec<(String, f64)>> {
+    std::fs::create_dir_all(out_dir)?;
+    let clean = synthetic_photo(256, 256, 0xF6);
+    let noisy = add_gaussian_noise(&clean, 10.0, 0xF7);
+    noisy.write_pgm(&out_dir.join("fig6_input.pgm"))?;
+    let reference = gdf::gdf_filter(&noisy, &Chain::id());
+    reference.write_pgm(&out_dir.join("fig6_out_conventional.pgm"))?;
+    let mut rows = vec![("conventional".to_string(), f64::INFINITY)];
+    for x in [16u32, 32] {
+        let chain = Chain::of(Preproc::Ds(x));
+        let pre: Image = noisy.map(|p| chain.apply(p as u32) as u8);
+        pre.write_pgm(&out_dir.join(format!("fig6_input_ds{x}.pgm")))?;
+        let out = gdf::gdf_filter(&noisy, &chain);
+        out.write_pgm(&out_dir.join(format!("fig6_out_ds{x}.pgm")))?;
+        rows.push((format!("DS{x}"), reference.psnr(&out)));
+    }
+    Ok(rows)
+}
+
+/// Fig. 8: blending inputs/outputs for conventional, DS16, DS32.
+pub fn fig8(out_dir: &Path) -> anyhow::Result<Vec<(String, f64)>> {
+    std::fs::create_dir_all(out_dir)?;
+    let p1 = synthetic_photo(256, 256, 0xF8);
+    let p2 = synthetic_photo(256, 256, 0xF9);
+    let alpha = Alpha::from_ratio(0.5);
+    p1.write_pgm(&out_dir.join("fig8_input1.pgm"))?;
+    p2.write_pgm(&out_dir.join("fig8_input2.pgm"))?;
+    let reference = blend::blend_images(&p1, &p2, alpha, &Chain::id(), &Chain::id());
+    reference.write_pgm(&out_dir.join("fig8_out_conventional.pgm"))?;
+    let mut rows = vec![("conventional".to_string(), f64::INFINITY)];
+    for x in [16u32, 32] {
+        let chain = Chain::of(Preproc::Ds(x));
+        let out = blend::blend_images(&p1, &p2, alpha, &chain, &chain);
+        out.write_pgm(&out_dir.join(format!("fig8_out_ds{x}.pgm")))?;
+        rows.push((format!("DS{x}"), reference.psnr(&out)));
+    }
+    Ok(rows)
+}
+
+/// Fig. 11: one face under the six preprocessing views.
+pub fn fig11(out_dir: &Path) -> anyhow::Result<Vec<String>> {
+    std::fs::create_dir_all(out_dir)?;
+    let face = dataset::render_face(5, 1, false, 3);
+    let th48 = Chain::of(Preproc::Th { x: 48, y: 48 });
+    let views: Vec<(&str, Chain)> = vec![
+        ("a_precise", Chain::id()),
+        ("b_th48", th48.clone()),
+        ("c_ds16", Chain::of(Preproc::Ds(16))),
+        ("d_ds32", Chain::of(Preproc::Ds(32))),
+        ("e_th48_ds16", th48.clone().then(Preproc::Ds(16))),
+        ("f_th48_ds32", th48.then(Preproc::Ds(32))),
+    ];
+    let mut written = Vec::new();
+    for (name, chain) in views {
+        let img = Image {
+            width: dataset::IMG_W,
+            height: dataset::IMG_H,
+            pixels: face.pixels.iter().map(|&p| chain.apply(p as u32) as u8).collect(),
+        };
+        let path = out_dir.join(format!("fig11_{name}.pgm"));
+        img.write_pgm(&path)?;
+        written.push(path.display().to_string());
+    }
+    Ok(written)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 12 — FRNN accuracy sweeps
+// ---------------------------------------------------------------------
+
+pub struct SweepConfig {
+    pub samples_per_combo: usize,
+    pub max_epochs: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { samples_per_combo: 3, max_epochs: 120, seed: 7 }
+    }
+}
+
+/// Fig. 12(a): CCR and MSE vs TH_x^0 threshold on the image input.
+pub fn fig12a(thresholds: &[u32], cfg: &SweepConfig) -> Vec<(u32, f64, f64)> {
+    let ds = dataset::generate(cfg.samples_per_combo, cfg.seed);
+    thresholds
+        .iter()
+        .map(|&x| {
+            let chain = if x == 0 {
+                Chain::id()
+            } else {
+                Chain::of(Preproc::Th { x, y: 0 })
+            };
+            let tc = TrainConfig {
+                max_epochs: cfg.max_epochs,
+                seed: cfg.seed,
+                pre_image: chain.clone(),
+                ..Default::default()
+            };
+            let r = net::train(&ds, &tc);
+            let q = net::quantize(&r.net);
+            let ev = net::evaluate_fx(&q, &ds.test, &chain, &Chain::id());
+            (x, ev.ccr * 100.0, r.mse)
+        })
+        .collect()
+}
+
+/// Fig. 12(b,c): CCR and MSE heat maps over (DS on image) × (DS on
+/// weights). Returns (img_rates, wgt_rates, ccr_matrix, mse_matrix).
+#[allow(clippy::type_complexity)]
+pub fn fig12bc(
+    rates: &[u32],
+    cfg: &SweepConfig,
+) -> (Vec<u32>, Vec<u32>, Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let ds = dataset::generate(cfg.samples_per_combo, cfg.seed);
+    let mut ccr = Vec::new();
+    let mut mse = Vec::new();
+    for &xi in rates {
+        let mut ccr_row = Vec::new();
+        let mut mse_row = Vec::new();
+        for &xw in rates {
+            let ci = if xi <= 1 { Chain::id() } else { Chain::of(Preproc::Ds(xi)) };
+            let cw = if xw <= 1 { Chain::id() } else { Chain::of(Preproc::Ds(xw)) };
+            let tc = TrainConfig {
+                max_epochs: cfg.max_epochs,
+                seed: cfg.seed,
+                pre_image: ci.clone(),
+                pre_weight: cw.clone(),
+                ..Default::default()
+            };
+            let r = net::train(&ds, &tc);
+            let q = net::quantize(&r.net);
+            let ev = net::evaluate_fx(&q, &ds.test, &ci, &cw);
+            ccr_row.push(ev.ccr * 100.0);
+            mse_row.push(r.mse);
+        }
+        ccr.push(ccr_row);
+        mse.push(mse_row);
+    }
+    (rates.to_vec(), rates.to_vec(), ccr, mse)
+}
+
+/// Serialize a sweep to JSON for plotting.
+pub fn sweep_to_json(rates: &[u32], ccr: &[Vec<f64>], mse: &[Vec<f64>]) -> Json {
+    Json::obj(vec![
+        ("rates", Json::Arr(rates.iter().map(|&r| Json::Num(r as f64)).collect())),
+        ("ccr", Json::Arr(ccr.iter().map(|row| Json::num_arr(row.iter())).collect())),
+        ("mse", Json::Arr(mse.iter().map(|row| Json::num_arr(row.iter())).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_histograms_shape() {
+        let series = fig1();
+        assert_eq!(series.len(), 6);
+        for (label, h) in &series {
+            assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-9, "{label} not normalized");
+        }
+        // DS8 leaves only multiples of 8
+        let ds8 = &series[3].1;
+        for (v, &p) in ds8.iter().enumerate() {
+            if v % 8 != 0 {
+                assert_eq!(p, 0.0, "DS8 histogram has mass at {v}");
+            }
+        }
+        // TH48^0 has no mass in (0, 48)
+        let th = &series[4].1;
+        assert!(th[0] > 0.0);
+        assert!(th[1..48].iter().all(|&p| p == 0.0));
+    }
+
+    #[test]
+    fn fig2_dc_counts_match_equations() {
+        let maps = fig2(2);
+        // precise: no DCs
+        assert_eq!(kmap_dc_count(&maps[0].1), 0);
+        // DS2 both inputs: eq. (1) → 75% of 32 cells = 24 DCs
+        assert_eq!(kmap_dc_count(&maps[1].1), 24);
+        // TH5^0 on the 3-bit input keeps b ∈ {0, 5, 6, 7} → 4·4 care = 16 DC
+        assert_eq!(kmap_dc_count(&maps[2].1), 16);
+        // TH5^6 keeps b ∈ {5, 6, 7} → 12 care cells, 20 DCs
+        assert_eq!(kmap_dc_count(&maps[3].1), 20);
+        // renders
+        assert!(render_kmap(&maps[1].1).contains('-'));
+    }
+
+    #[test]
+    fn fig5_reproduces_shift_sparsity() {
+        let rows = fig5_signals();
+        // adder3 (index 2) left input: DS2-like → sparsity 0.5
+        let (_, _, n, s) = &rows[4];
+        assert_eq!(*n, 256);
+        assert!((s - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn fig12a_th48_tolerated() {
+        // tiny sweep: threshold 48 must not collapse accuracy vs 0
+        let cfg = SweepConfig { samples_per_combo: 2, max_epochs: 30, seed: 3 };
+        let rows = fig12a(&[0, 48], &cfg);
+        assert_eq!(rows.len(), 2);
+        let (base, th48) = (rows[0].1, rows[1].1);
+        assert!(th48 > base - 25.0, "TH48 collapsed: {th48} vs {base}");
+    }
+}

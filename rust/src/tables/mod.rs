@@ -1,0 +1,116 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//!
+//! Each submodule produces the same rows/series the paper reports;
+//! `cargo bench --bench table*` and the `ppc` CLI subcommands call the
+//! same entry points. Absolute numbers come from our substitute
+//! synthesis substrate (see DESIGN.md), so EXPERIMENTS.md compares
+//! *shapes* — orderings, rough factors, crossovers — against the paper.
+
+pub mod figures;
+pub mod supp;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::ppc::flow::BlockReport;
+
+/// One row of a cost-accuracy table, normalized against the
+/// conventional row like the paper's Tables 1–3.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    /// Accuracy column: "Ideal", PSNR in dB, or CCR/TE/MSE triple.
+    pub accuracy: String,
+    pub literals: u64,
+    pub area_ge: f64,
+    pub delay_ns: f64,
+    pub power_uw: f64,
+}
+
+impl Row {
+    pub fn from_report(label: &str, accuracy: String, literals: u64, r: &BlockReport) -> Row {
+        Row {
+            label: label.to_string(),
+            accuracy,
+            literals,
+            area_ge: r.area_ge,
+            delay_ns: r.delay_ns,
+            power_uw: r.power_uw,
+        }
+    }
+}
+
+/// A rendered table: rows plus the normalization base.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    /// Format with both normalized and absolute columns, paper-style.
+    pub fn render(&self) -> String {
+        let base = &self.rows[0];
+        let mut s = format!("== {} ==\n", self.title);
+        s.push_str(&format!(
+            "{:<34} {:>14} {:>18} {:>14} {:>14} {:>14}\n",
+            "Realization / Sparsity", "Accuracy", "#literals (norm)", "Area (norm)", "Delay (norm)", "Power (norm)"
+        ));
+        for r in &self.rows {
+            let nl = if base.literals > 0 {
+                r.literals as f64 / base.literals as f64
+            } else {
+                f64::NAN
+            };
+            s.push_str(&format!(
+                "{:<34} {:>14} {:>8} ({:>5.3}) {:>7.0} ({:>4.2}) {:>7.2} ({:>4.2}) {:>7.1} ({:>4.2})\n",
+                r.label,
+                r.accuracy,
+                r.literals,
+                nl,
+                r.area_ge,
+                r.area_ge / base.area_ge,
+                r.delay_ns,
+                r.delay_ns / base.delay_ns,
+                r.power_uw,
+                r.power_uw / base.power_uw,
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable JSON (EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("label", Json::Str(r.label.clone())),
+                                ("accuracy", Json::Str(r.accuracy.clone())),
+                                ("literals", Json::Num(r.literals as f64)),
+                                ("area_ge", Json::Num(r.area_ge)),
+                                ("delay_ns", Json::Num(r.delay_ns)),
+                                ("power_uw", Json::Num(r.power_uw)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Format a PSNR value the way the paper does ("Ideal" for ∞).
+pub fn fmt_psnr(psnr: f64) -> String {
+    if psnr.is_infinite() {
+        "Ideal".to_string()
+    } else {
+        format!("{psnr:.0} dB")
+    }
+}

@@ -1,0 +1,93 @@
+//! Table 1 — cost-accuracy trade-off of the Gaussian denoising filter.
+//!
+//! Paper rows: Conventional, DS2, DS4, DS8, DS16 (we add DS32, the
+//! Fig. 6(c) configuration). Accuracy = output PSNR of the PPC filter
+//! against the conventional filter on a photo-like test image;
+//! implementation costs = the 8-adder bank (segmented two-level
+//! literals; mapped area/delay/power).
+
+use super::{fmt_psnr, Row, Table};
+use crate::apps::gdf;
+use crate::apps::image::synthetic_photo;
+use crate::logic::map::Objective;
+use crate::ppc::preprocess::{Chain, Preproc, ValueSet};
+
+pub struct Config {
+    /// Image edge for PSNR measurement.
+    pub image_size: usize,
+    /// DS rates to include (paper: 2..16).
+    pub ds_rates: Vec<u32>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { image_size: 128, ds_rates: vec![2, 4, 8, 16, 32] }
+    }
+}
+
+pub fn generate(cfg: &Config) -> Table {
+    let img = synthetic_photo(cfg.image_size, cfg.image_size, 0xD5);
+    let reference = gdf::gdf_filter(&img, &Chain::id());
+
+    let mut table = Table {
+        title: "Table 1 — Gaussian denoising filter (GDF) hardware".into(),
+        rows: Vec::new(),
+    };
+
+    // Row 1: conventional. Literals from the no-DC TT path (the paper's
+    // two-level column always comes from the TT flow); physicals from
+    // the structural library-style synthesis.
+    let full = ValueSet::full(8);
+    let conv_literals: u64 = gdf::gdf_ppc_hardware(&full, Objective::Area)
+        .iter()
+        .map(|r| r.literals)
+        .sum();
+    let conv_phys = gdf::aggregate(&gdf::gdf_conventional_hardware(Objective::Area));
+    table.rows.push(Row::from_report(
+        "Conventional / none",
+        "Ideal".into(),
+        conv_literals,
+        &conv_phys,
+    ));
+
+    for &x in &cfg.ds_rates {
+        let chain = Chain::of(Preproc::Ds(x));
+        let out = gdf::gdf_filter(&img, &chain);
+        let psnr = reference.psnr(&out);
+        let input_set = full.map_chain(&chain);
+        let reports = gdf::gdf_ppc_hardware(&input_set, Objective::Area);
+        let agg = gdf::aggregate(&reports);
+        assert_eq!(agg.verify_errors, 0, "DS{x} synthesis mismatch");
+        table.rows.push(Row::from_report(
+            &format!("PPC / Intentional(DS{x})"),
+            fmt_psnr(psnr),
+            agg.literals,
+            &agg,
+        ));
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        let cfg = Config { image_size: 48, ds_rates: vec![2, 16] };
+        let t = generate(&cfg);
+        assert_eq!(t.rows.len(), 3);
+        // conventional is ideal
+        assert_eq!(t.rows[0].accuracy, "Ideal");
+        // literals fall monotonically with DS rate
+        assert!(t.rows[1].literals < t.rows[0].literals);
+        assert!(t.rows[2].literals < t.rows[1].literals);
+        // PSNR decreases with DS rate; DS16 stays above 26 dB on our image
+        let ds16_psnr: f64 = t.rows[2].accuracy.trim_end_matches(" dB").parse().unwrap();
+        assert!(ds16_psnr > 26.0, "DS16 PSNR {ds16_psnr}");
+        // DS16 power below conventional (paper: 0.61×)
+        assert!(t.rows[2].power_uw < t.rows[0].power_uw);
+        // render works
+        assert!(t.render().contains("DS16"));
+    }
+}

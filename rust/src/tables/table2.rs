@@ -1,0 +1,127 @@
+//! Table 2 — cost-accuracy trade-off of the image-blending hardware.
+//!
+//! Paper rows: conventional; natural; DS2..DS32; natural+DS2..DS16.
+//! Natural sparsity = the blending coefficients' half ranges (Fig. 7);
+//! it costs nothing in accuracy, so its PSNR is "Ideal".
+
+use super::{fmt_psnr, Row, Table};
+use crate::apps::blend::{self, Alpha, BlendConfig};
+use crate::apps::image::synthetic_photo;
+use crate::logic::map::Objective;
+use crate::ppc::preprocess::{Chain, Preproc};
+
+pub struct Config {
+    pub image_size: usize,
+    pub ds_rates: Vec<u32>,
+    pub natural_ds_rates: Vec<u32>,
+    /// Include the flat 16-input two-level literal counts (the paper's
+    /// metric; dominated by the two flat multipliers — a few seconds per
+    /// row). When false, composed-structure literals are used.
+    pub flat_literals: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            image_size: 128,
+            ds_rates: vec![2, 4, 8, 16, 32],
+            natural_ds_rates: vec![2, 4, 8, 16],
+            flat_literals: true,
+        }
+    }
+}
+
+fn row(
+    cfg: &Config,
+    bc: &BlendConfig,
+    accuracy: String,
+) -> Row {
+    let reports = blend::blend_ppc_hardware(bc, Objective::Area);
+    let agg = blend::aggregate(&reports);
+    assert_eq!(agg.verify_errors, 0, "{} synthesis mismatch", bc.name);
+    let literals = if cfg.flat_literals {
+        blend::blend_flat_literals(bc)
+    } else {
+        agg.literals
+    };
+    Row::from_report(&format!("PPC / {}", bc.name), accuracy, literals, &agg)
+}
+
+pub fn generate(cfg: &Config) -> Table {
+    let p1 = synthetic_photo(cfg.image_size, cfg.image_size, 0x1E7A);
+    let p2 = synthetic_photo(cfg.image_size, cfg.image_size, 0x70FF);
+    let alpha = Alpha::from_ratio(0.5);
+    let reference = blend::blend_images(&p1, &p2, alpha, &Chain::id(), &Chain::id());
+
+    let mut table = Table {
+        title: "Table 2 — Image blending (IB) hardware".into(),
+        rows: Vec::new(),
+    };
+
+    // Row 1: conventional (structural physicals; flat literals, no DCs).
+    let conv = BlendConfig::conventional();
+    let conv_phys = blend::aggregate(&blend::blend_conventional_hardware(Objective::Area));
+    let conv_literals = if cfg.flat_literals {
+        blend::blend_flat_literals(&conv)
+    } else {
+        blend::aggregate(&blend::blend_ppc_hardware(&conv, Objective::Area)).literals
+    };
+    table.rows.push(Row::from_report(
+        "Conventional / none",
+        "Ideal".into(),
+        conv_literals,
+        &conv_phys,
+    ));
+
+    // Row 2: natural only — zero accuracy cost.
+    let nat = BlendConfig::of(true, Chain::id());
+    table.rows.push(row(cfg, &nat, "Ideal".into()));
+
+    // Rows 3–7: intentional DS.
+    for &x in &cfg.ds_rates {
+        let chain = Chain::of(Preproc::Ds(x));
+        let out = blend::blend_images(&p1, &p2, alpha, &chain, &chain);
+        let psnr = reference.psnr(&out);
+        let bc = BlendConfig::of(false, chain);
+        table.rows.push(row(cfg, &bc, fmt_psnr(psnr)));
+    }
+
+    // Rows 8–11: natural + intentional (same accuracy as intentional-only).
+    for &x in &cfg.natural_ds_rates {
+        let chain = Chain::of(Preproc::Ds(x));
+        let out = blend::blend_images(&p1, &p2, alpha, &chain, &chain);
+        let psnr = reference.psnr(&out);
+        let bc = BlendConfig::of(true, chain);
+        table.rows.push(row(cfg, &bc, fmt_psnr(psnr)));
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_shape_matches_paper() {
+        // small config to keep test time down; composed literals
+        let cfg = Config {
+            image_size: 48,
+            ds_rates: vec![8],
+            natural_ds_rates: vec![8],
+            flat_literals: false,
+        };
+        let t = generate(&cfg);
+        assert_eq!(t.rows.len(), 4);
+        let (conv, nat, ds8, nat_ds8) = (&t.rows[0], &t.rows[1], &t.rows[2], &t.rows[3]);
+        // natural costs nothing in accuracy
+        assert_eq!(nat.accuracy, "Ideal");
+        // natural reduces literals vs conventional (paper: 0.49×)
+        assert!(nat.literals < conv.literals);
+        // natural+DS8 beats DS8 alone on literals & area at equal accuracy
+        assert_eq!(ds8.accuracy, nat_ds8.accuracy);
+        assert!(nat_ds8.literals < ds8.literals);
+        assert!(nat_ds8.area_ge < ds8.area_ge, "{} !< {}", nat_ds8.area_ge, ds8.area_ge);
+        // power ordering: ds8 < conventional (paper 0.40×)
+        assert!(ds8.power_uw < conv.power_uw);
+    }
+}

@@ -1,0 +1,151 @@
+//! Hand-rolled micro-benchmark harness (no `criterion` in the offline
+//! vendor set).
+//!
+//! Mimics criterion's essentials: warmup, timed iterations, and a summary
+//! with mean/σ/percentiles. Bench targets are `harness = false` binaries
+//! that call [`Bencher::run`] per case and print one row per case.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from eliding a computed value
+/// (stable-rust-compatible black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+/// One benchmark result row.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary, // per-iteration time in seconds
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.summary.mean > 0.0 {
+            1.0 / self.summary.mean
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// criterion-like single line: name, mean time, p50/p99, throughput.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>12} mean  {:>12} p50  {:>12} p99  {:>12.1}/s  ({} iters)",
+            self.name,
+            fmt_time(self.summary.mean),
+            fmt_time(self.summary.p50),
+            fmt_time(self.summary.p99),
+            self.throughput_per_sec(),
+            self.iters,
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{seconds:.3} s")
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for CI (PPC_BENCH_QUICK=1 shrinks budgets).
+    pub fn from_env() -> Bencher {
+        let mut b = Bencher::default();
+        if std::env::var("PPC_BENCH_QUICK").map_or(false, |v| v == "1") {
+            b.warmup = Duration::from_millis(30);
+            b.measure = Duration::from_millis(150);
+        }
+        b
+    }
+
+    /// Run one benchmark case; prints its row and returns the result.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup and iteration-count calibration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let target = ((self.measure.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target);
+        for _ in 0..target {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: target,
+            summary: Summary::of(samples),
+        };
+        println!("{}", result.row());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 10_000,
+        };
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) or `std::env::args` (main).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |nxt| !nxt.starts_with("--"))
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixes_positional_options_flags() {
+        // NOTE: a bare `--name value` pair always binds as an option, so
+        // flags go last or use `=`; positionals go before options.
+        let a = parse("table1 extra --ds 16 --out=/tmp/x --verbose");
+        assert_eq!(a.positional, vec!["table1", "extra"]);
+        assert_eq!(a.get("ds"), Some("16"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 42 --rate 0.5");
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert!((a.f64_or("rate", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--fast");
+        assert!(a.flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+}

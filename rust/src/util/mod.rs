@@ -1,0 +1,22 @@
+//! Support utilities hand-rolled for the offline build environment.
+//!
+//! Only the crates vendored at `/opt/xla-example/vendor` are available
+//! (`xla`, `anyhow`, and transitive build deps) — so this module carries
+//! small, tested replacements for the usual ecosystem crates:
+//!
+//! | would-be crate | here |
+//! |---|---|
+//! | `rand` / `rand_chacha` | [`prng`] (xoshiro256** + SplitMix64) |
+//! | `serde`/`serde_json` | [`json`] (value model + writer + parser) |
+//! | `rayon` | [`pool`] (scoped chunked thread pool) |
+//! | `clap` | [`cli`] (flags / `--key value` / positional) |
+//! | `criterion` | [`bench`] (warmup + timed iters + percentiles) |
+//! | `proptest` | [`propcheck`] (randomized properties + greedy shrink) |
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;

@@ -1,0 +1,110 @@
+//! A small scoped thread pool (no `rayon` in the offline vendor set).
+//!
+//! Provides `scope_chunks` — the single parallel primitive the hot paths
+//! need: split an index range into contiguous chunks and run a closure per
+//! chunk on `std::thread::scope` threads, collecting per-chunk results.
+
+/// Number of worker threads to use: respects `PPC_THREADS` if set,
+/// otherwise `available_parallelism`, capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PPC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
+/// contiguous chunks; returns the per-chunk results in order.
+///
+/// `f` must be `Send + Sync` and is invoked once per chunk on its own
+/// scoped thread (the last chunk runs on the calling thread to save a
+/// spawn).
+pub fn scope_chunks<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Send + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        return vec![f(0, n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let bounds: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+        .filter(|(s, e)| s < e)
+        .collect();
+    let mut results: Vec<Option<R>> = Vec::new();
+    results.resize_with(bounds.len(), || None);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        let mut iter = results.iter_mut().zip(bounds.iter());
+        // keep one chunk for this thread
+        let last = iter.next_back();
+        for (slot, &(s, e)) in iter {
+            handles.push(scope.spawn(move || {
+                *slot = Some(fref(s, e));
+            }));
+        }
+        if let Some((slot, &(s, e))) = last {
+            *slot = Some(fref(s, e));
+        }
+        for h in handles {
+            h.join().expect("pool worker panicked");
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Parallel map over items by index: returns `Vec<R>` with `R = f(i)` for
+/// each `i in 0..n`, computed on up to `threads` threads.
+pub fn par_map_index<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Send + Sync,
+{
+    let per_chunk = scope_chunks(n, threads, |s, e| (s..e).map(&f).collect::<Vec<R>>());
+    per_chunk.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range() {
+        let parts = scope_chunks(103, 8, |s, e| (s, e));
+        let mut expect = 0;
+        for (s, e) in parts {
+            assert_eq!(s, expect);
+            assert!(e > s);
+            expect = e;
+        }
+        assert_eq!(expect, 103);
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let par = par_map_index(1000, 8, |i| i * i);
+        let ser: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        assert_eq!(par_map_index(0, 4, |i| i).len(), 0);
+        assert_eq!(par_map_index(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn sums_parallel() {
+        let partials = scope_chunks(1_000_000, 8, |s, e| (s..e).map(|i| i as u64).sum::<u64>());
+        let total: u64 = partials.into_iter().sum();
+        assert_eq!(total, 499_999_500_000);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal property-based testing driver (no `proptest` offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs a simple greedy
+//! shrink (if a `shrink` function is supplied via [`forall_shrink`]) and
+//! panics with the minimized counterexample, mirroring the workflow of a
+//! real property-testing crate.
+
+use super::prng::Rng;
+use std::fmt::Debug;
+
+/// Check `prop` on `cases` random values produced by `gen`.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!("property failed at case {case}: input = {input:?}");
+        }
+    }
+}
+
+/// Like [`forall`] but with a shrinker: `shrink(x)` yields candidate
+/// smaller inputs; the first failing candidate is recursed into (greedy,
+/// depth-bounded).
+pub fn forall_shrink<T, G, P, S>(seed: u64, cases: usize, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Greedy shrink, bounded to keep failure paths fast.
+            let mut current = input.clone();
+            'outer: for _depth in 0..64 {
+                for cand in shrink(&current) {
+                    if !prop(&cand) {
+                        current = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case}:\n  original = {input:?}\n  shrunk   = {current:?}"
+            );
+        }
+    }
+}
+
+/// Standard shrinker for unsigned integers: 0, halves, decrement.
+pub fn shrink_u64(x: &u64) -> Vec<u64> {
+    let x = *x;
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(0);
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 500, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 500, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn shrinker_minimizes() {
+        forall_shrink(
+            3,
+            100,
+            |r| r.below(10_000),
+            |&x| x < 17, // fails for x >= 17; shrink should walk toward 17
+            |x| shrink_u64(x),
+        );
+    }
+}

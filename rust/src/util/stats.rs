@@ -1,0 +1,123 @@
+//! Small statistics helpers shared by the bench harness, the error-analysis
+//! module and the coordinator's metrics.
+
+/// Summary statistics over a sample of f64s.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `samples` is consumed (sorted in place).
+    pub fn of(mut samples: Vec<f64>) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+            p50: percentile_sorted(&samples, 0.50),
+            p90: percentile_sorted(&samples, 0.90),
+            p99: percentile_sorted(&samples, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Peak signal-to-noise ratio between two same-length u8 signals,
+/// with the conventional 255 peak. Returns `f64::INFINITY` for identical
+/// inputs (the paper reports this as "Ideal").
+pub fn psnr_u8(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let mse: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0f64 * 255.0 / mse).log10()
+    }
+}
+
+/// Mean squared error between two f64 slices.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert!((percentile_sorted(&v, 0.5) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let a = vec![1u8, 2, 3];
+        assert!(psnr_u8(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // constant error of 1 everywhere: MSE = 1 -> PSNR = 20*log10(255)
+        let a = vec![10u8; 100];
+        let b = vec![11u8; 100];
+        let expect = 20.0 * 255.0f64.log10();
+        assert!((psnr_u8(&a, &b) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psnr_symmetric() {
+        let a = vec![0u8, 100, 200];
+        let b = vec![5u8, 90, 250];
+        assert!((psnr_u8(&a, &b) - psnr_u8(&b, &a)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-language integration tests: the AOT artifacts (python/JAX/Pallas
+//! → HLO text) must reproduce the rust bit-accurate application semantics
+//! exactly, and the coordinator must serve them end-to-end.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! message) when the artifact directory is missing so `cargo test` works
+//! on a fresh checkout.
+
+use ppc::apps::frnn::{io as frnn_io, net};
+use ppc::apps::image::Image;
+use ppc::apps::{blend, gdf};
+use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
+use ppc::ppc::preprocess::{Chain, Preproc};
+use ppc::runtime::Runtime;
+use ppc::util::prng::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_image(rng: &mut Rng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(256) as i32).collect()
+}
+
+#[test]
+fn gdf_artifact_matches_bit_accurate_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_app(&dir, "gdf").unwrap();
+    let meta = rt.meta("gdf/conv").unwrap().clone();
+    let (h, w) = (meta.inputs[0].dims[0], meta.inputs[0].dims[1]);
+    let mut rng = Rng::new(0x61);
+    let flat = random_image(&mut rng, h * w);
+    let img = Image {
+        width: w,
+        height: h,
+        pixels: flat.iter().map(|&v| v as u8).collect(),
+    };
+    for (config, chain) in [
+        ("conv", Chain::id()),
+        ("ds16", Chain::of(Preproc::Ds(16))),
+        ("ds32", Chain::of(Preproc::Ds(32))),
+    ] {
+        let out = rt.exec_i32(&format!("gdf/{config}"), &[&flat]).unwrap();
+        let expect = gdf::gdf_filter(&img, &chain);
+        let got: Vec<u8> = out[0].iter().map(|&v| v as u8).collect();
+        assert_eq!(got, expect.pixels, "gdf/{config} mismatch");
+    }
+}
+
+#[test]
+fn blend_artifact_matches_bit_accurate_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_app(&dir, "blend").unwrap();
+    let meta = rt.meta("blend/conv").unwrap().clone();
+    let (h, w) = (meta.inputs[0].dims[0], meta.inputs[0].dims[1]);
+    let mut rng = Rng::new(0x62);
+    let f1 = random_image(&mut rng, h * w);
+    let f2 = random_image(&mut rng, h * w);
+    let mk = |f: &[i32]| Image {
+        width: w,
+        height: h,
+        pixels: f.iter().map(|&v| v as u8).collect(),
+    };
+    let (i1, i2) = (mk(&f1), mk(&f2));
+    let alpha = 64i32;
+    for (config, chain) in [
+        ("conv", Chain::id()),
+        ("ds16", Chain::of(Preproc::Ds(16))),
+        ("ds32", Chain::of(Preproc::Ds(32))),
+    ] {
+        let out = rt
+            .exec_i32(&format!("blend/{config}"), &[&f1, &f2, &[alpha]])
+            .unwrap();
+        let expect = blend::blend_images(
+            &i1,
+            &i2,
+            blend::Alpha(alpha as u8),
+            &chain,
+            &chain,
+        );
+        let got: Vec<u8> = out[0].iter().map(|&v| v as u8).collect();
+        assert_eq!(got, expect.pixels, "blend/{config} mismatch");
+    }
+}
+
+#[test]
+fn frnn_artifact_matches_bit_accurate_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let weights_path = dir.join("frnn_weights.json");
+    if !weights_path.exists() {
+        eprintln!("skipping: frnn weights not trained");
+        return;
+    }
+    let rt = Runtime::load_app(&dir, "frnn").unwrap();
+    let meta = rt.meta("frnn/conv").unwrap().clone();
+    let (batch, row) = (meta.inputs[0].dims[0], meta.inputs[0].dims[1]);
+    assert_eq!(row, 960);
+    let mut rng = Rng::new(0x63);
+    let pixels: Vec<i32> = (0..batch * row).map(|_| rng.below(160) as i32).collect();
+
+    let configs: Vec<(&str, Chain, Chain)> = vec![
+        ("conv", Chain::id(), Chain::id()),
+        (
+            "th48ds16",
+            Chain::of(Preproc::Th { x: 48, y: 48 }).then(Preproc::Ds(16)),
+            Chain::of(Preproc::Ds(16)),
+        ),
+        (
+            "ds32",
+            Chain::of(Preproc::Ds(32)),
+            Chain::of(Preproc::Ds(32)),
+        ),
+    ];
+    for (config, ci, cw) in configs {
+        // each serving config bakes its own fine-tuned weights
+        let wp = if config == "conv" {
+            weights_path.clone()
+        } else {
+            dir.join(format!("frnn_weights_{config}.json"))
+        };
+        let float_net = frnn_io::load_weights(&wp).unwrap();
+        let q = net::quantize(&float_net);
+        let out = rt.exec_i32(&format!("frnn/{config}"), &[&pixels]).unwrap();
+        assert_eq!(out[0].len(), batch * 7);
+        for b in 0..batch {
+            let face = ppc::apps::frnn::dataset::Face {
+                pixels: pixels[b * row..(b + 1) * row].iter().map(|&v| v as u8).collect(),
+                id: 0,
+                pose: 0,
+                sunglasses: false,
+            };
+            let (_, outs) = net::forward_fx(&q, &face, &ci, &cw);
+            let got: Vec<u8> = out[0][b * 7..(b + 1) * 7].iter().map(|&v| v as u8).collect();
+            assert_eq!(got, outs.to_vec(), "frnn/{config} row {b} mismatch");
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_all_apps_from_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::with_artifacts(&dir, CoordinatorConfig::default()).unwrap();
+    let mut rng = Rng::new(0x64);
+    let img_len = {
+        let rt_meta = Runtime::load_app(&dir, "gdf").unwrap();
+        let m = rt_meta.meta("gdf/conv").unwrap().clone();
+        m.inputs[0].dims[0] * m.inputs[0].dims[1]
+    };
+    // mixed workload across qualities
+    let mut tickets = Vec::new();
+    for i in 0..9 {
+        let q = [Quality::Precise, Quality::Balanced, Quality::Economy][i % 3];
+        let job = match i % 3 {
+            0 => Job::Denoise { image: random_image(&mut rng, img_len) },
+            1 => Job::Blend {
+                p1: random_image(&mut rng, img_len),
+                p2: random_image(&mut rng, img_len),
+                alpha: 32,
+            },
+            _ => Job::Classify {
+                pixels: (0..960).map(|_| rng.below(160) as i32).collect(),
+            },
+        };
+        tickets.push((i, coord.submit_blocking(job, q).unwrap()));
+    }
+    for (i, t) in tickets {
+        let r = t.wait().unwrap_or_else(|e| panic!("request {i}: {e:#}"));
+        assert!(!r.outputs[0].is_empty());
+    }
+    assert_eq!(coord.metrics().completed(), 9);
+    assert_eq!(coord.metrics().errors(), 0);
+}
+
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_app(&dir, "gdf").unwrap();
+    assert!(rt.exec_i32("gdf/conv", &[&[1, 2, 3]]).is_err());
+    assert!(rt.exec_i32("gdf/nope", &[&[]]).is_err());
+}
+
+#[test]
+fn pgm_figures_roundtrip() {
+    // figure writers produce readable PGMs (no artifacts needed)
+    let dir = std::env::temp_dir().join("ppc_fig_test");
+    let rows = ppc::tables::figures::fig6(&dir).unwrap();
+    assert_eq!(rows.len(), 3);
+    let img = Image::read_pgm(&dir.join("fig6_out_ds16.pgm")).unwrap();
+    assert_eq!(img.width, 256);
+    let _ = Path::new("x");
+}
