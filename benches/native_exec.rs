@@ -1,0 +1,129 @@
+//! Native-execution benchmarks — the tentpole's acceptance numbers:
+//!
+//! 1. exhaustive verification of a composed 8×8 PPC multiplier netlist,
+//!    scalar `Netlist::eval` walk vs the 64-way bit-parallel `eval64`
+//!    path (target: ≥ 20× speedup), and
+//! 2. the coordinator serving a batch through `NativeExecutor` with no
+//!    XLA/Python anywhere on the path.
+//!
+//! Run: `cargo bench --bench native_exec` (PPC_BENCH_QUICK=1 shrinks
+//! budgets).
+
+use ppc::apps::frnn::{dataset, net};
+use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
+use ppc::logic::map::Objective;
+use ppc::ppc::error;
+use ppc::ppc::preprocess::{Chain, Preproc, ValueSet};
+use ppc::ppc::units::MultUnit8;
+use ppc::runtime::NativeExecutor;
+use ppc::util::bench::{black_box, Bencher};
+use ppc::util::prng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let b = Bencher::from_env();
+    let chain = Chain::of(Preproc::Ds(16));
+    let set = ValueSet::full(8).map_chain(&chain);
+    println!("synthesizing composed 8x8 PPC multiplier (DS16)…");
+    let mult = MultUnit8::synthesize("bench_mult8", &set, &set, Objective::Area);
+    println!("  {} gates\n", mult.num_gates());
+
+    // -- 1. exhaustive verification: all 2^16 preprocessed operand pairs
+    let amap: Vec<u32> = (0..256u32).map(|v| chain.apply(v)).collect();
+
+    let scalar = b.run("mult8 exhaustive verify: scalar eval", || {
+        let mut bad = 0u64;
+        for a in 0..256usize {
+            for b in 0..256usize {
+                let (pa, pb) = (amap[a], amap[b]);
+                if mult.eval_scalar(pa, pb) != (pa as u64) * (pb as u64) {
+                    bad += 1;
+                }
+            }
+        }
+        assert_eq!(black_box(bad), 0);
+    });
+
+    let parallel = b.run("mult8 exhaustive verify: bit-parallel eval64", || {
+        let mut bad = 0u64;
+        let mut bsplat = [0u32; 64];
+        let mut outs = [0u64; 64];
+        for a in 0..256usize {
+            let pa = amap[a];
+            for b0 in (0..256usize).step_by(64) {
+                for j in 0..64 {
+                    bsplat[j] = amap[b0 + j];
+                }
+                let asplat = [pa; 64];
+                mult.eval_batch(&asplat, &bsplat, &mut outs);
+                for j in 0..64 {
+                    if outs[j] != (pa as u64) * (bsplat[j] as u64) {
+                        bad += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(black_box(bad), 0);
+    });
+
+    let speedup = scalar.summary.mean / parallel.summary.mean.max(1e-12);
+    println!(
+        "\nbit-parallel speedup on exhaustive 8x8 verification: {speedup:.1}x {}",
+        if speedup >= 20.0 { "(meets the ≥20x target)" } else { "(below the 20x target!)" }
+    );
+
+    // the same sweep through the error-analysis driver (PE/ME/MAE)
+    b.run("mult8 exhaustive PE/ME/MAE (bit-parallel)", || {
+        black_box(error::exhaustive_unit(8, &mult, &chain, &chain, |a, b| {
+            a as i64 * b as i64
+        }));
+    });
+
+    // -- 2. coordinator batch through the native backend
+    println!("\nbuilding native registry (gdf/ds32 + frnn/ds32)…");
+    let ds = dataset::generate(2, 0xBE);
+    let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
+    let q = net::quantize(&r.net);
+    let exec = NativeExecutor::new()
+        .with_gdf("ds32")
+        .unwrap()
+        .with_frnn("ds32", q)
+        .unwrap();
+    let cfg = CoordinatorConfig {
+        queue_capacity: 256,
+        batch_size: 8,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(1),
+    };
+    let coord = Coordinator::with_native(cfg, exec).unwrap();
+
+    let mut rng = Rng::new(7);
+    let img: Vec<i32> = (0..64 * 64).map(|_| rng.below(256) as i32).collect();
+    b.run("e2e native: denoise 64x64 (gdf/ds32)", || {
+        let t = coord
+            .submit_blocking(Job::Denoise { image: img.clone() }, Quality::Economy)
+            .unwrap();
+        black_box(t.wait().unwrap());
+    });
+
+    let faces: Vec<Vec<i32>> = ds
+        .test
+        .iter()
+        .take(16)
+        .map(|f| f.pixels.iter().map(|&p| p as i32).collect())
+        .collect();
+    b.run("e2e native: 16 classifies (frnn/ds32, batch=8)", || {
+        let tickets: Vec<_> = faces
+            .iter()
+            .map(|f| {
+                coord
+                    .submit_blocking(Job::Classify { pixels: f.clone() }, Quality::Economy)
+                    .unwrap()
+            })
+            .collect();
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    println!("\nnative serving metrics:\n{}", coord.metrics().report());
+}

@@ -10,6 +10,7 @@ use super::image::Image;
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
+use crate::ppc::units::{AdderUnit, MultUnit8};
 
 /// Quantized blending ratio: `alpha ∈ [0,127]`, the complementary
 /// coefficient is `255 − alpha ∈ [128,255]`.
@@ -106,6 +107,80 @@ pub fn blend_signal_sets(cfg: &BlendConfig) -> BlendSignals {
     let prod1 = img.product(&c1).shr(8).truncate(8);
     let prod2 = img.product(&c2).shr(8).truncate(8);
     BlendSignals { mult1: (img.clone(), c1), mult2: (img, c2), adder: (prod1, prod2) }
+}
+
+/// Netlist-backed IB datapath: the two composed 8×8 PPC multipliers and
+/// the output adder of Fig. 7 as synthesized units, executed
+/// bit-parallel (64 pixel pairs per pass). Bit-exact with
+/// [`blend_pixel`] under the config's preprocessing.
+pub struct BlendHardware {
+    pub cfg: BlendConfig,
+    m1: MultUnit8,
+    m2: MultUnit8,
+    add: AdderUnit,
+}
+
+impl BlendHardware {
+    pub fn synthesize(cfg: &BlendConfig, objective: Objective) -> BlendHardware {
+        let sig = blend_signal_sets(cfg);
+        let m1 = MultUnit8::synthesize("ib_mult1", &sig.mult1.0, &sig.mult1.1, objective);
+        let m2 = MultUnit8::synthesize("ib_mult2", &sig.mult2.0, &sig.mult2.1, objective);
+        let add = AdderUnit::synthesize("ib_adder", 8, 8, &sig.adder.0, &sig.adder.1, objective);
+        BlendHardware { cfg: cfg.clone(), m1, m2, add }
+    }
+
+    /// Total gate count (both multipliers + adder).
+    pub fn num_gates(&self) -> usize {
+        self.m1.num_gates() + self.m2.num_gates() + self.add.num_gates()
+    }
+
+    /// Blend up to 64 pixel pairs through the netlists. With a `natural`
+    /// config the coefficient restriction means `alpha.0` must be in
+    /// `[0, 127]` (the Table-2 natural-sparsity contract).
+    pub fn blend_batch(&self, p1: &[u8], p2: &[u8], alpha: Alpha, out: &mut [u8]) {
+        let n = p1.len();
+        debug_assert!(n <= 64 && p2.len() == n && out.len() >= n);
+        debug_assert!(!self.cfg.natural || alpha.0 <= 127, "natural config needs alpha ≤ 127");
+        let pre = &self.cfg.pre;
+        let c1 = vec![pre.apply(alpha.coeff1()); n];
+        let c2 = vec![pre.apply(alpha.coeff2()); n];
+        let i1: Vec<u32> = p1.iter().map(|&p| pre.apply(p as u32)).collect();
+        let i2: Vec<u32> = p2.iter().map(|&p| pre.apply(p as u32)).collect();
+        let mut prod = [0u64; 64];
+        self.m1.eval_batch(&i1, &c1, &mut prod);
+        let t1: Vec<u32> = prod[..n].iter().map(|&v| (v >> 8) as u32).collect();
+        self.m2.eval_batch(&i2, &c2, &mut prod);
+        let t2: Vec<u32> = prod[..n].iter().map(|&v| (v >> 8) as u32).collect();
+        let mut sum = [0u64; 64];
+        self.add.eval_batch(&t1, &t2, &mut sum);
+        for (o, &s) in out[..n].iter_mut().zip(&sum[..n]) {
+            *o = s.min(255) as u8;
+        }
+    }
+
+    /// Blend two flat pixel buffers of equal length (chunks the work
+    /// into 64-pixel netlist passes).
+    pub fn blend_flat(&self, p1: &[u8], p2: &[u8], alpha: Alpha) -> Vec<u8> {
+        assert_eq!(p1.len(), p2.len());
+        let mut pixels = vec![0u8; p1.len()];
+        let mut i = 0;
+        while i < pixels.len() {
+            let end = (i + 64).min(pixels.len());
+            let mut buf = [0u8; 64];
+            self.blend_batch(&p1[i..end], &p2[i..end], alpha, &mut buf);
+            pixels[i..end].copy_from_slice(&buf[..end - i]);
+            i = end;
+        }
+        pixels
+    }
+
+    /// Blend two whole images through the synthesized datapath.
+    pub fn blend_images(&self, p1: &Image, p2: &Image, alpha: Alpha) -> Image {
+        assert_eq!(p1.width, p2.width);
+        assert_eq!(p1.height, p2.height);
+        let pixels = self.blend_flat(&p1.pixels, &p2.pixels, alpha);
+        Image { width: p1.width, height: p1.height, pixels }
+    }
 }
 
 /// Hardware report of the IB datapath: two composed 8×8 multipliers plus
@@ -205,6 +280,19 @@ mod tests {
             let p = base.psnr(&out);
             assert!(p < prev, "x={x}: {p} !< {prev}");
             prev = p;
+        }
+    }
+
+    #[test]
+    fn netlist_hardware_matches_bit_accurate_blend() {
+        let cfg = BlendConfig::of(true, Chain::of(Preproc::Ds(16)));
+        let hw = BlendHardware::synthesize(&cfg, Objective::Area);
+        assert!(hw.num_gates() > 0);
+        let p1 = synthetic_photo(32, 32, 7);
+        let p2 = synthetic_photo(32, 32, 8);
+        for alpha in [Alpha(0), Alpha(64), Alpha(127)] {
+            let sw = blend_images(&p1, &p2, alpha, &cfg.pre, &cfg.pre);
+            assert_eq!(hw.blend_images(&p1, &p2, alpha), sw, "alpha={}", alpha.0);
         }
     }
 

@@ -7,10 +7,12 @@
 //! input and DS on the weight input) while keeping the adder precise; we
 //! do the same.
 
-use crate::apps::frnn::dataset::MAX_PIXEL;
+use crate::apps::frnn::dataset::{Face, MAX_PIXEL, IMG_PIXELS, NUM_OUTPUTS};
+use crate::apps::frnn::net::{sigmoid_fx, QuantFrnn, HIDDEN};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
+use crate::ppc::units::MultUnit8;
 
 /// A Table-3 row configuration for the MAC hardware.
 #[derive(Clone, Debug)]
@@ -80,6 +82,111 @@ pub fn mac_flat_literals(cfg: &MacConfig) -> u64 {
     flow::flat_mult_literals(&image_value_set(cfg), &weight_value_set(cfg))
 }
 
+// ---------------------------------------------------------------------
+// Netlist-backed forward path
+// ---------------------------------------------------------------------
+
+/// Netlist-backed FRNN forward path: each layer's MAC multiplier is a
+/// synthesized composed 8×8 PPC [`MultUnit8`] (layer 1 sees preprocessed
+/// pixels, layer 2 the full-range u8 activations; both see preprocessed
+/// weight bytes), executed bit-parallel 64 MACs per pass. The wide
+/// accumulator stays precise — software `i64`, as the paper keeps the
+/// accumulation adder conventional. Bit-exact with
+/// [`super::net::forward_fx`].
+pub struct FrnnHardware {
+    pub q: QuantFrnn,
+    pub pre_image: Chain,
+    pub pre_weight: Chain,
+    mult1: MultUnit8,
+    mult2: MultUnit8,
+    /// Preprocessed two's-complement weight byte patterns per layer
+    /// (weights are static, so the preprocessing is baked once).
+    w1p: Vec<u32>,
+    w2p: Vec<u32>,
+}
+
+impl FrnnHardware {
+    /// Synthesize both layer multipliers for the full serving input
+    /// range (no natural-sparsity assumption — any u8 pixel is in care).
+    pub fn synthesize(
+        q: QuantFrnn,
+        pre_image: &Chain,
+        pre_weight: &Chain,
+        objective: Objective,
+    ) -> FrnnHardware {
+        let img = ValueSet::full(8).map_chain(pre_image);
+        let act = ValueSet::full(8);
+        let wgt = ValueSet::full(8).map_chain(pre_weight);
+        let mult1 = MultUnit8::synthesize("frnn_mac1", &img, &wgt, objective);
+        let mult2 = MultUnit8::synthesize("frnn_mac2", &act, &wgt, objective);
+        let pw = |w: &i8| pre_weight.apply((*w as u8) as u32) & 0xff;
+        let w1p = q.w1.iter().map(pw).collect();
+        let w2p = q.w2.iter().map(pw).collect();
+        FrnnHardware {
+            q,
+            pre_image: pre_image.clone(),
+            pre_weight: pre_weight.clone(),
+            mult1,
+            mult2,
+            w1p,
+            w2p,
+        }
+    }
+
+    /// Total gate count of both multipliers.
+    pub fn num_gates(&self) -> usize {
+        self.mult1.num_gates() + self.mult2.num_gates()
+    }
+
+    /// `Σ x_i · signed(w_i)` with the product netlists: the unit
+    /// multiplies unsigned byte patterns; a weight byte ≥ 128 represents
+    /// `w − 256`, so the accumulator subtracts `x·256` (free wiring in
+    /// hardware, exactly the two's-complement convention of
+    /// [`super::net::mac`]).
+    fn dot(&self, mult: &MultUnit8, xs: &[u32], ws: &[u32]) -> i64 {
+        debug_assert_eq!(xs.len(), ws.len());
+        let mut acc = 0i64;
+        let mut out = [0u64; 64];
+        let mut i = 0;
+        while i < xs.len() {
+            let end = (i + 64).min(xs.len());
+            mult.eval_batch(&xs[i..end], &ws[i..end], &mut out);
+            for (j, &u) in out[..end - i].iter().enumerate() {
+                let (x, w) = (xs[i + j] as i64, ws[i + j]);
+                acc += if w >= 128 { u as i64 - (x << 8) } else { u as i64 };
+            }
+            i = end;
+        }
+        acc
+    }
+
+    /// Bit-accurate forward pass through the synthesized multipliers;
+    /// same return convention as [`super::net::forward_fx`].
+    pub fn forward(&self, face: &Face) -> ([bool; NUM_OUTPUTS], [u8; NUM_OUTPUTS]) {
+        let px: Vec<u32> = face
+            .pixels
+            .iter()
+            .map(|&p| self.pre_image.apply(p as u32))
+            .collect();
+        let mut h = [0u8; HIDDEN];
+        for (j, hj) in h.iter_mut().enumerate() {
+            let row = &self.w1p[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+            let acc = self.q.b1[j] as i64 + self.dot(&self.mult1, &px, row);
+            *hj = sigmoid_fx(&self.q.sigmoid_lut, acc, self.q.d1);
+        }
+        let hx: Vec<u32> = h.iter().map(|&v| v as u32).collect();
+        let mut outs = [0u8; NUM_OUTPUTS];
+        let mut bits = [false; NUM_OUTPUTS];
+        for k in 0..NUM_OUTPUTS {
+            let row = &self.w2p[k * HIDDEN..(k + 1) * HIDDEN];
+            let acc = self.q.b2[k] as i64 + self.dot(&self.mult2, &hx, row);
+            outs[k] = sigmoid_fx(&self.q.sigmoid_lut, acc, self.q.d2);
+            bits[k] = outs[k] >= 128;
+        }
+        (bits, outs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +216,22 @@ mod tests {
         let ppc = aggregate(&md, &ad);
         assert!(ppc.area_ge < base.area_ge, "{} !< {}", ppc.area_ge, base.area_ge);
         assert!(ppc.power_uw < base.power_uw);
+    }
+
+    #[test]
+    fn netlist_forward_matches_fixed_point() {
+        use crate::apps::frnn::{dataset, net};
+        let ds = dataset::generate(2, 31);
+        let r = net::train(&ds, &net::TrainConfig { max_epochs: 8, ..Default::default() });
+        let q = net::quantize(&r.net);
+        let ci = Chain::of(Preproc::Ds(32));
+        let cw = Chain::of(Preproc::Ds(32));
+        let hw = FrnnHardware::synthesize(q.clone(), &ci, &cw, Objective::Area);
+        assert!(hw.num_gates() > 0);
+        for face in ds.test.iter().take(2) {
+            let want = net::forward_fx(&q, face, &ci, &cw);
+            assert_eq!(hw.forward(face), want);
+        }
     }
 
     #[test]

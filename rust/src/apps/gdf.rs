@@ -22,6 +22,7 @@ use super::image::Image;
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
+use crate::ppc::units::AdderUnit;
 
 /// Bit-accurate GDF datapath for one window (pixels in row-major A1..A9
 /// order). `pre` is applied to each primary input first (the paper's
@@ -102,6 +103,96 @@ pub fn gdf_signal_sets(input: &ValueSet) -> GdfSignals {
             (adder7.clone(), a_sh2.clone(), 12, 10),
         ],
         output: adder8.shr(4),
+    }
+}
+
+/// Netlist-backed GDF datapath: the eight Fig. 5 adders as synthesized
+/// PPC [`AdderUnit`]s, executed bit-parallel (64 windows per pass).
+/// Bit-exact with [`gdf_filter`] under the same preprocessing — the
+/// execution engine behind the native serving backend.
+pub struct GdfHardware {
+    pub pre: Chain,
+    adders: Vec<AdderUnit>,
+}
+
+impl GdfHardware {
+    /// Synthesize the adder tree for raw pixels drawn from `input`
+    /// (pre-preprocessing; use `ValueSet::full(8)` to serve any image),
+    /// with the intentional-sparsity chain `pre` applied at the inputs.
+    pub fn synthesize(input: &ValueSet, pre: &Chain, objective: Objective) -> GdfHardware {
+        let sig = gdf_signal_sets(&input.map_chain(pre));
+        let adders = sig
+            .adders
+            .iter()
+            .enumerate()
+            .map(|(i, (l, r, wl, wr))| {
+                AdderUnit::synthesize(&format!("gdf_adder{}", i + 1), *wl, *wr, l, r, objective)
+            })
+            .collect();
+        GdfHardware { pre: pre.clone(), adders }
+    }
+
+    /// Total gate count across the eight adders.
+    pub fn num_gates(&self) -> usize {
+        self.adders.iter().map(|a| a.num_gates()).sum()
+    }
+
+    /// Run one batch (≤ 64) of preprocessed windows through the tree;
+    /// `p[k]` holds signal `A{k+1}` of every window.
+    fn window_tree(&self, p: &[Vec<u32>; 9]) -> Vec<u32> {
+        let n = p[0].len();
+        let add = |unit: &AdderUnit, a: &[u32], b: &[u32]| -> Vec<u32> {
+            let mut out = [0u64; 64];
+            unit.eval_batch(a, b, &mut out);
+            out[..n].iter().map(|&v| v as u32).collect()
+        };
+        let shl = |v: &[u32], k: u32| -> Vec<u32> { v.iter().map(|&x| x << k).collect() };
+        let a1 = add(&self.adders[0], &p[0], &p[2]);
+        let a2 = add(&self.adders[1], &p[6], &p[8]);
+        let a3 = add(&self.adders[2], &shl(&p[1], 1), &shl(&p[3], 1));
+        let a4 = add(&self.adders[3], &shl(&p[5], 1), &shl(&p[7], 1));
+        let a5 = add(&self.adders[4], &a1, &a2);
+        let a6 = add(&self.adders[5], &a3, &a4);
+        let a7 = add(&self.adders[6], &a5, &a6);
+        let a8 = add(&self.adders[7], &a7, &shl(&p[4], 2));
+        a8.iter().map(|&v| v >> 4).collect()
+    }
+
+    /// Filter a whole image through the synthesized netlists
+    /// (border-replicated, like [`gdf_filter`]).
+    pub fn filter(&self, img: &Image) -> Image {
+        let mut out = Image::new(img.width, img.height);
+        let coords: Vec<(usize, usize)> = (0..img.height)
+            .flat_map(|y| (0..img.width).map(move |x| (x, y)))
+            .collect();
+        let mut win: [Vec<u32>; 9] = Default::default();
+        for chunk in coords.chunks(64) {
+            for w in win.iter_mut() {
+                w.clear();
+            }
+            for &(x, y) in chunk {
+                let (xi, yi) = (x as isize, y as isize);
+                let px = [
+                    img.get_clamped(xi - 1, yi - 1),
+                    img.get_clamped(xi, yi - 1),
+                    img.get_clamped(xi + 1, yi - 1),
+                    img.get_clamped(xi - 1, yi),
+                    img.get_clamped(xi, yi),
+                    img.get_clamped(xi + 1, yi),
+                    img.get_clamped(xi - 1, yi + 1),
+                    img.get_clamped(xi, yi + 1),
+                    img.get_clamped(xi + 1, yi + 1),
+                ];
+                for (k, w) in win.iter_mut().enumerate() {
+                    w.push(self.pre.apply(px[k] as u32));
+                }
+            }
+            let vals = self.window_tree(&win);
+            for (j, &(x, y)) in chunk.iter().enumerate() {
+                out.set(x, y, vals[j].min(255) as u8);
+            }
+        }
+        out
     }
 }
 
@@ -201,6 +292,17 @@ mod tests {
         // We check the DS2 sparsity propagated to Adder7's right input:
         let (_, r7, _, _) = &sig.adders[6];
         assert!(r7.iter().all(|v| v % 2 == 0), "adder7 right input keeps DS2 grid");
+    }
+
+    #[test]
+    fn netlist_hardware_matches_bit_accurate_filter() {
+        // the synthesized adder tree, executed bit-parallel, must agree
+        // with the arithmetic fixed-point simulation pixel for pixel
+        let img = synthetic_photo(24, 24, 5);
+        let chain = Chain::of(Preproc::Ds(16));
+        let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, Objective::Area);
+        assert!(hw.num_gates() > 0);
+        assert_eq!(hw.filter(&img), gdf_filter(&img, &chain));
     }
 
     #[test]

@@ -1,24 +1,27 @@
 //! L3 coordinator: the embedded-inference runtime that serves the three
-//! PPC applications from AOT-compiled artifacts.
+//! PPC applications — from the native netlist backend by default, or
+//! from AOT-compiled PJRT artifacts behind the `pjrt` feature.
 //!
 //! Architecture (the paper's contribution lives at the block level, so
 //! L3 is the serving harness a deployed PPC system would ship with):
 //!
 //! ```text
-//!   clients ──submit()──► bounded queue ──► engine thread (owns PJRT)
+//!   clients ──submit()──► bounded queue ──► engine thread (owns the executor)
 //!                              │                   │
-//!                         backpressure      router: (job, quality) → artifact
+//!                         backpressure      router: (job, quality) → model key
 //!                                                   │
 //!                                            dynamic batcher (classify)
 //!                                                   │
-//!                                            PJRT execute → reply channels
+//!                                    Executor::exec → reply channels
+//!                                    (NativeExecutor | PJRT Runtime)
 //! ```
 //!
-//! The engine thread owns the [`crate::runtime::Runtime`] because the
-//! `xla` crate's client is not `Send`; requests and replies cross
-//! threads over `std::sync::mpsc` channels. Quality routing maps each
-//! request to a PPC configuration — the serving-time analogue of
-//! choosing how much sparsity a deployment tolerates.
+//! The engine thread owns the executor exclusively (the `xla` crate's
+//! client is not `Send`; the native executor simply doesn't need
+//! sharing); requests and replies cross threads over `std::sync::mpsc`
+//! channels. Quality routing maps each request to a PPC configuration —
+//! the serving-time analogue of choosing how much sparsity a deployment
+//! tolerates.
 
 pub mod batcher;
 pub mod engine;

@@ -141,10 +141,23 @@ impl Coordinator {
         Ok(Coordinator { tx, metrics, down, dispatcher: Some(dispatcher) })
     }
 
-    /// Start against the artifact directory (production path).
+    /// Start against the artifact directory (PJRT path; needs the
+    /// `pjrt` cargo feature — without it the engine factory fails with
+    /// a clear error pointing at [`Coordinator::with_native`]).
     pub fn with_artifacts(dir: &std::path::Path, config: CoordinatorConfig) -> Result<Coordinator> {
         let dir = dir.to_path_buf();
         Coordinator::start(config, move || crate::runtime::Runtime::load(&dir))
+    }
+
+    /// Start over the native netlist backend: the synthesized PPC
+    /// blocks are the execution engine, no XLA/Python anywhere on the
+    /// path. Build the executor (and pay its synthesis time) before the
+    /// coordinator threads spin up.
+    pub fn with_native(
+        config: CoordinatorConfig,
+        executor: crate::runtime::NativeExecutor,
+    ) -> Result<Coordinator> {
+        Coordinator::start(config, move || Ok(executor))
     }
 
     /// Submit a job; `Err(Busy)` when the bounded queue is full.

@@ -10,17 +10,30 @@
 //! - [`logic`] — the full synthesis substrate (truth tables, ISOP +
 //!   Espresso-style two-level minimization, algebraic factoring, AIG,
 //!   technology mapping onto a 90 nm-flavored cell library, gate-level
-//!   netlists with area/delay/power reports),
+//!   netlists with area/delay/power reports and a 64-way bit-parallel
+//!   evaluator),
 //! - `ppc` — the paper's contribution (DS/TH preprocessings, PPC block
 //!   generators, closed-form + exhaustive error analysis, the Fig. 3
-//!   design flow),
+//!   design flow, and executable synthesized units),
 //! - `apps` — the three applications (Gaussian denoising filter, image
-//!   blending, face-recognition NN) in bit-accurate fixed point,
-//! - [`runtime`] + [`coordinator`] — the embedded-inference runtime that
-//!   loads the AOT-compiled JAX/Pallas artifacts and serves batched
-//!   requests (python never runs on the request path),
+//!   blending, face-recognition NN) in bit-accurate fixed point, each
+//!   with a netlist-backed hardware simulator that is bit-exact with
+//!   the arithmetic path,
+//! - [`runtime`] + [`coordinator`] — the serving stack behind the
+//!   `Executor` trait, with two backends: the default **native**
+//!   backend executes the synthesized PPC netlists themselves
+//!   (bit-parallel, fully offline — no Python or XLA anywhere), and
+//!   the `pjrt` cargo feature adds the AOT-compiled JAX/Pallas
+//!   artifact path,
 //! - [`util`] — offline-friendly stand-ins for rand/serde/rayon/clap/
-//!   criterion/proptest.
+//!   criterion/proptest (plus the in-tree `vendor/anyhow`).
+//!
+//! ## Build matrix
+//!
+//! | build | backends | network needed |
+//! |---|---|---|
+//! | `cargo build` (default) | native netlist executor | none |
+//! | `cargo build --features pjrt` | native + PJRT artifacts | none (needs the vendored `xla` crate on disk) |
 
 pub mod apps;
 pub mod coordinator;

@@ -191,6 +191,31 @@ impl Aig {
             .collect()
     }
 
+    /// Bit-parallel evaluation: 64 patterns per pass. `in_lanes[i]`
+    /// carries input `i` of all 64 patterns (one pattern per bit);
+    /// returns one lane per output. See
+    /// [`crate::logic::netlist::pack_lanes`] for the packing helpers.
+    pub fn eval64(&self, in_lanes: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(in_lanes.len(), self.num_inputs());
+        let lane = |val: &[u64], e: Edge| -> u64 {
+            let v = val[node_of(e)];
+            if is_compl(e) {
+                !v
+            } else {
+                v
+            }
+        };
+        let mut val = vec![0u64; self.nodes.len()];
+        for i in 0..self.nodes.len() {
+            val[i] = match self.nodes[i] {
+                Node::Const => 0,
+                Node::Input(k) => in_lanes[k],
+                Node::And(a, b) => lane(&val, a) & lane(&val, b),
+            };
+        }
+        self.outputs.iter().map(|&e| lane(&val, e)).collect()
+    }
+
     /// Nodes reachable from the outputs (dead-node count excluded from
     /// costs).
     pub fn live_mask(&self) -> Vec<bool> {
@@ -269,6 +294,21 @@ mod tests {
         g.outputs.push(out);
         for m in 0..32u64 {
             assert_eq!(g.eval(m)[0], f.get(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn eval64_matches_scalar() {
+        let f = Tt::from_fn(5, |m| (m * 13 + 5) % 7 < 3);
+        let cov: Cover = minimize(&f, &f, Options::default());
+        let e = factor(&cov);
+        let mut g = Aig::new(5);
+        let out = g.add_expr(&e);
+        g.outputs.push(out);
+        let lanes = crate::logic::netlist::consecutive_lanes(0, 5);
+        let outs = g.eval64(&lanes);
+        for m in 0..32u64 {
+            assert_eq!((outs[0] >> m) & 1 == 1, g.eval(m)[0], "m={m}");
         }
     }
 

@@ -29,7 +29,10 @@ Paper artifacts:
 Pipeline:
   gen-faces [--out FILE] [--samples N]   synthetic face dataset (JSON)
   train-frnn [--faces F] [--out F]       rust reference trainer
-  serve [--artifacts DIR] [--requests N] run the coordinator demo
+  serve [--backend native|pjrt] [--requests N] [--image-size N]
+        [--artifacts DIR]                run the coordinator demo:
+                                         native = synthesized netlists (offline),
+                                         pjrt   = AOT artifacts (needs --features pjrt)
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
 
@@ -260,22 +263,60 @@ fn print_matrix(rates: &[u32], m: &[Vec<f64>]) {
     }
 }
 
-/// Run the coordinator against real artifacts with a mixed workload.
+/// Run the coordinator with a mixed workload over the chosen backend.
 fn serve_demo(args: &Args) -> Result<()> {
     use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
-    let dir = artifacts_dir(args);
-    let n = args.usize_or("requests", 64);
-    let coord = Coordinator::with_artifacts(&dir, CoordinatorConfig::default())
-        .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` first"))?;
+    let backend = args.get_or("backend", "native");
+    let native = match backend {
+        "native" => true,
+        "pjrt" => false,
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    };
+    let n = args.usize_or("requests", if native { 24 } else { 64 });
+    let side = args.usize_or("image-size", if native { 64 } else { 256 });
+    let img_len = side * side;
+
+    let coord = if native {
+        // Build the offline registry: synthesized netlists for the two
+        // sparse image qualities plus the FRNN tiers, with a
+        // quickly-trained quantized net standing in for the deployed
+        // weights.
+        use ppc::apps::frnn::{dataset, net};
+        println!("training a quick FRNN for the native registry…");
+        let ds = dataset::generate(2, 0x5E12);
+        let r = net::train(&ds, &net::TrainConfig { max_epochs: 30, ..Default::default() });
+        let q = net::quantize(&r.net);
+        println!("synthesizing PPC hardware (gdf/blend/frnn × ds16/ds32 tiers)…");
+        let exec = ppc::runtime::NativeExecutor::new()
+            .with_gdf("ds16")?
+            .with_gdf("ds32")?
+            .with_blend("ds16")?
+            .with_blend("ds32")?
+            .with_frnn("th48ds16", q.clone())?
+            .with_frnn("ds32", q)?;
+        println!("native registry: {:?}", exec.registered_keys());
+        Coordinator::with_native(CoordinatorConfig::default(), exec)
+            .map_err(|e| anyhow!("{e:#}"))?
+    } else {
+        let dir = artifacts_dir(args);
+        Coordinator::with_artifacts(&dir, CoordinatorConfig::default())
+            .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` first"))?
+    };
+
     let mut rng = ppc::util::prng::Rng::new(0x5E12);
-    let img_len = 256 * 256;
     let mut tickets = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n {
-        let quality = match i % 3 {
-            0 => Quality::Precise,
-            1 => Quality::Balanced,
-            _ => Quality::Economy,
+        // the native demo registers the Balanced/Economy tiers only
+        // (precise full-range blocks take the longest to synthesize)
+        let quality = if native {
+            if i % 2 == 0 { Quality::Balanced } else { Quality::Economy }
+        } else {
+            match i % 3 {
+                0 => Quality::Precise,
+                1 => Quality::Balanced,
+                _ => Quality::Economy,
+            }
         };
         let job = match i % 3 {
             0 => Job::Denoise {

@@ -18,6 +18,7 @@
 //! block(preproc(a), preproc(b))`, averaged over uniform raw inputs.
 
 use super::preprocess::Chain;
+use super::units::BatchOp;
 use crate::util::pool;
 
 /// PE / ME / MAE triple.
@@ -56,6 +57,66 @@ fn exhaustive(wl: u32, pa: &Chain, pb: &Chain, f: impl Fn(u32, u32) -> i64 + Syn
                     sum += e;
                     abs += e.abs();
                 }
+            }
+        }
+        (errs, sum, abs)
+    });
+    let (errs, sum, abs) = partials
+        .into_iter()
+        .fold((0u64, 0i64, 0i64), |(e1, s1, a1), (e2, s2, a2)| (e1 + e2, s1 + s2, a1 + a2));
+    let total = (n as f64) * (n as f64);
+    ErrorStats {
+        pe: errs as f64 / total,
+        me: sum as f64 / total,
+        mae: abs as f64 / total,
+    }
+}
+
+/// Exhaustive PE/ME/MAE of a *synthesized hardware unit* against the
+/// precise operation `f` — the netlist-level counterpart of
+/// [`exhaustive_adder`] / [`exhaustive_mult`]. Both operands are
+/// preprocessed before they reach the unit (the paper's datapath order),
+/// and the unit is evaluated bit-parallel, 64 operand pairs per pass.
+///
+/// With a unit that is exact on its care set and synthesized for the
+/// preprocessed value sets, this must reproduce the value-map model's
+/// numbers bit for bit — the test suite holds the two paths against
+/// each other (and against the closed forms).
+pub fn exhaustive_unit(
+    wl: u32,
+    unit: &(impl BatchOp + ?Sized),
+    pa: &Chain,
+    pb: &Chain,
+    f: impl Fn(u32, u32) -> i64 + Sync,
+) -> ErrorStats {
+    assert!(wl <= 12, "exhaustive error analysis limited to 2^24 pairs");
+    let n = 1u32 << wl;
+    let amap: Vec<u32> = (0..n).map(|v| pa.apply(v)).collect();
+    let bmap: Vec<u32> = (0..n).map(|v| pb.apply(v)).collect();
+    let partials = pool::scope_chunks(n as usize, pool::default_threads(), |s, e| {
+        let (mut errs, mut sum, mut abs) = (0u64, 0i64, 0i64);
+        let mut asplat = [0u32; 64];
+        let mut outs = [0u64; 64];
+        for a in s as u32..e as u32 {
+            asplat.fill(amap[a as usize]);
+            let mut bbase = 0u32;
+            while bbase < n {
+                let cnt = 64.min((n - bbase) as usize);
+                unit.batch(
+                    &asplat[..cnt],
+                    &bmap[bbase as usize..bbase as usize + cnt],
+                    &mut outs[..cnt],
+                );
+                for (j, &approx) in outs[..cnt].iter().enumerate() {
+                    let exact = f(a, bbase + j as u32);
+                    let e = exact - approx as i64;
+                    if e != 0 {
+                        errs += 1;
+                        sum += e;
+                        abs += e.abs();
+                    }
+                }
+                bbase += cnt as u32;
             }
         }
         (errs, sum, abs)

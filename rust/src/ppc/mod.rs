@@ -5,9 +5,13 @@
 //! - [`blocks`] — PPA/PPM truth-table generators with DC sets, and the
 //!   conventional structural baselines (Section III + supplementary).
 //! - [`error`] — PE/ME/MAE closed forms and exhaustive validation
-//!   (eqs. 2–10).
+//!   (eqs. 2–10), including netlist-level validation of synthesized
+//!   units (bit-parallel).
 //! - [`flow`] — the Fig. 3 design flow: range analysis → preprocessing →
 //!   TT+DC → two-level → multi-level → report.
+//! - [`units`] — executable synthesized composites (segmented adders,
+//!   the composed 8×8 multiplier) with scalar and 64-way bit-parallel
+//!   evaluation; the arithmetic behind the native serving backend.
 //!
 //! ## Example: the whole paradigm in six lines
 //!
@@ -25,3 +29,4 @@ pub mod blocks;
 pub mod error;
 pub mod flow;
 pub mod preprocess;
+pub mod units;

@@ -1,0 +1,384 @@
+//! Executable synthesized arithmetic units.
+//!
+//! [`super::flow`] synthesizes composite PPC blocks but only keeps their
+//! *reports*; this module keeps the mapped netlists themselves and wires
+//! them into runnable adders and multipliers:
+//!
+//! - [`AdderUnit`] — the segmented (ripple-of-4-bit-slices) PPC adder of
+//!   supplementary Fig. 3, each segment a mapped netlist, the carry
+//!   chain stitched in software (zero-cost wiring in hardware).
+//! - [`MultUnit8`] — the composed 8×8 PPC multiplier of supplementary
+//!   Fig. 2: four 4×4 quadrant netlists plus the adder tree
+//!   `LL + ((LH + HL) << 4) + (HH << 8)`.
+//!
+//! Every unit offers two evaluation paths: a one-pair scalar walk
+//! ([`AdderUnit::eval_scalar`]) and the 64-pair bit-parallel path
+//! ([`AdderUnit::eval_batch`]) built on [`Netlist::eval64`] — the hot
+//! path of exhaustive verification and of the native serving backend
+//! ([`crate::runtime::NativeExecutor`]).
+//!
+//! Units are exact **on their care sets only**: operands must come from
+//! the value sets the unit was synthesized with (for a serving backend
+//! that means "preprocess first, then multiply/add" — exactly the
+//! paper's datapath order).
+
+use super::blocks::{self, SEG_BITS};
+use super::preprocess::ValueSet;
+use crate::logic::map::Objective;
+use crate::logic::netlist::{unpack_lanes, Netlist};
+use crate::logic::synth;
+
+/// A batched arithmetic operation over two unsigned operands — the
+/// interface [`crate::ppc::error::exhaustive_unit`] measures against.
+pub trait BatchOp: Sync {
+    /// Evaluate up to 64 operand pairs bit-parallel into `out[..a.len()]`.
+    fn batch(&self, a: &[u32], b: &[u32], out: &mut [u64]);
+    /// Evaluate one pair through the scalar netlist walk (the baseline
+    /// the `native_exec` bench compares the bit-parallel path against).
+    fn scalar(&self, a: u32, b: u32) -> u64;
+}
+
+/// Pack up to 64 `u32` operand values into `nlanes` bit lanes
+/// (lane `i`, bit `j` = bit `i` of `vals[j]`).
+pub fn pack_values(vals: &[u32], nlanes: usize) -> Vec<u64> {
+    debug_assert!(vals.len() <= 64);
+    let mut lanes = vec![0u64; nlanes];
+    for (j, &v) in vals.iter().enumerate() {
+        debug_assert!(nlanes >= 32 || (v >> nlanes) == 0, "operand {v} exceeds {nlanes} bits");
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            *lane |= (((v as u64) >> i) & 1) << j;
+        }
+    }
+    lanes
+}
+
+/// Resize a lane vector, asserting (in debug) that no nonzero lane is
+/// dropped — lanes past a value's width must be all-zero wiring.
+fn pad_lanes(lanes: &[u64], n: usize) -> Vec<u64> {
+    let mut out = vec![0u64; n];
+    let k = lanes.len().min(n);
+    out[..k].copy_from_slice(&lanes[..k]);
+    debug_assert!(lanes[k..].iter().all(|&l| l == 0), "nonzero lane dropped by pad");
+    out
+}
+
+/// A segmented PPC adder: `ceil(max(wl_a, wl_b) / 4)` synthesized 4-bit
+/// slices with carry-in, exact on the `(a_set, b_set)` product it was
+/// synthesized for.
+pub struct AdderUnit {
+    pub name: String,
+    pub wl_a: u32,
+    pub wl_b: u32,
+    segs: Vec<Netlist>,
+}
+
+impl AdderUnit {
+    /// Run the full design flow on every segment (care sets propagated
+    /// along the carry chain from the operand value sets) and keep the
+    /// mapped netlists. Panics if any segment fails care-set
+    /// verification — a synthesized unit must be exact by construction.
+    pub fn synthesize(
+        name: &str,
+        wl_a: u32,
+        wl_b: u32,
+        a_set: &ValueSet,
+        b_set: &ValueSet,
+        objective: Objective,
+    ) -> AdderUnit {
+        let specs = blocks::adder_segment_specs(wl_a, wl_b, a_set, b_set);
+        let segs = specs
+            .iter()
+            .map(|spec| {
+                let (_, nl) = synth::synthesize(spec, objective);
+                assert_eq!(
+                    synth::verify_on_care_set(spec, &nl),
+                    0,
+                    "{name}/{}: netlist not exact on care set",
+                    spec.name
+                );
+                nl
+            })
+            .collect();
+        AdderUnit { name: name.to_string(), wl_a, wl_b, segs }
+    }
+
+    /// Operand width in lanes (`num_segments × 4`); the sum adds one
+    /// carry lane on top.
+    pub fn lane_width(&self) -> usize {
+        self.segs.len() * SEG_BITS as usize
+    }
+
+    /// Total gate count across segments.
+    pub fn num_gates(&self) -> usize {
+        self.segs.iter().map(|s| s.gates.len()).sum()
+    }
+
+    /// Lane-level bit-parallel sum: `a_lanes`/`b_lanes` hold
+    /// [`AdderUnit::lane_width`] lanes each (operand bit `i` in lane
+    /// `i`, upper lanes zero); returns `lane_width() + 1` sum lanes.
+    pub fn eval_lanes(&self, a_lanes: &[u64], b_lanes: &[u64]) -> Vec<u64> {
+        let sb = SEG_BITS as usize;
+        debug_assert_eq!(a_lanes.len(), self.lane_width());
+        debug_assert_eq!(b_lanes.len(), self.lane_width());
+        let mut sum = vec![0u64; self.lane_width() + 1];
+        let mut carry = 0u64;
+        let mut in_lanes = vec![0u64; 2 * sb + 1];
+        for (s, seg) in self.segs.iter().enumerate() {
+            in_lanes[..sb].copy_from_slice(&a_lanes[s * sb..(s + 1) * sb]);
+            in_lanes[sb..2 * sb].copy_from_slice(&b_lanes[s * sb..(s + 1) * sb]);
+            in_lanes[2 * sb] = carry;
+            let outs = seg.eval64(&in_lanes);
+            sum[s * sb..(s + 1) * sb].copy_from_slice(&outs[..sb]);
+            carry = outs[sb];
+        }
+        let w = self.lane_width();
+        sum[w] = carry;
+        sum
+    }
+
+    /// Bit-parallel sum of up to 64 operand pairs.
+    pub fn eval_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        let n = a.len();
+        // hard contract: lane capacity is 64 (a >64 batch would silently
+        // wrap the shift in release builds)
+        assert!(n <= 64 && b.len() == n && out.len() >= n);
+        let al = pack_values(a, self.lane_width());
+        let bl = pack_values(b, self.lane_width());
+        let sum = self.eval_lanes(&al, &bl);
+        out[..n].copy_from_slice(&unpack_lanes(&sum, n));
+    }
+
+    /// One sum through the scalar netlist walk.
+    pub fn eval_scalar(&self, a: u32, b: u32) -> u64 {
+        let sb = SEG_BITS;
+        let seg_mask = (1u64 << sb) - 1;
+        let mut sum = 0u64;
+        let mut carry = 0u64;
+        for (s, seg) in self.segs.iter().enumerate() {
+            let sh = s as u32 * sb;
+            let m = (((a as u64) >> sh) & seg_mask)
+                | ((((b as u64) >> sh) & seg_mask) << sb)
+                | (carry << (2 * sb));
+            let o = seg.eval(m);
+            sum |= (o & seg_mask) << sh;
+            carry = (o >> sb) & 1;
+        }
+        sum | (carry << (self.segs.len() as u32 * sb))
+    }
+}
+
+impl BatchOp for AdderUnit {
+    fn batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        self.eval_batch(a, b, out)
+    }
+    fn scalar(&self, a: u32, b: u32) -> u64 {
+        self.eval_scalar(a, b)
+    }
+}
+
+/// The composed 8×8 PPC multiplier: four 4×4 quadrant netlists plus the
+/// supplementary-Fig. 2 adder tree, exact on `a_set × b_set`.
+pub struct MultUnit8 {
+    pub name: String,
+    /// Quadrant netlists in LL, LH, HL, HH order (inputs: the a-nibble
+    /// in bits 0..4, the b-nibble in bits 4..8).
+    quads: Vec<Netlist>,
+    a1: AdderUnit, // LH + HL
+    a2: AdderUnit, // (mid << 4) + LL
+    a3: AdderUnit, // (HH << 8) + lo
+}
+
+impl MultUnit8 {
+    /// Synthesize the quadrants and adder tree with care sets propagated
+    /// from the operand value sets (mirrors
+    /// [`super::flow::composed_mult8`], but keeps the netlists).
+    pub fn synthesize(
+        name: &str,
+        a_set: &ValueSet,
+        b_set: &ValueSet,
+        objective: Objective,
+    ) -> MultUnit8 {
+        let q = blocks::mult_quadrant_specs(a_set, b_set);
+        let quads: Vec<Netlist> = q
+            .quads
+            .iter()
+            .map(|spec| {
+                let (_, nl) = synth::synthesize(spec, objective);
+                assert_eq!(
+                    synth::verify_on_care_set(spec, &nl),
+                    0,
+                    "{name}/{}: netlist not exact on care set",
+                    spec.name
+                );
+                nl
+            })
+            .collect();
+        let (ll, lh, hl, hh) = (
+            &q.quad_out_sets[0],
+            &q.quad_out_sets[1],
+            &q.quad_out_sets[2],
+            &q.quad_out_sets[3],
+        );
+        let mid = lh.sum(hl);
+        let a1 = AdderUnit::synthesize(&format!("{name}_a1"), 8, 8, lh, hl, objective);
+        let mid_shift = mid.shl(4);
+        let a2 = AdderUnit::synthesize(&format!("{name}_a2"), 13, 8, &mid_shift, ll, objective);
+        let lo = mid_shift.sum(ll);
+        let hh_shift = hh.shl(8);
+        let a3 = AdderUnit::synthesize(&format!("{name}_a3"), 16, 14, &hh_shift, &lo, objective);
+        MultUnit8 { name: name.to_string(), quads, a1, a2, a3 }
+    }
+
+    /// Total gate count (quadrants + adder tree).
+    pub fn num_gates(&self) -> usize {
+        self.quads.iter().map(|n| n.gates.len()).sum::<usize>()
+            + self.a1.num_gates()
+            + self.a2.num_gates()
+            + self.a3.num_gates()
+    }
+
+    /// Lane-level bit-parallel product: 8 operand lanes each side,
+    /// 16 product lanes back.
+    pub fn eval_lanes(&self, a_lanes: &[u64], b_lanes: &[u64]) -> Vec<u64> {
+        debug_assert_eq!(a_lanes.len(), 8);
+        debug_assert_eq!(b_lanes.len(), 8);
+        // quadrant products: (a half, b half) per LL, LH, HL, HH
+        let pairs = [(0usize, 0usize), (0, 4), (4, 0), (4, 4)];
+        let mut qin = [0u64; 8];
+        let mut qouts: Vec<Vec<u64>> = Vec::with_capacity(4);
+        for (k, &(ai, bi)) in pairs.iter().enumerate() {
+            qin[..4].copy_from_slice(&a_lanes[ai..ai + 4]);
+            qin[4..].copy_from_slice(&b_lanes[bi..bi + 4]);
+            qouts.push(self.quads[k].eval64(&qin));
+        }
+        // mid = LH + HL (9 bits)
+        let w1 = self.a1.lane_width();
+        let mid = self.a1.eval_lanes(&pad_lanes(&qouts[1], w1), &pad_lanes(&qouts[2], w1));
+        // lo = (mid << 4) + LL (13 bits)
+        let w2 = self.a2.lane_width();
+        let mut mid_shift = vec![0u64; w2];
+        mid_shift[4..4 + mid.len()].copy_from_slice(&mid);
+        let lo = self.a2.eval_lanes(&mid_shift, &pad_lanes(&qouts[0], w2));
+        // product = (HH << 8) + lo (16 bits)
+        let w3 = self.a3.lane_width();
+        let mut hh_shift = vec![0u64; w3];
+        hh_shift[8..16].copy_from_slice(&qouts[3]);
+        let prod = self.a3.eval_lanes(&hh_shift, &pad_lanes(&lo, w3));
+        prod[..16].to_vec()
+    }
+
+    /// Bit-parallel product of up to 64 operand pairs.
+    pub fn eval_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        let n = a.len();
+        // hard contract: lane capacity is 64 (see AdderUnit::eval_batch)
+        assert!(n <= 64 && b.len() == n && out.len() >= n);
+        let al = pack_values(a, 8);
+        let bl = pack_values(b, 8);
+        let prod = self.eval_lanes(&al, &bl);
+        out[..n].copy_from_slice(&unpack_lanes(&prod, n));
+    }
+
+    /// One product through the scalar netlist walk.
+    pub fn eval_scalar(&self, a: u32, b: u32) -> u64 {
+        debug_assert!(a < 256 && b < 256);
+        let (al, ah) = ((a & 15) as u64, (a >> 4) as u64);
+        let (bl, bh) = ((b & 15) as u64, (b >> 4) as u64);
+        let q = |k: usize, x: u64, y: u64| self.quads[k].eval(x | (y << 4));
+        let ll = q(0, al, bl);
+        let lh = q(1, al, bh);
+        let hl = q(2, ah, bl);
+        let hh = q(3, ah, bh);
+        let mid = self.a1.eval_scalar(lh as u32, hl as u32);
+        let lo = self.a2.eval_scalar((mid as u32) << 4, ll as u32);
+        self.a3.eval_scalar((hh as u32) << 8, lo as u32)
+    }
+}
+
+impl BatchOp for MultUnit8 {
+    fn batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        self.eval_batch(a, b, out)
+    }
+    fn scalar(&self, a: u32, b: u32) -> u64 {
+        self.eval_scalar(a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ppc::error;
+    use crate::ppc::preprocess::{Chain, Preproc};
+
+    fn ds(x: u32) -> Chain {
+        Chain::of(Preproc::Ds(x))
+    }
+
+    #[test]
+    fn adder_unit_exact_on_care_set() {
+        let set = ValueSet::full(8).map_chain(&ds(16));
+        let unit = AdderUnit::synthesize("add8_ds16", 8, 8, &set, &set, Objective::Area);
+        for a in set.iter() {
+            for b in set.iter() {
+                assert_eq!(unit.eval_scalar(a, b), (a + b) as u64, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn adder_unit_batch_matches_scalar() {
+        let set = ValueSet::full(8).map_chain(&ds(8));
+        let unit = AdderUnit::synthesize("add8_ds8", 8, 8, &set, &set, Objective::Area);
+        let vals: Vec<u32> = set.iter().collect();
+        let a: Vec<u32> = (0..64).map(|i| vals[i % vals.len()]).collect();
+        let b: Vec<u32> = (0..64).map(|i| vals[(i * 7 + 3) % vals.len()]).collect();
+        let mut out = [0u64; 64];
+        unit.eval_batch(&a, &b, &mut out);
+        for j in 0..64 {
+            assert_eq!(out[j], unit.eval_scalar(a[j], b[j]), "j={j}");
+            assert_eq!(out[j], (a[j] + b[j]) as u64);
+        }
+    }
+
+    #[test]
+    fn mult_unit_exact_on_care_set() {
+        let set = ValueSet::full(8).map_chain(&ds(16));
+        let unit = MultUnit8::synthesize("mul8_ds16", &set, &set, Objective::Area);
+        for a in set.iter() {
+            for b in set.iter() {
+                assert_eq!(unit.eval_scalar(a, b), (a as u64) * (b as u64), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mult_unit_batch_matches_scalar() {
+        let a_set = ValueSet::full(8).map_chain(&ds(32));
+        let b_set = ValueSet::from_values(256, 0..128u32).map_chain(&ds(16));
+        let unit = MultUnit8::synthesize("mul8_mix", &a_set, &b_set, Objective::Area);
+        let av: Vec<u32> = a_set.iter().collect();
+        let bv: Vec<u32> = b_set.iter().collect();
+        let a: Vec<u32> = (0..60).map(|i| av[i % av.len()]).collect();
+        let b: Vec<u32> = (0..60).map(|i| bv[(i * 5 + 1) % bv.len()]).collect();
+        let mut out = [0u64; 64];
+        unit.eval_batch(&a, &b, &mut out);
+        for j in 0..60 {
+            assert_eq!(out[j], (a[j] as u64) * (b[j] as u64), "j={j}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_unit_matches_error_model() {
+        // hardware (netlists, bit-parallel) and model (value maps) must
+        // report the *same* PE/ME/MAE — eq. (4)/(5) end to end.
+        let chain = ds(16);
+        let set = ValueSet::full(8).map_chain(&chain);
+        let unit = MultUnit8::synthesize("mul8_err", &set, &set, Objective::Area);
+        let hw = error::exhaustive_unit(8, &unit, &chain, &chain, |a, b| a as i64 * b as i64);
+        let model = error::exhaustive_mult(8, &chain, &chain);
+        assert!((hw.pe - model.pe).abs() < 1e-12, "{} vs {}", hw.pe, model.pe);
+        assert!((hw.me - model.me).abs() < 1e-9);
+        assert!((hw.mae - model.mae).abs() < 1e-9);
+        let closed = error::ds_mult(8, 16);
+        assert!((hw.pe - closed.pe).abs() < 1e-12);
+    }
+}

@@ -1,17 +1,31 @@
-//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute
-//! them on the CPU PJRT client. Python never runs here — artifacts are
-//! produced once by `make artifacts` and this module is self-contained
-//! afterwards.
+//! Execution backends for the serving stack.
 //!
-//! NOTE: the `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so a
-//! [`Runtime`] must stay on the thread that created it. The coordinator
-//! wraps it in a dedicated engine thread (see
-//! [`crate::coordinator`]).
+//! Two interchangeable backends sit behind
+//! [`crate::coordinator::engine::Executor`], keyed `"{app}/{config}"`:
+//!
+//! - [`native`] (default build): [`NativeExecutor`] executes the
+//!   *synthesized PPC netlists themselves* — the gate-level adders and
+//!   multipliers the design flow produces — bit-parallel on i32
+//!   tensors. Fully offline: no Python, no XLA, no artifacts.
+//! - [`pjrt`] (cargo feature `pjrt`): [`Runtime`] loads the
+//!   AOT-compiled HLO-text artifacts produced by `make artifacts` and
+//!   executes them on the CPU PJRT client. Without the feature the
+//!   loader is a stub that returns a clear error pointing at the
+//!   native backend.
+//!
+//! This module keeps the backend-agnostic pieces: the artifact manifest
+//! schema ([`Port`], [`ArtifactMeta`], [`read_manifest`]) shared by the
+//! PJRT loader and the integration tests.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeExecutor;
+pub use pjrt::Runtime;
 
 /// Shape+dtype of one artifact port (only i32 tensors are used by the
 /// three applications).
@@ -77,107 +91,6 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
             })
         })
         .collect()
-}
-
-/// A loaded executable plus its metadata.
-pub struct Loaded {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The artifact registry: a PJRT CPU client plus every compiled model
-/// variant, keyed `"{app}/{config}"`.
-pub struct Runtime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    executables: HashMap<String, Loaded>,
-    pub dir: PathBuf,
-}
-
-impl Runtime {
-    /// Compile every artifact in `dir` (per the manifest).
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        Runtime::load_filtered(dir, |_| true)
-    }
-
-    /// Load only artifacts for one app (faster startup for examples).
-    pub fn load_app(dir: &Path, app: &str) -> Result<Runtime> {
-        let rt = Runtime::load_filtered(dir, |m| m.app == app)?;
-        if rt.executables.is_empty() {
-            bail!("no artifacts for app {app} in {}", dir.display());
-        }
-        Ok(rt)
-    }
-
-    pub fn load_filtered(dir: &Path, keep: impl Fn(&ArtifactMeta) -> bool) -> Result<Runtime> {
-        let metas = read_manifest(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut executables = HashMap::new();
-        for meta in metas.into_iter().filter(|m| keep(m)) {
-            let path = dir.join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
-            executables.insert(format!("{}/{}", meta.app, meta.config), Loaded { meta, exe });
-        }
-        Ok(Runtime { client, executables, dir: dir.to_path_buf() })
-    }
-
-    pub fn keys(&self) -> Vec<String> {
-        let mut k: Vec<String> = self.executables.keys().cloned().collect();
-        k.sort();
-        k
-    }
-
-    pub fn meta(&self, key: &str) -> Option<&ArtifactMeta> {
-        self.executables.get(key).map(|l| &l.meta)
-    }
-
-    /// Execute an artifact on i32 tensors. `inputs[k]` must match the
-    /// manifest's k-th input port (row-major). Returns one Vec<i32> per
-    /// output port.
-    pub fn exec_i32(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        let loaded = self
-            .executables
-            .get(key)
-            .ok_or_else(|| anyhow!("unknown artifact {key}; have {:?}", self.keys()))?;
-        if inputs.len() != loaded.meta.inputs.len() {
-            bail!(
-                "{key}: expected {} inputs, got {}",
-                loaded.meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, port) in inputs.iter().zip(&loaded.meta.inputs) {
-            if data.len() != port.elements() {
-                bail!("{key}: input size {} != port {:?}", data.len(), port.dims);
-            }
-            let dims: Vec<i64> = port.dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape: {e:?}"))?;
-            literals.push(lit);
-        }
-        let result = loaded
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {key}: {e:?}"))?;
-        let first = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // jax lowers with return_tuple=True → unpack the tuple
-        let parts = first.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
 }
 
 #[cfg(test)]

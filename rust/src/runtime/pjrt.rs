@@ -1,0 +1,196 @@
+//! PJRT/XLA execution backend (cargo feature `pjrt`).
+//!
+//! With the feature enabled this loads the AOT-compiled HLO-text
+//! artifacts and executes them on the CPU PJRT client; Python never
+//! runs here — artifacts are produced once by `make artifacts` and this
+//! module is self-contained afterwards. Building with `--features pjrt`
+//! requires the vendored `xla` crate (see the Cargo.toml header).
+//!
+//! Without the feature (the default, fully offline build) the same
+//! [`Runtime`] type exists but every loader returns a clear error
+//! directing callers to the feature flag or to the native backend
+//! ([`super::NativeExecutor`]), so the coordinator/server stack and its
+//! callers compile and fail gracefully at run time instead of at link
+//! time.
+//!
+//! NOTE: the `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so
+//! a [`Runtime`] must stay on the thread that created it. The
+//! coordinator wraps it in a dedicated engine thread (see
+//! [`crate::coordinator`]).
+
+/// The error returned by every entry point when the `pjrt` feature is
+/// off.
+#[cfg(not(feature = "pjrt"))]
+pub const PJRT_DISABLED: &str = "this build has no PJRT/XLA backend (the `pjrt` cargo feature \
+is off); rebuild with `--features pjrt` and the vendored `xla` crate, or serve through the \
+native netlist backend (ppc::runtime::NativeExecutor / `ppc serve --backend native`)";
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::super::{read_manifest, ArtifactMeta};
+    use anyhow::{anyhow, bail, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// A loaded executable plus its metadata.
+    pub struct Loaded {
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The artifact registry: a PJRT CPU client plus every compiled
+    /// model variant, keyed `"{app}/{config}"`.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        executables: HashMap<String, Loaded>,
+        pub dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Compile every artifact in `dir` (per the manifest).
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            Runtime::load_filtered(dir, |_| true)
+        }
+
+        /// Load only artifacts for one app (faster startup for examples).
+        pub fn load_app(dir: &Path, app: &str) -> Result<Runtime> {
+            let rt = Runtime::load_filtered(dir, |m| m.app == app)?;
+            if rt.executables.is_empty() {
+                bail!("no artifacts for app {app} in {}", dir.display());
+            }
+            Ok(rt)
+        }
+
+        pub fn load_filtered(dir: &Path, keep: impl Fn(&ArtifactMeta) -> bool) -> Result<Runtime> {
+            let metas = read_manifest(dir)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            let mut executables = HashMap::new();
+            for meta in metas.into_iter().filter(|m| keep(m)) {
+                let path = dir.join(&meta.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e:?}", meta.file))?;
+                executables.insert(format!("{}/{}", meta.app, meta.config), Loaded { meta, exe });
+            }
+            Ok(Runtime { client, executables, dir: dir.to_path_buf() })
+        }
+
+        pub fn keys(&self) -> Vec<String> {
+            let mut k: Vec<String> = self.executables.keys().cloned().collect();
+            k.sort();
+            k
+        }
+
+        pub fn meta(&self, key: &str) -> Option<&ArtifactMeta> {
+            self.executables.get(key).map(|l| &l.meta)
+        }
+
+        /// Execute an artifact on i32 tensors. `inputs[k]` must match
+        /// the manifest's k-th input port (row-major). Returns one
+        /// Vec<i32> per output port.
+        pub fn exec_i32(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+            let loaded = self
+                .executables
+                .get(key)
+                .ok_or_else(|| anyhow!("unknown artifact {key}; have {:?}", self.keys()))?;
+            if inputs.len() != loaded.meta.inputs.len() {
+                bail!(
+                    "{key}: expected {} inputs, got {}",
+                    loaded.meta.inputs.len(),
+                    inputs.len()
+                );
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, port) in inputs.iter().zip(&loaded.meta.inputs) {
+                if data.len() != port.elements() {
+                    bail!("{key}: input size {} != port {:?}", data.len(), port.dims);
+                }
+                let dims: Vec<i64> = port.dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?;
+                literals.push(lit);
+            }
+            let result = loaded
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {key}: {e:?}"))?;
+            let first = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // jax lowers with return_tuple=True → unpack the tuple
+            let parts = first.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+                .collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::super::ArtifactMeta;
+    use super::PJRT_DISABLED;
+    use anyhow::{bail, Result};
+    use std::path::{Path, PathBuf};
+
+    /// Feature-off stand-in: same surface as the real PJRT runtime, but
+    /// every loader fails with [`PJRT_DISABLED`].
+    pub struct Runtime {
+        pub dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn load(_dir: &Path) -> Result<Runtime> {
+            bail!("{PJRT_DISABLED}")
+        }
+
+        pub fn load_app(_dir: &Path, _app: &str) -> Result<Runtime> {
+            bail!("{PJRT_DISABLED}")
+        }
+
+        pub fn load_filtered(
+            _dir: &Path,
+            _keep: impl Fn(&ArtifactMeta) -> bool,
+        ) -> Result<Runtime> {
+            bail!("{PJRT_DISABLED}")
+        }
+
+        pub fn keys(&self) -> Vec<String> {
+            Vec::new()
+        }
+
+        pub fn meta(&self, _key: &str) -> Option<&ArtifactMeta> {
+            None
+        }
+
+        pub fn exec_i32(&self, _key: &str, _inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
+            bail!("{PJRT_DISABLED}")
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use imp::Loaded;
+pub use imp::Runtime;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn disabled_backend_errors_clearly() {
+        let err = Runtime::load(Path::new("/nonexistent")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("native"), "{msg}");
+    }
+}
