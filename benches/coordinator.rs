@@ -3,6 +3,7 @@
 //! over real compiled models (the paper-system-as-deployed numbers in
 //! EXPERIMENTS.md §Perf).
 
+use ppc::catalog::Tensor;
 use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, MockExecutor, Quality};
 use ppc::util::bench::{black_box, Bencher};
 use ppc::util::prng::Rng;
@@ -16,14 +17,7 @@ fn mock_coordinator(batch_wait_ms: u64) -> Coordinator {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(batch_wait_ms),
     };
-    Coordinator::start(cfg, || {
-        Ok(MockExecutor::new(&[
-            "gdf/conv", "gdf/ds16", "gdf/ds32",
-            "blend/conv", "blend/ds16", "blend/ds32",
-            "frnn/conv", "frnn/th48ds16", "frnn/ds32",
-        ]))
-    })
-    .unwrap()
+    Coordinator::start(cfg, || Ok(MockExecutor::full_catalog())).unwrap()
 }
 
 fn main() {
@@ -34,7 +28,10 @@ fn main() {
     let image: Vec<i32> = (0..4096).collect();
     b.run("dispatch: denoise round-trip (mock)", || {
         let t = coord
-            .submit_blocking(Job::Denoise { image: image.clone() }, Quality::Precise)
+            .submit_blocking(
+                Job::Denoise { image: Tensor::matrix(64, 64, image.clone()).unwrap() },
+                Quality::Precise,
+            )
             .unwrap();
         black_box(t.wait().unwrap());
     });
@@ -59,28 +56,31 @@ fn main() {
     });
     println!("\nmock metrics:\n{}", coord.metrics().report());
 
-    // real artifacts, when built
+    // real artifacts, when built (needs the pjrt feature — the default
+    // build's engine factory fails with PJRT_DISABLED, so skip instead
+    // of panicking mid-bench)
     let dir = PathBuf::from("artifacts");
-    if dir.join("manifest.json").exists() {
+    if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
         let coord = Coordinator::with_artifacts(&dir, CoordinatorConfig::default()).unwrap();
         let img_len = 256 * 256;
         let img: Vec<i32> = (0..img_len).map(|_| rng.below(256) as i32).collect();
+        let img_t = Tensor::matrix(256, 256, img).unwrap();
         b.run("e2e: denoise 256x256 (precise route)", || {
             let t = coord
-                .submit_blocking(Job::Denoise { image: img.clone() }, Quality::Precise)
+                .submit_blocking(Job::Denoise { image: img_t.clone() }, Quality::Precise)
                 .unwrap();
             black_box(t.wait().unwrap());
         });
         b.run("e2e: denoise 256x256 (economy route)", || {
             let t = coord
-                .submit_blocking(Job::Denoise { image: img.clone() }, Quality::Economy)
+                .submit_blocking(Job::Denoise { image: img_t.clone() }, Quality::Economy)
                 .unwrap();
             black_box(t.wait().unwrap());
         });
         b.run("e2e: blend 256x256", || {
             let t = coord
                 .submit_blocking(
-                    Job::Blend { p1: img.clone(), p2: img.clone(), alpha: 64 },
+                    Job::Blend { p1: img_t.clone(), p2: img_t.clone(), alpha: 64 },
                     Quality::Balanced,
                 )
                 .unwrap();

@@ -2,14 +2,19 @@
 //!
 //! 1. exhaustive verification of a composed 8×8 PPC multiplier netlist,
 //!    scalar `Netlist::eval` walk vs the 64-way bit-parallel `eval64`
-//!    path (target: ≥ 20× speedup), and
+//!    path (target: ≥ 20× speedup),
 //! 2. the coordinator serving a batch through `NativeExecutor` with no
-//!    XLA/Python anywhere on the path.
+//!    XLA/Python anywhere on the path, and
+//! 3. cold start vs warm start: registering a model from scratch
+//!    (full two-level → multi-level → map synthesis) against loading
+//!    the same model from the persistent BLIF netlist cache — the
+//!    cache-win number on the perf record.
 //!
 //! Run: `cargo bench --bench native_exec` (PPC_BENCH_QUICK=1 shrinks
 //! budgets).
 
 use ppc::apps::frnn::{dataset, net};
+use ppc::catalog::{ModelKey, PpcConfig, Tensor};
 use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
 use ppc::logic::map::Objective;
 use ppc::ppc::error;
@@ -81,13 +86,14 @@ fn main() {
 
     // -- 2. coordinator batch through the native backend
     println!("\nbuilding native registry (gdf/ds32 + frnn/ds32)…");
+    let gdf_key = ModelKey::parse("gdf/ds32").unwrap();
     let ds = dataset::generate(2, 0xBE);
     let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
     let q = net::quantize(&r.net);
     let exec = NativeExecutor::new()
-        .with_gdf("ds32")
+        .register(gdf_key)
         .unwrap()
-        .with_frnn("ds32", q)
+        .register_frnn(PpcConfig::Ds32, q)
         .unwrap();
     let cfg = CoordinatorConfig {
         queue_capacity: 256,
@@ -100,8 +106,9 @@ fn main() {
     let mut rng = Rng::new(7);
     let img: Vec<i32> = (0..64 * 64).map(|_| rng.below(256) as i32).collect();
     b.run("e2e native: denoise 64x64 (gdf/ds32)", || {
+        let image = Tensor::matrix(64, 64, img.clone()).unwrap();
         let t = coord
-            .submit_blocking(Job::Denoise { image: img.clone() }, Quality::Economy)
+            .submit_blocking(Job::Denoise { image }, Quality::Economy)
             .unwrap();
         black_box(t.wait().unwrap());
     });
@@ -126,4 +133,32 @@ fn main() {
         }
     });
     println!("\nnative serving metrics:\n{}", coord.metrics().report());
+
+    // -- 3. cold start vs warm BLIF netlist cache (gdf/ds32)
+    println!("\ncold-start vs warm-cache model registration…");
+    let cache_dir = std::env::temp_dir().join(format!("ppc_bench_nlcache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    let cold = b.run("cold start: register gdf/ds32 (full synthesis)", || {
+        black_box(NativeExecutor::new().register(gdf_key).unwrap());
+    });
+
+    // populate the cache once, then measure warm constructions
+    NativeExecutor::new()
+        .with_cache(&cache_dir)
+        .unwrap()
+        .register(gdf_key)
+        .unwrap();
+    let warm = b.run("warm start: register gdf/ds32 (BLIF cache)", || {
+        let ex = NativeExecutor::new()
+            .with_cache(&cache_dir)
+            .unwrap()
+            .register(gdf_key)
+            .unwrap();
+        assert_eq!(ex.cache().unwrap().misses(), 0, "warm start must not synthesize");
+        black_box(ex);
+    });
+    let speedup = cold.summary.mean / warm.summary.mean.max(1e-12);
+    println!("\nwarm-cache cold start is {speedup:.1}x faster (zero two-level synthesis)");
+    let _ = std::fs::remove_dir_all(&cache_dir);
 }

@@ -19,6 +19,7 @@
 
 use ppc::apps::frnn::dataset;
 use ppc::apps::image::{add_gaussian_noise, synthetic_photo};
+use ppc::catalog::Tensor;
 use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
 use ppc::util::stats::psnr_u8;
 use std::path::PathBuf;
@@ -42,10 +43,10 @@ fn main() -> anyhow::Result<()> {
         faces.test.len()
     );
 
-    let images: Vec<Vec<i32>> = (0..n_images)
+    let images: Vec<Tensor> = (0..n_images)
         .map(|i| {
             let img = add_gaussian_noise(&synthetic_photo(256, 256, i as u64), 10.0, i as u64);
-            img.pixels.iter().map(|&p| p as i32).collect()
+            img.to_tensor()
         })
         .collect();
 
@@ -86,12 +87,12 @@ fn main() -> anyhow::Result<()> {
     for (kind, i, q, t) in tickets {
         let r = t.wait()?;
         match kind {
-            "denoise" => denoise_outputs.push((i, q, r.outputs[0].clone())),
+            "denoise" => denoise_outputs.push((i, q, r.outputs[0].data.clone())),
             "classify" => {
                 classify_total += 1;
                 let f = &faces.test[i];
                 let want = f.targets();
-                let got: Vec<bool> = r.outputs[0].iter().map(|&v| v >= 128).collect();
+                let got: Vec<bool> = r.outputs[0].data.iter().map(|&v| v >= 128).collect();
                 if got == want.to_vec() {
                     classify_correct += 1;
                 }
@@ -136,6 +137,7 @@ fn main() -> anyhow::Result<()> {
                 .wait()
                 .unwrap()
                 .outputs[0]
+                .data
                 .clone()
         })
         .collect();
@@ -151,6 +153,6 @@ fn main() -> anyhow::Result<()> {
         classify_correct,
         classify_total
     );
-    assert_eq!(img_px, images[0].len());
+    assert_eq!(img_px, images[0].data.len());
     Ok(())
 }

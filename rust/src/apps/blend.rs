@@ -6,11 +6,13 @@
 //! Each 16-bit product is truncated to its top 8 bits and the two are
 //! combined by an 8-bit adder, exactly as Fig. 7 draws it.
 
-use super::image::Image;
+use super::image::{pixels_from_i32, Image};
+use crate::catalog::{Datapath, Tensor};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
-use crate::ppc::units::{AdderUnit, MultUnit8};
+use crate::ppc::units::{AdderUnit, FreshSynth, MultUnit8, NetlistSource};
+use anyhow::{bail, Result};
 
 /// Quantized blending ratio: `alpha ∈ [0,127]`, the complementary
 /// coefficient is `255 − alpha ∈ [128,255]`.
@@ -122,10 +124,28 @@ pub struct BlendHardware {
 
 impl BlendHardware {
     pub fn synthesize(cfg: &BlendConfig, objective: Objective) -> BlendHardware {
+        BlendHardware::synthesize_via(cfg, objective, &FreshSynth)
+    }
+
+    /// Like [`BlendHardware::synthesize`], with netlists drawn from
+    /// `source` (fresh synthesis or the persistent cache).
+    pub fn synthesize_via(
+        cfg: &BlendConfig,
+        objective: Objective,
+        source: &dyn NetlistSource,
+    ) -> BlendHardware {
         let sig = blend_signal_sets(cfg);
-        let m1 = MultUnit8::synthesize("ib_mult1", &sig.mult1.0, &sig.mult1.1, objective);
-        let m2 = MultUnit8::synthesize("ib_mult2", &sig.mult2.0, &sig.mult2.1, objective);
-        let add = AdderUnit::synthesize("ib_adder", 8, 8, &sig.adder.0, &sig.adder.1, objective);
+        let m1 = MultUnit8::synthesize_via("ib_mult1", &sig.mult1.0, &sig.mult1.1, objective, source);
+        let m2 = MultUnit8::synthesize_via("ib_mult2", &sig.mult2.0, &sig.mult2.1, objective, source);
+        let add = AdderUnit::synthesize_via(
+            "ib_adder",
+            8,
+            8,
+            &sig.adder.0,
+            &sig.adder.1,
+            objective,
+            source,
+        );
         BlendHardware { cfg: cfg.clone(), m1, m2, add }
     }
 
@@ -180,6 +200,35 @@ impl BlendHardware {
         assert_eq!(p1.height, p2.height);
         let pixels = self.blend_flat(&p1.pixels, &p2.pixels, alpha);
         Image { width: p1.width, height: p1.height, pixels }
+    }
+}
+
+impl Datapath for BlendHardware {
+    /// `(p1, p2, alpha)` in — the images shape-identical, alpha a
+    /// single value in `[0, 127]` (the natural-sparsity contract) —
+    /// one blended tensor out, with `p1`'s shape.
+    fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != 3 {
+            bail!("expected (p1, p2, alpha), got {} tensors", inputs.len());
+        }
+        let (p1, p2, al) = (&inputs[0], &inputs[1], &inputs[2]);
+        if p1.shape != p2.shape {
+            bail!("image shapes differ ({:?} vs {:?})", p1.shape, p2.shape);
+        }
+        if al.data.len() != 1 || !(0..=127).contains(&al.data[0]) {
+            bail!("alpha must be a single value in [0, 127], got {:?}", al.data);
+        }
+        let a = pixels_from_i32(&p1.data, "p1")?;
+        let b = pixels_from_i32(&p2.data, "p2")?;
+        let out = self.blend_flat(&a, &b, Alpha(al.data[0] as u8));
+        Ok(vec![Tensor {
+            shape: p1.shape.clone(),
+            data: out.into_iter().map(|p| p as i32).collect(),
+        }])
+    }
+
+    fn num_gates(&self) -> usize {
+        BlendHardware::num_gates(self)
     }
 }
 

@@ -9,10 +9,13 @@
 
 use crate::apps::frnn::dataset::{Face, MAX_PIXEL, IMG_PIXELS, NUM_OUTPUTS};
 use crate::apps::frnn::net::{sigmoid_fx, QuantFrnn, HIDDEN};
+use crate::apps::image::pixels_from_i32;
+use crate::catalog::{Datapath, Tensor};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
-use crate::ppc::units::MultUnit8;
+use crate::ppc::units::{FreshSynth, MultUnit8, NetlistSource};
+use anyhow::{bail, Result};
 
 /// A Table-3 row configuration for the MAC hardware.
 #[derive(Clone, Debug)]
@@ -114,11 +117,23 @@ impl FrnnHardware {
         pre_weight: &Chain,
         objective: Objective,
     ) -> FrnnHardware {
+        FrnnHardware::synthesize_via(q, pre_image, pre_weight, objective, &FreshSynth)
+    }
+
+    /// Like [`FrnnHardware::synthesize`], with netlists drawn from
+    /// `source` (fresh synthesis or the persistent cache).
+    pub fn synthesize_via(
+        q: QuantFrnn,
+        pre_image: &Chain,
+        pre_weight: &Chain,
+        objective: Objective,
+        source: &dyn NetlistSource,
+    ) -> FrnnHardware {
         let img = ValueSet::full(8).map_chain(pre_image);
         let act = ValueSet::full(8);
         let wgt = ValueSet::full(8).map_chain(pre_weight);
-        let mult1 = MultUnit8::synthesize("frnn_mac1", &img, &wgt, objective);
-        let mult2 = MultUnit8::synthesize("frnn_mac2", &act, &wgt, objective);
+        let mult1 = MultUnit8::synthesize_via("frnn_mac1", &img, &wgt, objective, source);
+        let mult2 = MultUnit8::synthesize_via("frnn_mac2", &act, &wgt, objective, source);
         let pw = |w: &i8| pre_weight.apply((*w as u8) as u32) & 0xff;
         let w1p = q.w1.iter().map(pw).collect();
         let w2p = q.w2.iter().map(pw).collect();
@@ -184,6 +199,37 @@ impl FrnnHardware {
             bits[k] = outs[k] >= 128;
         }
         (bits, outs)
+    }
+}
+
+impl Datapath for FrnnHardware {
+    /// One faces tensor in — `[batch, 960]`, or a flat multiple of the
+    /// 960-pixel row — one `[batch, 7]` activation tensor out.
+    fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != 1 {
+            bail!("expected 1 input tensor (the face batch), got {}", inputs.len());
+        }
+        let t = &inputs[0];
+        let batch = match t.shape.as_slice() {
+            [b, row] if *row == IMG_PIXELS && *b > 0 => *b,
+            [n] if *n > 0 && n % IMG_PIXELS == 0 => n / IMG_PIXELS,
+            other => bail!(
+                "face batches are [batch, {IMG_PIXELS}] (or a flat multiple of the \
+                 {IMG_PIXELS}-pixel row), got shape {other:?}"
+            ),
+        };
+        let pixels = pixels_from_i32(&t.data, "pixels")?;
+        let mut out = Vec::with_capacity(batch * NUM_OUTPUTS);
+        for row in pixels.chunks(IMG_PIXELS) {
+            let face = Face { pixels: row.to_vec(), id: 0, pose: 0, sunglasses: false };
+            let (_, outs) = self.forward(&face);
+            out.extend(outs.iter().map(|&v| v as i32));
+        }
+        Ok(vec![Tensor { shape: vec![batch, NUM_OUTPUTS], data: out }])
+    }
+
+    fn num_gates(&self) -> usize {
+        FrnnHardware::num_gates(self)
     }
 }
 

@@ -19,10 +19,12 @@
 //! the value-set propagation in [`gdf_signal_sets`].
 
 use super::image::Image;
+use crate::catalog::{Datapath, Tensor};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
-use crate::ppc::units::AdderUnit;
+use crate::ppc::units::{AdderUnit, FreshSynth, NetlistSource};
+use anyhow::{bail, Result};
 
 /// Bit-accurate GDF datapath for one window (pixels in row-major A1..A9
 /// order). `pre` is applied to each primary input first (the paper's
@@ -120,13 +122,32 @@ impl GdfHardware {
     /// (pre-preprocessing; use `ValueSet::full(8)` to serve any image),
     /// with the intentional-sparsity chain `pre` applied at the inputs.
     pub fn synthesize(input: &ValueSet, pre: &Chain, objective: Objective) -> GdfHardware {
+        GdfHardware::synthesize_via(input, pre, objective, &FreshSynth)
+    }
+
+    /// Like [`GdfHardware::synthesize`], with netlists drawn from
+    /// `source` (fresh synthesis or the persistent cache).
+    pub fn synthesize_via(
+        input: &ValueSet,
+        pre: &Chain,
+        objective: Objective,
+        source: &dyn NetlistSource,
+    ) -> GdfHardware {
         let sig = gdf_signal_sets(&input.map_chain(pre));
         let adders = sig
             .adders
             .iter()
             .enumerate()
             .map(|(i, (l, r, wl, wr))| {
-                AdderUnit::synthesize(&format!("gdf_adder{}", i + 1), *wl, *wr, l, r, objective)
+                AdderUnit::synthesize_via(
+                    &format!("gdf_adder{}", i + 1),
+                    *wl,
+                    *wr,
+                    l,
+                    r,
+                    objective,
+                    source,
+                )
             })
             .collect();
         GdfHardware { pre: pre.clone(), adders }
@@ -193,6 +214,21 @@ impl GdfHardware {
             }
         }
         out
+    }
+}
+
+impl Datapath for GdfHardware {
+    /// One image tensor in (`[h, w]`, or flat square), one out.
+    fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != 1 {
+            bail!("expected 1 input tensor (the image), got {}", inputs.len());
+        }
+        let img = Image::from_tensor(&inputs[0], "image")?;
+        Ok(vec![self.filter(&img).to_tensor()])
+    }
+
+    fn num_gates(&self) -> usize {
+        GdfHardware::num_gates(self)
     }
 }
 
@@ -303,6 +339,19 @@ mod tests {
         let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, Objective::Area);
         assert!(hw.num_gates() > 0);
         assert_eq!(hw.filter(&img), gdf_filter(&img, &chain));
+    }
+
+    #[test]
+    fn datapath_serves_non_square_images() {
+        let chain = Chain::of(Preproc::Ds(32));
+        let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, Objective::Area);
+        let img = synthetic_photo(24, 10, 6); // 24 wide, 10 tall
+        let out = hw.exec(&[img.to_tensor()]).unwrap();
+        assert_eq!(out[0].shape, vec![10, 24], "shape must survive the round trip");
+        assert_eq!(out[0].data, gdf_filter(&img, &chain).to_tensor().data);
+        // arity and flat-non-square requests are structured errors
+        assert!(hw.exec(&[]).is_err());
+        assert!(hw.exec(&[Tensor::vector(vec![0; 15])]).is_err());
     }
 
     #[test]

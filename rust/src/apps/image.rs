@@ -4,10 +4,26 @@
 //! photo-like statistics — in particular the Gaussian-shaped histograms
 //! Figs. 1/5/7 rely on).
 
+use crate::catalog::Tensor;
 use crate::util::prng::Rng;
 use crate::util::stats;
+use anyhow::{anyhow, bail, Result};
 use std::io::Write as _;
 use std::path::Path;
+
+/// i32 tensor data → u8 pixels, with a clear error on out-of-range
+/// values (`what` names the offending tensor in the message).
+pub fn pixels_from_i32(data: &[i32], what: &str) -> Result<Vec<u8>> {
+    data.iter()
+        .map(|&v| {
+            if (0..=255).contains(&v) {
+                Ok(v as u8)
+            } else {
+                Err(anyhow!("{what}: value {v} outside the u8 pixel range"))
+            }
+        })
+        .collect()
+}
 
 /// 8-bit grayscale image, row-major.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -38,6 +54,43 @@ impl Image {
         let xc = x.clamp(0, self.width as isize - 1) as usize;
         let yc = y.clamp(0, self.height as isize - 1) as usize;
         self.get(xc, yc)
+    }
+
+    /// Build from a shape-carrying tensor: rank-2 `[height, width]`
+    /// (non-square images welcome), or a rank-1 tensor as a square
+    /// image — the legacy flat convention.
+    pub fn from_tensor(t: &Tensor, what: &str) -> Result<Image> {
+        let (height, width) = match t.shape.as_slice() {
+            [h, w] => (*h, *w),
+            [n] => {
+                let side = (*n as f64).sqrt().round() as usize;
+                if side * side != *n || *n == 0 {
+                    bail!(
+                        "{what}: flat tensor of {n} pixels is not square; \
+                         send shape [height, width] for non-square images"
+                    );
+                }
+                (side, side)
+            }
+            other => bail!("{what}: image tensors are [height, width], got shape {other:?}"),
+        };
+        if width * height != t.data.len() {
+            bail!(
+                "{what}: shape {:?} wants {} pixels, data has {}",
+                t.shape,
+                width * height,
+                t.data.len()
+            );
+        }
+        Ok(Image { width, height, pixels: pixels_from_i32(&t.data, what)? })
+    }
+
+    /// Shape-carrying `[height, width]` tensor of the pixels.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor {
+            shape: vec![self.height, self.width],
+            data: self.pixels.iter().map(|&p| p as i32).collect(),
+        }
     }
 
     /// Apply a per-pixel map.
@@ -188,6 +241,23 @@ mod tests {
         let noisy = add_gaussian_noise(&img, 10.0, 3);
         let psnr = img.psnr(&noisy);
         assert!(psnr > 20.0 && psnr < 35.0, "psnr={psnr}");
+    }
+
+    #[test]
+    fn tensor_round_trip_and_non_square() {
+        let img = synthetic_photo(24, 10, 3); // width 24, height 10
+        let t = img.to_tensor();
+        assert_eq!(t.shape, vec![10, 24]);
+        assert_eq!(Image::from_tensor(&t, "t").unwrap(), img);
+        // rank-1 square fallback (legacy flat convention)
+        let sq = synthetic_photo(8, 8, 4);
+        let flat = Tensor::vector(sq.pixels.iter().map(|&p| p as i32).collect());
+        assert_eq!(Image::from_tensor(&flat, "sq").unwrap(), sq);
+        // flat non-square is a structured error
+        assert!(Image::from_tensor(&Tensor::vector(vec![0; 240]), "bad").is_err());
+        // out-of-range pixel
+        let t2 = Tensor::matrix(1, 2, vec![0, 300]).unwrap();
+        assert!(Image::from_tensor(&t2, "px").is_err());
     }
 
     #[test]

@@ -1,0 +1,357 @@
+//! The typed model catalog — the single source of truth for what a PPC
+//! deployment serves.
+//!
+//! The paper's contract is that a PPC block is exact on a predefined
+//! care set, so a deployed system is really a *catalog* of
+//! (application, preprocessing-config) datapaths. This module makes
+//! that catalog first-class:
+//!
+//! - [`App`] × [`PpcConfig`] → [`ModelKey`]: one typed key used by the
+//!   router, the native registry, the CLI parser, and every display
+//!   path (it prints as the canonical `"{app}/{config}"` string).
+//! - [`Quality`]: the serving-time sparsity-tolerance knob; routing is
+//!   [`ModelKey::route`], the only place the (app, quality) → config
+//!   mapping exists.
+//! - [`Tensor`]: the shape-carrying request/response payload (so
+//!   non-square images survive the trip through the serving stack).
+//! - [`Datapath`]: the one trait every netlist-backed application
+//!   hardware implements, so executors hold a single
+//!   `BTreeMap<ModelKey, Box<dyn Datapath>>` instead of one map per
+//!   application.
+
+use crate::ppc::preprocess::{Chain, Preproc};
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+
+/// One of the paper's three embedded applications.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum App {
+    /// Gaussian denoising filter (Fig. 5 adder tree).
+    Gdf,
+    /// Image blending (Fig. 7 multiplier pair + adder).
+    Blend,
+    /// Face-recognition neural network (Fig. 10 MACs).
+    Frnn,
+}
+
+impl App {
+    pub const ALL: [App; 3] = [App::Gdf, App::Blend, App::Frnn];
+
+    /// Canonical lower-case name (the wire/CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            App::Gdf => "gdf",
+            App::Blend => "blend",
+            App::Frnn => "frnn",
+        }
+    }
+
+    /// Parse the canonical name.
+    pub fn parse(s: &str) -> Result<App> {
+        match s {
+            "gdf" => Ok(App::Gdf),
+            "blend" => Ok(App::Blend),
+            "frnn" => Ok(App::Frnn),
+            other => bail!("unknown app {other:?} (want gdf|blend|frnn)"),
+        }
+    }
+
+    /// The preprocessing configs this application ships with.
+    pub fn configs(self) -> &'static [PpcConfig] {
+        match self {
+            App::Gdf | App::Blend => &[PpcConfig::Conv, PpcConfig::Ds16, PpcConfig::Ds32],
+            App::Frnn => &[PpcConfig::Conv, PpcConfig::Th48Ds16, PpcConfig::Ds32],
+        }
+    }
+}
+
+impl fmt::Display for App {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A PPC preprocessing configuration — which intentional-sparsity
+/// chain the datapath was synthesized for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PpcConfig {
+    /// Conventional precise datapath (full-range care set).
+    Conv,
+    /// `DS_16` down-sampling on every preprocessed input.
+    Ds16,
+    /// `DS_32` down-sampling on every preprocessed input.
+    Ds32,
+    /// `TH_48^48 + DS_16` on the image input, `DS_16` on the weights
+    /// (the paper's Table-3 balanced FRNN row).
+    Th48Ds16,
+}
+
+impl PpcConfig {
+    pub const ALL: [PpcConfig; 4] =
+        [PpcConfig::Conv, PpcConfig::Ds16, PpcConfig::Ds32, PpcConfig::Th48Ds16];
+
+    /// Canonical lower-case name (the wire/CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            PpcConfig::Conv => "conv",
+            PpcConfig::Ds16 => "ds16",
+            PpcConfig::Ds32 => "ds32",
+            PpcConfig::Th48Ds16 => "th48ds16",
+        }
+    }
+
+    /// Parse the canonical name.
+    pub fn parse(s: &str) -> Result<PpcConfig> {
+        match s {
+            "conv" => Ok(PpcConfig::Conv),
+            "ds16" => Ok(PpcConfig::Ds16),
+            "ds32" => Ok(PpcConfig::Ds32),
+            "th48ds16" => Ok(PpcConfig::Th48Ds16),
+            other => bail!("unknown PPC config {other:?} (want conv|ds16|ds32|th48ds16)"),
+        }
+    }
+
+    /// Preprocessing chain applied to the primary (image/pixel) input.
+    pub fn chain(self) -> Chain {
+        match self {
+            PpcConfig::Conv => Chain::id(),
+            PpcConfig::Ds16 => Chain::of(Preproc::Ds(16)),
+            PpcConfig::Ds32 => Chain::of(Preproc::Ds(32)),
+            PpcConfig::Th48Ds16 => {
+                Chain::of(Preproc::Th { x: 48, y: 48 }).then(Preproc::Ds(16))
+            }
+        }
+    }
+
+    /// Preprocessing chain applied to the FRNN weight input (the
+    /// threshold half of `TH48+DS16` only applies to pixels).
+    pub fn weight_chain(self) -> Chain {
+        match self {
+            PpcConfig::Conv => Chain::id(),
+            PpcConfig::Ds16 | PpcConfig::Th48Ds16 => Chain::of(Preproc::Ds(16)),
+            PpcConfig::Ds32 => Chain::of(Preproc::Ds(32)),
+        }
+    }
+}
+
+impl fmt::Display for PpcConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Serving quality tier — the deployment's sparsity-tolerance knob.
+/// [`ModelKey::route`] maps it to the PPC configuration each
+/// application answers with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Quality {
+    /// Conventional precise datapath.
+    Precise,
+    /// Moderate sparsity (DS16-class; FRNN uses TH48+DS16).
+    Balanced,
+    /// Aggressive sparsity (DS32-class).
+    Economy,
+}
+
+/// The typed model key: which application datapath, synthesized for
+/// which preprocessing config. Displays as the canonical
+/// `"{app}/{config}"` string, and that string parses back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelKey {
+    pub app: App,
+    pub config: PpcConfig,
+}
+
+impl ModelKey {
+    /// Build a key, rejecting configs the application does not ship
+    /// (e.g. `th48ds16` only exists for the FRNN).
+    pub fn new(app: App, config: PpcConfig) -> Result<ModelKey> {
+        if !app.configs().contains(&config) {
+            bail!(
+                "config {config} is not in the {app} catalog (valid: {})",
+                join(app.configs().iter().map(|c| c.name()))
+            );
+        }
+        Ok(ModelKey { app, config })
+    }
+
+    /// Parse the canonical `"{app}/{config}"` spelling.
+    pub fn parse(s: &str) -> Result<ModelKey> {
+        let (app, config) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow!("model key {s:?} must be \"app/config\" (e.g. gdf/ds16)"))?;
+        ModelKey::new(App::parse(app)?, PpcConfig::parse(config)?)
+    }
+
+    /// The router: map (app, quality) to the serving config — the only
+    /// place this policy exists.
+    pub fn route(app: App, quality: Quality) -> ModelKey {
+        let config = match (app, quality) {
+            (_, Quality::Precise) => PpcConfig::Conv,
+            (App::Frnn, Quality::Balanced) => PpcConfig::Th48Ds16,
+            (_, Quality::Balanced) => PpcConfig::Ds16,
+            (_, Quality::Economy) => PpcConfig::Ds32,
+        };
+        ModelKey { app, config }
+    }
+
+    /// Every valid key, in catalog order (apps × their configs).
+    pub fn catalog() -> Vec<ModelKey> {
+        App::ALL
+            .iter()
+            .flat_map(|&app| app.configs().iter().map(move |&config| ModelKey { app, config }))
+            .collect()
+    }
+}
+
+impl fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.app, self.config)
+    }
+}
+
+/// Render a key list for error messages ("gdf/ds16, gdf/ds32, …").
+pub fn join<I: IntoIterator<Item = T>, T: fmt::Display>(keys: I) -> String {
+    let mut s = String::new();
+    for (i, k) in keys.into_iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&k.to_string());
+    }
+    if s.is_empty() {
+        s.push_str("(none)");
+    }
+    s
+}
+
+/// A shape-carrying i32 tensor — the one request/response payload of
+/// the serving stack. Shape is row-major; images are `[height, width]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl Tensor {
+    /// Build with a shape check (`∏shape == data.len()`).
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor> {
+        let elements: usize = shape.iter().product();
+        if elements != data.len() {
+            bail!(
+                "tensor shape {shape:?} wants {elements} elements, data has {}",
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// 1-D tensor over the data.
+    pub fn vector(data: Vec<i32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// 2-D row-major tensor (`rows` first — images are `[h, w]`).
+    pub fn matrix(rows: usize, cols: usize, data: Vec<i32>) -> Result<Tensor> {
+        Tensor::new(vec![rows, cols], data)
+    }
+
+    /// 0-D tensor holding one value.
+    pub fn scalar(v: i32) -> Tensor {
+        Tensor { shape: Vec::new(), data: vec![v] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A servable application datapath built from synthesized PPC
+/// netlists: one shape-carrying request in, shape-carrying responses
+/// out. [`crate::apps::gdf::GdfHardware`],
+/// [`crate::apps::blend::BlendHardware`] and
+/// [`crate::apps::frnn::hw::FrnnHardware`] all implement it, which is
+/// what lets the native registry hold every model in a single
+/// `BTreeMap<ModelKey, Box<dyn Datapath>>`.
+pub trait Datapath: Send {
+    /// Execute one request. Implementations validate arity, shapes and
+    /// value ranges and return structured errors.
+    fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Total mapped-gate count across the datapath's netlists.
+    fn num_gates(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_round_trip_through_display() {
+        for key in ModelKey::catalog() {
+            let back = ModelKey::parse(&key.to_string()).unwrap();
+            assert_eq!(back, key);
+        }
+        assert_eq!(ModelKey::catalog().len(), 9);
+    }
+
+    #[test]
+    fn invalid_combinations_are_rejected() {
+        assert!(ModelKey::parse("gdf/th48ds16").is_err());
+        assert!(ModelKey::parse("frnn/ds16").is_err());
+        assert!(ModelKey::parse("nope/conv").is_err());
+        assert!(ModelKey::parse("gdf/np").is_err());
+        assert!(ModelKey::parse("gdfds16").is_err());
+        let e = ModelKey::parse("gdf/th48ds16").unwrap_err();
+        assert!(format!("{e}").contains("valid: conv, ds16, ds32"), "{e}");
+    }
+
+    #[test]
+    fn routing_matches_the_quality_policy() {
+        let mk = |s: &str| ModelKey::parse(s).unwrap();
+        assert_eq!(ModelKey::route(App::Gdf, Quality::Precise), mk("gdf/conv"));
+        assert_eq!(ModelKey::route(App::Gdf, Quality::Balanced), mk("gdf/ds16"));
+        assert_eq!(ModelKey::route(App::Blend, Quality::Economy), mk("blend/ds32"));
+        assert_eq!(ModelKey::route(App::Frnn, Quality::Balanced), mk("frnn/th48ds16"));
+        assert_eq!(ModelKey::route(App::Frnn, Quality::Economy), mk("frnn/ds32"));
+        // every routed key is in the catalog
+        for &app in &App::ALL {
+            for q in [Quality::Precise, Quality::Balanced, Quality::Economy] {
+                let key = ModelKey::route(app, q);
+                assert!(ModelKey::catalog().contains(&key), "{key} not in catalog");
+            }
+        }
+    }
+
+    #[test]
+    fn config_chains_match_the_paper_labels() {
+        assert_eq!(PpcConfig::Conv.chain().label(), "none");
+        assert_eq!(PpcConfig::Ds16.chain().label(), "DS16");
+        assert_eq!(PpcConfig::Th48Ds16.chain().label(), "TH48^48+DS16");
+        assert_eq!(PpcConfig::Th48Ds16.weight_chain().label(), "DS16");
+        assert_eq!(PpcConfig::Ds32.weight_chain().label(), "DS32");
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0; 5]).is_err());
+        let t = Tensor::vector(vec![1, 2, 3]);
+        assert_eq!(t.shape, vec![3]);
+        assert_eq!(t.rank(), 1);
+        assert_eq!(t.elements(), 3);
+        let s = Tensor::scalar(7);
+        assert_eq!(s.elements(), 1);
+        assert_eq!(s.data, vec![7]);
+    }
+
+    #[test]
+    fn join_renders_lists() {
+        assert_eq!(join(ModelKey::catalog().iter().take(2)), "gdf/conv, gdf/ds16");
+        assert_eq!(join(Vec::<ModelKey>::new()), "(none)");
+    }
+}

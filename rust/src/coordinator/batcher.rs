@@ -1,11 +1,12 @@
 //! Dynamic batcher for classification requests.
 //!
-//! The FRNN artifact has a fixed batch dimension (the AOT shape), so the
-//! batcher collects single-face requests per route, flushes when the
-//! batch fills or the oldest request exceeds `max_wait`, pads short
-//! batches, and scatters the per-row outputs back to their reply
+//! The FRNN datapath has a fixed batch dimension (the AOT shape), so
+//! the batcher collects single-face requests per [`ModelKey`], flushes
+//! when the batch fills or the oldest request exceeds `max_wait`, pads
+//! short batches, and scatters the per-row outputs back to their reply
 //! channels.
 
+use crate::catalog::ModelKey;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -17,12 +18,12 @@ pub struct Pending<R> {
     pub enqueued: Instant,
 }
 
-/// Per-route batch queues.
+/// Per-model batch queues.
 pub struct Batcher<R> {
     pub batch_size: usize,
     pub row_len: usize,
     pub max_wait: Duration,
-    queues: BTreeMap<String, Vec<Pending<R>>>,
+    queues: BTreeMap<ModelKey, Vec<Pending<R>>>,
 }
 
 impl<R> Batcher<R> {
@@ -30,24 +31,24 @@ impl<R> Batcher<R> {
         Batcher { batch_size, row_len, max_wait, queues: BTreeMap::new() }
     }
 
-    pub fn push(&mut self, route: &str, p: Pending<R>) {
+    pub fn push(&mut self, key: ModelKey, p: Pending<R>) {
         debug_assert_eq!(p.input.len(), self.row_len);
-        self.queues.entry(route.to_string()).or_default().push(p);
+        self.queues.entry(key).or_default().push(p);
     }
 
     pub fn queued(&self) -> usize {
         self.queues.values().map(|q| q.len()).sum()
     }
 
-    /// Routes that must flush now (full batch or deadline exceeded).
-    pub fn due(&self, now: Instant) -> Vec<String> {
+    /// Models that must flush now (full batch or deadline exceeded).
+    pub fn due(&self, now: Instant) -> Vec<ModelKey> {
         self.queues
             .iter()
             .filter(|(_, q)| {
                 q.len() >= self.batch_size
                     || q.first().map_or(false, |p| now.duration_since(p.enqueued) >= self.max_wait)
             })
-            .map(|(k, _)| k.clone())
+            .map(|(&k, _)| k)
             .collect()
     }
 
@@ -59,14 +60,14 @@ impl<R> Batcher<R> {
             .min()
     }
 
-    /// Remove up to `batch_size` requests for a route and build the
+    /// Remove up to `batch_size` requests for a model and build the
     /// padded batch tensor. Returns (pending requests, flat batch).
-    pub fn take_batch(&mut self, route: &str) -> (Vec<Pending<R>>, Vec<i32>) {
-        let q = self.queues.get_mut(route).expect("route exists");
+    pub fn take_batch(&mut self, key: ModelKey) -> (Vec<Pending<R>>, Vec<i32>) {
+        let q = self.queues.get_mut(&key).expect("model queue exists");
         let n = q.len().min(self.batch_size);
         let taken: Vec<Pending<R>> = q.drain(..n).collect();
         if q.is_empty() {
-            self.queues.remove(route);
+            self.queues.remove(&key);
         }
         let mut flat = Vec::with_capacity(self.batch_size * self.row_len);
         for p in &taken {
@@ -81,6 +82,10 @@ impl<R> Batcher<R> {
 mod tests {
     use super::*;
 
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
+    }
+
     fn pending(v: i32) -> (Pending<Vec<i32>>, mpsc::Receiver<Vec<i32>>) {
         let (tx, rx) = mpsc::channel();
         (Pending { input: vec![v, v], reply: tx, enqueued: Instant::now() }, rx)
@@ -91,11 +96,11 @@ mod tests {
         let mut b: Batcher<Vec<i32>> = Batcher::new(2, 2, Duration::from_secs(10));
         let (p1, _r1) = pending(1);
         let (p2, _r2) = pending(2);
-        b.push("frnn/conv", p1);
+        b.push(mk("frnn/conv"), p1);
         assert!(b.due(Instant::now()).is_empty());
-        b.push("frnn/conv", p2);
-        assert_eq!(b.due(Instant::now()), vec!["frnn/conv"]);
-        let (taken, flat) = b.take_batch("frnn/conv");
+        b.push(mk("frnn/conv"), p2);
+        assert_eq!(b.due(Instant::now()), vec![mk("frnn/conv")]);
+        let (taken, flat) = b.take_batch(mk("frnn/conv"));
         assert_eq!(taken.len(), 2);
         assert_eq!(flat, vec![1, 1, 2, 2]);
         assert_eq!(b.queued(), 0);
@@ -105,11 +110,10 @@ mod tests {
     fn flushes_on_deadline() {
         let mut b: Batcher<Vec<i32>> = Batcher::new(8, 2, Duration::from_millis(1));
         let (p1, _r1) = pending(7);
-        b.push("frnn/ds32", p1);
-        assert!(b.due(Instant::now()).is_empty() || true);
+        b.push(mk("frnn/ds32"), p1);
         std::thread::sleep(Duration::from_millis(3));
-        assert_eq!(b.due(Instant::now()), vec!["frnn/ds32"]);
-        let (taken, flat) = b.take_batch("frnn/ds32");
+        assert_eq!(b.due(Instant::now()), vec![mk("frnn/ds32")]);
+        let (taken, flat) = b.take_batch(mk("frnn/ds32"));
         assert_eq!(taken.len(), 1);
         // padded to batch 8 × row 2
         assert_eq!(flat.len(), 16);
@@ -118,12 +122,12 @@ mod tests {
     }
 
     #[test]
-    fn separate_routes_batch_separately() {
+    fn separate_models_batch_separately() {
         let mut b: Batcher<Vec<i32>> = Batcher::new(2, 2, Duration::from_secs(10));
         let (p1, _r1) = pending(1);
         let (p2, _r2) = pending(2);
-        b.push("frnn/conv", p1);
-        b.push("frnn/ds32", p2);
+        b.push(mk("frnn/conv"), p1);
+        b.push(mk("frnn/ds32"), p2);
         assert!(b.due(Instant::now()).is_empty());
         assert_eq!(b.queued(), 2);
     }
@@ -133,10 +137,10 @@ mod tests {
         let mut b: Batcher<Vec<i32>> = Batcher::new(8, 2, Duration::from_millis(50));
         assert!(b.next_deadline().is_none());
         let (p1, _r1) = pending(1);
-        b.push("a", p1);
+        b.push(mk("frnn/conv"), p1);
         std::thread::sleep(Duration::from_millis(2));
         let (p2, _r2) = pending(2);
-        b.push("b", p2);
+        b.push(mk("frnn/th48ds16"), p2);
         let d = b.next_deadline().unwrap();
         assert!(d <= Instant::now() + Duration::from_millis(50));
     }

@@ -3,82 +3,112 @@
 //! [`Engine::spawn`] takes a *factory* closure that constructs the
 //! executor on the engine thread itself; other threads talk to it
 //! through an mpsc command channel. [`Executor`] abstracts the runtime
-//! so coordinator logic is testable without artifacts
-//! ([`MockExecutor`]).
+//! — typed [`ModelKey`] in, shape-carrying [`Tensor`]s through — so
+//! coordinator logic is testable without artifacts ([`MockExecutor`]).
 
+use crate::catalog::{self, App, ModelKey, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-/// Anything that can execute a named artifact on i32 tensors.
+/// Anything that can execute a cataloged model on shape-carrying i32
+/// tensors.
 pub trait Executor {
-    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>>;
-    /// Known artifact keys (for router validation).
-    fn keys(&self) -> Vec<String>;
+    fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+    /// Registered model keys (for router validation / `--list-models`).
+    fn keys(&self) -> Vec<ModelKey>;
 }
 
 impl Executor for crate::runtime::Runtime {
-    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        self.exec_i32(key, inputs)
+    fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
+        let route = key.to_string();
+        let outputs = self.exec_i32(&route, &refs)?;
+        // artifact manifests carry output shapes; fall back to flat
+        let shapes: Vec<Vec<usize>> = self
+            .meta(&route)
+            .map(|m| m.outputs.iter().map(|p| p.dims.clone()).collect())
+            .unwrap_or_default();
+        Ok(outputs
+            .into_iter()
+            .enumerate()
+            .map(|(k, data)| match shapes.get(k) {
+                Some(dims) if dims.iter().product::<usize>() == data.len() => {
+                    Tensor { shape: dims.clone(), data }
+                }
+                _ => Tensor::vector(data),
+            })
+            .collect())
     }
-    fn keys(&self) -> Vec<String> {
-        self.keys()
+
+    fn keys(&self) -> Vec<ModelKey> {
+        crate::runtime::Runtime::keys(self)
+            .iter()
+            .filter_map(|s| ModelKey::parse(s).ok())
+            .collect()
     }
 }
 
 /// Deterministic stand-in executor for coordinator tests: echoes inputs
-/// through simple integer transforms per app.
+/// through simple integer transforms per app, preserving shapes.
 pub struct MockExecutor {
-    pub keys: Vec<String>,
+    pub keys: Vec<ModelKey>,
     /// artificial per-exec latency (for batching tests)
     pub delay: std::time::Duration,
 }
 
 impl MockExecutor {
-    pub fn new(keys: &[&str]) -> MockExecutor {
-        MockExecutor {
-            keys: keys.iter().map(|s| s.to_string()).collect(),
-            delay: std::time::Duration::ZERO,
-        }
+    pub fn new(keys: &[ModelKey]) -> MockExecutor {
+        MockExecutor { keys: keys.to_vec(), delay: std::time::Duration::ZERO }
+    }
+
+    /// A mock registered for the entire 9-key catalog.
+    pub fn full_catalog() -> MockExecutor {
+        MockExecutor::new(&ModelKey::catalog())
     }
 }
 
 impl Executor for MockExecutor {
-    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        if !self.keys.iter().any(|k| k == key) {
-            return Err(anyhow!("unknown key {key}"));
+    fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if !self.keys.contains(&key) {
+            return Err(anyhow!(
+                "unknown model {key}; available models: [{}]",
+                catalog::join(self.keys.iter())
+            ));
         }
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
         // denoise/classify: halve every element; blend: average inputs
-        if key.starts_with("blend") {
-            let out: Vec<i32> = inputs[0]
+        let data: Vec<i32> = if key.app == App::Blend {
+            inputs[0]
+                .data
                 .iter()
-                .zip(inputs[1])
+                .zip(&inputs[1].data)
                 .map(|(&a, &b)| (a + b) / 2)
-                .collect();
-            Ok(vec![out])
+                .collect()
         } else {
-            Ok(vec![inputs[0].iter().map(|&v| v / 2).collect()])
-        }
+            inputs[0].data.iter().map(|&v| v / 2).collect()
+        };
+        Ok(vec![Tensor { shape: inputs[0].shape.clone(), data }])
     }
-    fn keys(&self) -> Vec<String> {
+
+    fn keys(&self) -> Vec<ModelKey> {
         self.keys.clone()
     }
 }
 
 /// Command executed on the engine thread.
 pub struct ExecRequest {
-    pub key: String,
-    pub inputs: Vec<Vec<i32>>,
-    pub reply: mpsc::Sender<Result<Vec<Vec<i32>>>>,
+    pub key: ModelKey,
+    pub inputs: Vec<Tensor>,
+    pub reply: mpsc::Sender<Result<Vec<Tensor>>>,
 }
 
 enum Cmd {
     Exec(ExecRequest),
-    Keys(mpsc::Sender<Vec<String>>),
+    Keys(mpsc::Sender<Vec<ModelKey>>),
     Shutdown,
 }
 
@@ -112,15 +142,13 @@ impl Engine {
                         return;
                     }
                 };
-                // simple executable-key cache of exec counts (metrics can
-                // be derived by the server; kept here for debugging)
-                let mut counts: HashMap<String, u64> = HashMap::new();
+                // per-model exec counts (metrics can be derived by the
+                // server; kept here for debugging)
+                let mut counts: HashMap<ModelKey, u64> = HashMap::new();
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::Exec(req) => {
-                            let refs: Vec<&[i32]> =
-                                req.inputs.iter().map(|v| v.as_slice()).collect();
-                            let result = executor.exec(&req.key, &refs);
+                            let result = executor.exec(req.key, &req.inputs);
                             *counts.entry(req.key).or_default() += 1;
                             let _ = req.reply.send(result);
                         }
@@ -139,10 +167,10 @@ impl Engine {
 
     /// Execute synchronously (blocks the calling thread, not the engine
     /// queue — other callers' requests are serialized behind it).
-    pub fn exec(&self, key: &str, inputs: Vec<Vec<i32>>) -> Result<Vec<Vec<i32>>> {
+    pub fn exec(&self, key: ModelKey, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Cmd::Exec(ExecRequest { key: key.to_string(), inputs, reply }))
+            .send(Cmd::Exec(ExecRequest { key, inputs, reply }))
             .map_err(|_| anyhow!("engine is down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
@@ -150,16 +178,16 @@ impl Engine {
     /// Fire an async execution; the reply lands on `reply`.
     pub fn exec_async(
         &self,
-        key: &str,
-        inputs: Vec<Vec<i32>>,
-        reply: mpsc::Sender<Result<Vec<Vec<i32>>>>,
+        key: ModelKey,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
     ) -> Result<()> {
         self.tx
-            .send(Cmd::Exec(ExecRequest { key: key.to_string(), inputs, reply }))
+            .send(Cmd::Exec(ExecRequest { key, inputs, reply }))
             .map_err(|_| anyhow!("engine is down"))
     }
 
-    pub fn keys(&self) -> Result<Vec<String>> {
+    pub fn keys(&self) -> Result<Vec<ModelKey>> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Cmd::Keys(tx)).map_err(|_| anyhow!("engine is down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))
@@ -179,18 +207,30 @@ impl Drop for Engine {
 mod tests {
     use super::*;
 
-    #[test]
-    fn spawn_exec_shutdown() {
-        let engine = Engine::spawn(|| Ok(MockExecutor::new(&["gdf/conv"]))).unwrap();
-        let out = engine.exec("gdf/conv", vec![vec![10, 20, 30]]).unwrap();
-        assert_eq!(out, vec![vec![5, 10, 15]]);
-        assert_eq!(engine.keys().unwrap(), vec!["gdf/conv"]);
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
     }
 
     #[test]
-    fn unknown_key_errors() {
-        let engine = Engine::spawn(|| Ok(MockExecutor::new(&["gdf/conv"]))).unwrap();
-        assert!(engine.exec("nope", vec![vec![1]]).is_err());
+    fn spawn_exec_shutdown() {
+        let engine = Engine::spawn(|| Ok(MockExecutor::new(&[mk("gdf/conv")]))).unwrap();
+        let out = engine
+            .exec(mk("gdf/conv"), vec![Tensor::vector(vec![10, 20, 30])])
+            .unwrap();
+        assert_eq!(out[0].data, vec![5, 10, 15]);
+        assert_eq!(out[0].shape, vec![3]);
+        assert_eq!(engine.keys().unwrap(), vec![mk("gdf/conv")]);
+    }
+
+    #[test]
+    fn unknown_key_errors_list_the_catalog() {
+        let engine = Engine::spawn(|| Ok(MockExecutor::new(&[mk("gdf/conv")]))).unwrap();
+        let e = engine
+            .exec(mk("frnn/conv"), vec![Tensor::vector(vec![1])])
+            .unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("unknown model frnn/conv"), "{msg}");
+        assert!(msg.contains("available models: [gdf/conv]"), "{msg}");
     }
 
     #[test]
@@ -201,14 +241,17 @@ mod tests {
 
     #[test]
     fn concurrent_callers_serialize() {
-        let engine =
-            std::sync::Arc::new(Engine::spawn(|| Ok(MockExecutor::new(&["frnn/conv"]))).unwrap());
+        let engine = std::sync::Arc::new(
+            Engine::spawn(|| Ok(MockExecutor::new(&[mk("frnn/conv")]))).unwrap(),
+        );
         let mut handles = Vec::new();
         for t in 0..8 {
             let e = engine.clone();
             handles.push(std::thread::spawn(move || {
-                let out = e.exec("frnn/conv", vec![vec![t * 2]]).unwrap();
-                assert_eq!(out[0][0], t);
+                let out = e
+                    .exec(mk("frnn/conv"), vec![Tensor::vector(vec![t * 2])])
+                    .unwrap();
+                assert_eq!(out[0].data[0], t);
             }));
         }
         for h in handles {

@@ -6,28 +6,40 @@
 //! L3 is the serving harness a deployed PPC system would ship with):
 //!
 //! ```text
-//!   clients ──submit()──► bounded queue ──► engine thread (owns the executor)
-//!                              │                   │
-//!                         backpressure      router: (job, quality) → model key
-//!                                                   │
-//!                                            dynamic batcher (classify)
-//!                                                   │
-//!                                    Executor::exec → reply channels
-//!                                    (NativeExecutor | PJRT Runtime)
+//!   clients ──submit(Job, Quality)──► bounded queue ──► dispatcher
+//!                  │                                        │
+//!             backpressure            ModelKey::route(app, quality)
+//!                                     (the one typed catalog key)
+//!                                                │
+//!                                     dynamic batcher (classify,
+//!                                     queued per ModelKey)
+//!                                                │
+//!                            engine thread (owns the executor)
+//!                            Executor::exec(ModelKey, &[Tensor])
+//!                            (NativeExecutor | PJRT Runtime | mock)
 //! ```
+//!
+//! Everything between a request and its datapath is typed: the router
+//! produces a [`crate::catalog::ModelKey`], the batcher queues per
+//! `ModelKey`, the engine executes by `ModelKey`, and the [`Response`]
+//! carries the key back to the caller. Payloads are shape-carrying
+//! [`crate::catalog::Tensor`]s, so non-square images flow end to end;
+//! unknown keys come back as structured errors listing the registered
+//! catalog.
 //!
 //! The engine thread owns the executor exclusively (the `xla` crate's
 //! client is not `Send`; the native executor simply doesn't need
 //! sharing); requests and replies cross threads over `std::sync::mpsc`
-//! channels. Quality routing maps each request to a PPC configuration —
-//! the serving-time analogue of choosing how much sparsity a deployment
-//! tolerates.
+//! channels. [`Quality`] routing maps each request to a PPC
+//! configuration — the serving-time analogue of choosing how much
+//! sparsity a deployment tolerates.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
+pub use crate::catalog::{App, ModelKey, PpcConfig, Quality, Tensor};
 pub use engine::{Engine, Executor, MockExecutor};
 pub use metrics::Metrics;
-pub use server::{Coordinator, CoordinatorConfig, Job, Quality, Response, SubmitError};
+pub use server::{Coordinator, CoordinatorConfig, Job, Response, SubmitError};

@@ -1,43 +1,40 @@
 //! The coordinator: request routing, quality policy, backpressure,
 //! dynamic batching, metrics — in front of the engine thread.
+//!
+//! Routing is fully typed: a [`Job`] names its [`App`], the request's
+//! [`Quality`] picks the [`crate::catalog::PpcConfig`] through
+//! [`ModelKey::route`], and that one [`ModelKey`] travels unchanged
+//! through the batcher, the engine and the response — the same key the
+//! registry was populated under, so there is no string matching
+//! anywhere between a request and its datapath.
 
 use super::batcher::{Batcher, Pending};
 use super::engine::{Engine, Executor};
 use super::metrics::Metrics;
+use crate::catalog::{App, ModelKey, Quality, Tensor};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// Serving quality tier — the deployment's sparsity-tolerance knob.
-/// Maps to the PPC configuration baked into each artifact.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Quality {
-    /// Conventional precise datapath.
-    Precise,
-    /// Moderate sparsity (DS16-class; FRNN uses TH48+DS16).
-    Balanced,
-    /// Aggressive sparsity (DS32-class).
-    Economy,
-}
-
 /// A unit of work.
 #[derive(Clone, Debug)]
 pub enum Job {
-    /// Gaussian-denoise an image (flat i32 pixels, artifact shape).
-    Denoise { image: Vec<i32> },
-    /// Blend two images with quantized alpha in [0, 127].
-    Blend { p1: Vec<i32>, p2: Vec<i32>, alpha: i32 },
-    /// Classify one face (960 pixels).
+    /// Gaussian-denoise an image (`[h, w]` tensor; non-square welcome).
+    Denoise { image: Tensor },
+    /// Blend two shape-identical images with quantized alpha in [0, 127].
+    Blend { p1: Tensor, p2: Tensor, alpha: i32 },
+    /// Classify one face (one 960-pixel row; the batcher builds the
+    /// `[batch, 960]` tensor).
     Classify { pixels: Vec<i32> },
 }
 
 impl Job {
-    fn app(&self) -> &'static str {
+    fn app(&self) -> App {
         match self {
-            Job::Denoise { .. } => "gdf",
-            Job::Blend { .. } => "blend",
-            Job::Classify { .. } => "frnn",
+            Job::Denoise { .. } => App::Gdf,
+            Job::Blend { .. } => App::Blend,
+            Job::Classify { .. } => App::Frnn,
         }
     }
 }
@@ -45,8 +42,9 @@ impl Job {
 /// Completed result.
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub outputs: Vec<Vec<i32>>,
-    pub route: String,
+    pub outputs: Vec<Tensor>,
+    /// The catalog key that served the request.
+    pub route: ModelKey,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,7 +60,7 @@ pub enum SubmitError {
 pub struct CoordinatorConfig {
     /// Bounded submit queue (backpressure boundary).
     pub queue_capacity: usize,
-    /// FRNN artifact batch dimension.
+    /// FRNN batch dimension.
     pub batch_size: usize,
     /// FRNN input row length.
     pub classify_row: usize,
@@ -78,16 +76,6 @@ impl Default for CoordinatorConfig {
             classify_row: 960,
             batch_max_wait: Duration::from_millis(2),
         }
-    }
-}
-
-/// Map (app, quality) to the artifact config name.
-pub fn route_config(app: &str, q: Quality) -> &'static str {
-    match (app, q) {
-        (_, Quality::Precise) => "conv",
-        ("frnn", Quality::Balanced) => "th48ds16",
-        (_, Quality::Balanced) => "ds16",
-        (_, Quality::Economy) => "ds32",
     }
 }
 
@@ -151,8 +139,8 @@ impl Coordinator {
 
     /// Start over the native netlist backend: the synthesized PPC
     /// blocks are the execution engine, no XLA/Python anywhere on the
-    /// path. Build the executor (and pay its synthesis time) before the
-    /// coordinator threads spin up.
+    /// path. Build the executor (and pay its synthesis or cache-load
+    /// time) before the coordinator threads spin up.
     pub fn with_native(
         config: CoordinatorConfig,
         executor: crate::runtime::NativeExecutor,
@@ -240,9 +228,9 @@ fn dispatch_loop(
         flush_due(&engine, &mut batcher, &metrics);
     }
     // drain remaining batches before exit
-    let routes: Vec<String> = batcher.due(Instant::now() + Duration::from_secs(3600));
-    for route in routes {
-        flush_route(&engine, &mut batcher, &metrics, &route);
+    let keys: Vec<ModelKey> = batcher.due(Instant::now() + Duration::from_secs(3600));
+    for key in keys {
+        flush_model(&engine, &mut batcher, &metrics, key);
     }
     down.store(true, Ordering::Relaxed);
 }
@@ -254,29 +242,27 @@ fn handle_item(
     metrics: &Metrics,
     item: WorkItem,
 ) {
-    let app = item.job.app();
-    let route = format!("{}/{}", app, route_config(app, item.quality));
+    let key = ModelKey::route(item.job.app(), item.quality);
     match item.job {
         Job::Denoise { image } => {
-            let result = engine.exec(&route, vec![image]).map(|outputs| Response {
-                outputs,
-                route: route.clone(),
-            });
+            let result = engine
+                .exec(key, vec![image])
+                .map(|outputs| Response { outputs, route: key });
             if result.is_err() {
                 metrics.record_error();
             } else {
-                metrics.record_latency(&route, item.submitted.elapsed());
+                metrics.record_latency(&key.to_string(), item.submitted.elapsed());
             }
             let _ = item.reply.send(result);
         }
         Job::Blend { p1, p2, alpha } => {
             let result = engine
-                .exec(&route, vec![p1, p2, vec![alpha]])
-                .map(|outputs| Response { outputs, route: route.clone() });
+                .exec(key, vec![p1, p2, Tensor::scalar(alpha)])
+                .map(|outputs| Response { outputs, route: key });
             if result.is_err() {
                 metrics.record_error();
             } else {
-                metrics.record_latency(&route, item.submitted.elapsed());
+                metrics.record_latency(&key.to_string(), item.submitted.elapsed());
             }
             let _ = item.reply.send(result);
         }
@@ -289,7 +275,7 @@ fn handle_item(
                 return;
             }
             batcher.push(
-                &route,
+                key,
                 Pending { input: pixels, reply: item.reply, enqueued: item.submitted },
             );
         }
@@ -297,35 +283,39 @@ fn handle_item(
 }
 
 fn flush_due(engine: &Engine, batcher: &mut Batcher<Result<Response>>, metrics: &Metrics) {
-    for route in batcher.due(Instant::now()) {
-        flush_route(engine, batcher, metrics, &route);
+    for key in batcher.due(Instant::now()) {
+        flush_model(engine, batcher, metrics, key);
     }
 }
 
-fn flush_route(
+fn flush_model(
     engine: &Engine,
     batcher: &mut Batcher<Result<Response>>,
     metrics: &Metrics,
-    route: &str,
+    key: ModelKey,
 ) {
-    let (pendings, flat) = batcher.take_batch(route);
+    let (pendings, flat) = batcher.take_batch(key);
     if pendings.is_empty() {
         return;
     }
     metrics.record_batch(pendings.len());
-    match engine.exec(route, vec![flat]) {
+    let rows = batcher.batch_size;
+    let batch = Tensor { shape: vec![rows, batcher.row_len], data: flat };
+    match engine.exec(key, vec![batch]) {
         Ok(outputs) => {
-            // outputs[0] is (batch, out_row) flattened; scatter rows
-            let total = outputs[0].len();
-            let rows = batcher.batch_size;
-            let out_row = total / rows;
+            // outputs[0] is [batch, out_row]; scatter rows back
+            let out = &outputs[0];
+            let out_row = if out.shape.len() == 2 {
+                out.shape[1]
+            } else {
+                out.data.len() / rows
+            };
             for (i, p) in pendings.into_iter().enumerate() {
-                let row = outputs[0][i * out_row..(i + 1) * out_row].to_vec();
-                metrics.record_latency(route, p.enqueued.elapsed());
-                let _ = p.reply.send(Ok(Response {
-                    outputs: vec![row],
-                    route: route.to_string(),
-                }));
+                let row = out.data[i * out_row..(i + 1) * out_row].to_vec();
+                metrics.record_latency(&key.to_string(), p.enqueued.elapsed());
+                let _ = p
+                    .reply
+                    .send(Ok(Response { outputs: vec![Tensor::vector(row)], route: key }));
             }
         }
         Err(e) => {
@@ -343,6 +333,10 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::MockExecutor;
 
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
+    }
+
     fn mock_coordinator(capacity: usize, delay_ms: u64) -> Coordinator {
         let cfg = CoordinatorConfig {
             queue_capacity: capacity,
@@ -351,11 +345,7 @@ mod tests {
             batch_max_wait: Duration::from_millis(2),
         };
         Coordinator::start(cfg, move || {
-            let mut m = MockExecutor::new(&[
-                "gdf/conv", "gdf/ds16", "gdf/ds32",
-                "blend/conv", "blend/ds16", "blend/ds32",
-                "frnn/conv", "frnn/th48ds16", "frnn/ds32",
-            ]);
+            let mut m = MockExecutor::full_catalog();
             m.delay = Duration::from_millis(delay_ms);
             Ok(m)
         })
@@ -366,12 +356,27 @@ mod tests {
     fn denoise_round_trip() {
         let c = mock_coordinator(8, 0);
         let t = c
-            .submit(Job::Denoise { image: vec![10, 20, 30, 40] }, Quality::Balanced)
+            .submit(
+                Job::Denoise { image: Tensor::vector(vec![10, 20, 30, 40]) },
+                Quality::Balanced,
+            )
             .unwrap();
         let r = t.wait().unwrap();
-        assert_eq!(r.route, "gdf/ds16");
-        assert_eq!(r.outputs[0], vec![5, 10, 15, 20]);
+        assert_eq!(r.route, mk("gdf/ds16"));
+        assert_eq!(r.outputs[0].data, vec![5, 10, 15, 20]);
         assert_eq!(c.metrics().completed(), 1);
+    }
+
+    #[test]
+    fn denoise_keeps_request_shape() {
+        // shape-carrying tensors survive the round trip (non-square)
+        let c = mock_coordinator(8, 0);
+        let img = Tensor::matrix(2, 3, vec![2, 4, 6, 8, 10, 12]).unwrap();
+        let t = c.submit(Job::Denoise { image: img }, Quality::Precise).unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.route, mk("gdf/conv"));
+        assert_eq!(r.outputs[0].shape, vec![2, 3]);
+        assert_eq!(r.outputs[0].data, vec![1, 2, 3, 4, 5, 6]);
     }
 
     #[test]
@@ -379,13 +384,17 @@ mod tests {
         let c = mock_coordinator(8, 0);
         let t = c
             .submit(
-                Job::Blend { p1: vec![10, 20], p2: vec![30, 40], alpha: 64 },
+                Job::Blend {
+                    p1: Tensor::vector(vec![10, 20]),
+                    p2: Tensor::vector(vec![30, 40]),
+                    alpha: 64,
+                },
                 Quality::Economy,
             )
             .unwrap();
         let r = t.wait().unwrap();
-        assert_eq!(r.route, "blend/ds32");
-        assert_eq!(r.outputs[0], vec![20, 30]);
+        assert_eq!(r.route, mk("blend/ds32"));
+        assert_eq!(r.outputs[0].data, vec![20, 30]);
     }
 
     #[test]
@@ -398,8 +407,8 @@ mod tests {
             .collect();
         for (i, t) in tickets.into_iter().enumerate() {
             let r = t.wait().unwrap();
-            assert_eq!(r.route, "frnn/conv");
-            assert_eq!(r.outputs[0], vec![i as i32; 8]);
+            assert_eq!(r.route, mk("frnn/conv"));
+            assert_eq!(r.outputs[0].data, vec![i as i32; 8]);
         }
         assert!(c.metrics().mean_batch_size() >= 1.0);
     }
@@ -409,18 +418,20 @@ mod tests {
         let c = mock_coordinator(8, 0);
         let t = c.submit(Job::Classify { pixels: vec![6; 8] }, Quality::Balanced).unwrap();
         let r = t.wait_timeout(Duration::from_secs(2)).unwrap();
-        assert_eq!(r.route, "frnn/th48ds16");
-        assert_eq!(r.outputs[0], vec![3; 8]);
+        assert_eq!(r.route, mk("frnn/th48ds16"));
+        assert_eq!(r.outputs[0].data, vec![3; 8]);
     }
 
     #[test]
     fn backpressure_rejects_when_full() {
         // slow engine + tiny queue → Busy
         let c = mock_coordinator(1, 30);
-        let _t1 = c.submit(Job::Denoise { image: vec![1] }, Quality::Precise).unwrap();
+        let _t1 = c
+            .submit(Job::Denoise { image: Tensor::vector(vec![1]) }, Quality::Precise)
+            .unwrap();
         let mut saw_busy = false;
         for _ in 0..50 {
-            match c.submit(Job::Denoise { image: vec![1] }, Quality::Precise) {
+            match c.submit(Job::Denoise { image: Tensor::vector(vec![1]) }, Quality::Precise) {
                 Err(SubmitError::Busy) => {
                     saw_busy = true;
                     break;

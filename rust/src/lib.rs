@@ -19,10 +19,14 @@
 //!   blending, face-recognition NN) in bit-accurate fixed point, each
 //!   with a netlist-backed hardware simulator that is bit-exact with
 //!   the arithmetic path,
+//! - [`catalog`] — the typed model catalog (`ModelKey`, shape-carrying
+//!   `Tensor`s, the `Datapath` trait) that routing, registration and
+//!   CLI parsing all share,
 //! - [`runtime`] + [`coordinator`] — the serving stack behind the
 //!   `Executor` trait, with two backends: the default **native**
 //!   backend executes the synthesized PPC netlists themselves
-//!   (bit-parallel, fully offline — no Python or XLA anywhere), and
+//!   (bit-parallel, fully offline — no Python or XLA anywhere, with a
+//!   persistent BLIF netlist cache for instant cold starts), and
 //!   the `pjrt` cargo feature adds the AOT-compiled JAX/Pallas
 //!   artifact path,
 //! - [`util`] — offline-friendly stand-ins for rand/serde/rayon/clap/
@@ -36,6 +40,7 @@
 //! | `cargo build --features pjrt` | native + PJRT artifacts | none (needs the vendored `xla` crate on disk) |
 
 pub mod apps;
+pub mod catalog;
 pub mod coordinator;
 pub mod logic;
 pub mod ppc;

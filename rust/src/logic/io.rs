@@ -4,9 +4,19 @@
 //! `.blif` files; [`super::cover`] and [`super::netlist`] emit them, and
 //! this module parses them back, so externally-minimized covers (or
 //! hand-written truth tables) can enter the flow and everything
-//! round-trips under test.
+//! round-trips under test. Two readers exist for BLIF:
+//!
+//! - [`parse_blif`] flattens a model into per-output truth tables over
+//!   the primary inputs (function-level verification), and
+//! - [`netlist_from_blif`] reconstructs the mapped [`Netlist`] itself,
+//!   gate for gate, by matching each `.names` table back to a library
+//!   cell — the read side of the persistent netlist cache
+//!   ([`crate::runtime::NetlistCache`]), which stores synthesized
+//!   designs as BLIF on disk.
 
 use super::cover::{Cover, Cube};
+use super::library::Cell;
+use super::netlist::{Driver, Gate, Netlist};
 use super::synth::BlockSpec;
 use super::tt::Tt;
 use anyhow::{anyhow, bail, Result};
@@ -230,6 +240,144 @@ pub fn parse_blif(text: &str) -> Result<BlifModel> {
     Ok(BlifModel { name, inputs, outputs, functions })
 }
 
+// ---------------------------------------------------------------------
+// BLIF reading — the netlist side (cache format)
+// ---------------------------------------------------------------------
+
+/// Reconstruct a mapped [`Netlist`] from BLIF text emitted by
+/// [`Netlist::to_blif`]: each `.names` table is matched back to a cell
+/// in `lib` by input count and truth table, constants map to
+/// `gnd`/`vdd` drivers, and output-alias buffers (`.names src yK` with
+/// the identity table) resolve to their driver instead of materializing
+/// a gate — so a write → read round trip is gate-for-gate identical.
+///
+/// This is the read side of the persistent netlist cache; tables that
+/// no library cell implements (foreign BLIF) are rejected.
+pub fn netlist_from_blif(text: &str, lib: &[Cell]) -> Result<Netlist> {
+    let mut inputs: Vec<String> = Vec::new();
+    let mut outputs: Vec<String> = Vec::new();
+    // (nets of the .names line, truth-table rows under it), in file order
+    let mut sections: Vec<(Vec<String>, Vec<String>)> = Vec::new();
+    let mut lines = text.lines().peekable();
+    while let Some(raw) = lines.next() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(".inputs") {
+            inputs.extend(rest.split_whitespace().map(String::from));
+        } else if let Some(rest) = line.strip_prefix(".outputs") {
+            outputs.extend(rest.split_whitespace().map(String::from));
+        } else if let Some(rest) = line.strip_prefix(".names") {
+            let nets: Vec<String> = rest.split_whitespace().map(String::from).collect();
+            if nets.is_empty() {
+                bail!(".names with no nets");
+            }
+            let mut rows = Vec::new();
+            while let Some(peek) = lines.peek() {
+                let p = peek.trim();
+                if p.is_empty() || p.starts_with('.') || p.starts_with('#') {
+                    break;
+                }
+                rows.push(p.to_string());
+                lines.next();
+            }
+            sections.push((nets, rows));
+        } else if line.starts_with(".end") {
+            break;
+        } // .model and anything else: ignored
+    }
+    if inputs.is_empty() || outputs.is_empty() {
+        bail!("blif missing .inputs/.outputs");
+    }
+
+    use std::collections::HashMap;
+    let mut driver: HashMap<String, Driver> = HashMap::new();
+    for (i, pin) in inputs.iter().enumerate() {
+        driver.insert(pin.clone(), Driver::Input(i));
+    }
+    let mut gates: Vec<Gate> = Vec::new();
+    for (nets, rows) in &sections {
+        let (out_net, in_nets) = nets.split_last().expect("nonempty nets");
+        if in_nets.is_empty() {
+            // constant net: no rows → 0, a lone "1" row → 1
+            let one = rows.iter().any(|r| r.trim() == "1");
+            let d = if one { Driver::ConstTrue } else { Driver::ConstFalse };
+            driver.insert(out_net.clone(), d);
+            continue;
+        }
+        let nin = in_nets.len();
+        if nin > 6 {
+            bail!("{out_net}: {nin}-input table exceeds the cell library");
+        }
+        // ON-set truth table over this table's own inputs (leftmost
+        // pattern char = input 0, matching the emitter)
+        let mut tt = 0u64;
+        for row in rows {
+            let mut parts = row.split_whitespace();
+            let pattern = parts.next().unwrap_or("");
+            let val = parts.next().unwrap_or("1");
+            if val != "1" {
+                bail!("{out_net}: OFF-set row {row:?} unsupported");
+            }
+            if pattern.len() != nin {
+                bail!("{out_net}: row {row:?} arity mismatch (want {nin} inputs)");
+            }
+            let mut ms: Vec<u64> = vec![0];
+            for (k, ch) in pattern.chars().enumerate() {
+                match ch {
+                    '1' => ms.iter_mut().for_each(|m| *m |= 1 << k),
+                    '0' => {}
+                    '-' => {
+                        let with_bit: Vec<u64> = ms.iter().map(|m| m | (1 << k)).collect();
+                        ms.extend(with_bit);
+                    }
+                    _ => bail!("bad blif char {ch:?} in {row:?}"),
+                }
+            }
+            for m in ms {
+                tt |= 1 << m;
+            }
+        }
+        // output-alias buffer → resolve through, no gate
+        if nin == 1 && tt == 0b10 && outputs.iter().any(|o| o == out_net) {
+            let d = *driver
+                .get(&in_nets[0])
+                .ok_or_else(|| anyhow!("net {} used before definition", in_nets[0]))?;
+            driver.insert(out_net.clone(), d);
+            continue;
+        }
+        let table_rows = 1u64 << nin;
+        let mask = if table_rows >= 64 { u64::MAX } else { (1u64 << table_rows) - 1 };
+        let cell = lib
+            .iter()
+            .position(|c| c.num_inputs == nin && (c.tt & mask) == tt)
+            .ok_or_else(|| {
+                anyhow!("{out_net}: no library cell matches the {nin}-input table {tt:#x}")
+            })?;
+        let mut gin = Vec::with_capacity(nin);
+        for n in in_nets {
+            gin.push(
+                *driver
+                    .get(n)
+                    .ok_or_else(|| anyhow!("net {n} used before definition"))?,
+            );
+        }
+        driver.insert(out_net.clone(), Driver::Gate(gates.len()));
+        gates.push(Gate { cell, inputs: gin });
+    }
+    let outs = outputs
+        .iter()
+        .map(|o| {
+            driver
+                .get(o)
+                .copied()
+                .ok_or_else(|| anyhow!("output {o} undriven"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Netlist { lib: lib.to_vec(), num_inputs: inputs.len(), gates, outputs: outs })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,5 +456,70 @@ mod tests {
         let blif = nl.to_blif("konst");
         let model = parse_blif(&blif).unwrap();
         assert!(model.functions[0].is_zero());
+        // the netlist reader resolves the constant output too
+        let back = netlist_from_blif(&blif, &cells90()).unwrap();
+        assert_eq!(back.eval(0b00), 0);
+        assert_eq!(back.eval(0b11), 0);
+    }
+
+    #[test]
+    fn blif_netlist_round_trip_bit_parallel() {
+        // property: write → read back as a *netlist* → eval64-identical
+        // on random lane batches, gate for gate. This is the guard on
+        // the persistent-cache format: a cached design must execute
+        // exactly like the freshly synthesized one.
+        let mut rng = Rng::new(0xCAC4E);
+        for round in 0..6usize {
+            let n = 3 + (round % 4);
+            let f = Tt::from_fn(n, |_| rng.bool_with(0.4));
+            let g = Tt::from_fn(n, |_| rng.bool_with(0.55));
+            let mut aig = crate::logic::aig::Aig::new(n);
+            for tt in [&f, &g] {
+                let cover = minimize(tt, tt, Options::default());
+                let e = crate::logic::factor::factor(&cover);
+                let out = aig.add_expr(&e);
+                aig.outputs.push(out);
+            }
+            let nl = map_aig(&aig, &cells90(), Objective::Area);
+            let back = netlist_from_blif(&nl.to_blif("rt"), &cells90()).unwrap();
+            assert_eq!(back.num_inputs, nl.num_inputs);
+            assert_eq!(back.gates.len(), nl.gates.len(), "round {round}: gate count changed");
+            assert!((back.area_ge() - nl.area_ge()).abs() < 1e-9, "round {round}: area changed");
+            for _ in 0..8 {
+                let ms: Vec<u64> = (0..64).map(|_| rng.below(1u64 << n)).collect();
+                assert_eq!(
+                    back.eval64_minterms(&ms),
+                    nl.eval64_minterms(&ms),
+                    "round {round}: bit-parallel eval diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blif_netlist_round_trip_mapped_adder_segment() {
+        // a real flow artifact (incompletely-specified carry segment):
+        // the reloaded netlist must still verify on the care set
+        let spec = synth::BlockSpec::from_fn(
+            9,
+            5,
+            "seg",
+            |m| (m & 15) + ((m >> 4) & 15) + (m >> 8),
+            |m| m % 3 != 1,
+        );
+        let (_, nl) = synth::synthesize(&spec, Objective::Area);
+        let back = netlist_from_blif(&nl.to_blif("seg"), &cells90()).unwrap();
+        assert_eq!(back.gates.len(), nl.gates.len());
+        assert_eq!(synth::verify_on_care_set(&spec, &back), 0);
+    }
+
+    #[test]
+    fn blif_netlist_reader_rejects_foreign_tables() {
+        // a 5-input table exists in no 90 nm cell → structured error
+        let text = ".model t\n.inputs a b c d e\n.outputs y\n.names a b c d e y\n11111 1\n.end\n";
+        let err = netlist_from_blif(text, &cells90()).unwrap_err();
+        assert!(format!("{err}").contains("no library cell"), "{err}");
+        // truncated files fail cleanly too
+        assert!(netlist_from_blif(".model t\n", &cells90()).is_err());
     }
 }

@@ -30,9 +30,18 @@ Pipeline:
   gen-faces [--out FILE] [--samples N]   synthetic face dataset (JSON)
   train-frnn [--faces F] [--out F]       rust reference trainer
   serve [--backend native|pjrt] [--requests N] [--image-size N]
-        [--artifacts DIR]                run the coordinator demo:
+        [--models KEY,KEY,..] [--cache-dir DIR] [--no-cache]
+        [--list-models] [--artifacts DIR]
+                                         run the coordinator demo:
                                          native = synthesized netlists (offline),
-                                         pjrt   = AOT artifacts (needs --features pjrt)
+                                         pjrt   = AOT artifacts (needs --features pjrt).
+                                         Models are typed catalog keys (app/config,
+                                         e.g. gdf/ds16, frnn/th48ds16); the native
+                                         backend caches synthesized netlists as BLIF
+                                         under --cache-dir (default
+                                         artifacts/netlist-cache) so warm starts
+                                         synthesize nothing. --list-models prints the
+                                         catalog (build time, cached, gates) and exits.
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
 
@@ -254,6 +263,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
+fn random_pixels(rng: &mut ppc::util::prng::Rng, len: usize, max: u64) -> Vec<i32> {
+    (0..len).map(|_| rng.below(max) as i32).collect()
+}
+
 fn print_matrix(rates: &[u32], m: &[Vec<f64>]) {
     print!("ds\\ds,");
     println!("{}", rates.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","));
@@ -263,9 +276,15 @@ fn print_matrix(rates: &[u32], m: &[Vec<f64>]) {
     }
 }
 
+/// Default native serving catalog: the Balanced/Economy tiers
+/// (precise full-range blocks take the longest to synthesize).
+const DEFAULT_NATIVE_MODELS: [&str; 6] =
+    ["gdf/ds16", "gdf/ds32", "blend/ds16", "blend/ds32", "frnn/th48ds16", "frnn/ds32"];
+
 /// Run the coordinator with a mixed workload over the chosen backend.
 fn serve_demo(args: &Args) -> Result<()> {
-    use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
+    use ppc::catalog::{App, ModelKey};
+    use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality, Tensor};
     let backend = args.get_or("backend", "native");
     let native = match backend {
         "native" => true,
@@ -276,60 +295,121 @@ fn serve_demo(args: &Args) -> Result<()> {
     let side = args.usize_or("image-size", if native { 64 } else { 256 });
     let img_len = side * side;
 
+    // The registered catalog (native knows it up front; PJRT discovers
+    // it from the artifact manifest, so assume the full catalog there).
+    let mut registered: Vec<ModelKey> = ModelKey::catalog();
+
     let coord = if native {
-        // Build the offline registry: synthesized netlists for the two
-        // sparse image qualities plus the FRNN tiers, with a
-        // quickly-trained quantized net standing in for the deployed
-        // weights.
-        use ppc::apps::frnn::{dataset, net};
-        println!("training a quick FRNN for the native registry…");
-        let ds = dataset::generate(2, 0x5E12);
-        let r = net::train(&ds, &net::TrainConfig { max_epochs: 30, ..Default::default() });
-        let q = net::quantize(&r.net);
-        println!("synthesizing PPC hardware (gdf/blend/frnn × ds16/ds32 tiers)…");
-        let exec = ppc::runtime::NativeExecutor::new()
-            .with_gdf("ds16")?
-            .with_gdf("ds32")?
-            .with_blend("ds16")?
-            .with_blend("ds32")?
-            .with_frnn("th48ds16", q.clone())?
-            .with_frnn("ds32", q)?;
-        println!("native registry: {:?}", exec.registered_keys());
+        // The typed model list: every key is parsed (and validated
+        // against the catalog) before anything synthesizes.
+        let keys: Vec<ModelKey> = match args.get("models") {
+            Some(csv) => csv
+                .split(',')
+                .map(|s| ModelKey::parse(s.trim()))
+                .collect::<Result<_>>()?,
+            None => DEFAULT_NATIVE_MODELS
+                .iter()
+                .map(|s| ModelKey::parse(s).expect("default catalog keys are valid"))
+                .collect(),
+        };
+        let mut exec = ppc::runtime::NativeExecutor::new();
+        if !args.flag("no-cache") {
+            let dir = args.get_or("cache-dir", "artifacts/netlist-cache");
+            exec = exec.with_cache(dir)?;
+        }
+        // FRNN models carry weights: quick-train once if any requested,
+        // the quantized net standing in for the deployed weights.
+        let quant = if keys.iter().any(|k| k.app == App::Frnn) {
+            println!("training a quick FRNN for the native registry…");
+            let ds = dataset::generate(2, 0x5E12);
+            let r = net::train(&ds, &net::TrainConfig { max_epochs: 30, ..Default::default() });
+            Some(net::quantize(&r.net))
+        } else {
+            None
+        };
+        println!("building the native catalog ({} models)…", keys.len());
+        for key in keys {
+            exec = match key.app {
+                App::Frnn => exec.register_frnn(
+                    key.config,
+                    quant.clone().expect("frnn weights were trained above"),
+                )?,
+                _ => exec.register(key)?,
+            };
+        }
+        println!("{:<16} {:>11} {:>8} {:>9}", "model", "build(ms)", "cached", "gates");
+        for info in exec.model_infos() {
+            println!(
+                "{:<16} {:>11.1} {:>8} {:>9}",
+                info.key.to_string(),
+                info.build_time.as_secs_f64() * 1e3,
+                if info.cached { "yes" } else { "no" },
+                info.gates
+            );
+        }
+        if let Some(cache) = exec.cache() {
+            println!(
+                "netlist cache: {} hits, {} misses -> {}",
+                cache.hits(),
+                cache.misses(),
+                cache.dir().display()
+            );
+        }
+        if args.flag("list-models") {
+            return Ok(());
+        }
+        registered = exec.registered_keys();
         Coordinator::with_native(CoordinatorConfig::default(), exec)
             .map_err(|e| anyhow!("{e:#}"))?
     } else {
+        if args.flag("list-models") {
+            bail!("--list-models needs the native backend (artifact catalogs live in the manifest)");
+        }
         let dir = artifacts_dir(args);
         Coordinator::with_artifacts(&dir, CoordinatorConfig::default())
             .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` first"))?
     };
 
+    // Workload shaped to the registered catalog: only apps with at
+    // least one model, each request routed to a quality its app serves.
+    let apps: Vec<App> = App::ALL
+        .iter()
+        .copied()
+        .filter(|&a| registered.iter().any(|k| k.app == a))
+        .collect();
+    if apps.is_empty() {
+        bail!("no models registered — nothing to serve");
+    }
+    let qualities: Vec<Vec<Quality>> = apps
+        .iter()
+        .map(|&a| {
+            [Quality::Precise, Quality::Balanced, Quality::Economy]
+                .into_iter()
+                .filter(|&q| registered.contains(&ModelKey::route(a, q)))
+                .collect()
+        })
+        .collect();
+
     let mut rng = ppc::util::prng::Rng::new(0x5E12);
     let mut tickets = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n {
-        // the native demo registers the Balanced/Economy tiers only
-        // (precise full-range blocks take the longest to synthesize)
-        let quality = if native {
-            if i % 2 == 0 { Quality::Balanced } else { Quality::Economy }
-        } else {
-            match i % 3 {
-                0 => Quality::Precise,
-                1 => Quality::Balanced,
-                _ => Quality::Economy,
-            }
-        };
-        let job = match i % 3 {
-            0 => Job::Denoise {
-                image: (0..img_len).map(|_| rng.below(256) as i32).collect(),
+        let app = apps[i % apps.len()];
+        let quals = &qualities[i % apps.len()];
+        let quality = quals[(i / apps.len()) % quals.len()];
+        let job = match app {
+            App::Gdf => Job::Denoise {
+                image: Tensor::matrix(side, side, random_pixels(&mut rng, img_len, 256))
+                    .expect("square demo image"),
             },
-            1 => Job::Blend {
-                p1: (0..img_len).map(|_| rng.below(256) as i32).collect(),
-                p2: (0..img_len).map(|_| rng.below(256) as i32).collect(),
+            App::Blend => Job::Blend {
+                p1: Tensor::matrix(side, side, random_pixels(&mut rng, img_len, 256))
+                    .expect("square demo image"),
+                p2: Tensor::matrix(side, side, random_pixels(&mut rng, img_len, 256))
+                    .expect("square demo image"),
                 alpha: 64,
             },
-            _ => Job::Classify {
-                pixels: (0..960).map(|_| rng.below(160) as i32).collect(),
-            },
+            App::Frnn => Job::Classify { pixels: random_pixels(&mut rng, 960, 160) },
         };
         tickets.push(coord.submit_blocking(job, quality).map_err(|e| anyhow!("{e:?}"))?);
     }

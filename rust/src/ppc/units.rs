@@ -26,7 +26,30 @@ use super::blocks::{self, SEG_BITS};
 use super::preprocess::ValueSet;
 use crate::logic::map::Objective;
 use crate::logic::netlist::{unpack_lanes, Netlist};
-use crate::logic::synth;
+use crate::logic::synth::{self, BlockSpec};
+
+/// Where a unit obtains the mapped netlist for a block spec: fresh
+/// synthesis ([`FreshSynth`]) or a persistent on-disk cache
+/// ([`crate::runtime::NetlistCache`]). `unit` scopes the spec name —
+/// segment/quadrant names repeat across units (every adder has a
+/// `ppa_seg0`), so cache keys are `(unit, spec.name)` pairs.
+///
+/// Whatever the source returns is re-verified against the spec's care
+/// set by the unit constructors, so a stale or corrupt cached netlist
+/// can never serve wrong bits.
+pub trait NetlistSource {
+    fn netlist(&self, unit: &str, spec: &BlockSpec, objective: Objective) -> Netlist;
+}
+
+/// The default source: always run the full two-level → multi-level →
+/// tech-map flow.
+pub struct FreshSynth;
+
+impl NetlistSource for FreshSynth {
+    fn netlist(&self, _unit: &str, spec: &BlockSpec, objective: Objective) -> Netlist {
+        synth::synthesize(spec, objective).1
+    }
+}
 
 /// A batched arithmetic operation over two unsigned operands — the
 /// interface [`crate::ppc::error::exhaustive_unit`] measures against.
@@ -85,11 +108,27 @@ impl AdderUnit {
         b_set: &ValueSet,
         objective: Objective,
     ) -> AdderUnit {
+        AdderUnit::synthesize_via(name, wl_a, wl_b, a_set, b_set, objective, &FreshSynth)
+    }
+
+    /// Like [`AdderUnit::synthesize`], but netlists come from `source`
+    /// (fresh synthesis or the persistent cache). Every netlist is
+    /// verified on the segment's care set regardless of where it came
+    /// from.
+    pub fn synthesize_via(
+        name: &str,
+        wl_a: u32,
+        wl_b: u32,
+        a_set: &ValueSet,
+        b_set: &ValueSet,
+        objective: Objective,
+        source: &dyn NetlistSource,
+    ) -> AdderUnit {
         let specs = blocks::adder_segment_specs(wl_a, wl_b, a_set, b_set);
         let segs = specs
             .iter()
             .map(|spec| {
-                let (_, nl) = synth::synthesize(spec, objective);
+                let nl = source.netlist(name, spec, objective);
                 assert_eq!(
                     synth::verify_on_care_set(spec, &nl),
                     0,
@@ -198,12 +237,25 @@ impl MultUnit8 {
         b_set: &ValueSet,
         objective: Objective,
     ) -> MultUnit8 {
+        MultUnit8::synthesize_via(name, a_set, b_set, objective, &FreshSynth)
+    }
+
+    /// Like [`MultUnit8::synthesize`], but netlists come from `source`
+    /// (fresh synthesis or the persistent cache); every quadrant and
+    /// tree-adder segment is verified on its care set either way.
+    pub fn synthesize_via(
+        name: &str,
+        a_set: &ValueSet,
+        b_set: &ValueSet,
+        objective: Objective,
+        source: &dyn NetlistSource,
+    ) -> MultUnit8 {
         let q = blocks::mult_quadrant_specs(a_set, b_set);
         let quads: Vec<Netlist> = q
             .quads
             .iter()
             .map(|spec| {
-                let (_, nl) = synth::synthesize(spec, objective);
+                let nl = source.netlist(name, spec, objective);
                 assert_eq!(
                     synth::verify_on_care_set(spec, &nl),
                     0,
@@ -220,12 +272,29 @@ impl MultUnit8 {
             &q.quad_out_sets[3],
         );
         let mid = lh.sum(hl);
-        let a1 = AdderUnit::synthesize(&format!("{name}_a1"), 8, 8, lh, hl, objective);
+        let a1 =
+            AdderUnit::synthesize_via(&format!("{name}_a1"), 8, 8, lh, hl, objective, source);
         let mid_shift = mid.shl(4);
-        let a2 = AdderUnit::synthesize(&format!("{name}_a2"), 13, 8, &mid_shift, ll, objective);
+        let a2 = AdderUnit::synthesize_via(
+            &format!("{name}_a2"),
+            13,
+            8,
+            &mid_shift,
+            ll,
+            objective,
+            source,
+        );
         let lo = mid_shift.sum(ll);
         let hh_shift = hh.shl(8);
-        let a3 = AdderUnit::synthesize(&format!("{name}_a3"), 16, 14, &hh_shift, &lo, objective);
+        let a3 = AdderUnit::synthesize_via(
+            &format!("{name}_a3"),
+            16,
+            14,
+            &hh_shift,
+            &lo,
+            objective,
+            source,
+        );
         MultUnit8 { name: name.to_string(), quads, a1, a2, a3 }
     }
 

@@ -1,0 +1,228 @@
+//! Persistent netlist cache: synthesized, mapped netlists stored as
+//! BLIF on disk so a warm `serve --backend native` cold start performs
+//! **zero** two-level synthesis.
+//!
+//! Layout: one directory per `(ModelKey, objective)` —
+//! `{cache}/{app}-{config}-{objective}/` — holding one
+//! `{unit}.{spec}.blif` file per synthesized block (unit names scope
+//! the spec names, which repeat across units: every adder has a
+//! `ppa_seg0`). The files are exactly what
+//! [`Netlist::to_blif`](crate::logic::netlist::Netlist::to_blif)
+//! emits, i.e. the same interchange format the paper's SIS step uses,
+//! so they are inspectable and editable with standard tools.
+//!
+//! Safety: a cached netlist is only used after
+//! [`crate::logic::synth::verify_on_care_set`] passes bit-parallel
+//! against the *current* block spec, so stale, corrupt or hand-edited
+//! files can never serve wrong bits — they just count as misses and
+//! get re-synthesized and rewritten. Cache writes are best-effort: an
+//! unwritable directory degrades to fresh synthesis, never to an
+//! error.
+
+use crate::catalog::ModelKey;
+use crate::logic::io::netlist_from_blif;
+use crate::logic::library::cells90;
+use crate::logic::map::Objective;
+use crate::logic::netlist::Netlist;
+use crate::logic::synth::{self, BlockSpec};
+use crate::ppc::units::NetlistSource;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The on-disk netlist cache, with cache-wide hit/miss counters (a
+/// *miss* is exactly one run of the two-level → multi-level → map
+/// flow, so `misses() == 0` proves a construction synthesized
+/// nothing).
+pub struct NetlistCache {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl NetlistCache {
+    /// Open (creating if needed) a cache rooted at `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<NetlistCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating netlist cache dir {}", dir.display()))?;
+        Ok(NetlistCache { dir, hits: AtomicU64::new(0), misses: AtomicU64::new(0) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Netlists served from disk since this cache was opened.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Netlists that had to be synthesized (absent/stale/corrupt file).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// View of the cache scoped to one model: files live under
+    /// `{dir}/{app}-{config}-{objective}/`, and the scope keeps its own
+    /// hit/miss counters (also rolled into the cache-wide totals) so a
+    /// caller can tell whether *this* model loaded entirely warm.
+    pub fn scope(&self, key: ModelKey, objective: Objective) -> ScopedNetlistCache<'_> {
+        let obj = match objective {
+            Objective::Area => "area",
+            Objective::Delay => "delay",
+        };
+        ScopedNetlistCache {
+            cache: self,
+            dir: self.dir.join(format!("{}-{}-{obj}", key.app, key.config)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A per-model view of the cache — the [`NetlistSource`] handed to the
+/// hardware constructors during registration.
+pub struct ScopedNetlistCache<'a> {
+    cache: &'a NetlistCache,
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScopedNetlistCache<'_> {
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl NetlistSource for ScopedNetlistCache<'_> {
+    fn netlist(&self, unit: &str, spec: &BlockSpec, objective: Objective) -> Netlist {
+        let path = self.dir.join(format!("{unit}.{}.blif", spec.name));
+        if let Some(nl) = load_verified(&path, spec) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.cache.hits.fetch_add(1, Ordering::Relaxed);
+            return nl;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
+        let (_, nl) = synth::synthesize(spec, objective);
+        // best-effort write — an unwritable cache must not break serving
+        if std::fs::create_dir_all(&self.dir).is_ok() {
+            let _ = std::fs::write(&path, nl.to_blif(&format!("{unit}_{}", spec.name)));
+        }
+        nl
+    }
+}
+
+/// Read + reconstruct + care-set-verify one cached netlist; any
+/// failure (missing file, foreign BLIF, wrong shape, wrong bits) means
+/// "not cached".
+fn load_verified(path: &Path, spec: &BlockSpec) -> Option<Netlist> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let nl = netlist_from_blif(&text, &cells90()).ok()?;
+    let shape_ok = nl.num_inputs == spec.nvars && nl.outputs.len() == spec.num_outputs();
+    (shape_ok && synth::verify_on_care_set(spec, &nl) == 0).then_some(nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::PpcConfig;
+    use crate::ppc::preprocess::ValueSet;
+    use crate::ppc::units::AdderUnit;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ppc_nlcache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn key() -> ModelKey {
+        ModelKey::parse("gdf/ds32").unwrap()
+    }
+
+    #[test]
+    fn second_construction_is_all_hits_and_bit_exact() {
+        let dir = fresh_dir("warm");
+        let set = ValueSet::full(8).map_chain(&PpcConfig::Ds32.chain());
+        let cache = NetlistCache::new(&dir).unwrap();
+
+        let cold_scope = cache.scope(key(), Objective::Area);
+        let cold =
+            AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &cold_scope);
+        assert!(cold_scope.misses() > 0, "first build must synthesize");
+        assert_eq!(cold_scope.hits(), 0);
+
+        let warm_scope = cache.scope(key(), Objective::Area);
+        let warm =
+            AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &warm_scope);
+        assert_eq!(warm_scope.misses(), 0, "warm build must not synthesize");
+        assert_eq!(warm_scope.hits(), cold_scope.misses());
+        assert_eq!(cache.misses(), cold_scope.misses());
+
+        assert_eq!(warm.num_gates(), cold.num_gates());
+        for a in set.iter() {
+            for b in set.iter() {
+                assert_eq!(warm.eval_scalar(a, b), (a + b) as u64, "a={a} b={b}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_files_fall_back_to_synthesis() {
+        let dir = fresh_dir("corrupt");
+        let set = ValueSet::full(8).map_chain(&PpcConfig::Ds32.chain());
+        let cache = NetlistCache::new(&dir).unwrap();
+        let scope = cache.scope(key(), Objective::Area);
+        AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope);
+        let n_files = scope.misses();
+
+        // vandalize one cached file: it must count as a miss, get
+        // re-synthesized, and the unit must still be exact
+        let victim = std::fs::read_dir(scope.dir())
+            .unwrap()
+            .next()
+            .unwrap()
+            .unwrap()
+            .path();
+        std::fs::write(&victim, "this is not a blif file").unwrap();
+
+        let scope2 = cache.scope(key(), Objective::Area);
+        let unit =
+            AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope2);
+        assert_eq!(scope2.misses(), 1, "exactly the vandalized file re-synthesizes");
+        assert_eq!(scope2.hits(), n_files - 1);
+        for a in set.iter().take(4) {
+            for b in set.iter().take(4) {
+                assert_eq!(unit.eval_scalar(a, b), (a + b) as u64);
+            }
+        }
+        // and the rewrite healed the cache
+        let scope3 = cache.scope(key(), Objective::Area);
+        AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope3);
+        assert_eq!(scope3.misses(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scopes_partition_by_model_and_objective() {
+        let dir = fresh_dir("scopes");
+        let cache = NetlistCache::new(&dir).unwrap();
+        let a = cache.scope(ModelKey::parse("gdf/ds16").unwrap(), Objective::Area);
+        let b = cache.scope(ModelKey::parse("gdf/ds32").unwrap(), Objective::Area);
+        let c = cache.scope(ModelKey::parse("gdf/ds16").unwrap(), Objective::Delay);
+        assert_ne!(a.dir(), b.dir());
+        assert_ne!(a.dir(), c.dir());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

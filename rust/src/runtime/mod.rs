@@ -1,12 +1,16 @@
 //! Execution backends for the serving stack.
 //!
 //! Two interchangeable backends sit behind
-//! [`crate::coordinator::engine::Executor`], keyed `"{app}/{config}"`:
+//! [`crate::coordinator::engine::Executor`], keyed by the typed
+//! [`crate::catalog::ModelKey`] catalog:
 //!
 //! - [`native`] (default build): [`NativeExecutor`] executes the
 //!   *synthesized PPC netlists themselves* — the gate-level adders and
-//!   multipliers the design flow produces — bit-parallel on i32
-//!   tensors. Fully offline: no Python, no XLA, no artifacts.
+//!   multipliers the design flow produces — bit-parallel on
+//!   shape-carrying i32 tensors. Fully offline: no Python, no XLA, no
+//!   artifacts. The [`cache`] module gives it a persistent BLIF
+//!   netlist cache ([`NetlistCache`]) so warm cold starts synthesize
+//!   nothing.
 //! - [`pjrt`] (cargo feature `pjrt`): [`Runtime`] loads the
 //!   AOT-compiled HLO-text artifacts produced by `make artifacts` and
 //!   executes them on the CPU PJRT client. Without the feature the
@@ -21,10 +25,12 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
+pub mod cache;
 pub mod native;
 pub mod pjrt;
 
-pub use native::NativeExecutor;
+pub use cache::NetlistCache;
+pub use native::{ModelInfo, NativeExecutor};
 pub use pjrt::Runtime;
 
 /// Shape+dtype of one artifact port (only i32 tensors are used by the

@@ -1,10 +1,15 @@
 //! Native execution backend: serve the synthesized PPC netlists
 //! directly — no Python, no XLA, no artifacts.
 //!
-//! A [`NativeExecutor`] holds, per `"{app}/{config}"` key, the
-//! application datapath built from mapped gate-level netlists
-//! ([`GdfHardware`], [`BlendHardware`], [`FrnnHardware`]) and executes
-//! requests on i32 tensors through the 64-way bit-parallel evaluator.
+//! A [`NativeExecutor`] is the typed model registry: one
+//! `BTreeMap<ModelKey, Box<dyn Datapath>>` holding every registered
+//! application datapath ([`GdfHardware`], [`BlendHardware`],
+//! [`FrnnHardware`]) behind the one [`Datapath`] trait. Requests and
+//! responses are shape-carrying [`Tensor`]s, so non-square images
+//! survive the trip, and every lookup, registration and error message
+//! goes through the same [`ModelKey`] catalog the router and the CLI
+//! use — there is no stringly-typed key anywhere on the path.
+//!
 //! It implements [`Executor`], so the whole coordinator stack (router →
 //! batcher → engine thread) serves real PPC computation offline; the
 //! results are bit-exact with the fixed-point application simulations
@@ -13,52 +18,55 @@
 //! time.
 //!
 //! Construction synthesizes hardware (two-level → multi-level → tech
-//! map per block), so register only the configs you serve: sparse
-//! configs (`ds16`, `ds32`, `th48ds16`) synthesize in well under a
-//! second; full-range `conv` blocks take the longest.
+//! map per block) unless a persistent [`NetlistCache`] is attached
+//! with [`NativeExecutor::with_cache`]: then every block whose BLIF is
+//! already on disk (and verifies against the current care set) loads
+//! without any synthesis, making the second cold start effectively
+//! instant — [`ModelInfo::cached`] records, per model, whether the
+//! whole datapath came in warm. Sparse configs (`ds16`, `ds32`,
+//! `th48ds16`) synthesize in well under a second even uncached;
+//! full-range `conv` blocks take the longest and profit the most from
+//! the cache.
 
-use crate::apps::blend::{Alpha, BlendConfig, BlendHardware};
-use crate::apps::frnn::dataset::{Face, IMG_PIXELS};
+use crate::apps::blend::{BlendConfig, BlendHardware};
 use crate::apps::frnn::hw::FrnnHardware;
 use crate::apps::frnn::net::QuantFrnn;
 use crate::apps::gdf::GdfHardware;
-use crate::apps::image::Image;
+use crate::catalog::{self, App, Datapath, ModelKey, PpcConfig, Tensor};
 use crate::coordinator::engine::Executor;
 use crate::logic::map::Objective;
-use crate::ppc::preprocess::{Chain, Preproc, ValueSet};
+use crate::ppc::preprocess::ValueSet;
+use crate::ppc::units::{FreshSynth, NetlistSource};
+use crate::runtime::cache::NetlistCache;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
-/// Preprocessing chain of an image-app serving config (the names the
-/// router in [`crate::coordinator::server::route_config`] emits).
-pub fn config_chain(config: &str) -> Result<Chain> {
-    match config {
-        "conv" => Ok(Chain::id()),
-        "ds16" => Ok(Chain::of(Preproc::Ds(16))),
-        "ds32" => Ok(Chain::of(Preproc::Ds(32))),
-        other => bail!("unknown PPC config {other:?} (want conv|ds16|ds32)"),
-    }
+/// Per-model registration record: what the catalog knows about one
+/// servable datapath (the `serve --list-models` row).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub key: ModelKey,
+    /// Total mapped-gate count of the datapath's netlists.
+    pub gates: usize,
+    /// Wall-clock time registration took (synthesis or cache load).
+    pub build_time: Duration,
+    /// True when every netlist came from the persistent cache — i.e.
+    /// registration performed zero two-level synthesis.
+    pub cached: bool,
 }
 
-/// (image chain, weight chain) of an FRNN serving config.
-pub fn frnn_config_chains(config: &str) -> Result<(Chain, Chain)> {
-    match config {
-        "conv" => Ok((Chain::id(), Chain::id())),
-        "th48ds16" => Ok((
-            Chain::of(Preproc::Th { x: 48, y: 48 }).then(Preproc::Ds(16)),
-            Chain::of(Preproc::Ds(16)),
-        )),
-        "ds32" => Ok((Chain::of(Preproc::Ds(32)), Chain::of(Preproc::Ds(32)))),
-        other => bail!("unknown FRNN config {other:?} (want conv|th48ds16|ds32)"),
-    }
+struct Model {
+    datapath: Box<dyn Datapath>,
+    info: ModelInfo,
 }
 
-/// The native model registry, keyed `"{app}/{config}"`.
+/// The native model registry: the typed catalog of servable PPC
+/// datapaths.
 pub struct NativeExecutor {
     objective: Objective,
-    gdf: BTreeMap<String, GdfHardware>,
-    blend: BTreeMap<String, BlendHardware>,
-    frnn: BTreeMap<String, FrnnHardware>,
+    cache: Option<NetlistCache>,
+    models: BTreeMap<ModelKey, Model>,
 }
 
 impl Default for NativeExecutor {
@@ -68,14 +76,9 @@ impl Default for NativeExecutor {
 }
 
 impl NativeExecutor {
-    /// An empty registry (area-optimized mapping).
+    /// An empty registry (area-optimized mapping, no persistent cache).
     pub fn new() -> NativeExecutor {
-        NativeExecutor {
-            objective: Objective::Area,
-            gdf: BTreeMap::new(),
-            blend: BTreeMap::new(),
-            frnn: BTreeMap::new(),
-        }
+        NativeExecutor { objective: Objective::Area, cache: None, models: BTreeMap::new() }
     }
 
     /// Change the technology-mapping objective for *subsequently*
@@ -85,194 +88,256 @@ impl NativeExecutor {
         self
     }
 
-    /// Synthesize and register the GDF adder tree under `gdf/{config}`.
-    pub fn with_gdf(mut self, config: &str) -> Result<NativeExecutor> {
-        let chain = config_chain(config)?;
-        let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, self.objective);
-        self.gdf.insert(config.to_string(), hw);
+    /// Attach a persistent netlist cache rooted at `dir`: subsequently
+    /// registered models load their mapped netlists from BLIF on disk
+    /// when present (verified on the care set) and write them back
+    /// after synthesis otherwise.
+    pub fn with_cache(mut self, dir: impl Into<std::path::PathBuf>) -> Result<NativeExecutor> {
+        self.cache = Some(NetlistCache::new(dir)?);
         Ok(self)
     }
 
-    /// Synthesize and register the IB datapath under `blend/{config}`
-    /// (natural coefficient sparsity: alpha must be in `[0, 127]`, the
-    /// [`crate::coordinator::Job::Blend`] contract).
-    pub fn with_blend(mut self, config: &str) -> Result<NativeExecutor> {
-        let chain = config_chain(config)?;
-        let cfg = BlendConfig::of(true, chain);
-        let hw = BlendHardware::synthesize(&cfg, self.objective);
-        self.blend.insert(config.to_string(), hw);
+    /// The attached persistent cache, if any (its hit/miss counters
+    /// tell whether construction synthesized anything).
+    pub fn cache(&self) -> Option<&NetlistCache> {
+        self.cache.as_ref()
+    }
+
+    /// Synthesize (or cache-load) and register the datapath for `key`.
+    /// FRNN models carry weights, so they go through
+    /// [`NativeExecutor::register_frnn`] instead.
+    pub fn register(self, key: ModelKey) -> Result<NativeExecutor> {
+        let key = ModelKey::new(key.app, key.config)?; // revalidate
+        let config = key.config;
+        match key.app {
+            App::Gdf => self.insert(key, move |src, obj| {
+                Box::new(GdfHardware::synthesize_via(
+                    &ValueSet::full(8),
+                    &config.chain(),
+                    obj,
+                    src,
+                )) as Box<dyn Datapath>
+            }),
+            App::Blend => self.insert(key, move |src, obj| {
+                // natural coefficient sparsity: alpha stays in [0, 127],
+                // the Job::Blend contract
+                let cfg = BlendConfig::of(true, config.chain());
+                Box::new(BlendHardware::synthesize_via(&cfg, obj, src)) as Box<dyn Datapath>
+            }),
+            App::Frnn => {
+                bail!("{key}: the FRNN datapath carries weights — register it with register_frnn")
+            }
+        }
+    }
+
+    /// Synthesize (or cache-load) and register the FRNN forward path
+    /// under `frnn/{config}` with the given quantized weights.
+    pub fn register_frnn(self, config: PpcConfig, net: QuantFrnn) -> Result<NativeExecutor> {
+        let key = ModelKey::new(App::Frnn, config)?;
+        self.insert(key, move |src, obj| {
+            Box::new(FrnnHardware::synthesize_via(
+                net,
+                &config.chain(),
+                &config.weight_chain(),
+                obj,
+                src,
+            )) as Box<dyn Datapath>
+        })
+    }
+
+    fn insert<F>(mut self, key: ModelKey, build: F) -> Result<NativeExecutor>
+    where
+        F: FnOnce(&dyn NetlistSource, Objective) -> Box<dyn Datapath>,
+    {
+        let t0 = Instant::now();
+        let objective = self.objective;
+        let (datapath, cached) = match &self.cache {
+            Some(cache) => {
+                let scope = cache.scope(key, objective);
+                let dp = build(&scope, objective);
+                let cached = scope.misses() == 0 && scope.hits() > 0;
+                (dp, cached)
+            }
+            None => (build(&FreshSynth, objective), false),
+        };
+        let info = ModelInfo { key, gates: datapath.num_gates(), build_time: t0.elapsed(), cached };
+        self.models.insert(key, Model { datapath, info });
         Ok(self)
     }
 
-    /// Synthesize and register the FRNN forward path under
-    /// `frnn/{config}` with the given quantized weights.
-    pub fn with_frnn(mut self, config: &str, net: QuantFrnn) -> Result<NativeExecutor> {
-        let (ci, cw) = frnn_config_chains(config)?;
-        let hw = FrnnHardware::synthesize(net, &ci, &cw, self.objective);
-        self.frnn.insert(config.to_string(), hw);
-        Ok(self)
+    /// Registered keys, in catalog order.
+    pub fn registered_keys(&self) -> Vec<ModelKey> {
+        self.models.keys().copied().collect()
     }
 
-    /// Registered keys, sorted (same shape as the PJRT registry).
-    pub fn registered_keys(&self) -> Vec<String> {
-        let mut k: Vec<String> = Vec::new();
-        k.extend(self.gdf.keys().map(|c| format!("gdf/{c}")));
-        k.extend(self.blend.keys().map(|c| format!("blend/{c}")));
-        k.extend(self.frnn.keys().map(|c| format!("frnn/{c}")));
-        k.sort();
-        k
+    /// Registration records for every model (the `--list-models` rows).
+    pub fn model_infos(&self) -> Vec<&ModelInfo> {
+        self.models.values().map(|m| &m.info).collect()
     }
 
-    fn unknown(&self, key: &str) -> anyhow::Error {
-        anyhow!("unknown native model {key}; have {:?}", self.registered_keys())
-    }
-
-    fn exec_gdf(&self, key: &str, config: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        let hw = self.gdf.get(config).ok_or_else(|| self.unknown(key))?;
-        if inputs.len() != 1 {
-            bail!("{key}: expected 1 input tensor, got {}", inputs.len());
-        }
-        let img = to_image(inputs[0], key)?;
-        let out = hw.filter(&img);
-        Ok(vec![out.pixels.iter().map(|&p| p as i32).collect()])
-    }
-
-    fn exec_blend(&self, key: &str, config: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        let hw = self.blend.get(config).ok_or_else(|| self.unknown(key))?;
-        if inputs.len() != 3 {
-            bail!("{key}: expected (p1, p2, alpha), got {} tensors", inputs.len());
-        }
-        let (p1, p2, al) = (inputs[0], inputs[1], inputs[2]);
-        if p1.len() != p2.len() {
-            bail!("{key}: image sizes differ ({} vs {})", p1.len(), p2.len());
-        }
-        if al.len() != 1 || !(0..=127).contains(&al[0]) {
-            bail!("{key}: alpha must be a single value in [0, 127], got {al:?}");
-        }
-        let a = to_pixels(p1, key)?;
-        let b = to_pixels(p2, key)?;
-        let out = hw.blend_flat(&a, &b, Alpha(al[0] as u8));
-        Ok(vec![out.into_iter().map(|p| p as i32).collect()])
-    }
-
-    fn exec_frnn(&self, key: &str, config: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        let hw = self.frnn.get(config).ok_or_else(|| self.unknown(key))?;
-        if inputs.len() != 1 {
-            bail!("{key}: expected 1 input tensor, got {}", inputs.len());
-        }
-        let flat = inputs[0];
-        if flat.is_empty() || flat.len() % IMG_PIXELS != 0 {
-            bail!(
-                "{key}: input length {} is not a multiple of the {IMG_PIXELS}-pixel row",
-                flat.len()
-            );
-        }
-        let pixels = to_pixels(flat, key)?;
-        let mut out = Vec::with_capacity(pixels.len() / IMG_PIXELS * 7);
-        for row in pixels.chunks(IMG_PIXELS) {
-            let face = Face { pixels: row.to_vec(), id: 0, pose: 0, sunglasses: false };
-            let (_, outs) = hw.forward(&face);
-            out.extend(outs.iter().map(|&v| v as i32));
-        }
-        Ok(vec![out])
+    fn unknown(&self, key: ModelKey) -> anyhow::Error {
+        anyhow!(
+            "unknown model {key}; available models: [{}]",
+            catalog::join(self.models.keys())
+        )
     }
 }
 
 impl Executor for NativeExecutor {
-    fn exec(&self, key: &str, inputs: &[&[i32]]) -> Result<Vec<Vec<i32>>> {
-        let (app, config) = key.split_once('/').ok_or_else(|| self.unknown(key))?;
-        match app {
-            "gdf" => self.exec_gdf(key, config, inputs),
-            "blend" => self.exec_blend(key, config, inputs),
-            "frnn" => self.exec_frnn(key, config, inputs),
-            _ => Err(self.unknown(key)),
-        }
+    fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let model = self.models.get(&key).ok_or_else(|| self.unknown(key))?;
+        model.datapath.exec(inputs).map_err(|e| anyhow!("{key}: {e:#}"))
     }
 
-    fn keys(&self) -> Vec<String> {
+    fn keys(&self) -> Vec<ModelKey> {
         self.registered_keys()
     }
-}
-
-/// i32 tensor → u8 pixels, with a clear error on out-of-range values.
-fn to_pixels(data: &[i32], what: &str) -> Result<Vec<u8>> {
-    data.iter()
-        .map(|&v| {
-            if (0..=255).contains(&v) {
-                Ok(v as u8)
-            } else {
-                Err(anyhow!("{what}: value {v} outside the u8 pixel range"))
-            }
-        })
-        .collect()
-}
-
-/// Flat i32 tensor → square image (the native GDF path needs the 2-D
-/// window structure; serve square images or use the PJRT backend whose
-/// artifact manifest carries explicit shapes).
-fn to_image(data: &[i32], what: &str) -> Result<Image> {
-    let n = data.len();
-    let side = (n as f64).sqrt().round() as usize;
-    if side * side != n || n == 0 {
-        bail!("{what}: native backend expects a square image, got {n} pixels");
-    }
-    Ok(Image { width: side, height: side, pixels: to_pixels(data, what)? })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::apps::gdf;
-    use crate::apps::image::synthetic_photo;
+    use crate::apps::image::{synthetic_photo, Image};
     use crate::util::prng::Rng;
+
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
+    }
 
     #[test]
     fn gdf_exec_matches_fixed_point_sim() {
-        let ex = NativeExecutor::new().with_gdf("ds32").unwrap();
-        assert_eq!(ex.registered_keys(), vec!["gdf/ds32"]);
+        let ex = NativeExecutor::new().register(mk("gdf/ds32")).unwrap();
+        assert_eq!(ex.registered_keys(), vec![mk("gdf/ds32")]);
         let img = synthetic_photo(16, 16, 9);
-        let flat: Vec<i32> = img.pixels.iter().map(|&p| p as i32).collect();
-        let out = ex.exec("gdf/ds32", &[&flat]).unwrap();
-        let want = gdf::gdf_filter(&img, &config_chain("ds32").unwrap());
-        let got: Vec<u8> = out[0].iter().map(|&v| v as u8).collect();
-        assert_eq!(got, want.pixels);
+        let out = ex.exec(mk("gdf/ds32"), &[img.to_tensor()]).unwrap();
+        let want = gdf::gdf_filter(&img, &PpcConfig::Ds32.chain());
+        assert_eq!(out[0], want.to_tensor());
+    }
+
+    #[test]
+    fn gdf_serves_non_square_images() {
+        let ex = NativeExecutor::new().register(mk("gdf/ds32")).unwrap();
+        let img = Image {
+            width: 12,
+            height: 5,
+            pixels: (0..60).map(|i| (i * 4) as u8).collect(),
+        };
+        let out = ex.exec(mk("gdf/ds32"), &[img.to_tensor()]).unwrap();
+        assert_eq!(out[0].shape, vec![5, 12]);
+        let want = gdf::gdf_filter(&img, &PpcConfig::Ds32.chain());
+        assert_eq!(out[0], want.to_tensor());
     }
 
     #[test]
     fn graceful_errors() {
-        let ex = NativeExecutor::new().with_gdf("ds32").unwrap();
-        // unknown key
-        let e = ex.exec("gdf/nope", &[&[0; 16]]).unwrap_err();
-        assert!(format!("{e}").contains("unknown native model"));
-        assert!(ex.exec("blend/ds32", &[&[0; 4], &[0; 4], &[64]]).is_err());
-        // non-square image
-        assert!(ex.exec("gdf/ds32", &[&[0; 15]]).is_err());
+        let ex = NativeExecutor::new().register(mk("gdf/ds32")).unwrap();
+        // unknown key → structured error listing the catalog
+        let e = ex.exec(mk("gdf/ds16"), &[Tensor::vector(vec![0; 16])]).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("unknown model gdf/ds16"), "{msg}");
+        assert!(msg.contains("available models: [gdf/ds32]"), "{msg}");
+        assert!(ex
+            .exec(mk("blend/ds32"), &[Tensor::vector(vec![0; 4])])
+            .is_err());
+        // flat non-square image
+        assert!(ex.exec(mk("gdf/ds32"), &[Tensor::vector(vec![0; 15])]).is_err());
         // out-of-range pixel
-        assert!(ex.exec("gdf/ds32", &[&[300; 16]]).is_err());
+        assert!(ex.exec(mk("gdf/ds32"), &[Tensor::vector(vec![300; 16])]).is_err());
         // wrong arity
-        assert!(ex.exec("gdf/ds32", &[&[0; 16], &[0; 16]]).is_err());
+        let t = Tensor::vector(vec![0; 16]);
+        assert!(ex.exec(mk("gdf/ds32"), &[t.clone(), t]).is_err());
+    }
+
+    #[test]
+    fn registration_rejects_catalog_violations() {
+        // th48ds16 is an FRNN-only config
+        assert!(NativeExecutor::new()
+            .register(ModelKey { app: App::Gdf, config: PpcConfig::Th48Ds16 })
+            .is_err());
+        // frnn needs weights
+        let e = NativeExecutor::new().register(mk("frnn/ds32")).unwrap_err();
+        assert!(format!("{e}").contains("register_frnn"), "{e}");
     }
 
     #[test]
     fn blend_exec_matches_fixed_point_sim() {
-        use crate::apps::blend;
-        let ex = NativeExecutor::new().with_blend("ds32").unwrap();
+        use crate::apps::blend::{self, Alpha};
+        let ex = NativeExecutor::new().register(mk("blend/ds32")).unwrap();
         let mut rng = Rng::new(0xB1);
         let p1: Vec<i32> = (0..100).map(|_| rng.below(256) as i32).collect();
         let p2: Vec<i32> = (0..100).map(|_| rng.below(256) as i32).collect();
-        let out = ex.exec("blend/ds32", &[&p1, &p2, &[32]]).unwrap();
-        let chain = config_chain("ds32").unwrap();
-        for (j, &o) in out[0].iter().enumerate() {
-            let want = blend::blend_pixel(
-                p1[j] as u8,
-                p2[j] as u8,
-                Alpha(32),
-                &chain,
-                &chain,
-            );
+        let out = ex
+            .exec(
+                mk("blend/ds32"),
+                &[
+                    Tensor::matrix(10, 10, p1.clone()).unwrap(),
+                    Tensor::matrix(10, 10, p2.clone()).unwrap(),
+                    Tensor::scalar(32),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].shape, vec![10, 10], "blend keeps the request shape");
+        let chain = PpcConfig::Ds32.chain();
+        for (j, &o) in out[0].data.iter().enumerate() {
+            let want = blend::blend_pixel(p1[j] as u8, p2[j] as u8, Alpha(32), &chain, &chain);
             assert_eq!(o, want as i32, "pixel {j}");
         }
         // alpha out of the natural range is rejected, not miscomputed
-        assert!(ex.exec("blend/ds32", &[&p1, &p2, &[200]]).is_err());
+        assert!(ex
+            .exec(
+                mk("blend/ds32"),
+                &[
+                    Tensor::vector(p1.clone()),
+                    Tensor::vector(p2.clone()),
+                    Tensor::scalar(200)
+                ],
+            )
+            .is_err());
+        // shape-mismatched images are rejected before pixel checks
+        assert!(ex
+            .exec(
+                mk("blend/ds32"),
+                &[
+                    Tensor::matrix(10, 10, p1).unwrap(),
+                    Tensor::matrix(4, 25, p2).unwrap(),
+                    Tensor::scalar(32)
+                ],
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn warm_cache_construction_performs_zero_synthesis() {
+        let dir = std::env::temp_dir()
+            .join(format!("ppc_native_warm_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // cold: everything synthesizes and lands in the cache
+        let cold = NativeExecutor::new()
+            .with_cache(&dir)
+            .unwrap()
+            .register(mk("gdf/ds32"))
+            .unwrap();
+        let cold_misses = cold.cache().unwrap().misses();
+        assert!(cold_misses > 0);
+        assert!(!cold.model_infos()[0].cached);
+
+        // warm: a brand-new executor over the same dir loads every
+        // netlist from BLIF — zero two-level synthesis (zero misses)
+        let warm = NativeExecutor::new()
+            .with_cache(&dir)
+            .unwrap()
+            .register(mk("gdf/ds32"))
+            .unwrap();
+        assert_eq!(warm.cache().unwrap().misses(), 0, "warm start must not synthesize");
+        assert_eq!(warm.cache().unwrap().hits(), cold_misses);
+        assert!(warm.model_infos()[0].cached);
+
+        // …and serves bit-exact results
+        let img = synthetic_photo(12, 12, 3);
+        let out = warm.exec(mk("gdf/ds32"), &[img.to_tensor()]).unwrap();
+        assert_eq!(out[0], gdf::gdf_filter(&img, &PpcConfig::Ds32.chain()).to_tensor());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -17,6 +17,13 @@
 //! a [`Runtime`] must stay on the thread that created it. The
 //! coordinator wraps it in a dedicated engine thread (see
 //! [`crate::coordinator`]).
+//!
+//! Artifact files are keyed by the manifest's `"{app}/{config}"`
+//! strings on disk; the serving stack never sees those — the
+//! [`Executor`](crate::coordinator::engine::Executor) adapter renders
+//! each typed [`crate::catalog::ModelKey`] to its canonical string at
+//! the boundary and parses manifest keys back into the catalog, so an
+//! artifact for a key outside the typed catalog simply isn't servable.
 
 /// The error returned by every entry point when the `pjrt` feature is
 /// off.

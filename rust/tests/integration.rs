@@ -16,12 +16,17 @@
 use ppc::apps::frnn::{io as frnn_io, net};
 use ppc::apps::image::Image;
 use ppc::apps::{blend, gdf};
+use ppc::catalog::{ModelKey, PpcConfig, Tensor};
 use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
 use ppc::ppc::preprocess::{Chain, Preproc};
 use ppc::runtime::Runtime;
 use ppc::util::prng::Rng;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
+
+fn mk(s: &str) -> ModelKey {
+    ModelKey::parse(s).unwrap()
+}
 
 fn artifacts_dir() -> Option<PathBuf> {
     if !cfg!(feature = "pjrt") {
@@ -42,14 +47,15 @@ fn artifacts_dir() -> Option<PathBuf> {
 // ---------------------------------------------------------------------
 
 /// The coordinator serves the synthesized PPC adder datapath (GDF)
-/// end-to-end: submissions route to `gdf/ds32`, execute on the gate
-/// netlists, and come back bit-exact with `gdf_filter` — exactness on
-/// the care set. Unknown keys (unregistered configs/apps) fail
-/// gracefully and leave the coordinator serving.
+/// end-to-end: submissions route to the typed `gdf/ds32` key, execute
+/// on the gate netlists, and come back bit-exact with `gdf_filter` —
+/// exactness on the care set. Unknown keys (unregistered
+/// configs/apps) fail gracefully with the available catalog in the
+/// message and leave the coordinator serving.
 #[test]
 fn native_coordinator_serves_ppc_adders_end_to_end() {
-    use ppc::runtime::{native::config_chain, NativeExecutor};
-    let exec = NativeExecutor::new().with_gdf("ds32").unwrap();
+    use ppc::runtime::NativeExecutor;
+    let exec = NativeExecutor::new().register(mk("gdf/ds32")).unwrap();
     let cfg = CoordinatorConfig {
         queue_capacity: 16,
         batch_size: 4,
@@ -64,31 +70,70 @@ fn native_coordinator_serves_ppc_adders_end_to_end() {
         height: 20,
         pixels: (0..400).map(|_| rng.below(256) as u8).collect(),
     };
-    let flat: Vec<i32> = img.pixels.iter().map(|&p| p as i32).collect();
     let t = coord
-        .submit(Job::Denoise { image: flat.clone() }, Quality::Economy)
+        .submit(Job::Denoise { image: img.to_tensor() }, Quality::Economy)
         .unwrap();
     let r = t.wait().unwrap();
-    assert_eq!(r.route, "gdf/ds32");
-    let want = gdf::gdf_filter(&img, &config_chain("ds32").unwrap());
-    let got: Vec<u8> = r.outputs[0].iter().map(|&v| v as u8).collect();
-    assert_eq!(got, want.pixels, "netlist serving path diverged from the fixed-point sim");
+    assert_eq!(r.route, mk("gdf/ds32"));
+    let want = gdf::gdf_filter(&img, &PpcConfig::Ds32.chain());
+    assert_eq!(
+        r.outputs[0],
+        want.to_tensor(),
+        "netlist serving path diverged from the fixed-point sim"
+    );
 
-    // gdf/ds16 is not registered → graceful error, coordinator stays up
-    let t = coord.submit(Job::Denoise { image: flat.clone() }, Quality::Balanced).unwrap();
-    assert!(t.wait().is_err());
+    // gdf/ds16 is not registered → structured error listing the
+    // catalog, coordinator stays up
+    let t = coord
+        .submit(Job::Denoise { image: img.to_tensor() }, Quality::Balanced)
+        .unwrap();
+    let err = t.wait().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown model gdf/ds16"), "{msg}");
+    assert!(msg.contains("available models: [gdf/ds32]"), "{msg}");
     // unregistered app through the *batcher* path (classify flushes on
     // deadline, the engine reports the unknown key per pending request)
     let t = coord
         .submit(Job::Classify { pixels: vec![0; 960] }, Quality::Economy)
         .unwrap();
     let err = t.wait_timeout(Duration::from_secs(5)).unwrap_err();
-    assert!(format!("{err:#}").contains("unknown native model"), "{err:#}");
+    assert!(format!("{err:#}").contains("unknown model frnn/ds32"), "{err:#}");
     assert!(coord.metrics().errors() >= 2);
 
     // still serving after the failures
-    let t = coord.submit(Job::Denoise { image: flat }, Quality::Economy).unwrap();
+    let t = coord.submit(Job::Denoise { image: img.to_tensor() }, Quality::Economy).unwrap();
     assert!(t.wait().is_ok());
+}
+
+/// Non-square images flow end-to-end through the coordinator on the
+/// shape-carrying `Tensor` (the square-only limitation is gone); flat
+/// non-square requests still fail with a structured hint.
+#[test]
+fn native_coordinator_serves_non_square_images() {
+    use ppc::runtime::NativeExecutor;
+    let exec = NativeExecutor::new().register(mk("gdf/ds32")).unwrap();
+    let coord = Coordinator::with_native(CoordinatorConfig::default(), exec).unwrap();
+    let mut rng = Rng::new(0x2D);
+    let img = Image {
+        width: 31,
+        height: 9,
+        pixels: (0..31 * 9).map(|_| rng.below(256) as u8).collect(),
+    };
+    let t = coord
+        .submit(Job::Denoise { image: img.to_tensor() }, Quality::Economy)
+        .unwrap();
+    let r = t.wait().unwrap();
+    assert_eq!(r.outputs[0].shape, vec![9, 31], "response keeps the [h, w] shape");
+    assert_eq!(r.outputs[0], gdf::gdf_filter(&img, &PpcConfig::Ds32.chain()).to_tensor());
+
+    // the legacy flat convention still cannot express 31×9 — the error
+    // says how to fix it
+    let flat: Vec<i32> = img.pixels.iter().map(|&p| p as i32).collect();
+    let t = coord
+        .submit(Job::Denoise { image: Tensor::vector(flat) }, Quality::Economy)
+        .unwrap();
+    let err = t.wait().unwrap_err();
+    assert!(format!("{err:#}").contains("not square"), "{err:#}");
 }
 
 /// Classify requests batch up (batcher → engine → NativeExecutor) and
@@ -102,7 +147,9 @@ fn native_coordinator_batches_classify_requests() {
     let ds = dataset::generate(2, 0xE2E);
     let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
     let q = net::quantize(&r.net);
-    let exec = NativeExecutor::new().with_frnn("ds32", q.clone()).unwrap();
+    let exec = NativeExecutor::new()
+        .register_frnn(PpcConfig::Ds32, q.clone())
+        .unwrap();
     let cfg = CoordinatorConfig {
         queue_capacity: 16,
         batch_size: 3,
@@ -123,9 +170,9 @@ fn native_coordinator_batches_classify_requests() {
     let cw = Chain::of(Preproc::Ds(32));
     for (f, t) in faces.iter().zip(tickets) {
         let r = t.wait_timeout(Duration::from_secs(60)).unwrap();
-        assert_eq!(r.route, "frnn/ds32");
+        assert_eq!(r.route, mk("frnn/ds32"));
         let (_, want) = net::forward_fx(&q, f, &ci, &cw);
-        let got: Vec<u8> = r.outputs[0].iter().map(|&v| v as u8).collect();
+        let got: Vec<u8> = r.outputs[0].data.iter().map(|&v| v as u8).collect();
         assert_eq!(got, want.to_vec(), "served FRNN row diverged from forward_fx");
     }
     assert!(coord.metrics().mean_batch_size() >= 1.0);
@@ -292,10 +339,10 @@ fn coordinator_serves_all_apps_from_artifacts() {
     for i in 0..9 {
         let q = [Quality::Precise, Quality::Balanced, Quality::Economy][i % 3];
         let job = match i % 3 {
-            0 => Job::Denoise { image: random_image(&mut rng, img_len) },
+            0 => Job::Denoise { image: Tensor::vector(random_image(&mut rng, img_len)) },
             1 => Job::Blend {
-                p1: random_image(&mut rng, img_len),
-                p2: random_image(&mut rng, img_len),
+                p1: Tensor::vector(random_image(&mut rng, img_len)),
+                p2: Tensor::vector(random_image(&mut rng, img_len)),
                 alpha: 32,
             },
             _ => Job::Classify {
@@ -306,7 +353,7 @@ fn coordinator_serves_all_apps_from_artifacts() {
     }
     for (i, t) in tickets {
         let r = t.wait().unwrap_or_else(|e| panic!("request {i}: {e:#}"));
-        assert!(!r.outputs[0].is_empty());
+        assert!(!r.outputs[0].data.is_empty());
     }
     assert_eq!(coord.metrics().completed(), 9);
     assert_eq!(coord.metrics().errors(), 0);
