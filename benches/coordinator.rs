@@ -16,8 +16,9 @@ fn mock_coordinator(batch_wait_ms: u64) -> Coordinator {
         batch_size: 16,
         classify_row: 960,
         batch_max_wait: Duration::from_millis(batch_wait_ms),
+        shards: 2,
     };
-    Coordinator::start(cfg, || Ok(MockExecutor::full_catalog())).unwrap()
+    Coordinator::start(cfg, |_shard| Ok(MockExecutor::full_catalog())).unwrap()
 }
 
 fn main() {

@@ -3,25 +3,32 @@
 //! 1. exhaustive verification of a composed 8×8 PPC multiplier netlist,
 //!    scalar `Netlist::eval` walk vs the 64-way bit-parallel `eval64`
 //!    path (target: ≥ 20× speedup),
-//! 2. the coordinator serving a batch through `NativeExecutor` with no
+//! 2. **scalar-vs-lane-batched serving**: a 64-request GDF batch
+//!    through the per-request scalar netlist walk vs the pooled
+//!    `Datapath::exec_batch` lane path (target: ≥ 8× throughput),
+//! 3. the coordinator serving a batch through `NativeExecutor` with no
 //!    XLA/Python anywhere on the path, and
-//! 3. cold start vs warm start: registering a model from scratch
+//! 4. cold start vs warm start: registering a model from scratch
 //!    (full two-level → multi-level → map synthesis) against loading
 //!    the same model from the persistent BLIF netlist cache — the
 //!    cache-win number on the perf record.
 //!
 //! Run: `cargo bench --bench native_exec` (PPC_BENCH_QUICK=1 shrinks
-//! budgets).
+//! budgets). Writes a machine-readable `BENCH_native_exec.json`
+//! summary (override the path with PPC_BENCH_JSON; set it empty to
+//! skip) so future PRs can track the serving-throughput trajectory.
 
 use ppc::apps::frnn::{dataset, net};
-use ppc::catalog::{ModelKey, PpcConfig, Tensor};
+use ppc::apps::gdf::GdfHardware;
+use ppc::apps::image::{synthetic_photo, Image};
+use ppc::catalog::{Datapath, ModelKey, PpcConfig, Tensor};
 use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
 use ppc::logic::map::Objective;
 use ppc::ppc::error;
 use ppc::ppc::preprocess::{Chain, Preproc, ValueSet};
 use ppc::ppc::units::MultUnit8;
 use ppc::runtime::NativeExecutor;
-use ppc::util::bench::{black_box, Bencher};
+use ppc::util::bench::{self, black_box, Bencher};
 use ppc::util::prng::Rng;
 use std::time::Duration;
 
@@ -71,20 +78,54 @@ fn main() {
         assert_eq!(black_box(bad), 0);
     });
 
-    let speedup = scalar.summary.mean / parallel.summary.mean.max(1e-12);
+    let verify_speedup = scalar.summary.mean / parallel.summary.mean.max(1e-12);
     println!(
-        "\nbit-parallel speedup on exhaustive 8x8 verification: {speedup:.1}x {}",
-        if speedup >= 20.0 { "(meets the ≥20x target)" } else { "(below the 20x target!)" }
+        "\nbit-parallel speedup on exhaustive 8x8 verification: {verify_speedup:.1}x {}",
+        if verify_speedup >= 20.0 {
+            "(meets the ≥20x target)"
+        } else {
+            "(below the 20x target!)"
+        }
     );
 
     // the same sweep through the error-analysis driver (PE/ME/MAE)
-    b.run("mult8 exhaustive PE/ME/MAE (bit-parallel)", || {
+    let errs = b.run("mult8 exhaustive PE/ME/MAE (bit-parallel)", || {
         black_box(error::exhaustive_unit(8, &mult, &chain, &chain, |a, b| {
             a as i64 * b as i64
         }));
     });
 
-    // -- 2. coordinator batch through the native backend
+    // -- 2. scalar-vs-lane-batched serving on a 64-request GDF batch
+    println!("\nsynthesizing the GDF adder tree (DS32) for the serving comparison…");
+    let gdf_chain = PpcConfig::Ds32.chain();
+    let hw = GdfHardware::synthesize(&ValueSet::full(8), &gdf_chain, Objective::Area);
+    let imgs: Vec<Image> = (0..64).map(|i| synthetic_photo(16, 16, i as u64)).collect();
+    let batch: Vec<Vec<Tensor>> = imgs.iter().map(|im| vec![im.to_tensor()]).collect();
+
+    let serve_scalar = b.run("gdf serving: 64 requests, scalar per-request walk", || {
+        for img in &imgs {
+            black_box(hw.filter_scalar(img));
+        }
+    });
+    let serve_batched = b.run("gdf serving: 64 requests, lane-batched exec_batch", || {
+        black_box(hw.exec_batch(&batch).unwrap());
+    });
+    // same bits either way — assert once outside the timed loops
+    let batched_out = hw.exec_batch(&batch).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        assert_eq!(batched_out[i][0], hw.filter_scalar(img).to_tensor(), "request {i}");
+    }
+    let serving_speedup = serve_scalar.summary.mean / serve_batched.summary.mean.max(1e-12);
+    println!(
+        "\nlane-batched serving speedup on the 64-request GDF batch: {serving_speedup:.1}x {}",
+        if serving_speedup >= 8.0 {
+            "(meets the ≥8x target)"
+        } else {
+            "(below the 8x target!)"
+        }
+    );
+
+    // -- 3. coordinator batch through the native backend
     println!("\nbuilding native registry (gdf/ds32 + frnn/ds32)…");
     let gdf_key = ModelKey::parse("gdf/ds32").unwrap();
     let ds = dataset::generate(2, 0xBE);
@@ -100,12 +141,13 @@ fn main() {
         batch_size: 8,
         classify_row: 960,
         batch_max_wait: Duration::from_millis(1),
+        shards: 1,
     };
     let coord = Coordinator::with_native(cfg, exec).unwrap();
 
     let mut rng = Rng::new(7);
     let img: Vec<i32> = (0..64 * 64).map(|_| rng.below(256) as i32).collect();
-    b.run("e2e native: denoise 64x64 (gdf/ds32)", || {
+    let e2e_denoise = b.run("e2e native: denoise 64x64 (gdf/ds32)", || {
         let image = Tensor::matrix(64, 64, img.clone()).unwrap();
         let t = coord
             .submit_blocking(Job::Denoise { image }, Quality::Economy)
@@ -119,7 +161,7 @@ fn main() {
         .take(16)
         .map(|f| f.pixels.iter().map(|&p| p as i32).collect())
         .collect();
-    b.run("e2e native: 16 classifies (frnn/ds32, batch=8)", || {
+    let e2e_classify = b.run("e2e native: 16 classifies (frnn/ds32, batch=8)", || {
         let tickets: Vec<_> = faces
             .iter()
             .map(|f| {
@@ -134,7 +176,7 @@ fn main() {
     });
     println!("\nnative serving metrics:\n{}", coord.metrics().report());
 
-    // -- 3. cold start vs warm BLIF netlist cache (gdf/ds32)
+    // -- 4. cold start vs warm BLIF netlist cache (gdf/ds32)
     println!("\ncold-start vs warm-cache model registration…");
     let cache_dir = std::env::temp_dir().join(format!("ppc_bench_nlcache_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&cache_dir);
@@ -158,7 +200,29 @@ fn main() {
         assert_eq!(ex.cache().unwrap().misses(), 0, "warm start must not synthesize");
         black_box(ex);
     });
-    let speedup = cold.summary.mean / warm.summary.mean.max(1e-12);
-    println!("\nwarm-cache cold start is {speedup:.1}x faster (zero two-level synthesis)");
+    let cache_speedup = cold.summary.mean / warm.summary.mean.max(1e-12);
+    println!("\nwarm-cache cold start is {cache_speedup:.1}x faster (zero two-level synthesis)");
     let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // machine-readable summary so the serving-throughput trajectory is
+    // trackable across PRs
+    let json = bench::summary_json(
+        &[
+            &scalar,
+            &parallel,
+            &errs,
+            &serve_scalar,
+            &serve_batched,
+            &e2e_denoise,
+            &e2e_classify,
+            &cold,
+            &warm,
+        ],
+        &[
+            ("bit_parallel_verify_speedup", verify_speedup),
+            ("lane_batched_serving_speedup_64req_gdf", serving_speedup),
+            ("warm_cache_speedup", cache_speedup),
+        ],
+    );
+    bench::write_summary("BENCH_native_exec.json", &json);
 }

@@ -12,7 +12,7 @@ use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
 use crate::ppc::units::{AdderUnit, FreshSynth, MultUnit8, NetlistSource};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Quantized blending ratio: `alpha ∈ [0,127]`, the complementary
 /// coefficient is `255 − alpha ∈ [128,255]`.
@@ -156,42 +156,88 @@ impl BlendHardware {
 
     /// Blend up to 64 pixel pairs through the netlists. With a `natural`
     /// config the coefficient restriction means `alpha.0` must be in
-    /// `[0, 127]` (the Table-2 natural-sparsity contract).
+    /// `[0, 127]` (the Table-2 natural-sparsity contract). A thin
+    /// fixed-capacity wrapper over [`BlendHardware::blend_many`].
     pub fn blend_batch(&self, p1: &[u8], p2: &[u8], alpha: Alpha, out: &mut [u8]) {
         let n = p1.len();
-        debug_assert!(n <= 64 && p2.len() == n && out.len() >= n);
-        debug_assert!(!self.cfg.natural || alpha.0 <= 127, "natural config needs alpha ≤ 127");
-        let pre = &self.cfg.pre;
-        let c1 = vec![pre.apply(alpha.coeff1()); n];
-        let c2 = vec![pre.apply(alpha.coeff2()); n];
-        let i1: Vec<u32> = p1.iter().map(|&p| pre.apply(p as u32)).collect();
-        let i2: Vec<u32> = p2.iter().map(|&p| pre.apply(p as u32)).collect();
-        let mut prod = [0u64; 64];
-        self.m1.eval_batch(&i1, &c1, &mut prod);
-        let t1: Vec<u32> = prod[..n].iter().map(|&v| (v >> 8) as u32).collect();
-        self.m2.eval_batch(&i2, &c2, &mut prod);
-        let t2: Vec<u32> = prod[..n].iter().map(|&v| (v >> 8) as u32).collect();
-        let mut sum = [0u64; 64];
-        self.add.eval_batch(&t1, &t2, &mut sum);
-        for (o, &s) in out[..n].iter_mut().zip(&sum[..n]) {
-            *o = s.min(255) as u8;
-        }
+        assert!(n <= 64 && p2.len() == n && out.len() >= n);
+        let pixels = self.blend_many(&[(p1, p2, alpha)]);
+        out[..n].copy_from_slice(&pixels[0]);
     }
 
     /// Blend two flat pixel buffers of equal length (chunks the work
     /// into 64-pixel netlist passes).
     pub fn blend_flat(&self, p1: &[u8], p2: &[u8], alpha: Alpha) -> Vec<u8> {
         assert_eq!(p1.len(), p2.len());
-        let mut pixels = vec![0u8; p1.len()];
-        let mut i = 0;
-        while i < pixels.len() {
-            let end = (i + 64).min(pixels.len());
-            let mut buf = [0u8; 64];
-            self.blend_batch(&p1[i..end], &p2[i..end], alpha, &mut buf);
-            pixels[i..end].copy_from_slice(&buf[..end - i]);
-            i = end;
+        self.blend_many(&[(p1, p2, alpha)])
+            .pop()
+            .expect("one request in, one pixel buffer out")
+    }
+
+    /// Blend a whole batch of requests — each `(p1, p2, alpha)` with
+    /// its own blending ratio — through one pooled pixel stream: the
+    /// lane-batched serving path. Every 64-lane multiplier pass mixes
+    /// pixels (and coefficients) from as many requests as fit, so small
+    /// images stop wasting tail lanes per request. The stream is
+    /// processed in bounded segments ([`SEG_PIXELS`] pixels) so huge
+    /// images cannot balloon shard memory.
+    pub fn blend_many(&self, reqs: &[(&[u8], &[u8], Alpha)]) -> Vec<Vec<u8>> {
+        let pre = &self.cfg.pre;
+        let mut outs: Vec<Vec<u8>> =
+            reqs.iter().map(|(p1, _, _)| vec![0u8; p1.len()]).collect();
+        let mut i1: Vec<u32> = Vec::new();
+        let mut i2: Vec<u32> = Vec::new();
+        let mut c1: Vec<u32> = Vec::new();
+        let mut c2: Vec<u32> = Vec::new();
+        // (request index, pixel index) of every pooled pixel pair
+        let mut dest: Vec<(usize, usize)> = Vec::new();
+        for (r, (p1, p2, alpha)) in reqs.iter().enumerate() {
+            debug_assert_eq!(p1.len(), p2.len());
+            debug_assert!(
+                !self.cfg.natural || alpha.0 <= 127,
+                "natural config needs alpha ≤ 127"
+            );
+            let (a1, a2) = (pre.apply(alpha.coeff1()), pre.apply(alpha.coeff2()));
+            for (j, (&x, &y)) in p1.iter().zip(p2.iter()).enumerate() {
+                i1.push(pre.apply(x as u32));
+                c1.push(a1);
+                i2.push(pre.apply(y as u32));
+                c2.push(a2);
+                dest.push((r, j));
+                if dest.len() >= SEG_PIXELS {
+                    self.flush_segment(&i1, &i2, &c1, &c2, &dest, &mut outs);
+                    i1.clear();
+                    i2.clear();
+                    c1.clear();
+                    c2.clear();
+                    dest.clear();
+                }
+            }
         }
-        pixels
+        self.flush_segment(&i1, &i2, &c1, &c2, &dest, &mut outs);
+        outs
+    }
+
+    /// Run one pooled segment through both multipliers and the output
+    /// adder, scattering results to their `(request, pixel)` slots.
+    fn flush_segment(
+        &self,
+        i1: &[u32],
+        i2: &[u32],
+        c1: &[u32],
+        c2: &[u32],
+        dest: &[(usize, usize)],
+        outs: &mut [Vec<u8>],
+    ) {
+        if dest.is_empty() {
+            return;
+        }
+        let t1: Vec<u32> = self.m1.mul_many(i1, c1).iter().map(|&v| (v >> 8) as u32).collect();
+        let t2: Vec<u32> = self.m2.mul_many(i2, c2).iter().map(|&v| (v >> 8) as u32).collect();
+        let sum = self.add.add_many(&t1, &t2);
+        for (&(r, j), &s) in dest.iter().zip(&sum) {
+            outs[r][j] = s.min(255) as u8;
+        }
     }
 
     /// Blend two whole images through the synthesized datapath.
@@ -203,28 +249,79 @@ impl BlendHardware {
     }
 }
 
+/// Pixel pairs per pooled netlist segment: 256 full 64-lane passes,
+/// bounding lane buffers and truncated-product intermediates no matter
+/// how large the request images are.
+const SEG_PIXELS: usize = 16 * 1024;
+
+/// Validate one `(p1, p2, alpha)` request and decode it to pixel
+/// buffers (shared by the scalar and lane-batched `Datapath` paths).
+fn decode_request(inputs: &[Tensor]) -> Result<(Vec<u8>, Vec<u8>, Alpha, Vec<usize>)> {
+    if inputs.len() != 3 {
+        bail!("expected (p1, p2, alpha), got {} tensors", inputs.len());
+    }
+    let (p1, p2, al) = (&inputs[0], &inputs[1], &inputs[2]);
+    if p1.shape != p2.shape {
+        bail!("image shapes differ ({:?} vs {:?})", p1.shape, p2.shape);
+    }
+    // `Tensor` fields are public, so shape and data can disagree; a
+    // length mismatch must be a structured error here, not a panic
+    // deep inside a pooled multiplier pass
+    let elements = p1.elements();
+    if p1.data.len() != elements || p2.data.len() != elements {
+        bail!(
+            "image shape {:?} wants {} pixels, data has {} and {}",
+            p1.shape,
+            elements,
+            p1.data.len(),
+            p2.data.len()
+        );
+    }
+    if al.data.len() != 1 || !(0..=127).contains(&al.data[0]) {
+        bail!("alpha must be a single value in [0, 127], got {:?}", al.data);
+    }
+    let a = pixels_from_i32(&p1.data, "p1")?;
+    let b = pixels_from_i32(&p2.data, "p2")?;
+    Ok((a, b, Alpha(al.data[0] as u8), p1.shape.clone()))
+}
+
 impl Datapath for BlendHardware {
     /// `(p1, p2, alpha)` in — the images shape-identical, alpha a
     /// single value in `[0, 127]` (the natural-sparsity contract) —
     /// one blended tensor out, with `p1`'s shape.
     fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != 3 {
-            bail!("expected (p1, p2, alpha), got {} tensors", inputs.len());
-        }
-        let (p1, p2, al) = (&inputs[0], &inputs[1], &inputs[2]);
-        if p1.shape != p2.shape {
-            bail!("image shapes differ ({:?} vs {:?})", p1.shape, p2.shape);
-        }
-        if al.data.len() != 1 || !(0..=127).contains(&al.data[0]) {
-            bail!("alpha must be a single value in [0, 127], got {:?}", al.data);
-        }
-        let a = pixels_from_i32(&p1.data, "p1")?;
-        let b = pixels_from_i32(&p2.data, "p2")?;
-        let out = self.blend_flat(&a, &b, Alpha(al.data[0] as u8));
+        let (a, b, alpha, shape) = decode_request(inputs)?;
+        let out = self.blend_flat(&a, &b, alpha);
         Ok(vec![Tensor {
-            shape: p1.shape.clone(),
+            shape,
             data: out.into_iter().map(|p| p as i32).collect(),
         }])
+    }
+
+    /// Lane-batched path: every request's pixels (each with its own
+    /// alpha) share the same 64-lane multiplier passes
+    /// ([`BlendHardware::blend_many`]). Bit-exact with per-request
+    /// [`Datapath::exec`].
+    fn exec_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let mut decoded = Vec::with_capacity(batch.len());
+        for (i, inputs) in batch.iter().enumerate() {
+            decoded.push(decode_request(inputs).map_err(|e| anyhow!("request {i}: {e:#}"))?);
+        }
+        let reqs: Vec<(&[u8], &[u8], Alpha)> = decoded
+            .iter()
+            .map(|(a, b, alpha, _)| (a.as_slice(), b.as_slice(), *alpha))
+            .collect();
+        let outs = self.blend_many(&reqs);
+        Ok(outs
+            .into_iter()
+            .zip(&decoded)
+            .map(|(out, (_, _, _, shape))| {
+                vec![Tensor {
+                    shape: shape.clone(),
+                    data: out.into_iter().map(|p| p as i32).collect(),
+                }]
+            })
+            .collect())
     }
 
     fn num_gates(&self) -> usize {
@@ -343,6 +440,45 @@ mod tests {
             let sw = blend_images(&p1, &p2, alpha, &cfg.pre, &cfg.pre);
             assert_eq!(hw.blend_images(&p1, &p2, alpha), sw, "alpha={}", alpha.0);
         }
+    }
+
+    #[test]
+    fn lane_batched_blend_pools_requests_with_distinct_alphas() {
+        let cfg = BlendConfig::of(true, Chain::of(Preproc::Ds(32)));
+        let hw = BlendHardware::synthesize(&cfg, Objective::Area);
+        let a = synthetic_photo(9, 5, 11);
+        let b = synthetic_photo(9, 5, 12);
+        let c = synthetic_photo(4, 7, 13);
+        let d = synthetic_photo(4, 7, 14);
+        // pooled batch, each request with its own alpha
+        let outs = hw.blend_many(&[
+            (&a.pixels, &b.pixels, Alpha(16)),
+            (&c.pixels, &d.pixels, Alpha(100)),
+        ]);
+        assert_eq!(outs[0], hw.blend_images(&a, &b, Alpha(16)).pixels);
+        assert_eq!(outs[1], hw.blend_images(&c, &d, Alpha(100)).pixels);
+        // Datapath batch interface agrees with per-request exec
+        let req = |p: &crate::apps::image::Image, q: &crate::apps::image::Image, al: i32| {
+            vec![p.to_tensor(), q.to_tensor(), Tensor::scalar(al)]
+        };
+        let batch = vec![req(&a, &b, 16), req(&c, &d, 100)];
+        let got = hw.exec_batch(&batch).unwrap();
+        for (i, inputs) in batch.iter().enumerate() {
+            assert_eq!(got[i], hw.exec(inputs).unwrap(), "request {i}");
+        }
+        // a bad alpha fails the batch with its request index
+        let bad = vec![req(&a, &b, 16), req(&c, &d, 200)];
+        let e = hw.exec_batch(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("request 1"), "{e:#}");
+        // shape/data disagreement (Tensor fields are public) is a
+        // structured error, never a panic inside a pooled pass
+        let broken = vec![
+            Tensor { shape: vec![2, 2], data: vec![1, 2, 3, 4] },
+            Tensor { shape: vec![2, 2], data: vec![1, 2, 3] },
+            Tensor::scalar(10),
+        ];
+        let e = hw.exec(&broken).unwrap_err();
+        assert!(format!("{e:#}").contains("wants 4 pixels"), "{e:#}");
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
 use crate::ppc::units::{FreshSynth, MultUnit8, NetlistSource};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// A Table-3 row configuration for the MAC hardware.
 #[derive(Clone, Debug)]
@@ -175,6 +175,54 @@ impl FrnnHardware {
         acc
     }
 
+    /// Forward many faces through the synthesized multipliers in one
+    /// pooled pass — the lane-batched serving path. Layer 1 already
+    /// fills all 64 lanes per face (960-pixel dots), but layer 2's
+    /// 40-element dots waste a third of every pass when run per face;
+    /// here the hidden activations of *all* faces share the layer-2
+    /// multiplier lanes. Bit-exact with per-face
+    /// [`FrnnHardware::forward`].
+    pub fn forward_many(&self, rows: &[&[u8]]) -> Vec<[u8; NUM_OUTPUTS]> {
+        // layer 1: per face (already at full lane occupancy)
+        let hxs: Vec<Vec<u32>> = rows
+            .iter()
+            .map(|pixels| {
+                let px: Vec<u32> =
+                    pixels.iter().map(|&p| self.pre_image.apply(p as u32)).collect();
+                (0..HIDDEN)
+                    .map(|j| {
+                        let row = &self.w1p[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+                        let acc = self.q.b1[j] as i64 + self.dot(&self.mult1, &px, row);
+                        sigmoid_fx(&self.q.sigmoid_lut, acc, self.q.d1) as u32
+                    })
+                    .collect()
+            })
+            .collect();
+        // layer 2: lane-packed across faces — one mul_many per output
+        // neuron over every face's hidden vector
+        let nf = rows.len();
+        let mut flat_h = Vec::with_capacity(nf * HIDDEN);
+        for hx in &hxs {
+            flat_h.extend_from_slice(hx);
+        }
+        let mut outs = vec![[0u8; NUM_OUTPUTS]; nf];
+        for k in 0..NUM_OUTPUTS {
+            let wrow = &self.w2p[k * HIDDEN..(k + 1) * HIDDEN];
+            let ws: Vec<u32> = (0..nf * HIDDEN).map(|i| wrow[i % HIDDEN]).collect();
+            let prods = self.mult2.mul_many(&flat_h, &ws);
+            for f in 0..nf {
+                let mut acc = self.q.b2[k] as i64;
+                for j in 0..HIDDEN {
+                    let idx = f * HIDDEN + j;
+                    let (x, w, u) = (flat_h[idx] as i64, ws[idx], prods[idx] as i64);
+                    acc += if w >= 128 { u - (x << 8) } else { u };
+                }
+                outs[f][k] = sigmoid_fx(&self.q.sigmoid_lut, acc, self.q.d2);
+            }
+        }
+        outs
+    }
+
     /// Bit-accurate forward pass through the synthesized multipliers;
     /// same return convention as [`super::net::forward_fx`].
     pub fn forward(&self, face: &Face) -> ([bool; NUM_OUTPUTS], [u8; NUM_OUTPUTS]) {
@@ -202,30 +250,83 @@ impl FrnnHardware {
     }
 }
 
+/// Validate one face-batch request: how many 960-pixel rows it
+/// carries, plus the decoded pixels.
+fn decode_request(inputs: &[Tensor]) -> Result<(usize, Vec<u8>)> {
+    if inputs.len() != 1 {
+        bail!("expected 1 input tensor (the face batch), got {}", inputs.len());
+    }
+    let t = &inputs[0];
+    let batch = match t.shape.as_slice() {
+        [b, row] if *row == IMG_PIXELS && *b > 0 => *b,
+        [n] if *n > 0 && n % IMG_PIXELS == 0 => n / IMG_PIXELS,
+        other => bail!(
+            "face batches are [batch, {IMG_PIXELS}] (or a flat multiple of the \
+             {IMG_PIXELS}-pixel row), got shape {other:?}"
+        ),
+    };
+    // `Tensor` fields are public, so shape and data can disagree; an
+    // unchecked mismatch would shift every later request's rows in a
+    // pooled batch (silent misattribution) or slice out of bounds
+    if batch * IMG_PIXELS != t.data.len() {
+        bail!(
+            "face batch shape {:?} wants {} pixels, data has {}",
+            t.shape,
+            batch * IMG_PIXELS,
+            t.data.len()
+        );
+    }
+    Ok((batch, pixels_from_i32(&t.data, "pixels")?))
+}
+
+impl FrnnHardware {
+    /// Forward `rows` faces (a flat pixel buffer of `rows × 960`) and
+    /// flatten the activations into one `[rows, 7]` tensor.
+    fn rows_tensor(&self, rows: usize, pixels: &[u8]) -> Tensor {
+        let faces: Vec<&[u8]> = pixels.chunks(IMG_PIXELS).collect();
+        let outs = self.forward_many(&faces);
+        let data: Vec<i32> = outs
+            .iter()
+            .flat_map(|o| o.iter().map(|&v| v as i32))
+            .collect();
+        Tensor { shape: vec![rows, NUM_OUTPUTS], data }
+    }
+}
+
 impl Datapath for FrnnHardware {
     /// One faces tensor in — `[batch, 960]`, or a flat multiple of the
     /// 960-pixel row — one `[batch, 7]` activation tensor out.
     fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != 1 {
-            bail!("expected 1 input tensor (the face batch), got {}", inputs.len());
+        let (batch, pixels) = decode_request(inputs)?;
+        Ok(vec![self.rows_tensor(batch, &pixels)])
+    }
+
+    /// Lane-batched path: every request's faces are pooled into one
+    /// forward pass ([`FrnnHardware::forward_many`]), so the layer-2
+    /// multiplier lanes are shared across requests. Bit-exact with
+    /// per-request [`Datapath::exec`].
+    fn exec_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let mut rows_per = Vec::with_capacity(batch.len());
+        let mut pixels: Vec<u8> = Vec::new();
+        for (i, inputs) in batch.iter().enumerate() {
+            let (rows, px) =
+                decode_request(inputs).map_err(|e| anyhow!("request {i}: {e:#}"))?;
+            rows_per.push(rows);
+            pixels.extend_from_slice(&px);
         }
-        let t = &inputs[0];
-        let batch = match t.shape.as_slice() {
-            [b, row] if *row == IMG_PIXELS && *b > 0 => *b,
-            [n] if *n > 0 && n % IMG_PIXELS == 0 => n / IMG_PIXELS,
-            other => bail!(
-                "face batches are [batch, {IMG_PIXELS}] (or a flat multiple of the \
-                 {IMG_PIXELS}-pixel row), got shape {other:?}"
-            ),
-        };
-        let pixels = pixels_from_i32(&t.data, "pixels")?;
-        let mut out = Vec::with_capacity(batch * NUM_OUTPUTS);
-        for row in pixels.chunks(IMG_PIXELS) {
-            let face = Face { pixels: row.to_vec(), id: 0, pose: 0, sunglasses: false };
-            let (_, outs) = self.forward(&face);
-            out.extend(outs.iter().map(|&v| v as i32));
+        let faces: Vec<&[u8]> = pixels.chunks(IMG_PIXELS).collect();
+        let outs = self.forward_many(&faces);
+        let mut result = Vec::with_capacity(batch.len());
+        let mut off = 0;
+        for &rows in &rows_per {
+            let data: Vec<i32> = outs[off..off + rows]
+                .iter()
+                .flat_map(|o| o.iter().map(|&v| v as i32))
+                .collect();
+            result.push(vec![Tensor { shape: vec![rows, NUM_OUTPUTS], data }]);
+            off += rows;
         }
-        Ok(vec![Tensor { shape: vec![batch, NUM_OUTPUTS], data: out }])
+        Ok(result)
     }
 
     fn num_gates(&self) -> usize {
@@ -278,6 +379,45 @@ mod tests {
             let want = net::forward_fx(&q, face, &ci, &cw);
             assert_eq!(hw.forward(face), want);
         }
+    }
+
+    #[test]
+    fn forward_many_lane_packs_bit_exactly() {
+        use crate::apps::frnn::{dataset, net};
+        let ds = dataset::generate(2, 47);
+        let r = net::train(&ds, &net::TrainConfig { max_epochs: 8, ..Default::default() });
+        let q = net::quantize(&r.net);
+        let c = Chain::of(Preproc::Ds(32));
+        let hw = FrnnHardware::synthesize(q, &c, &c, Objective::Area);
+        let faces: Vec<&[u8]> = ds.test.iter().take(3).map(|f| f.pixels.as_slice()).collect();
+        let many = hw.forward_many(&faces);
+        for (i, f) in ds.test.iter().take(3).enumerate() {
+            let (_, want) = hw.forward(f);
+            assert_eq!(many[i], want, "face {i}");
+        }
+        // Datapath batch interface: a 2-row request and a 1-row request
+        // pooled into one pass, split back per request
+        let t2 = Tensor {
+            shape: vec![2, 960],
+            data: faces[0].iter().chain(faces[1]).map(|&p| p as i32).collect(),
+        };
+        let t1 = Tensor {
+            shape: vec![1, 960],
+            data: faces[2].iter().map(|&p| p as i32).collect(),
+        };
+        let batch = vec![vec![t2], vec![t1]];
+        let got = hw.exec_batch(&batch).unwrap();
+        for (i, inputs) in batch.iter().enumerate() {
+            assert_eq!(got[i], hw.exec(inputs).unwrap(), "request {i}");
+        }
+        assert_eq!(got[0][0].shape, vec![2, 7]);
+        assert_eq!(got[1][0].shape, vec![1, 7]);
+        // shape/data disagreement (Tensor fields are public) must be a
+        // structured error — an unchecked mismatch would shift every
+        // later request's rows in a pooled batch
+        let broken = Tensor { shape: vec![1, 960], data: vec![0; 1920] };
+        let e = hw.exec(&[broken]).unwrap_err();
+        assert!(format!("{e:#}").contains("wants 960 pixels"), "{e:#}");
     }
 
     #[test]

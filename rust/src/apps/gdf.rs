@@ -24,7 +24,7 @@ use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
 use crate::ppc::units::{AdderUnit, FreshSynth, NetlistSource};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// Bit-accurate GDF datapath for one window (pixels in row-major A1..A9
 /// order). `pre` is applied to each primary input first (the paper's
@@ -48,19 +48,7 @@ pub fn gdf_filter(img: &Image, pre: &Chain) -> Image {
     let mut out = Image::new(img.width, img.height);
     for y in 0..img.height {
         for x in 0..img.width {
-            let (xi, yi) = (x as isize, y as isize);
-            let px = [
-                img.get_clamped(xi - 1, yi - 1),
-                img.get_clamped(xi, yi - 1),
-                img.get_clamped(xi + 1, yi - 1),
-                img.get_clamped(xi - 1, yi),
-                img.get_clamped(xi, yi),
-                img.get_clamped(xi + 1, yi),
-                img.get_clamped(xi - 1, yi + 1),
-                img.get_clamped(xi, yi + 1),
-                img.get_clamped(xi + 1, yi + 1),
-            ];
-            out.set(x, y, gdf_window(px, pre));
+            out.set(x, y, gdf_window(gather_window(img, x, y), pre));
         }
     }
     out
@@ -158,14 +146,14 @@ impl GdfHardware {
         self.adders.iter().map(|a| a.num_gates()).sum()
     }
 
-    /// Run one batch (≤ 64) of preprocessed windows through the tree;
-    /// `p[k]` holds signal `A{k+1}` of every window.
+    /// Run an arbitrarily long stream of preprocessed windows through
+    /// the tree; `p[k]` holds signal `A{k+1}` of every window. Each
+    /// adder pools the stream into 64-lane netlist passes
+    /// ([`AdderUnit::add_many`]), so lane occupancy stays full except
+    /// for the single global tail chunk.
     fn window_tree(&self, p: &[Vec<u32>; 9]) -> Vec<u32> {
-        let n = p[0].len();
         let add = |unit: &AdderUnit, a: &[u32], b: &[u32]| -> Vec<u32> {
-            let mut out = [0u64; 64];
-            unit.eval_batch(a, b, &mut out);
-            out[..n].iter().map(|&v| v as u32).collect()
+            unit.add_many(a, b).iter().map(|&v| v as u32).collect()
         };
         let shl = |v: &[u32], k: u32| -> Vec<u32> { v.iter().map(|&x| x << k).collect() };
         let a1 = add(&self.adders[0], &p[0], &p[2]);
@@ -182,49 +170,143 @@ impl GdfHardware {
     /// Filter a whole image through the synthesized netlists
     /// (border-replicated, like [`gdf_filter`]).
     pub fn filter(&self, img: &Image) -> Image {
-        let mut out = Image::new(img.width, img.height);
-        let coords: Vec<(usize, usize)> = (0..img.height)
-            .flat_map(|y| (0..img.width).map(move |x| (x, y)))
-            .collect();
+        self.filter_many(std::slice::from_ref(img))
+            .pop()
+            .expect("one image in, one image out")
+    }
+
+    /// Filter a whole batch of images (shapes may differ) through one
+    /// pooled window stream: the lane-batched serving path. Windows
+    /// from every image share the same 64-lane netlist passes, so a
+    /// batch of small images costs barely more than its total pixel
+    /// count — tail lanes go idle once per *segment*, not once per
+    /// request. The stream is processed in bounded segments
+    /// ([`SEG_WINDOWS`] windows ≈ a few hundred KB of lane buffers) so
+    /// huge images cannot balloon shard memory.
+    pub fn filter_many(&self, imgs: &[Image]) -> Vec<Image> {
+        let mut outs: Vec<Image> =
+            imgs.iter().map(|im| Image::new(im.width, im.height)).collect();
         let mut win: [Vec<u32>; 9] = Default::default();
-        for chunk in coords.chunks(64) {
-            for w in win.iter_mut() {
-                w.clear();
-            }
-            for &(x, y) in chunk {
-                let (xi, yi) = (x as isize, y as isize);
-                let px = [
-                    img.get_clamped(xi - 1, yi - 1),
-                    img.get_clamped(xi, yi - 1),
-                    img.get_clamped(xi + 1, yi - 1),
-                    img.get_clamped(xi - 1, yi),
-                    img.get_clamped(xi, yi),
-                    img.get_clamped(xi + 1, yi),
-                    img.get_clamped(xi - 1, yi + 1),
-                    img.get_clamped(xi, yi + 1),
-                    img.get_clamped(xi + 1, yi + 1),
-                ];
-                for (k, w) in win.iter_mut().enumerate() {
-                    w.push(self.pre.apply(px[k] as u32));
+        // (image index, pixel index) of every window pooled in `win`
+        let mut dest: Vec<(usize, usize)> = Vec::new();
+        for (ii, img) in imgs.iter().enumerate() {
+            for y in 0..img.height {
+                for x in 0..img.width {
+                    let px = gather_window(img, x, y);
+                    for (k, w) in win.iter_mut().enumerate() {
+                        w.push(self.pre.apply(px[k] as u32));
+                    }
+                    dest.push((ii, y * img.width + x));
+                    if dest.len() >= SEG_WINDOWS {
+                        self.flush_segment(&mut win, &mut dest, &mut outs);
+                    }
                 }
             }
-            let vals = self.window_tree(&win);
-            for (j, &(x, y)) in chunk.iter().enumerate() {
-                out.set(x, y, vals[j].min(255) as u8);
+        }
+        self.flush_segment(&mut win, &mut dest, &mut outs);
+        outs
+    }
+
+    /// Run the pooled windows in `win` through the tree and scatter the
+    /// results to their `(image, pixel)` destinations.
+    fn flush_segment(
+        &self,
+        win: &mut [Vec<u32>; 9],
+        dest: &mut Vec<(usize, usize)>,
+        outs: &mut [Image],
+    ) {
+        if dest.is_empty() {
+            return;
+        }
+        let vals = self.window_tree(win);
+        for (&(ii, px), &v) in dest.iter().zip(&vals) {
+            outs[ii].pixels[px] = v.min(255) as u8;
+        }
+        for w in win.iter_mut() {
+            w.clear();
+        }
+        dest.clear();
+    }
+
+    /// Filter one image through the *scalar* netlist walk (one minterm
+    /// at a time, no bit-slicing) — the per-request baseline the
+    /// lane-batched serving bench compares against. Kept wiring-for-
+    /// wiring parallel to [`GdfHardware::window_tree`]; the
+    /// `lane_batched_and_scalar_paths_agree` test pins the two
+    /// together.
+    pub fn filter_scalar(&self, img: &Image) -> Image {
+        let mut out = Image::new(img.width, img.height);
+        let add = |u: &AdderUnit, a: u32, b: u32| u.eval_scalar(a, b) as u32;
+        for y in 0..img.height {
+            for x in 0..img.width {
+                let px = gather_window(img, x, y);
+                let p: Vec<u32> = px.iter().map(|&v| self.pre.apply(v as u32)).collect();
+                let a1 = add(&self.adders[0], p[0], p[2]);
+                let a2 = add(&self.adders[1], p[6], p[8]);
+                let a3 = add(&self.adders[2], p[1] << 1, p[3] << 1);
+                let a4 = add(&self.adders[3], p[5] << 1, p[7] << 1);
+                let a5 = add(&self.adders[4], a1, a2);
+                let a6 = add(&self.adders[5], a3, a4);
+                let a7 = add(&self.adders[6], a5, a6);
+                let a8 = add(&self.adders[7], a7, p[4] << 2);
+                out.set(x, y, (a8 >> 4).min(255) as u8);
             }
         }
         out
     }
 }
 
+/// Windows per pooled netlist segment: 256 full 64-lane passes, with
+/// lane buffers and tree intermediates bounded to a few hundred KB no
+/// matter how large the request images are.
+const SEG_WINDOWS: usize = 16 * 1024;
+
+/// The 3×3 border-replicated window around `(x, y)` in A1..A9 order —
+/// the one gather shared by the sim, the lane-batched path and the
+/// scalar baseline.
+#[inline]
+fn gather_window(img: &Image, x: usize, y: usize) -> [u8; 9] {
+    let (xi, yi) = (x as isize, y as isize);
+    [
+        img.get_clamped(xi - 1, yi - 1),
+        img.get_clamped(xi, yi - 1),
+        img.get_clamped(xi + 1, yi - 1),
+        img.get_clamped(xi - 1, yi),
+        img.get_clamped(xi, yi),
+        img.get_clamped(xi + 1, yi),
+        img.get_clamped(xi - 1, yi + 1),
+        img.get_clamped(xi, yi + 1),
+        img.get_clamped(xi + 1, yi + 1),
+    ]
+}
+
+fn decode_request(inputs: &[Tensor]) -> Result<Image> {
+    if inputs.len() != 1 {
+        bail!("expected 1 input tensor (the image), got {}", inputs.len());
+    }
+    Image::from_tensor(&inputs[0], "image")
+}
+
 impl Datapath for GdfHardware {
     /// One image tensor in (`[h, w]`, or flat square), one out.
     fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != 1 {
-            bail!("expected 1 input tensor (the image), got {}", inputs.len());
-        }
-        let img = Image::from_tensor(&inputs[0], "image")?;
+        let img = decode_request(inputs)?;
         Ok(vec![self.filter(&img).to_tensor()])
+    }
+
+    /// Lane-batched path: every request's windows share the same
+    /// 64-lane netlist passes ([`GdfHardware::filter_many`]). Bit-exact
+    /// with per-request [`Datapath::exec`].
+    fn exec_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let mut imgs = Vec::with_capacity(batch.len());
+        for (i, inputs) in batch.iter().enumerate() {
+            imgs.push(decode_request(inputs).map_err(|e| anyhow!("request {i}: {e:#}"))?);
+        }
+        Ok(self
+            .filter_many(&imgs)
+            .into_iter()
+            .map(|im| vec![im.to_tensor()])
+            .collect())
     }
 
     fn num_gates(&self) -> usize {
@@ -352,6 +434,35 @@ mod tests {
         // arity and flat-non-square requests are structured errors
         assert!(hw.exec(&[]).is_err());
         assert!(hw.exec(&[Tensor::vector(vec![0; 15])]).is_err());
+    }
+
+    #[test]
+    fn lane_batched_and_scalar_paths_agree() {
+        let chain = Chain::of(Preproc::Ds(32));
+        let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, Objective::Area);
+        // mixed shapes in one pooled batch — each output bit-exact with
+        // both the fixed-point sim and the scalar netlist walk
+        let imgs = vec![
+            synthetic_photo(7, 5, 1),
+            synthetic_photo(16, 16, 2),
+            synthetic_photo(3, 11, 3),
+        ];
+        let outs = hw.filter_many(&imgs);
+        for (img, out) in imgs.iter().zip(&outs) {
+            assert_eq!(*out, gdf_filter(img, &chain));
+            assert_eq!(*out, hw.filter_scalar(img));
+        }
+        // and through the Datapath batch interface
+        let batch: Vec<Vec<Tensor>> = imgs.iter().map(|im| vec![im.to_tensor()]).collect();
+        let got = hw.exec_batch(&batch).unwrap();
+        for (i, out) in outs.iter().enumerate() {
+            assert_eq!(got[i][0], out.to_tensor());
+        }
+        // one bad request names its index and fails the whole batch
+        let mut bad = batch;
+        bad[1] = vec![Tensor::vector(vec![300; 4])];
+        let e = hw.exec_batch(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("request 1"), "{e:#}");
     }
 
     #[test]

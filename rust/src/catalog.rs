@@ -270,6 +270,11 @@ impl Tensor {
     }
 }
 
+/// Word width of the bit-sliced netlist evaluator: one `u64` lane per
+/// signal bit carries up to this many concurrent evaluations, so it is
+/// also the natural request-batch capacity of one netlist pass.
+pub const LANES: usize = 64;
+
 /// A servable application datapath built from synthesized PPC
 /// netlists: one shape-carrying request in, shape-carrying responses
 /// out. [`crate::apps::gdf::GdfHardware`],
@@ -281,6 +286,44 @@ pub trait Datapath: Send {
     /// Execute one request. Implementations validate arity, shapes and
     /// value ranges and return structured errors.
     fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute a whole batch of requests — `batch[i]` is the input
+    /// tensor list of request `i`, and element `i` of the result is its
+    /// output list, bit-exact with `self.exec(&batch[i])`.
+    ///
+    /// The default implementation loops over [`Datapath::exec`]; the
+    /// netlist-backed hardwares override it to pool the work of up to
+    /// [`LANES`] concurrent requests into the 64-way bit-parallel
+    /// evaluator — the serving-side analogue of the paper's hardware
+    /// parallelism, and the hot path of the sharded engine pool.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ppc::catalog::{Datapath, Tensor};
+    ///
+    /// /// A toy datapath that doubles every element.
+    /// struct Doubler;
+    /// impl Datapath for Doubler {
+    ///     fn exec(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+    ///         Ok(vec![Tensor::vector(inputs[0].data.iter().map(|v| v * 2).collect())])
+    ///     }
+    ///     fn num_gates(&self) -> usize {
+    ///         0
+    ///     }
+    /// }
+    ///
+    /// let batch = vec![
+    ///     vec![Tensor::vector(vec![1, 2])],
+    ///     vec![Tensor::vector(vec![30])],
+    /// ];
+    /// let outs = Doubler.exec_batch(&batch).unwrap();
+    /// assert_eq!(outs[0][0].data, vec![2, 4]);
+    /// assert_eq!(outs[1][0].data, vec![60]);
+    /// ```
+    fn exec_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        batch.iter().map(|inputs| self.exec(inputs)).collect()
+    }
 
     /// Total mapped-gate count across the datapath's netlists.
     fn num_gates(&self) -> usize;

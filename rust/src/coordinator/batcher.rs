@@ -1,19 +1,23 @@
-//! Dynamic batcher for classification requests.
+//! Dynamic batcher: collects whole requests per [`ModelKey`] until a
+//! batch fills or the oldest request exceeds `max_wait`, then hands the
+//! batch over as the unit of work.
 //!
-//! The FRNN datapath has a fixed batch dimension (the AOT shape), so
-//! the batcher collects single-face requests per [`ModelKey`], flushes
-//! when the batch fills or the oldest request exceeds `max_wait`, pads
-//! short batches, and scatters the per-row outputs back to their reply
-//! channels.
+//! Every job type batches here — not just classification. A pending
+//! request carries its full shape-carrying tensor list, so the batch
+//! that flushes is exactly the `&[Vec<Tensor>]` the lane-batched
+//! [`crate::catalog::Datapath::exec_batch`] path consumes; there is no
+//! padding and no flat `Vec<i32>` payload anywhere (the legacy
+//! row-based convention is gone — datapaths carry their own shapes).
 
-use crate::catalog::ModelKey;
+use crate::catalog::{ModelKey, Tensor};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// One queued classification request.
+/// One queued request: its input tensors, the reply channel, and when
+/// it entered the system.
 pub struct Pending<R> {
-    pub input: Vec<i32>,
+    pub inputs: Vec<Tensor>,
     pub reply: mpsc::Sender<R>,
     pub enqueued: Instant,
 }
@@ -21,18 +25,16 @@ pub struct Pending<R> {
 /// Per-model batch queues.
 pub struct Batcher<R> {
     pub batch_size: usize,
-    pub row_len: usize,
     pub max_wait: Duration,
     queues: BTreeMap<ModelKey, Vec<Pending<R>>>,
 }
 
 impl<R> Batcher<R> {
-    pub fn new(batch_size: usize, row_len: usize, max_wait: Duration) -> Batcher<R> {
-        Batcher { batch_size, row_len, max_wait, queues: BTreeMap::new() }
+    pub fn new(batch_size: usize, max_wait: Duration) -> Batcher<R> {
+        Batcher { batch_size: batch_size.max(1), max_wait, queues: BTreeMap::new() }
     }
 
     pub fn push(&mut self, key: ModelKey, p: Pending<R>) {
-        debug_assert_eq!(p.input.len(), self.row_len);
         self.queues.entry(key).or_default().push(p);
     }
 
@@ -52,7 +54,8 @@ impl<R> Batcher<R> {
             .collect()
     }
 
-    /// Earliest deadline across queues (for the engine's recv timeout).
+    /// Earliest deadline across queues (for the dispatcher's recv
+    /// timeout).
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queues
             .values()
@@ -60,21 +63,18 @@ impl<R> Batcher<R> {
             .min()
     }
 
-    /// Remove up to `batch_size` requests for a model and build the
-    /// padded batch tensor. Returns (pending requests, flat batch).
-    pub fn take_batch(&mut self, key: ModelKey) -> (Vec<Pending<R>>, Vec<i32>) {
-        let q = self.queues.get_mut(&key).expect("model queue exists");
+    /// Remove up to `batch_size` requests for a model — the whole
+    /// batch, ready to route to a shard.
+    pub fn take_batch(&mut self, key: ModelKey) -> Vec<Pending<R>> {
+        let Some(q) = self.queues.get_mut(&key) else {
+            return Vec::new();
+        };
         let n = q.len().min(self.batch_size);
         let taken: Vec<Pending<R>> = q.drain(..n).collect();
         if q.is_empty() {
             self.queues.remove(&key);
         }
-        let mut flat = Vec::with_capacity(self.batch_size * self.row_len);
-        for p in &taken {
-            flat.extend_from_slice(&p.input);
-        }
-        flat.resize(self.batch_size * self.row_len, 0); // pad
-        (taken, flat)
+        taken
     }
 }
 
@@ -88,42 +88,54 @@ mod tests {
 
     fn pending(v: i32) -> (Pending<Vec<i32>>, mpsc::Receiver<Vec<i32>>) {
         let (tx, rx) = mpsc::channel();
-        (Pending { input: vec![v, v], reply: tx, enqueued: Instant::now() }, rx)
+        (
+            Pending {
+                inputs: vec![Tensor::vector(vec![v, v])],
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
     }
 
     #[test]
     fn flushes_on_full_batch() {
-        let mut b: Batcher<Vec<i32>> = Batcher::new(2, 2, Duration::from_secs(10));
+        let mut b: Batcher<Vec<i32>> = Batcher::new(2, Duration::from_secs(10));
         let (p1, _r1) = pending(1);
         let (p2, _r2) = pending(2);
         b.push(mk("frnn/conv"), p1);
         assert!(b.due(Instant::now()).is_empty());
         b.push(mk("frnn/conv"), p2);
         assert_eq!(b.due(Instant::now()), vec![mk("frnn/conv")]);
-        let (taken, flat) = b.take_batch(mk("frnn/conv"));
+        let taken = b.take_batch(mk("frnn/conv"));
         assert_eq!(taken.len(), 2);
-        assert_eq!(flat, vec![1, 1, 2, 2]);
+        assert_eq!(taken[0].inputs[0].data, vec![1, 1]);
+        assert_eq!(taken[1].inputs[0].data, vec![2, 2]);
         assert_eq!(b.queued(), 0);
     }
 
     #[test]
     fn flushes_on_deadline() {
-        let mut b: Batcher<Vec<i32>> = Batcher::new(8, 2, Duration::from_millis(1));
+        let mut b: Batcher<Vec<i32>> = Batcher::new(8, Duration::from_millis(1));
         let (p1, _r1) = pending(7);
         b.push(mk("frnn/ds32"), p1);
         std::thread::sleep(Duration::from_millis(3));
         assert_eq!(b.due(Instant::now()), vec![mk("frnn/ds32")]);
-        let (taken, flat) = b.take_batch(mk("frnn/ds32"));
+        // no padding: a deadline flush hands over exactly what queued
+        let taken = b.take_batch(mk("frnn/ds32"));
         assert_eq!(taken.len(), 1);
-        // padded to batch 8 × row 2
-        assert_eq!(flat.len(), 16);
-        assert_eq!(&flat[..2], &[7, 7]);
-        assert!(flat[2..].iter().all(|&x| x == 0));
+        assert_eq!(taken[0].inputs[0].data, vec![7, 7]);
+    }
+
+    #[test]
+    fn take_batch_of_absent_key_is_empty() {
+        let mut b: Batcher<Vec<i32>> = Batcher::new(2, Duration::from_secs(1));
+        assert!(b.take_batch(mk("gdf/conv")).is_empty());
     }
 
     #[test]
     fn separate_models_batch_separately() {
-        let mut b: Batcher<Vec<i32>> = Batcher::new(2, 2, Duration::from_secs(10));
+        let mut b: Batcher<Vec<i32>> = Batcher::new(2, Duration::from_secs(10));
         let (p1, _r1) = pending(1);
         let (p2, _r2) = pending(2);
         b.push(mk("frnn/conv"), p1);
@@ -134,7 +146,7 @@ mod tests {
 
     #[test]
     fn next_deadline_is_earliest() {
-        let mut b: Batcher<Vec<i32>> = Batcher::new(8, 2, Duration::from_millis(50));
+        let mut b: Batcher<Vec<i32>> = Batcher::new(8, Duration::from_millis(50));
         assert!(b.next_deadline().is_none());
         let (p1, _r1) = pending(1);
         b.push(mk("frnn/conv"), p1);

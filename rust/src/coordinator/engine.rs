@@ -1,29 +1,87 @@
-//! The engine thread: exclusive owner of the (non-`Send`) PJRT runtime.
+//! The sharded engine pool: N worker shards, each the exclusive owner
+//! of its own executor, consuming whole [`ModelKey`] batches.
 //!
-//! [`Engine::spawn`] takes a *factory* closure that constructs the
-//! executor on the engine thread itself; other threads talk to it
-//! through an mpsc command channel. [`Executor`] abstracts the runtime
-//! — typed [`ModelKey`] in, shape-carrying [`Tensor`]s through — so
-//! coordinator logic is testable without artifacts ([`MockExecutor`]).
+//! [`EnginePool::spawn`] takes a *factory* closure that constructs one
+//! executor per shard **on the shard's own thread** (the place where a
+//! non-`Send` PJRT client must be created; for the native backend each
+//! shard typically builds its own [`crate::runtime::NativeExecutor`]
+//! from the shared persistent netlist cache, so only the first build
+//! synthesizes anything). Other threads talk to shards through mpsc
+//! command channels.
+//!
+//! The unit of work is a [`BatchJob`] — a whole `ModelKey` batch with
+//! one reply channel per request. The receiving shard runs the batch
+//! through [`Executor::exec_batch`] (the 64-way lane-packed path on
+//! the native backend), records per-shard/per-key batch metrics, and
+//! scatters the per-request responses itself, so no coordinator thread
+//! ever blocks on model execution. Batch routing picks the shard with
+//! the fewest queued batches (round-robin on ties).
+//!
+//! [`Executor`] abstracts the runtime — typed [`ModelKey`] in,
+//! shape-carrying [`Tensor`]s through — so coordinator logic is
+//! testable without artifacts ([`MockExecutor`]).
 
+use super::metrics::Metrics;
+use super::server::Response;
 use crate::catalog::{self, App, ModelKey, Tensor};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Anything that can execute a cataloged model on shape-carrying i32
 /// tensors.
 pub trait Executor {
     fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute a whole batch of requests for one model; element `i` of
+    /// the result answers `batch[i]`, bit-exact with `exec(key,
+    /// &batch[i])`. The default loops over [`Executor::exec`]; the
+    /// native backend overrides it with the lane-batched netlist path.
+    fn exec_batch(&self, key: ModelKey, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        batch.iter().map(|inputs| self.exec(key, inputs)).collect()
+    }
+
     /// Registered model keys (for router validation / `--list-models`).
     fn keys(&self) -> Vec<ModelKey>;
 }
 
 impl Executor for crate::runtime::Runtime {
     fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
         let route = key.to_string();
+        // Bridge the AOT artifacts' fixed batch dimension: a single
+        // [r, C] request against a [B, C] input port (r < B) is padded
+        // with zero rows, executed, and each [B, X] output sliced back
+        // to the request's r rows. The native backend has no fixed
+        // batch dim; this is PJRT-only plumbing that used to live in
+        // the batcher before batching went lane-oriented.
+        if let Some(m) = self.meta(&route).cloned() {
+            if inputs.len() == 1
+                && m.inputs.len() == 1
+                && m.inputs[0].dims.len() == 2
+                && inputs[0].shape.len() == 2
+                && inputs[0].shape[1] == m.inputs[0].dims[1]
+                && inputs[0].shape[0] < m.inputs[0].dims[0]
+            {
+                let (b, c) = (m.inputs[0].dims[0], m.inputs[0].dims[1]);
+                let r = inputs[0].shape[0];
+                let mut flat = inputs[0].data.clone();
+                flat.resize(b * c, 0);
+                let outs = self.exec_i32(&route, &[&flat])?;
+                return Ok(outs
+                    .into_iter()
+                    .map(|data| {
+                        let out_row = data.len() / b;
+                        Tensor {
+                            shape: vec![r, out_row],
+                            data: data[..r * out_row].to_vec(),
+                        }
+                    })
+                    .collect());
+            }
+        }
+        let refs: Vec<&[i32]> = inputs.iter().map(|t| t.data.as_slice()).collect();
         let outputs = self.exec_i32(&route, &refs)?;
         // artifact manifests carry output shapes; fall back to flat
         let shapes: Vec<Vec<usize>> = self
@@ -99,106 +157,257 @@ impl Executor for MockExecutor {
     }
 }
 
-/// Command executed on the engine thread.
-pub struct ExecRequest {
-    pub key: ModelKey,
+/// One request inside a [`BatchJob`]: its input tensors, where the
+/// response goes, and when it entered the system (for latency
+/// accounting).
+pub struct BatchItem {
     pub inputs: Vec<Tensor>,
-    pub reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    pub reply: mpsc::Sender<Result<Response>>,
+    pub enqueued: Instant,
+}
+
+/// A whole `ModelKey` batch — the unit of work a shard executes.
+pub struct BatchJob {
+    pub key: ModelKey,
+    pub items: Vec<BatchItem>,
 }
 
 enum Cmd {
-    Exec(ExecRequest),
+    Batch(BatchJob),
     Keys(mpsc::Sender<Vec<ModelKey>>),
     Shutdown,
 }
 
-/// Handle to the engine thread.
-pub struct Engine {
+struct Shard {
     tx: mpsc::Sender<Cmd>,
+    /// Batches queued on (or running in) this shard.
+    depth: Arc<AtomicUsize>,
     handle: Option<JoinHandle<()>>,
 }
 
-impl Engine {
-    /// Spawn the engine; `factory` runs on the engine thread (the place
-    /// where the non-Send PJRT client must be created). Fails if the
-    /// factory fails.
-    pub fn spawn<E, F>(factory: F) -> Result<Engine>
+/// Handle to the shard pool.
+pub struct EnginePool {
+    shards: Vec<Shard>,
+    metrics: Arc<Metrics>,
+    rr: AtomicUsize,
+}
+
+impl EnginePool {
+    /// Spawn `shards` worker shards; `factory(shard_index)` runs on
+    /// each shard's thread to construct that shard's executor. Fails if
+    /// any factory call fails.
+    pub fn spawn<E, F>(shards: usize, metrics: Arc<Metrics>, factory: F) -> Result<EnginePool>
     where
-        E: Executor,
-        F: FnOnce() -> Result<E> + Send + 'static,
+        E: Executor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Cmd>();
+        let shards = shards.max(1);
+        let factory = Arc::new(factory);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("ppc-engine".into())
-            .spawn(move || {
-                let executor = match factory() {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                // per-model exec counts (metrics can be derived by the
-                // server; kept here for debugging)
-                let mut counts: HashMap<ModelKey, u64> = HashMap::new();
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Cmd::Exec(req) => {
-                            let result = executor.exec(req.key, &req.inputs);
-                            *counts.entry(req.key).or_default() += 1;
-                            let _ = req.reply.send(result);
-                        }
-                        Cmd::Keys(reply) => {
-                            let _ = reply.send(executor.keys());
-                        }
-                        Cmd::Shutdown => break,
-                    }
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died during startup"))??;
-        Ok(Engine { tx, handle: Some(handle) })
+        let mut out = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let d = depth.clone();
+            let f = factory.clone();
+            let m = metrics.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ppc-shard{s}"))
+                .spawn(move || shard_loop(s, f, m, d, rx, ready))?;
+            out.push(Shard { tx, depth, handle: Some(handle) });
+            if s == 0 {
+                // shard 0 finishes building before the rest start, so
+                // anything it warms (the shared BLIF netlist cache in
+                // particular) is already on disk when shards 1..N
+                // build — they load instead of re-synthesizing, and
+                // never race writes against an empty cache
+                ready_rx
+                    .recv()
+                    .map_err(|_| anyhow!("a shard died during startup"))??;
+            }
+        }
+        drop(ready_tx);
+        for _ in 1..shards {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("a shard died during startup"))??;
+        }
+        Ok(EnginePool { shards: out, metrics, rr: AtomicUsize::new(0) })
     }
 
-    /// Execute synchronously (blocks the calling thread, not the engine
-    /// queue — other callers' requests are serialized behind it).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Batches currently queued on (or running in) each shard.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.depth.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Route a whole `ModelKey` batch to the least-loaded shard
+    /// (round-robin on ties). The shard executes it via
+    /// [`Executor::exec_batch`] and scatters the per-request replies.
+    pub fn submit(&self, job: BatchJob) -> Result<()> {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let n = self.shards.len();
+        let mut best = start % n;
+        let mut best_depth = usize::MAX;
+        for i in 0..n {
+            let s = (start + i) % n;
+            let d = self.shards[s].depth.load(Ordering::Relaxed);
+            if d < best_depth {
+                best = s;
+                best_depth = d;
+            }
+        }
+        let shard = &self.shards[best];
+        shard.depth.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_queue_depth(best, best_depth + 1);
+        shard.tx.send(Cmd::Batch(job)).map_err(|_| {
+            shard.depth.fetch_sub(1, Ordering::Relaxed);
+            anyhow!("engine pool is down")
+        })
+    }
+
+    /// Execute a single request synchronously — a batch of one (blocks
+    /// the calling thread, not the pool).
     pub fn exec(&self, key: ModelKey, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Cmd::Exec(ExecRequest { key, inputs, reply }))
-            .map_err(|_| anyhow!("engine is down"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+        self.submit(BatchJob {
+            key,
+            items: vec![BatchItem { inputs, reply, enqueued: Instant::now() }],
+        })?;
+        let resp = rx.recv().map_err(|_| anyhow!("engine dropped reply"))??;
+        Ok(resp.outputs)
     }
 
-    /// Fire an async execution; the reply lands on `reply`.
-    pub fn exec_async(
-        &self,
-        key: ModelKey,
-        inputs: Vec<Tensor>,
-        reply: mpsc::Sender<Result<Vec<Tensor>>>,
-    ) -> Result<()> {
-        self.tx
-            .send(Cmd::Exec(ExecRequest { key, inputs, reply }))
-            .map_err(|_| anyhow!("engine is down"))
-    }
-
+    /// The registered catalog (asked of shard 0; every shard registers
+    /// the same keys).
     pub fn keys(&self) -> Result<Vec<ModelKey>> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(Cmd::Keys(tx)).map_err(|_| anyhow!("engine is down"))?;
+        self.shards[0]
+            .tx
+            .send(Cmd::Keys(tx))
+            .map_err(|_| anyhow!("engine pool is down"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))
     }
 }
 
-impl Drop for Engine {
+impl Drop for EnginePool {
+    /// Graceful drain: every batch already queued on a shard executes
+    /// before the shard sees its shutdown command (mpsc preserves
+    /// order), then all shard threads are joined.
     fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        for s in &self.shards {
+            let _ = s.tx.send(Cmd::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn shard_loop<E, F>(
+    shard: usize,
+    factory: Arc<F>,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
+    rx: mpsc::Receiver<Cmd>,
+    ready: mpsc::Sender<Result<()>>,
+) where
+    E: Executor + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let executor = match (*factory)(shard) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Batch(job) => {
+                run_batch(shard, &executor, &metrics, job);
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            Cmd::Keys(reply) => {
+                let _ = reply.send(executor.keys());
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
+/// Execute one batch on a shard and scatter the per-request replies.
+/// A failing batch is retried request-by-request so one malformed
+/// request cannot poison its batch-mates; a *panicking* executor is
+/// caught so one bad request cannot kill the shard thread (which would
+/// silently swallow ~1/N of all later traffic).
+fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: BatchJob) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let BatchJob { key, items } = job;
+    if items.is_empty() {
+        return;
+    }
+    let size = items.len();
+    let mut inputs = Vec::with_capacity(size);
+    let mut waiters = Vec::with_capacity(size);
+    for it in items {
+        inputs.push(it.inputs);
+        waiters.push((it.reply, it.enqueued));
+    }
+    let t0 = Instant::now();
+    // a panic unwinds into an Err so the batch falls through to the
+    // per-request retry like any other wholesale failure
+    let batch_result = catch_unwind(AssertUnwindSafe(|| executor.exec_batch(key, &inputs)))
+        .unwrap_or_else(|_| Err(anyhow!("executor panicked on a {size}-request batch")));
+    match batch_result {
+        Ok(outs) if outs.len() == size => {
+            metrics.record_batch(shard, key, size, t0.elapsed());
+            for ((reply, enqueued), outputs) in waiters.into_iter().zip(outs) {
+                metrics.record_latency(key, enqueued.elapsed());
+                let _ = reply.send(Ok(Response { outputs, route: key }));
+            }
+        }
+        Ok(outs) => {
+            // executor contract violation — fail every request loudly
+            let msg = format!(
+                "{key}: executor answered {} of {size} batch requests",
+                outs.len()
+            );
+            for (reply, _) in waiters {
+                metrics.record_error();
+                let _ = reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+        Err(_) => {
+            for ((reply, enqueued), ins) in waiters.into_iter().zip(inputs) {
+                match catch_unwind(AssertUnwindSafe(|| executor.exec(key, &ins))) {
+                    Ok(Ok(outputs)) => {
+                        metrics.record_latency(key, enqueued.elapsed());
+                        let _ = reply.send(Ok(Response { outputs, route: key }));
+                    }
+                    Ok(Err(e)) => {
+                        metrics.record_error();
+                        let _ = reply.send(Err(e));
+                    }
+                    Err(_) => {
+                        metrics.record_error();
+                        let _ = reply
+                            .send(Err(anyhow!("{key}: executor panicked on this request")));
+                    }
+                }
+            }
         }
     }
 }
@@ -206,49 +415,92 @@ impl Drop for Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn mk(s: &str) -> ModelKey {
         ModelKey::parse(s).unwrap()
     }
 
+    fn pool(shards: usize) -> (Arc<Metrics>, EnginePool) {
+        let metrics = Arc::new(Metrics::new());
+        let p = EnginePool::spawn(shards, metrics.clone(), |_shard| {
+            Ok(MockExecutor::full_catalog())
+        })
+        .unwrap();
+        (metrics, p)
+    }
+
     #[test]
     fn spawn_exec_shutdown() {
-        let engine = Engine::spawn(|| Ok(MockExecutor::new(&[mk("gdf/conv")]))).unwrap();
-        let out = engine
+        let (_, pool) = pool(2);
+        assert_eq!(pool.shards(), 2);
+        let out = pool
             .exec(mk("gdf/conv"), vec![Tensor::vector(vec![10, 20, 30])])
             .unwrap();
         assert_eq!(out[0].data, vec![5, 10, 15]);
         assert_eq!(out[0].shape, vec![3]);
-        assert_eq!(engine.keys().unwrap(), vec![mk("gdf/conv")]);
+        assert_eq!(pool.keys().unwrap(), ModelKey::catalog());
     }
 
     #[test]
     fn unknown_key_errors_list_the_catalog() {
-        let engine = Engine::spawn(|| Ok(MockExecutor::new(&[mk("gdf/conv")]))).unwrap();
-        let e = engine
+        let metrics = Arc::new(Metrics::new());
+        let pool = EnginePool::spawn(1, metrics.clone(), |_| {
+            Ok(MockExecutor::new(&[mk("gdf/conv")]))
+        })
+        .unwrap();
+        let e = pool
             .exec(mk("frnn/conv"), vec![Tensor::vector(vec![1])])
             .unwrap_err();
         let msg = format!("{e}");
         assert!(msg.contains("unknown model frnn/conv"), "{msg}");
         assert!(msg.contains("available models: [gdf/conv]"), "{msg}");
+        assert_eq!(metrics.errors(), 1);
     }
 
     #[test]
     fn factory_failure_propagates() {
-        let r = Engine::spawn(|| -> Result<MockExecutor> { Err(anyhow!("boom")) });
+        let r = EnginePool::spawn(3, Arc::new(Metrics::new()), |_| -> Result<MockExecutor> {
+            Err(anyhow!("boom"))
+        });
         assert!(r.is_err());
     }
 
     #[test]
-    fn concurrent_callers_serialize() {
-        let engine = std::sync::Arc::new(
-            Engine::spawn(|| Ok(MockExecutor::new(&[mk("frnn/conv")]))).unwrap(),
-        );
+    fn batches_scatter_per_request_replies() {
+        let (metrics, pool) = pool(2);
+        let (items, rxs): (Vec<BatchItem>, Vec<_>) = (0..5)
+            .map(|i| {
+                let (reply, rx) = mpsc::channel();
+                (
+                    BatchItem {
+                        inputs: vec![Tensor::vector(vec![i * 2])],
+                        reply,
+                        enqueued: Instant::now(),
+                    },
+                    rx,
+                )
+            })
+            .unzip();
+        pool.submit(BatchJob { key: mk("gdf/ds16"), items }).unwrap();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.route, mk("gdf/ds16"));
+            assert_eq!(r.outputs[0].data, vec![i as i32]);
+        }
+        assert_eq!(metrics.completed(), 5);
+        assert!(metrics.mean_batch_size() >= 5.0);
+    }
+
+    #[test]
+    fn concurrent_submitters_spread_over_shards() {
+        let (metrics, pool) = pool(4);
+        let pool = Arc::new(pool);
         let mut handles = Vec::new();
-        for t in 0..8 {
-            let e = engine.clone();
+        for t in 0..8i32 {
+            let p = pool.clone();
             handles.push(std::thread::spawn(move || {
-                let out = e
+                let out = p
                     .exec(mk("frnn/conv"), vec![Tensor::vector(vec![t * 2])])
                     .unwrap();
                 assert_eq!(out[0].data[0], t);
@@ -257,5 +509,113 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        assert_eq!(metrics.completed(), 8);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_batches_under_concurrent_submitters() {
+        let metrics = Arc::new(Metrics::new());
+        let pool = EnginePool::spawn(2, metrics.clone(), |_| {
+            let mut m = MockExecutor::full_catalog();
+            m.delay = Duration::from_millis(1); // make batches queue up
+            Ok(m)
+        })
+        .unwrap();
+        let pool = Arc::new(pool);
+        let mut handles = Vec::new();
+        let (rx_tx, rx_rx) = mpsc::channel();
+        for t in 0..8i32 {
+            let p = pool.clone();
+            let sink = rx_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10i32 {
+                    let (reply, rx) = mpsc::channel();
+                    p.submit(BatchJob {
+                        key: mk("gdf/conv"),
+                        items: vec![BatchItem {
+                            inputs: vec![Tensor::vector(vec![(t * 10 + i) * 2])],
+                            reply,
+                            enqueued: Instant::now(),
+                        }],
+                    })
+                    .unwrap();
+                    sink.send((t * 10 + i, rx)).unwrap();
+                }
+            }));
+        }
+        drop(rx_tx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // drop the pool while batches are still queued: shutdown must
+        // drain every queued batch, not abandon it
+        drop(pool);
+        let mut seen = 0;
+        while let Ok((v, rx)) = rx_rx.recv() {
+            let r = rx.recv().expect("reply must arrive before shutdown").unwrap();
+            assert_eq!(r.outputs[0].data, vec![v]);
+            seen += 1;
+        }
+        assert_eq!(seen, 80);
+        assert_eq!(metrics.completed(), 80);
+        assert_eq!(metrics.errors(), 0);
+    }
+
+    /// An executor whose batch path rejects any input containing a
+    /// negative value wholesale, while the scalar path only fails the
+    /// offending request — exercises the shard's per-request retry.
+    struct Picky;
+
+    impl Executor for Picky {
+        fn exec(&self, _key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            if inputs[0].data.iter().any(|&v| v < 0) {
+                return Err(anyhow!("negative input"));
+            }
+            Ok(vec![inputs[0].clone()])
+        }
+
+        fn exec_batch(
+            &self,
+            key: ModelKey,
+            batch: &[Vec<Tensor>],
+        ) -> Result<Vec<Vec<Tensor>>> {
+            if batch.iter().any(|ins| ins[0].data.iter().any(|&v| v < 0)) {
+                return Err(anyhow!("poisoned batch"));
+            }
+            batch.iter().map(|ins| self.exec(key, ins)).collect()
+        }
+
+        fn keys(&self) -> Vec<ModelKey> {
+            vec![mk("gdf/conv")]
+        }
+    }
+
+    #[test]
+    fn failing_batches_retry_per_request() {
+        // one malformed request poisons the whole-batch path; the shard
+        // retries one-by-one so batch-mates still succeed
+        let metrics = Arc::new(Metrics::new());
+        let pool = EnginePool::spawn(1, metrics.clone(), |_| Ok(Picky)).unwrap();
+        let (items, rxs): (Vec<BatchItem>, Vec<_>) = (0..3i32)
+            .map(|i| {
+                let (reply, rx) = mpsc::channel();
+                let v = if i == 1 { -5 } else { i };
+                (
+                    BatchItem {
+                        inputs: vec![Tensor::vector(vec![v])],
+                        reply,
+                        enqueued: Instant::now(),
+                    },
+                    rx,
+                )
+            })
+            .unzip();
+        pool.submit(BatchJob { key: mk("gdf/conv"), items }).unwrap();
+        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(results[0].as_ref().unwrap().outputs[0].data, vec![0]);
+        assert!(results[1].is_err());
+        assert_eq!(results[2].as_ref().unwrap().outputs[0].data, vec![2]);
+        assert_eq!(metrics.completed(), 2);
+        assert_eq!(metrics.errors(), 1);
     }
 }

@@ -1,20 +1,49 @@
-//! Coordinator metrics: request counters, latency records, batch-size
-//! histogram. Shared across threads behind a mutex (request rates here
-//! are far below contention territory; the hot path is model execution).
+//! Coordinator metrics: request counters, per-[`ModelKey`] latency
+//! records, and per-shard batch statistics (batch size, lane occupancy,
+//! batch latency, peak queue depth). Shared across threads behind a
+//! mutex (request rates here are far below contention territory; the
+//! hot path is model execution).
 
+use crate::catalog::{ModelKey, LANES};
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Batch-level record stream of one `(shard, model)` pair.
+#[derive(Default)]
+struct BatchStats {
+    /// Requests per flushed batch.
+    sizes: Vec<usize>,
+    /// Wall-clock execution time per batch, seconds.
+    latencies: Vec<f64>,
+}
+
+/// Aggregated view of one `(shard, model)` batch stream.
+#[derive(Clone, Debug)]
+pub struct BatchSummary {
+    /// Batches executed.
+    pub batches: usize,
+    /// Mean requests per batch.
+    pub mean_size: f64,
+    /// Fraction of the 64 bit-slice lanes the mean batch fills.
+    pub lane_occupancy: f64,
+    /// Batch execution latency (seconds).
+    pub latency: Summary,
+}
+
 #[derive(Default)]
 struct Inner {
-    /// per route ("gdf/ds16"): latencies in seconds
-    latencies: BTreeMap<String, Vec<f64>>,
+    /// Per model key: end-to-end request latencies in seconds.
+    latencies: BTreeMap<ModelKey, Vec<f64>>,
+    submitted: u64,
     completed: u64,
     rejected: u64,
     errors: u64,
-    batch_sizes: Vec<usize>,
+    /// Per (shard, model): batch execution records.
+    batches: BTreeMap<(usize, ModelKey), BatchStats>,
+    /// Per shard: peak queued-batch depth observed at submit time.
+    peak_depth: BTreeMap<usize, usize>,
 }
 
 /// Thread-safe metrics sink.
@@ -28,10 +57,23 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_latency(&self, route: &str, d: Duration) {
+    /// One request accepted into the pipeline (the backpressure
+    /// boundary counts `submitted − completed − errors` as in-flight).
+    pub fn record_submitted(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    /// Requests currently somewhere between submit and reply.
+    pub fn in_flight(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.submitted.saturating_sub(m.completed + m.errors)
+    }
+
+    /// One completed request for `key`, end-to-end latency `d`.
+    pub fn record_latency(&self, key: ModelKey, d: Duration) {
         let mut m = self.inner.lock().unwrap();
         m.completed += 1;
-        m.latencies.entry(route.to_string()).or_default().push(d.as_secs_f64());
+        m.latencies.entry(key).or_default().push(d.as_secs_f64());
     }
 
     pub fn record_rejected(&self) {
@@ -42,8 +84,21 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
-    pub fn record_batch(&self, size: usize) {
-        self.inner.lock().unwrap().batch_sizes.push(size);
+    /// One batch of `size` requests executed on `shard` for `key` in
+    /// `latency` wall-clock time.
+    pub fn record_batch(&self, shard: usize, key: ModelKey, size: usize, latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let s = m.batches.entry((shard, key)).or_default();
+        s.sizes.push(size);
+        s.latencies.push(latency.as_secs_f64());
+    }
+
+    /// Queue depth observed on `shard` when a batch was routed to it
+    /// (the peak is reported).
+    pub fn record_queue_depth(&self, shard: usize, depth: usize) {
+        let mut m = self.inner.lock().unwrap();
+        let d = m.peak_depth.entry(shard).or_default();
+        *d = (*d).max(depth);
     }
 
     pub fn completed(&self) -> u64 {
@@ -58,41 +113,97 @@ impl Metrics {
         self.inner.lock().unwrap().errors
     }
 
+    /// Mean requests per executed batch, across every shard and model.
     pub fn mean_batch_size(&self) -> f64 {
         let m = self.inner.lock().unwrap();
-        if m.batch_sizes.is_empty() {
+        let (mut n, mut total) = (0usize, 0usize);
+        for s in m.batches.values() {
+            n += s.sizes.len();
+            total += s.sizes.iter().sum::<usize>();
+        }
+        if n == 0 {
             0.0
         } else {
-            m.batch_sizes.iter().sum::<usize>() as f64 / m.batch_sizes.len() as f64
+            total as f64 / n as f64
         }
     }
 
-    /// Per-route latency summaries (seconds).
-    pub fn latency_summaries(&self) -> BTreeMap<String, Summary> {
+    /// Mean fraction of the 64 bit-slice lanes a batch fills
+    /// (`mean_batch_size / LANES`, capped at 1).
+    pub fn lane_occupancy(&self) -> f64 {
+        (self.mean_batch_size() / LANES as f64).min(1.0)
+    }
+
+    /// Per-model end-to-end latency summaries (seconds).
+    pub fn latency_summaries(&self) -> BTreeMap<ModelKey, Summary> {
         let m = self.inner.lock().unwrap();
         m.latencies
             .iter()
-            .map(|(k, v)| (k.clone(), Summary::of(v.clone())))
+            .map(|(k, v)| (*k, Summary::of(v.clone())))
             .collect()
+    }
+
+    /// Per-(shard, model) batch summaries.
+    pub fn batch_summaries(&self) -> BTreeMap<(usize, ModelKey), BatchSummary> {
+        let m = self.inner.lock().unwrap();
+        m.batches
+            .iter()
+            .map(|(k, s)| {
+                let mean_size = if s.sizes.is_empty() {
+                    0.0
+                } else {
+                    s.sizes.iter().sum::<usize>() as f64 / s.sizes.len() as f64
+                };
+                (
+                    *k,
+                    BatchSummary {
+                        batches: s.sizes.len(),
+                        mean_size,
+                        lane_occupancy: (mean_size / LANES as f64).min(1.0),
+                        latency: Summary::of(s.latencies.clone()),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Peak queued-batch depth seen per shard.
+    pub fn peak_queue_depths(&self) -> BTreeMap<usize, usize> {
+        self.inner.lock().unwrap().peak_depth.clone()
     }
 
     /// Human-readable report block.
     pub fn report(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "completed={} rejected={} errors={} mean_batch={:.2}\n",
+            "completed={} rejected={} errors={} mean_batch={:.2} lane_occupancy={:.1}%\n",
             self.completed(),
             self.rejected(),
             self.errors(),
-            self.mean_batch_size()
+            self.mean_batch_size(),
+            self.lane_occupancy() * 100.0
         ));
         for (route, sum) in self.latency_summaries() {
             s.push_str(&format!(
-                "  {route:<16} n={:<6} mean={:.3}ms p50={:.3}ms p99={:.3}ms\n",
+                "  {:<16} n={:<6} mean={:.3}ms p50={:.3}ms p99={:.3}ms\n",
+                route.to_string(),
                 sum.n,
                 sum.mean * 1e3,
                 sum.p50 * 1e3,
                 sum.p99 * 1e3
+            ));
+        }
+        let depths = self.peak_queue_depths();
+        for ((shard, key), b) in self.batch_summaries() {
+            s.push_str(&format!(
+                "  shard{shard} {:<14} batches={:<5} mean_batch={:<5.1} \
+                 occ={:.0}% batch_p50={:.3}ms peak_depth={}\n",
+                key.to_string(),
+                b.batches,
+                b.mean_size,
+                b.lane_occupancy * 100.0,
+                b.latency.p50 * 1e3,
+                depths.get(&shard).copied().unwrap_or(0)
             ));
         }
         s
@@ -103,18 +214,44 @@ impl Metrics {
 mod tests {
     use super::*;
 
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
+    }
+
     #[test]
     fn records_and_reports() {
         let m = Metrics::new();
-        m.record_latency("gdf/conv", Duration::from_millis(2));
-        m.record_latency("gdf/conv", Duration::from_millis(4));
-        m.record_batch(8);
+        m.record_latency(mk("gdf/conv"), Duration::from_millis(2));
+        m.record_latency(mk("gdf/conv"), Duration::from_millis(4));
+        m.record_batch(0, mk("gdf/conv"), 8, Duration::from_millis(3));
         m.record_rejected();
         assert_eq!(m.completed(), 2);
         assert_eq!(m.rejected(), 1);
         assert_eq!(m.mean_batch_size(), 8.0);
+        assert!((m.lane_occupancy() - 8.0 / 64.0).abs() < 1e-12);
         let sums = m.latency_summaries();
-        assert!((sums["gdf/conv"].mean - 0.003).abs() < 1e-9);
+        assert!((sums[&mk("gdf/conv")].mean - 0.003).abs() < 1e-9);
         assert!(m.report().contains("gdf/conv"));
+    }
+
+    #[test]
+    fn per_shard_batch_stats_partition() {
+        let m = Metrics::new();
+        m.record_batch(0, mk("gdf/ds16"), 4, Duration::from_millis(1));
+        m.record_batch(1, mk("gdf/ds16"), 8, Duration::from_millis(2));
+        m.record_batch(1, mk("frnn/ds32"), 2, Duration::from_millis(1));
+        m.record_queue_depth(1, 3);
+        m.record_queue_depth(1, 1);
+        let b = m.batch_summaries();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[&(0, mk("gdf/ds16"))].batches, 1);
+        assert_eq!(b[&(1, mk("gdf/ds16"))].mean_size, 8.0);
+        assert!((b[&(1, mk("gdf/ds16"))].lane_occupancy - 0.125).abs() < 1e-12);
+        assert_eq!(m.peak_queue_depths()[&1], 3);
+        // mean over all batches: (4 + 8 + 2) / 3
+        assert!((m.mean_batch_size() - 14.0 / 3.0).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("shard0"), "{rep}");
+        assert!(rep.contains("shard1"), "{rep}");
     }
 }

@@ -3,36 +3,48 @@
 //! from AOT-compiled PJRT artifacts behind the `pjrt` feature.
 //!
 //! Architecture (the paper's contribution lives at the block level, so
-//! L3 is the serving harness a deployed PPC system would ship with):
+//! L3 is the serving harness a deployed PPC system would ship with).
+//! Batches — not single requests — are the unit of work:
 //!
 //! ```text
 //!   clients ──submit(Job, Quality)──► bounded queue ──► dispatcher
 //!                  │                                        │
 //!             backpressure            ModelKey::route(app, quality)
-//!                                     (the one typed catalog key)
+//!           (in-flight cap)           (the one typed catalog key)
 //!                                                │
-//!                                     dynamic batcher (classify,
-//!                                     queued per ModelKey)
+//!                                     dynamic batcher: every job kind
+//!                                     queues per ModelKey until the
+//!                                     batch fills or its deadline hits
 //!                                                │
-//!                            engine thread (owns the executor)
-//!                            Executor::exec(ModelKey, &[Tensor])
-//!                            (NativeExecutor | PJRT Runtime | mock)
+//!                                     EnginePool: whole ModelKey
+//!                                     batches routed to the least-
+//!                                     loaded of N shards
+//!                                        │           │
+//!                                     shard 0  …  shard N−1
+//!                                     (each owns its own executor;
+//!                                      Executor::exec_batch lane-packs
+//!                                      up to 64 requests into the
+//!                                      bit-sliced netlist evaluator
+//!                                      and scatters the replies)
 //! ```
 //!
 //! Everything between a request and its datapath is typed: the router
 //! produces a [`crate::catalog::ModelKey`], the batcher queues per
-//! `ModelKey`, the engine executes by `ModelKey`, and the [`Response`]
+//! `ModelKey`, the shards execute by `ModelKey`, and the [`Response`]
 //! carries the key back to the caller. Payloads are shape-carrying
 //! [`crate::catalog::Tensor`]s, so non-square images flow end to end;
 //! unknown keys come back as structured errors listing the registered
 //! catalog.
 //!
-//! The engine thread owns the executor exclusively (the `xla` crate's
-//! client is not `Send`; the native executor simply doesn't need
-//! sharing); requests and replies cross threads over `std::sync::mpsc`
-//! channels. [`Quality`] routing maps each request to a PPC
-//! configuration — the serving-time analogue of choosing how much
-//! sparsity a deployment tolerates.
+//! Each shard thread owns its executor exclusively (the `xla` crate's
+//! client is not `Send`; native shards each build their own
+//! [`crate::runtime::NativeExecutor`], typically from the shared
+//! persistent netlist cache so only the first build synthesizes).
+//! Requests and replies cross threads over `std::sync::mpsc` channels.
+//! [`Quality`] routing maps each request to a PPC configuration — the
+//! serving-time analogue of choosing how much sparsity a deployment
+//! tolerates. See `rust/src/coordinator/README.md` for the batch
+//! lifecycle in detail.
 
 pub mod batcher;
 pub mod engine;
@@ -40,6 +52,8 @@ pub mod metrics;
 pub mod server;
 
 pub use crate::catalog::{App, ModelKey, PpcConfig, Quality, Tensor};
-pub use engine::{Engine, Executor, MockExecutor};
-pub use metrics::Metrics;
-pub use server::{Coordinator, CoordinatorConfig, Job, Response, SubmitError};
+pub use engine::{BatchItem, BatchJob, EnginePool, Executor, MockExecutor};
+pub use metrics::{BatchSummary, Metrics};
+pub use server::{
+    BatchTicket, Coordinator, CoordinatorConfig, Job, Response, SubmitError, Ticket,
+};

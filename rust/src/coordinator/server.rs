@@ -1,20 +1,28 @@
 //! The coordinator: request routing, quality policy, backpressure,
-//! dynamic batching, metrics — in front of the engine thread.
+//! dynamic batching, metrics — in front of the sharded engine pool.
 //!
 //! Routing is fully typed: a [`Job`] names its [`App`], the request's
 //! [`Quality`] picks the [`crate::catalog::PpcConfig`] through
 //! [`ModelKey::route`], and that one [`ModelKey`] travels unchanged
-//! through the batcher, the engine and the response — the same key the
+//! through the batcher, the shard and the response — the same key the
 //! registry was populated under, so there is no string matching
 //! anywhere between a request and its datapath.
+//!
+//! Batches — not single requests — are the unit of work: every job
+//! type queues in the [`Batcher`] under its routed key, and due
+//! batches are routed whole to the least-loaded [`EnginePool`] shard,
+//! whose lane-batched [`crate::catalog::Datapath::exec_batch`] path
+//! packs the requests into the 64-way bit-sliced netlist evaluator.
+//! The dispatcher never blocks on model execution; shards scatter the
+//! per-request replies themselves.
 
 use super::batcher::{Batcher, Pending};
-use super::engine::{Engine, Executor};
+use super::engine::{BatchItem, BatchJob, EnginePool, Executor};
 use super::metrics::Metrics;
-use crate::catalog::{App, ModelKey, Quality, Tensor};
+use crate::catalog::{App, ModelKey, Quality, Tensor, LANES};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A unit of work.
@@ -24,8 +32,8 @@ pub enum Job {
     Denoise { image: Tensor },
     /// Blend two shape-identical images with quantized alpha in [0, 127].
     Blend { p1: Tensor, p2: Tensor, alpha: i32 },
-    /// Classify one face (one 960-pixel row; the batcher builds the
-    /// `[batch, 960]` tensor).
+    /// Classify one face (one 960-pixel row; the batcher pools rows
+    /// into lane-batched `[1, 960]` requests).
     Classify { pixels: Vec<i32> },
 }
 
@@ -60,12 +68,16 @@ pub enum SubmitError {
 pub struct CoordinatorConfig {
     /// Bounded submit queue (backpressure boundary).
     pub queue_capacity: usize,
-    /// FRNN batch dimension.
+    /// Max requests lane-packed into one batch (clamped to
+    /// [`LANES`] — the word width of the bit-sliced evaluator).
     pub batch_size: usize,
-    /// FRNN input row length.
+    /// Classify input row length (validated at routing time so a
+    /// malformed row fails fast instead of poisoning a batch).
     pub classify_row: usize,
-    /// Max time a classify request waits for batch-mates.
+    /// Max time a request waits for batch-mates.
     pub batch_max_wait: Duration,
+    /// Engine shards; each owns its own executor instance.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -75,6 +87,7 @@ impl Default for CoordinatorConfig {
             batch_size: 16,
             classify_row: 960,
             batch_max_wait: Duration::from_millis(2),
+            shards: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4),
         }
     }
 }
@@ -102,61 +115,125 @@ impl Ticket {
     }
 }
 
+/// Handle to a whole in-flight batch of requests (one future per
+/// request, awaited together).
+pub struct BatchTicket {
+    tickets: Vec<Ticket>,
+}
+
+impl BatchTicket {
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    /// Await every response, in submission order. Fails on the first
+    /// failed request.
+    pub fn wait(self) -> Result<Vec<Response>> {
+        self.tickets.into_iter().map(|t| t.wait()).collect()
+    }
+
+    /// Await every response, keeping per-request results.
+    pub fn wait_each(self) -> Vec<Result<Response>> {
+        self.tickets.into_iter().map(|t| t.wait()).collect()
+    }
+}
+
 /// The coordinator front-end.
 pub struct Coordinator {
     tx: mpsc::SyncSender<WorkItem>,
     metrics: Arc<Metrics>,
     down: Arc<AtomicBool>,
+    /// Max in-flight requests before [`Coordinator::submit`] pushes
+    /// back (the dispatcher never blocks on execution anymore, so the
+    /// submit queue alone cannot provide backpressure).
+    in_flight_cap: u64,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start with a custom executor factory (runs on the engine thread).
+    /// Start with a custom executor factory: `factory(shard_index)`
+    /// runs on each of `config.shards` shard threads and builds that
+    /// shard's executor.
     pub fn start<E, F>(config: CoordinatorConfig, factory: F) -> Result<Coordinator>
     where
-        E: Executor,
-        F: FnOnce() -> Result<E> + Send + 'static,
+        E: Executor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
-        let engine = Engine::spawn(factory)?;
-        let (tx, rx) = mpsc::sync_channel::<WorkItem>(config.queue_capacity);
         let metrics = Arc::new(Metrics::new());
+        let pool = EnginePool::spawn(config.shards, metrics.clone(), factory)?;
+        let (tx, rx) = mpsc::sync_channel::<WorkItem>(config.queue_capacity);
         let down = Arc::new(AtomicBool::new(false));
         let m = metrics.clone();
         let d = down.clone();
+        let in_flight_cap = config.queue_capacity as u64;
         let dispatcher = std::thread::Builder::new()
             .name("ppc-dispatch".into())
-            .spawn(move || dispatch_loop(config, engine, rx, m, d))?;
-        Ok(Coordinator { tx, metrics, down, dispatcher: Some(dispatcher) })
+            .spawn(move || dispatch_loop(config, pool, rx, m, d))?;
+        Ok(Coordinator { tx, metrics, down, in_flight_cap, dispatcher: Some(dispatcher) })
     }
 
     /// Start against the artifact directory (PJRT path; needs the
-    /// `pjrt` cargo feature — without it the engine factory fails with
-    /// a clear error pointing at [`Coordinator::with_native`]).
+    /// `pjrt` cargo feature — without it the shard factory fails with
+    /// a clear error pointing at [`Coordinator::with_native`]). The
+    /// PJRT client is heavyweight, so this backend always runs one
+    /// shard regardless of `config.shards`.
     pub fn with_artifacts(dir: &std::path::Path, config: CoordinatorConfig) -> Result<Coordinator> {
         let dir = dir.to_path_buf();
-        Coordinator::start(config, move || crate::runtime::Runtime::load(&dir))
+        let config = CoordinatorConfig { shards: 1, ..config };
+        Coordinator::start(config, move |_shard| crate::runtime::Runtime::load(&dir))
     }
 
-    /// Start over the native netlist backend: the synthesized PPC
-    /// blocks are the execution engine, no XLA/Python anywhere on the
-    /// path. Build the executor (and pay its synthesis or cache-load
-    /// time) before the coordinator threads spin up.
+    /// Start over a single pre-built native executor: the synthesized
+    /// PPC blocks are the execution engine, no XLA/Python anywhere on
+    /// the path. One shard (the executor is moved onto it); use
+    /// [`Coordinator::with_native_sharded`] to fan the catalog out
+    /// over several shards.
     pub fn with_native(
         config: CoordinatorConfig,
         executor: crate::runtime::NativeExecutor,
     ) -> Result<Coordinator> {
-        Coordinator::start(config, move || Ok(executor))
+        let config = CoordinatorConfig { shards: 1, ..config };
+        let cell = Mutex::new(Some(executor));
+        Coordinator::start(config, move |_shard| {
+            cell.lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow!("single-shard executor already taken"))
+        })
     }
 
-    /// Submit a job; `Err(Busy)` when the bounded queue is full.
+    /// Start a sharded native pool: `build(shard_index)` constructs one
+    /// [`crate::runtime::NativeExecutor`] per shard, on the shard's own
+    /// thread. Point every build at the same persistent netlist cache
+    /// and only the first pays synthesis — the rest load BLIF.
+    pub fn with_native_sharded<F>(config: CoordinatorConfig, build: F) -> Result<Coordinator>
+    where
+        F: Fn(usize) -> Result<crate::runtime::NativeExecutor> + Send + Sync + 'static,
+    {
+        Coordinator::start(config, build)
+    }
+
+    /// Submit a job; `Err(Busy)` when more than `queue_capacity`
+    /// requests are already in flight — the backpressure boundary.
     pub fn submit(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
         if self.down.load(Ordering::Relaxed) {
             return Err(SubmitError::Down);
         }
+        if self.metrics.in_flight() >= self.in_flight_cap {
+            self.metrics.record_rejected();
+            return Err(SubmitError::Busy);
+        }
         let (reply, rx) = mpsc::channel();
         let item = WorkItem { job, quality, reply, submitted: Instant::now() };
         match self.tx.try_send(item) {
-            Ok(()) => Ok(Ticket { rx }),
+            Ok(()) => {
+                self.metrics.record_submitted();
+                Ok(Ticket { rx })
+            }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.record_rejected();
                 Err(SubmitError::Busy)
@@ -165,12 +242,27 @@ impl Coordinator {
         }
     }
 
-    /// Blocking submit (waits for queue space).
+    /// Blocking submit (waits for queue space; never `Busy`).
     pub fn submit_blocking(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
         let (reply, rx) = mpsc::channel();
         let item = WorkItem { job, quality, reply, submitted: Instant::now() };
         self.tx.send(item).map_err(|_| SubmitError::Down)?;
+        self.metrics.record_submitted();
         Ok(Ticket { rx })
+    }
+
+    /// Submit a whole batch of jobs and await them together: the batch
+    /// future of the reworked serving API. Jobs routed to the same
+    /// [`ModelKey`] lane-pack into shared netlist passes.
+    pub fn submit_all(
+        &self,
+        jobs: impl IntoIterator<Item = (Job, Quality)>,
+    ) -> Result<BatchTicket, SubmitError> {
+        let mut tickets = Vec::new();
+        for (job, quality) in jobs {
+            tickets.push(self.submit_blocking(job, quality)?);
+        }
+        Ok(BatchTicket { tickets })
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -181,13 +273,10 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.down.store(true, Ordering::Relaxed);
-        // close the channel by replacing tx? dropping self.tx happens
-        // after dispatcher join; force-disconnect by taking the handle
-        // only after the sender is dropped — so drop order: we can't
-        // drop tx early (borrowed), but dispatcher exits when all
-        // senders are gone; the handle join happens in a scoped drop:
         if let Some(h) = self.dispatcher.take() {
-            // replace tx with a dummy to disconnect the queue
+            // replace tx with a dummy to disconnect the queue; the
+            // dispatcher drains what's left, flushes every open batch
+            // to the pool, and the pool's drop drains the shards
             let (dummy, _rx) = mpsc::sync_channel(1);
             let old = std::mem::replace(&mut self.tx, dummy);
             drop(old);
@@ -198,13 +287,13 @@ impl Drop for Coordinator {
 
 fn dispatch_loop(
     config: CoordinatorConfig,
-    engine: Engine,
+    pool: EnginePool,
     rx: mpsc::Receiver<WorkItem>,
     metrics: Arc<Metrics>,
     down: Arc<AtomicBool>,
 ) {
     let mut batcher: Batcher<Result<Response>> =
-        Batcher::new(config.batch_size, config.classify_row, config.batch_max_wait);
+        Batcher::new(config.batch_size.min(LANES), config.batch_max_wait);
     loop {
         // wait until next batch deadline (or idle poll)
         let timeout = batcher
@@ -213,59 +302,41 @@ fn dispatch_loop(
             .unwrap_or(Duration::from_millis(20));
         match rx.recv_timeout(timeout) {
             Ok(item) => {
-                handle_item(&config, &engine, &mut batcher, &metrics, item);
+                handle_item(&config, &mut batcher, &metrics, item);
                 // Drain everything already queued before flushing:
-                // under backlog the oldest classify is always past its
+                // under backlog the oldest request is always past its
                 // deadline, and flushing per-item would degrade batches
                 // to size 1.
                 while let Ok(item) = rx.try_recv() {
-                    handle_item(&config, &engine, &mut batcher, &metrics, item);
+                    handle_item(&config, &mut batcher, &metrics, item);
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
-        flush_due(&engine, &mut batcher, &metrics);
+        flush_due(&pool, &mut batcher, &metrics);
     }
     // drain remaining batches before exit
     let keys: Vec<ModelKey> = batcher.due(Instant::now() + Duration::from_secs(3600));
     for key in keys {
-        flush_model(&engine, &mut batcher, &metrics, key);
+        while flush_model(&pool, &mut batcher, &metrics, key) {}
     }
     down.store(true, Ordering::Relaxed);
+    // `pool` drops here: shards drain their queued batches, then join
 }
 
+/// Route one job to its model queue (batches are the unit of work, so
+/// nothing executes here).
 fn handle_item(
     config: &CoordinatorConfig,
-    engine: &Engine,
     batcher: &mut Batcher<Result<Response>>,
     metrics: &Metrics,
     item: WorkItem,
 ) {
     let key = ModelKey::route(item.job.app(), item.quality);
-    match item.job {
-        Job::Denoise { image } => {
-            let result = engine
-                .exec(key, vec![image])
-                .map(|outputs| Response { outputs, route: key });
-            if result.is_err() {
-                metrics.record_error();
-            } else {
-                metrics.record_latency(&key.to_string(), item.submitted.elapsed());
-            }
-            let _ = item.reply.send(result);
-        }
-        Job::Blend { p1, p2, alpha } => {
-            let result = engine
-                .exec(key, vec![p1, p2, Tensor::scalar(alpha)])
-                .map(|outputs| Response { outputs, route: key });
-            if result.is_err() {
-                metrics.record_error();
-            } else {
-                metrics.record_latency(&key.to_string(), item.submitted.elapsed());
-            }
-            let _ = item.reply.send(result);
-        }
+    let inputs = match item.job {
+        Job::Denoise { image } => vec![image],
+        Job::Blend { p1, p2, alpha } => vec![p1, p2, Tensor::scalar(alpha)],
         Job::Classify { pixels } => {
             if pixels.len() != config.classify_row {
                 metrics.record_error();
@@ -274,58 +345,55 @@ fn handle_item(
                     .send(Err(anyhow!("classify row must be {} pixels", config.classify_row)));
                 return;
             }
-            batcher.push(
-                key,
-                Pending { input: pixels, reply: item.reply, enqueued: item.submitted },
-            );
+            vec![Tensor { shape: vec![1, config.classify_row], data: pixels }]
+        }
+    };
+    batcher.push(key, Pending { inputs, reply: item.reply, enqueued: item.submitted });
+}
+
+fn flush_due(pool: &EnginePool, batcher: &mut Batcher<Result<Response>>, metrics: &Metrics) {
+    // loop until nothing is due: a burst can leave several *full*
+    // batches queued behind one key, and waiting another
+    // batch_max_wait per batch would idle the shards for no gain
+    loop {
+        let due = batcher.due(Instant::now());
+        if due.is_empty() {
+            break;
+        }
+        for key in due {
+            flush_model(pool, batcher, metrics, key);
         }
     }
 }
 
-fn flush_due(engine: &Engine, batcher: &mut Batcher<Result<Response>>, metrics: &Metrics) {
-    for key in batcher.due(Instant::now()) {
-        flush_model(engine, batcher, metrics, key);
-    }
-}
-
+/// Hand one model's due batch to the least-loaded shard. Returns
+/// whether a non-empty batch was flushed (the final drain loops until
+/// each queue is empty).
 fn flush_model(
-    engine: &Engine,
+    pool: &EnginePool,
     batcher: &mut Batcher<Result<Response>>,
     metrics: &Metrics,
     key: ModelKey,
-) {
-    let (pendings, flat) = batcher.take_batch(key);
+) -> bool {
+    let pendings = batcher.take_batch(key);
     if pendings.is_empty() {
-        return;
+        return false;
     }
-    metrics.record_batch(pendings.len());
-    let rows = batcher.batch_size;
-    let batch = Tensor { shape: vec![rows, batcher.row_len], data: flat };
-    match engine.exec(key, vec![batch]) {
-        Ok(outputs) => {
-            // outputs[0] is [batch, out_row]; scatter rows back
-            let out = &outputs[0];
-            let out_row = if out.shape.len() == 2 {
-                out.shape[1]
-            } else {
-                out.data.len() / rows
-            };
-            for (i, p) in pendings.into_iter().enumerate() {
-                let row = out.data[i * out_row..(i + 1) * out_row].to_vec();
-                metrics.record_latency(&key.to_string(), p.enqueued.elapsed());
-                let _ = p
-                    .reply
-                    .send(Ok(Response { outputs: vec![Tensor::vector(row)], route: key }));
-            }
-        }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for p in pendings {
-                metrics.record_error();
-                let _ = p.reply.send(Err(anyhow!("{msg}")));
-            }
+    let size = pendings.len();
+    let items: Vec<BatchItem> = pendings
+        .into_iter()
+        .map(|p| BatchItem { inputs: p.inputs, reply: p.reply, enqueued: p.enqueued })
+        .collect();
+    if pool.submit(BatchJob { key, items }).is_err() {
+        // pool gone: the dropped reply senders surface as disconnects
+        // to the callers, but the in-flight accounting (submitted −
+        // answered) must still balance or submit() would eventually
+        // report Busy forever
+        for _ in 0..size {
+            metrics.record_error();
         }
     }
+    true
 }
 
 #[cfg(test)]
@@ -338,13 +406,18 @@ mod tests {
     }
 
     fn mock_coordinator(capacity: usize, delay_ms: u64) -> Coordinator {
+        mock_coordinator_sharded(capacity, delay_ms, 1)
+    }
+
+    fn mock_coordinator_sharded(capacity: usize, delay_ms: u64, shards: usize) -> Coordinator {
         let cfg = CoordinatorConfig {
             queue_capacity: capacity,
             batch_size: 4,
             classify_row: 8,
             batch_max_wait: Duration::from_millis(2),
+            shards,
         };
-        Coordinator::start(cfg, move || {
+        Coordinator::start(cfg, move |_shard| {
             let mut m = MockExecutor::full_catalog();
             m.delay = Duration::from_millis(delay_ms);
             Ok(m)
@@ -411,6 +484,78 @@ mod tests {
             assert_eq!(r.outputs[0].data, vec![i as i32; 8]);
         }
         assert!(c.metrics().mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn every_job_kind_batches() {
+        // denoise jobs batch too now — 4 requests with a slow engine
+        // should flush as fewer, larger batches
+        let c = mock_coordinator(32, 5);
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|i| {
+                c.submit_blocking(
+                    Job::Denoise { image: Tensor::vector(vec![i * 2, i * 2]) },
+                    Quality::Precise,
+                )
+                .unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().unwrap();
+            assert_eq!(r.outputs[0].data, vec![i as i32, i as i32]);
+        }
+        assert!(
+            c.metrics().mean_batch_size() > 1.0,
+            "denoise requests should share batches, got mean {}",
+            c.metrics().mean_batch_size()
+        );
+    }
+
+    #[test]
+    fn batch_submission_api_round_trips() {
+        let c = mock_coordinator(64, 0);
+        let jobs: Vec<(Job, Quality)> = (0..6)
+            .map(|i| {
+                (
+                    Job::Denoise { image: Tensor::vector(vec![i * 4]) },
+                    Quality::Economy,
+                )
+            })
+            .collect();
+        let batch = c.submit_all(jobs).unwrap();
+        assert_eq!(batch.len(), 6);
+        let responses = batch.wait().unwrap();
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.route, mk("gdf/ds32"));
+            assert_eq!(r.outputs[0].data, vec![i as i32 * 2]);
+        }
+    }
+
+    #[test]
+    fn sharded_coordinator_serves_concurrent_load() {
+        let c = std::sync::Arc::new(mock_coordinator_sharded(256, 1, 4));
+        let mut handles = Vec::new();
+        for t in 0..8i32 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8i32 {
+                    let v = t * 16 + i * 2;
+                    let ticket = c
+                        .submit_blocking(
+                            Job::Denoise { image: Tensor::vector(vec![v]) },
+                            Quality::Balanced,
+                        )
+                        .unwrap();
+                    let r = ticket.wait().unwrap();
+                    assert_eq!(r.outputs[0].data, vec![v / 2]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.metrics().completed(), 64);
+        assert_eq!(c.metrics().errors(), 0);
     }
 
     #[test]

@@ -23,12 +23,15 @@
 //!   `Tensor`s, the `Datapath` trait) that routing, registration and
 //!   CLI parsing all share,
 //! - [`runtime`] + [`coordinator`] — the serving stack behind the
-//!   `Executor` trait, with two backends: the default **native**
-//!   backend executes the synthesized PPC netlists themselves
-//!   (bit-parallel, fully offline — no Python or XLA anywhere, with a
-//!   persistent BLIF netlist cache for instant cold starts), and
-//!   the `pjrt` cargo feature adds the AOT-compiled JAX/Pallas
-//!   artifact path,
+//!   `Executor` trait: a lane-batched, sharded pipeline where whole
+//!   `ModelKey` batches are the unit of work (dynamic batcher →
+//!   least-loaded `EnginePool` shard → `Datapath::exec_batch` packing
+//!   up to 64 requests into the bit-sliced netlist evaluator). Two
+//!   backends: the default **native** backend executes the synthesized
+//!   PPC netlists themselves (bit-parallel, fully offline — no Python
+//!   or XLA anywhere, with a persistent BLIF netlist cache for instant
+//!   cold starts), and the `pjrt` cargo feature adds the AOT-compiled
+//!   JAX/Pallas artifact path,
 //! - [`util`] — offline-friendly stand-ins for rand/serde/rayon/clap/
 //!   criterion/proptest (plus the in-tree `vendor/anyhow`).
 //!

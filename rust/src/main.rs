@@ -30,7 +30,7 @@ Pipeline:
   gen-faces [--out FILE] [--samples N]   synthetic face dataset (JSON)
   train-frnn [--faces F] [--out F]       rust reference trainer
   serve [--backend native|pjrt] [--requests N] [--image-size N]
-        [--models KEY,KEY,..] [--cache-dir DIR] [--no-cache]
+        [--models KEY,KEY,..] [--shards N] [--cache-dir DIR] [--no-cache]
         [--list-models] [--artifacts DIR]
                                          run the coordinator demo:
                                          native = synthesized netlists (offline),
@@ -40,8 +40,12 @@ Pipeline:
                                          backend caches synthesized netlists as BLIF
                                          under --cache-dir (default
                                          artifacts/netlist-cache) so warm starts
-                                         synthesize nothing. --list-models prints the
-                                         catalog (build time, cached, gates) and exits.
+                                         synthesize nothing. --shards N runs N engine
+                                         shards, each owning its own executor built
+                                         from the shared cache (default:
+                                         available_parallelism). --list-models prints
+                                         the catalog (build time, cached, gates,
+                                         lanes) and exits.
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
 
@@ -294,6 +298,10 @@ fn serve_demo(args: &Args) -> Result<()> {
     let n = args.usize_or("requests", if native { 24 } else { 64 });
     let side = args.usize_or("image-size", if native { 64 } else { 256 });
     let img_len = side * side;
+    let shards = args.usize_or(
+        "shards",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
 
     // The registered catalog (native knows it up front; PJRT discovers
     // it from the artifact manifest, so assume the full catalog there).
@@ -312,11 +320,8 @@ fn serve_demo(args: &Args) -> Result<()> {
                 .map(|s| ModelKey::parse(s).expect("default catalog keys are valid"))
                 .collect(),
         };
-        let mut exec = ppc::runtime::NativeExecutor::new();
-        if !args.flag("no-cache") {
-            let dir = args.get_or("cache-dir", "artifacts/netlist-cache");
-            exec = exec.with_cache(dir)?;
-        }
+        let cache_dir: Option<String> = (!args.flag("no-cache"))
+            .then(|| args.get_or("cache-dir", "artifacts/netlist-cache").to_string());
         // FRNN models carry weights: quick-train once if any requested,
         // the quantized net standing in for the deployed weights.
         let quant = if keys.iter().any(|k| k.app == App::Frnn) {
@@ -327,27 +332,41 @@ fn serve_demo(args: &Args) -> Result<()> {
         } else {
             None
         };
-        println!("building the native catalog ({} models)…", keys.len());
-        for key in keys {
-            exec = match key.app {
-                App::Frnn => exec.register_frnn(
-                    key.config,
-                    quant.clone().expect("frnn weights were trained above"),
-                )?,
-                _ => exec.register(key)?,
-            };
-        }
-        println!("{:<16} {:>11} {:>8} {:>9}", "model", "build(ms)", "cached", "gates");
-        for info in exec.model_infos() {
+        // One registry build per shard; all builds share the BLIF cache,
+        // so only the first ever pays two-level synthesis.
+        let build = move |_shard: usize| -> Result<ppc::runtime::NativeExecutor> {
+            let mut exec = ppc::runtime::NativeExecutor::new();
+            if let Some(dir) = &cache_dir {
+                exec = exec.with_cache(dir)?;
+            }
+            for key in &keys {
+                exec = match key.app {
+                    App::Frnn => exec.register_frnn(
+                        key.config,
+                        quant.clone().expect("frnn weights were trained above"),
+                    )?,
+                    _ => exec.register(*key)?,
+                };
+            }
+            Ok(exec)
+        };
+        println!("building the native catalog (shard 0)…");
+        let exec0 = build(0)?;
+        println!(
+            "{:<16} {:>11} {:>8} {:>9} {:>6}",
+            "model", "build(ms)", "cached", "gates", "lanes"
+        );
+        for info in exec0.model_infos() {
             println!(
-                "{:<16} {:>11.1} {:>8} {:>9}",
+                "{:<16} {:>11.1} {:>8} {:>9} {:>6}",
                 info.key.to_string(),
                 info.build_time.as_secs_f64() * 1e3,
                 if info.cached { "yes" } else { "no" },
-                info.gates
+                info.gates,
+                info.lanes
             );
         }
-        if let Some(cache) = exec.cache() {
+        if let Some(cache) = exec0.cache() {
             println!(
                 "netlist cache: {} hits, {} misses -> {}",
                 cache.hits(),
@@ -358,9 +377,19 @@ fn serve_demo(args: &Args) -> Result<()> {
         if args.flag("list-models") {
             return Ok(());
         }
-        registered = exec.registered_keys();
-        Coordinator::with_native(CoordinatorConfig::default(), exec)
-            .map_err(|e| anyhow!("{e:#}"))?
+        registered = exec0.registered_keys();
+        println!("spinning up {shards} engine shard(s)…");
+        let cfg = CoordinatorConfig { shards, ..CoordinatorConfig::default() };
+        // shard 0 reuses the registry built above; later shards build
+        // their own from the now-warm cache on their own threads
+        let first = std::sync::Mutex::new(Some(exec0));
+        Coordinator::with_native_sharded(cfg, move |shard| {
+            if let Some(e) = first.lock().unwrap().take() {
+                return Ok(e);
+            }
+            build(shard)
+        })
+        .map_err(|e| anyhow!("{e:#}"))?
     } else {
         if args.flag("list-models") {
             bail!("--list-models needs the native backend (artifact catalogs live in the manifest)");

@@ -75,6 +75,27 @@ pub fn pack_values(vals: &[u32], nlanes: usize) -> Vec<u64> {
     lanes
 }
 
+/// Chunk an arbitrarily long operand stream into ≤ 64-lane passes of
+/// `eval` — the one chunking loop behind [`AdderUnit::add_many`] and
+/// [`MultUnit8::mul_many`].
+fn eval_many(
+    a: &[u32],
+    b: &[u32],
+    mut eval: impl FnMut(&[u32], &[u32], &mut [u64]),
+) -> Vec<u64> {
+    assert_eq!(a.len(), b.len());
+    let mut out = vec![0u64; a.len()];
+    let mut buf = [0u64; 64];
+    let mut i = 0;
+    while i < a.len() {
+        let end = (i + 64).min(a.len());
+        eval(&a[i..end], &b[i..end], &mut buf);
+        out[i..end].copy_from_slice(&buf[..end - i]);
+        i = end;
+    }
+    out
+}
+
 /// Resize a lane vector, asserting (in debug) that no nonzero lane is
 /// dropped — lanes past a value's width must be all-zero wiring.
 fn pad_lanes(lanes: &[u64], n: usize) -> Vec<u64> {
@@ -185,6 +206,14 @@ impl AdderUnit {
         let bl = pack_values(b, self.lane_width());
         let sum = self.eval_lanes(&al, &bl);
         out[..n].copy_from_slice(&unpack_lanes(&sum, n));
+    }
+
+    /// Sum arbitrarily many operand pairs, 64 lanes per netlist pass —
+    /// the batch entry point the lane-batched serving path pools
+    /// requests through (only the single global tail chunk runs with
+    /// idle lanes).
+    pub fn add_many(&self, a: &[u32], b: &[u32]) -> Vec<u64> {
+        eval_many(a, b, |x, y, out| self.eval_batch(x, y, out))
     }
 
     /// One sum through the scalar netlist walk.
@@ -347,6 +376,13 @@ impl MultUnit8 {
         out[..n].copy_from_slice(&unpack_lanes(&prod, n));
     }
 
+    /// Multiply arbitrarily many operand pairs, 64 lanes per netlist
+    /// pass — the batch entry point the lane-batched serving path pools
+    /// requests through.
+    pub fn mul_many(&self, a: &[u32], b: &[u32]) -> Vec<u64> {
+        eval_many(a, b, |x, y, out| self.eval_batch(x, y, out))
+    }
+
     /// One product through the scalar netlist walk.
     pub fn eval_scalar(&self, a: u32, b: u32) -> u64 {
         debug_assert!(a < 256 && b < 256);
@@ -432,6 +468,39 @@ mod tests {
         unit.eval_batch(&a, &b, &mut out);
         for j in 0..60 {
             assert_eq!(out[j], (a[j] as u64) * (b[j] as u64), "j={j}");
+        }
+    }
+
+    #[test]
+    fn add_many_matches_scalar_past_the_lane_boundary() {
+        let set = ValueSet::full(8).map_chain(&ds(16));
+        let unit = AdderUnit::synthesize("add8_many", 8, 8, &set, &set, Objective::Area);
+        let vals: Vec<u32> = set.iter().collect();
+        // 0, 1, lane-exact, and straddling multiples of 64
+        for n in [0usize, 1, 63, 64, 65, 150] {
+            let a: Vec<u32> = (0..n).map(|i| vals[i % vals.len()]).collect();
+            let b: Vec<u32> = (0..n).map(|i| vals[(i * 11 + 5) % vals.len()]).collect();
+            let out = unit.add_many(&a, &b);
+            assert_eq!(out.len(), n);
+            for j in 0..n {
+                assert_eq!(out[j], unit.eval_scalar(a[j], b[j]), "n={n} j={j}");
+                assert_eq!(out[j], (a[j] + b[j]) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_many_matches_scalar_past_the_lane_boundary() {
+        let set = ValueSet::full(8).map_chain(&ds(32));
+        let unit = MultUnit8::synthesize("mul8_many", &set, &set, Objective::Area);
+        let vals: Vec<u32> = set.iter().collect();
+        for n in [1usize, 64, 65, 130] {
+            let a: Vec<u32> = (0..n).map(|i| vals[i % vals.len()]).collect();
+            let b: Vec<u32> = (0..n).map(|i| vals[(i * 3 + 1) % vals.len()]).collect();
+            let out = unit.mul_many(&a, &b);
+            for j in 0..n {
+                assert_eq!(out[j], (a[j] as u64) * (b[j] as u64), "n={n} j={j}");
+            }
         }
     }
 

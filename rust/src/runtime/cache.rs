@@ -115,9 +115,22 @@ impl NetlistSource for ScopedNetlistCache<'_> {
         self.misses.fetch_add(1, Ordering::Relaxed);
         self.cache.misses.fetch_add(1, Ordering::Relaxed);
         let (_, nl) = synth::synthesize(spec, objective);
-        // best-effort write — an unwritable cache must not break serving
+        // best-effort write — an unwritable cache must not break
+        // serving. Written to a unique temp file and renamed into
+        // place so a concurrent reader (another engine shard, another
+        // process) can never observe a torn half-written BLIF.
         if std::fs::create_dir_all(&self.dir).is_ok() {
-            let _ = std::fs::write(&path, nl.to_blif(&format!("{unit}_{}", spec.name)));
+            static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+            let tmp = self.dir.join(format!(
+                ".{unit}.{}.blif.tmp.{}.{}",
+                spec.name,
+                std::process::id(),
+                WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let text = nl.to_blif(&format!("{unit}_{}", spec.name));
+            if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, &path).is_err() {
+                let _ = std::fs::remove_file(&tmp);
+            }
         }
         nl
     }
@@ -125,12 +138,32 @@ impl NetlistSource for ScopedNetlistCache<'_> {
 
 /// Read + reconstruct + care-set-verify one cached netlist; any
 /// failure (missing file, foreign BLIF, wrong shape, wrong bits) means
-/// "not cached".
+/// "not cached". An *absent* file is a silent miss (the normal cold
+/// path); a file that is present but truncated, hand-edited or stale
+/// logs a warning so operators learn their cache is being healed —
+/// the entry falls back to re-synthesis either way, never a panic.
 fn load_verified(path: &Path, spec: &BlockSpec) -> Option<Netlist> {
     let text = std::fs::read_to_string(path).ok()?;
-    let nl = netlist_from_blif(&text, &cells90()).ok()?;
+    let nl = match netlist_from_blif(&text, &cells90()) {
+        Ok(nl) => nl,
+        Err(e) => {
+            eprintln!(
+                "warning: netlist cache entry {} is unreadable ({e:#}); re-synthesizing",
+                path.display()
+            );
+            return None;
+        }
+    };
     let shape_ok = nl.num_inputs == spec.nvars && nl.outputs.len() == spec.num_outputs();
-    (shape_ok && synth::verify_on_care_set(spec, &nl) == 0).then_some(nl)
+    if !shape_ok || synth::verify_on_care_set(spec, &nl) != 0 {
+        eprintln!(
+            "warning: netlist cache entry {} is stale or corrupt \
+             (fails care-set verification); re-synthesizing",
+            path.display()
+        );
+        return None;
+    }
+    Some(nl)
 }
 
 #[cfg(test)]
@@ -211,6 +244,43 @@ mod tests {
         let scope3 = cache.scope(key(), Objective::Area);
         AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope3);
         assert_eq!(scope3.misses(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_files_fall_back_to_resynthesis() {
+        // a half-written BLIF (power loss, hand-editing) must never
+        // panic or serve wrong bits: it re-synthesizes and heals
+        let dir = fresh_dir("trunc");
+        let set = ValueSet::full(8).map_chain(&PpcConfig::Ds32.chain());
+        let cache = NetlistCache::new(&dir).unwrap();
+        let scope = cache.scope(key(), Objective::Area);
+        AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope);
+        let n_files = scope.misses();
+        assert!(n_files > 0);
+
+        // truncate every cached file to half its length
+        for entry in std::fs::read_dir(scope.dir()).unwrap() {
+            let path = entry.unwrap().path();
+            let bytes = std::fs::read(&path).unwrap();
+            std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        }
+
+        let scope2 = cache.scope(key(), Objective::Area);
+        let unit =
+            AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope2);
+        assert_eq!(scope2.misses(), n_files, "every truncated file re-synthesizes");
+        assert_eq!(scope2.hits(), 0);
+        for a in set.iter().take(4) {
+            for b in set.iter().take(4) {
+                assert_eq!(unit.eval_scalar(a, b), (a + b) as u64);
+            }
+        }
+        // the rewrite healed the cache: third load is all hits
+        let scope3 = cache.scope(key(), Objective::Area);
+        AdderUnit::synthesize_via("t_add", 8, 8, &set, &set, Objective::Area, &scope3);
+        assert_eq!(scope3.misses(), 0);
+        assert_eq!(scope3.hits(), n_files);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -54,6 +54,9 @@ pub struct ModelInfo {
     /// True when every netlist came from the persistent cache — i.e.
     /// registration performed zero two-level synthesis.
     pub cached: bool,
+    /// Concurrent requests one bit-sliced netlist pass can carry
+    /// ([`catalog::LANES`] word lanes).
+    pub lanes: usize,
 }
 
 struct Model {
@@ -160,7 +163,13 @@ impl NativeExecutor {
             }
             None => (build(&FreshSynth, objective), false),
         };
-        let info = ModelInfo { key, gates: datapath.num_gates(), build_time: t0.elapsed(), cached };
+        let info = ModelInfo {
+            key,
+            gates: datapath.num_gates(),
+            build_time: t0.elapsed(),
+            cached,
+            lanes: catalog::LANES,
+        };
         self.models.insert(key, Model { datapath, info });
         Ok(self)
     }
@@ -187,6 +196,14 @@ impl Executor for NativeExecutor {
     fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let model = self.models.get(&key).ok_or_else(|| self.unknown(key))?;
         model.datapath.exec(inputs).map_err(|e| anyhow!("{key}: {e:#}"))
+    }
+
+    /// Lane-batched execution: the whole batch goes to the datapath's
+    /// [`Datapath::exec_batch`], which pools requests into the 64-way
+    /// bit-sliced netlist passes.
+    fn exec_batch(&self, key: ModelKey, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let model = self.models.get(&key).ok_or_else(|| self.unknown(key))?;
+        model.datapath.exec_batch(batch).map_err(|e| anyhow!("{key}: {e:#}"))
     }
 
     fn keys(&self) -> Vec<ModelKey> {

@@ -15,8 +15,8 @@
 //!
 //! NOTE: the `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so
 //! a [`Runtime`] must stay on the thread that created it. The
-//! coordinator wraps it in a dedicated engine thread (see
-//! [`crate::coordinator`]).
+//! coordinator builds it on (and confines it to) a single engine-pool
+//! shard (see [`crate::coordinator`]).
 //!
 //! Artifact files are keyed by the manifest's `"{app}/{config}"`
 //! strings on disk; the serving stack never sees those — the

@@ -5,6 +5,7 @@
 //! with mean/σ/percentiles. Bench targets are `harness = false` binaries
 //! that call [`Bencher::run`] per case and print one row per case.
 
+use super::json::Json;
 use super::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -63,6 +64,55 @@ impl BenchResult {
             self.throughput_per_sec(),
             self.iters,
         )
+    }
+}
+
+impl BenchResult {
+    /// Machine-readable record of one bench row.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.summary.mean)),
+            ("p50_s", Json::Num(self.summary.p50)),
+            ("p99_s", Json::Num(self.summary.p99)),
+            ("throughput_per_s", Json::Num(self.throughput_per_sec())),
+        ])
+    }
+}
+
+/// Bundle bench rows plus named derived metrics (speedups, ratios)
+/// into the machine-readable summary future PRs diff against
+/// (`BENCH_*.json`).
+pub fn summary_json(results: &[&BenchResult], metrics: &[(&str, f64)]) -> Json {
+    Json::obj(vec![
+        (
+            "results",
+            Json::arr(results.iter().map(|r| r.to_json())),
+        ),
+        (
+            "metrics",
+            Json::Obj(
+                metrics
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write a `BENCH_*.json` summary. The path can be overridden with
+/// `PPC_BENCH_JSON` (set it empty to disable the write entirely);
+/// failures warn instead of aborting the bench.
+pub fn write_summary(default_path: &str, json: &Json) {
+    let path = std::env::var("PPC_BENCH_JSON").unwrap_or_else(|_| default_path.to_string());
+    if path.is_empty() {
+        return;
+    }
+    match std::fs::write(&path, json.to_string()) {
+        Ok(()) => println!("bench json -> {path}"),
+        Err(e) => eprintln!("warning: could not write bench summary {path}: {e}"),
     }
 }
 
@@ -139,6 +189,24 @@ mod tests {
         });
         assert!(r.iters >= 5);
         assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let r = BenchResult {
+            name: "case".into(),
+            iters: 10,
+            summary: Summary::of(vec![0.5, 1.0, 1.5]),
+        };
+        let j = summary_json(&[&r], &[("speedup", 8.5)]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let rows = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("case"));
+        assert!((rows[0].get("mean_s").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert_eq!(
+            parsed.get("metrics").unwrap().get("speedup").unwrap().as_f64(),
+            Some(8.5)
+        );
     }
 
     #[test]

@@ -61,6 +61,7 @@ fn native_coordinator_serves_ppc_adders_end_to_end() {
         batch_size: 4,
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
+        shards: 1,
     };
     let coord = Coordinator::with_native(cfg, exec).unwrap();
 
@@ -155,6 +156,7 @@ fn native_coordinator_batches_classify_requests() {
         batch_size: 3,
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
+        shards: 1,
     };
     let coord = Coordinator::with_native(cfg, exec).unwrap();
 
@@ -208,6 +210,133 @@ fn bit_parallel_eval_matches_scalar_on_random_patterns() {
 
 fn random_image(rng: &mut Rng, n: usize) -> Vec<i32> {
     (0..n).map(|_| rng.below(256) as i32).collect()
+}
+
+/// One random request for `key`'s application: small random-shape
+/// images for GDF/blend (with a random alpha), one random 960-pixel
+/// face row for the FRNN.
+fn random_request(rng: &mut Rng, key: ModelKey) -> Vec<Tensor> {
+    use ppc::catalog::App;
+    match key.app {
+        App::Gdf => {
+            let (h, w) = (2 + rng.below(5) as usize, 2 + rng.below(6) as usize);
+            vec![Tensor::matrix(h, w, random_image(rng, h * w)).unwrap()]
+        }
+        App::Blend => {
+            let (h, w) = (2 + rng.below(4) as usize, 2 + rng.below(5) as usize);
+            vec![
+                Tensor::matrix(h, w, random_image(rng, h * w)).unwrap(),
+                Tensor::matrix(h, w, random_image(rng, h * w)).unwrap(),
+                Tensor::scalar(rng.below(128) as i32),
+            ]
+        }
+        App::Frnn => vec![Tensor { shape: vec![1, 960], data: random_image(rng, 960) }],
+    }
+}
+
+/// Property: `exec_batch` is bit-exact with N independent `exec` calls
+/// for random batch sizes in 1..=200, asserted for **every registered
+/// ModelKey** (the default native serving catalog — both GDF configs,
+/// both blend configs, both deployed FRNN configs).
+#[test]
+fn exec_batch_bit_exact_with_scalar_exec_for_every_registered_model() {
+    use ppc::apps::frnn::dataset;
+    use ppc::catalog::App;
+    use ppc::coordinator::Executor;
+    use ppc::runtime::NativeExecutor;
+    let ds = dataset::generate(2, 0xBA7C);
+    let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
+    let q = net::quantize(&r.net);
+    let exec = NativeExecutor::new()
+        .register(mk("gdf/ds16"))
+        .unwrap()
+        .register(mk("gdf/ds32"))
+        .unwrap()
+        .register(mk("blend/ds16"))
+        .unwrap()
+        .register(mk("blend/ds32"))
+        .unwrap()
+        .register_frnn(PpcConfig::Th48Ds16, q.clone())
+        .unwrap()
+        .register_frnn(PpcConfig::Ds32, q)
+        .unwrap();
+    assert_eq!(exec.keys().len(), 6);
+    let mut rng = Rng::new(0x64EC);
+    for key in exec.keys() {
+        // one tiny, one sub-lane, one past-the-64-lane-boundary batch
+        // (the FRNN's forwards dominate runtime, so its batches are
+        // smaller while still crossing the lane boundary)
+        let (mid, large) = if key.app == App::Frnn {
+            (2 + rng.below(20) as usize, 65 + rng.below(8) as usize)
+        } else {
+            (2 + rng.below(62) as usize, 65 + rng.below(136) as usize)
+        };
+        for n in [1usize, mid, large] {
+            let batch: Vec<Vec<Tensor>> =
+                (0..n).map(|_| random_request(&mut rng, key)).collect();
+            let got = exec.exec_batch(key, &batch).unwrap();
+            assert_eq!(got.len(), n, "{key}: batch of {n}");
+            for (i, inputs) in batch.iter().enumerate() {
+                let want = exec.exec(key, inputs).unwrap();
+                assert_eq!(got[i], want, "{key}: request {i} of a {n}-batch diverged");
+            }
+        }
+    }
+}
+
+/// Two engine shards built from the same persistent netlist cache
+/// serve concurrent lane-batched GDF traffic bit-exactly; the second
+/// shard's registry loads entirely warm.
+#[test]
+fn sharded_native_coordinator_serves_from_shared_cache() {
+    use ppc::runtime::NativeExecutor;
+    let dir = std::env::temp_dir()
+        .join(format!("ppc_shard_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = CoordinatorConfig {
+        queue_capacity: 256,
+        batch_size: 8,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(2),
+        shards: 2,
+    };
+    let cache = dir.clone();
+    let coord = Coordinator::with_native_sharded(cfg, move |_shard| {
+        NativeExecutor::new().with_cache(&cache)?.register(mk("gdf/ds32"))
+    })
+    .unwrap();
+
+    let mut rng = Rng::new(0x5A);
+    let imgs: Vec<Image> = (0..24)
+        .map(|i| Image {
+            width: 6 + i % 5,
+            height: 4 + i % 3,
+            pixels: (0..(6 + i % 5) * (4 + i % 3))
+                .map(|_| rng.below(256) as u8)
+                .collect(),
+        })
+        .collect();
+    let batch = coord
+        .submit_all(
+            imgs.iter()
+                .map(|im| (Job::Denoise { image: im.to_tensor() }, Quality::Economy)),
+        )
+        .unwrap();
+    let responses = batch.wait().unwrap();
+    for (img, r) in imgs.iter().zip(&responses) {
+        assert_eq!(r.route, mk("gdf/ds32"));
+        assert_eq!(
+            r.outputs[0],
+            gdf::gdf_filter(img, &PpcConfig::Ds32.chain()).to_tensor(),
+            "sharded lane-batched serving diverged from the fixed-point sim"
+        );
+    }
+    assert_eq!(coord.metrics().errors(), 0);
+    assert!(
+        coord.metrics().mean_batch_size() > 1.0,
+        "whole-batch routing should produce multi-request batches"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
