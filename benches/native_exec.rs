@@ -7,11 +7,14 @@
 //!    through the per-request scalar netlist walk vs the pooled
 //!    `Datapath::exec_batch` lane path (target: ≥ 8× throughput),
 //! 3. the coordinator serving a batch through `NativeExecutor` with no
-//!    XLA/Python anywhere on the path, and
+//!    XLA/Python anywhere on the path,
 //! 4. cold start vs warm start: registering a model from scratch
 //!    (full two-level → multi-level → map synthesis) against loading
 //!    the same model from the persistent BLIF netlist cache — the
-//!    cache-win number on the perf record.
+//!    cache-win number on the perf record, and
+//! 5. sticky-placed serving: a two-shard engine pool where each shard
+//!    builds only its assigned model subset, with the placement spill
+//!    rate and per-shard resident-model counts on the JSON record.
 //!
 //! Run: `cargo bench --bench native_exec` (PPC_BENCH_QUICK=1 shrinks
 //! budgets). Writes a machine-readable `BENCH_native_exec.json`
@@ -22,7 +25,10 @@ use ppc::apps::frnn::{dataset, net};
 use ppc::apps::gdf::GdfHardware;
 use ppc::apps::image::{synthetic_photo, Image};
 use ppc::catalog::{Datapath, ModelKey, PpcConfig, Tensor};
-use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality};
+use ppc::coordinator::{
+    BatchItem, BatchJob, Coordinator, CoordinatorConfig, EnginePool, Job, Metrics, Placement,
+    Quality,
+};
 use ppc::logic::map::Objective;
 use ppc::ppc::error;
 use ppc::ppc::preprocess::{Chain, Preproc, ValueSet};
@@ -30,7 +36,8 @@ use ppc::ppc::units::MultUnit8;
 use ppc::runtime::NativeExecutor;
 use ppc::util::bench::{self, black_box, Bencher};
 use ppc::util::prng::Rng;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 fn main() {
     let b = Bencher::from_env();
@@ -204,8 +211,75 @@ fn main() {
     println!("\nwarm-cache cold start is {cache_speedup:.1}x faster (zero two-level synthesis)");
     let _ = std::fs::remove_dir_all(&cache_dir);
 
-    // machine-readable summary so the serving-throughput trajectory is
-    // trackable across PRs
+    // -- 5. sticky-placed serving: 2 shards, subset catalogs
+    println!("\nspawning a placed 2-shard pool (gdf/ds16 + gdf/ds32, one per shard)…");
+    let place_dir =
+        std::env::temp_dir().join(format!("ppc_bench_placed_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&place_dir);
+    let placed_keys = [ModelKey::parse("gdf/ds16").unwrap(), gdf_key];
+    let placement = Placement::spread(&placed_keys, 2, 1).with_spill_threshold(4);
+    let pool_metrics = Arc::new(Metrics::new());
+    let pool = {
+        let dir = place_dir.clone();
+        EnginePool::spawn_placed(placement, pool_metrics.clone(), move |_shard, assigned| {
+            NativeExecutor::new()
+                .with_cache(&dir)?
+                .declare(placed_keys[0])?
+                .declare(placed_keys[1])?
+                .with_keys(assigned)
+        })
+        .expect("placed pool spawns")
+    };
+    let resident_counts: Vec<usize> =
+        pool.resident_keys().unwrap().iter().map(|r| r.len()).collect();
+    println!("per-shard resident models: {resident_counts:?}");
+    let placed = b.run("placed pool: 64 gdf requests, 8-req sticky batches", || {
+        let mut rxs = Vec::with_capacity(imgs.len());
+        for (c, chunk) in imgs.chunks(8).enumerate() {
+            let key = placed_keys[c % placed_keys.len()];
+            let items = chunk
+                .iter()
+                .map(|im| {
+                    let (reply, rx) = mpsc::channel();
+                    rxs.push(rx);
+                    BatchItem {
+                        inputs: vec![im.to_tensor()],
+                        reply,
+                        enqueued: Instant::now(),
+                    }
+                })
+                .collect();
+            pool.submit(BatchJob { key, items }).unwrap();
+        }
+        for rx in rxs {
+            black_box(rx.recv().unwrap().unwrap());
+        }
+    });
+    let placement_spill_rate = pool_metrics.spill_rate();
+    println!(
+        "placement spill rate: {:.1}% ({} spills)",
+        placement_spill_rate * 100.0,
+        pool_metrics.spills()
+    );
+    drop(pool);
+    let _ = std::fs::remove_dir_all(&place_dir);
+
+    // machine-readable summary so the serving-throughput (and now
+    // placement) trajectory is trackable across PRs
+    let resident_metrics: Vec<(String, f64)> = resident_counts
+        .iter()
+        .enumerate()
+        .map(|(s, &c)| (format!("shard{s}_resident_models"), c as f64))
+        .collect();
+    let mut metrics: Vec<(&str, f64)> = vec![
+        ("bit_parallel_verify_speedup", verify_speedup),
+        ("lane_batched_serving_speedup_64req_gdf", serving_speedup),
+        ("warm_cache_speedup", cache_speedup),
+        ("placement_spill_rate", placement_spill_rate),
+    ];
+    for (name, v) in &resident_metrics {
+        metrics.push((name.as_str(), *v));
+    }
     let json = bench::summary_json(
         &[
             &scalar,
@@ -217,12 +291,9 @@ fn main() {
             &e2e_classify,
             &cold,
             &warm,
+            &placed,
         ],
-        &[
-            ("bit_parallel_verify_speedup", verify_speedup),
-            ("lane_batched_serving_speedup_64req_gdf", serving_speedup),
-            ("warm_cache_speedup", cache_speedup),
-        ],
+        &metrics,
     );
     bench::write_summary("BENCH_native_exec.json", &json);
 }

@@ -466,6 +466,49 @@ mod tests {
     }
 
     #[test]
+    fn pooled_segment_boundary_is_bit_exact() {
+        // the pooled window stream flushes every SEG_WINDOWS (16K)
+        // windows; a batch whose cumulative window count lands exactly
+        // on, one short of, and one past the segment boundary must stay
+        // bit-exact with the per-request path (guards the segmented
+        // flush against off-by-one regressions)
+        let chain = Chain::of(Preproc::Ds(32));
+        let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, Objective::Area);
+        assert_eq!(SEG_WINDOWS, 16 * 1024, "test is tuned to the segment size");
+        // 127×129 = 16383 windows: one short of the boundary, so the
+        // second request's first window lands exactly on it and its
+        // remaining windows spill into the next segment
+        let straddle = vec![synthetic_photo(129, 127, 21), synthetic_photo(5, 3, 22)];
+        // 128×128 = 16384 windows: request one ends exactly at the
+        // flush point; request two starts a fresh segment
+        let exact = vec![synthetic_photo(128, 128, 23), synthetic_photo(4, 4, 24)];
+        // 16385 windows split across requests: the flush cuts request
+        // two in half mid-image
+        let past = vec![
+            synthetic_photo(129, 127, 25),
+            synthetic_photo(2, 1, 26),
+            synthetic_photo(7, 6, 27),
+        ];
+        for (name, imgs) in [("16383+", straddle), ("16384+", exact), ("16385±", past)] {
+            let first = imgs[0].width * imgs[0].height;
+            let total: usize = imgs.iter().map(|im| im.width * im.height).sum();
+            assert!(
+                (SEG_WINDOWS - 1..=SEG_WINDOWS).contains(&first) && total > SEG_WINDOWS,
+                "{name}: batch must straddle the segment ({first} then {total} windows)"
+            );
+            let batch: Vec<Vec<Tensor>> = imgs.iter().map(|im| vec![im.to_tensor()]).collect();
+            let got = hw.exec_batch(&batch).unwrap();
+            for (i, img) in imgs.iter().enumerate() {
+                assert_eq!(
+                    got[i][0],
+                    gdf_filter(img, &chain).to_tensor(),
+                    "{name}: request {i} diverged across the segment boundary"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn ppc_hardware_cheaper_with_ds() {
         let full = ValueSet::full(8);
         let ds16 = full.map_chain(&Chain::of(Preproc::Ds(16)));

@@ -282,7 +282,7 @@ pub const LANES: usize = 64;
 /// [`crate::apps::frnn::hw::FrnnHardware`] all implement it, which is
 /// what lets the native registry hold every model in a single
 /// `BTreeMap<ModelKey, Box<dyn Datapath>>`.
-pub trait Datapath: Send {
+pub trait Datapath: Send + Sync {
     /// Execute one request. Implementations validate arity, shapes and
     /// value ranges and return structured errors.
     fn exec(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;

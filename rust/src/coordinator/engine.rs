@@ -14,14 +14,24 @@
 //! through [`Executor::exec_batch`] (the 64-way lane-packed path on
 //! the native backend), records per-shard/per-key batch metrics, and
 //! scatters the per-request responses itself, so no coordinator thread
-//! ever blocks on model execution. Batch routing picks the shard with
-//! the fewest queued batches (round-robin on ties).
+//! ever blocks on model execution.
+//!
+//! Routing comes in two flavors. An unplaced pool ([`EnginePool::spawn`])
+//! replicates the catalog on every shard and picks the shard with the
+//! fewest queued batches (round-robin on ties). A *placed* pool
+//! ([`EnginePool::spawn_placed`]) builds each shard only its
+//! [`Placement`] subset and routes sticky-first: least-loaded among the
+//! key's replica shards, spilling to the globally least-loaded shard
+//! only when every replica is past the spill threshold (or dead) — the
+//! receiving shard then lazily registers the model from the shared
+//! netlist cache.
 //!
 //! [`Executor`] abstracts the runtime — typed [`ModelKey`] in,
 //! shape-carrying [`Tensor`]s through — so coordinator logic is
 //! testable without artifacts ([`MockExecutor`]).
 
 use super::metrics::Metrics;
+use super::placement::Placement;
 use super::server::Response;
 use crate::catalog::{self, App, ModelKey, Tensor};
 use anyhow::{anyhow, Result};
@@ -45,6 +55,14 @@ pub trait Executor {
 
     /// Registered model keys (for router validation / `--list-models`).
     fn keys(&self) -> Vec<ModelKey>;
+
+    /// Keys whose datapaths are *built* right now. Executors with lazy
+    /// registration (the native backend under sticky placement) keep
+    /// this smaller than [`Executor::keys`]; everything else serves
+    /// exactly what it registered.
+    fn resident_keys(&self) -> Vec<ModelKey> {
+        self.keys()
+    }
 }
 
 impl Executor for crate::runtime::Runtime {
@@ -175,6 +193,7 @@ pub struct BatchJob {
 enum Cmd {
     Batch(BatchJob),
     Keys(mpsc::Sender<Vec<ModelKey>>),
+    Resident(mpsc::Sender<Vec<ModelKey>>),
     Shutdown,
 }
 
@@ -182,6 +201,9 @@ struct Shard {
     tx: mpsc::Sender<Cmd>,
     /// Batches queued on (or running in) this shard.
     depth: Arc<AtomicUsize>,
+    /// False when the shard's executor factory failed at spawn (placed
+    /// pools tolerate this; routing skips dead shards).
+    alive: bool,
     handle: Option<JoinHandle<()>>,
 }
 
@@ -189,22 +211,76 @@ struct Shard {
 pub struct EnginePool {
     shards: Vec<Shard>,
     metrics: Arc<Metrics>,
+    /// Sticky model placement; `None` routes purely least-loaded (every
+    /// shard holds the whole catalog).
+    placement: Option<Placement>,
     rr: AtomicUsize,
 }
 
 impl EnginePool {
     /// Spawn `shards` worker shards; `factory(shard_index)` runs on
-    /// each shard's thread to construct that shard's executor. Fails if
-    /// any factory call fails.
+    /// each shard's thread to construct that shard's executor. Every
+    /// shard holds the whole catalog and batches route least-loaded.
+    /// Fails if any factory call fails.
     pub fn spawn<E, F>(shards: usize, metrics: Arc<Metrics>, factory: F) -> Result<EnginePool>
     where
         E: Executor + 'static,
         F: Fn(usize) -> Result<E> + Send + Sync + 'static,
     {
-        let shards = shards.max(1);
+        EnginePool::spawn_inner(
+            shards.max(1),
+            None,
+            metrics,
+            move |shard: usize, _keys: &[ModelKey]| factory(shard),
+        )
+    }
+
+    /// Spawn a pool under sticky `placement`: `factory(shard_index,
+    /// assigned_keys)` runs on each shard's thread and builds only that
+    /// shard's model subset. A shard whose factory fails is tolerated —
+    /// it is marked dead, its keys fail over to the least-loaded live
+    /// shard (which lazily registers them) — as long as at least one
+    /// shard survives.
+    pub fn spawn_placed<E, F>(
+        placement: Placement,
+        metrics: Arc<Metrics>,
+        factory: F,
+    ) -> Result<EnginePool>
+    where
+        E: Executor + 'static,
+        F: Fn(usize, &[ModelKey]) -> Result<E> + Send + Sync + 'static,
+    {
+        for (key, shards) in placement.iter() {
+            metrics.record_placement(key, shards);
+        }
+        EnginePool::spawn_inner(placement.shards(), Some(placement), metrics, factory)
+    }
+
+    fn spawn_inner<E, F>(
+        shards: usize,
+        placement: Option<Placement>,
+        metrics: Arc<Metrics>,
+        factory: F,
+    ) -> Result<EnginePool>
+    where
+        E: Executor + 'static,
+        F: Fn(usize, &[ModelKey]) -> Result<E> + Send + Sync + 'static,
+    {
+        let tolerate_failures = placement.is_some();
         let factory = Arc::new(factory);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let mut out = Vec::with_capacity(shards);
+        let (ready_tx, ready_rx) = mpsc::channel::<(usize, Result<()>)>();
+        let mut out: Vec<Shard> = Vec::with_capacity(shards);
+        let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+        fn note(
+            r: Result<(usize, Result<()>), mpsc::RecvError>,
+            failures: &mut Vec<(usize, anyhow::Error)>,
+        ) -> Result<()> {
+            let (shard, built) = r.map_err(|_| anyhow!("a shard died during startup"))?;
+            if let Err(e) = built {
+                failures.push((shard, e));
+            }
+            Ok(())
+        }
         for s in 0..shards {
             let (tx, rx) = mpsc::channel::<Cmd>();
             let depth = Arc::new(AtomicUsize::new(0));
@@ -212,32 +288,60 @@ impl EnginePool {
             let f = factory.clone();
             let m = metrics.clone();
             let ready = ready_tx.clone();
+            let assigned: Vec<ModelKey> =
+                placement.as_ref().map(|p| p.keys_for(s)).unwrap_or_default();
             let handle = std::thread::Builder::new()
                 .name(format!("ppc-shard{s}"))
-                .spawn(move || shard_loop(s, f, m, d, rx, ready))?;
-            out.push(Shard { tx, depth, handle: Some(handle) });
+                .spawn(move || shard_loop(s, f, assigned, m, d, rx, ready))?;
+            out.push(Shard { tx, depth, alive: true, handle: Some(handle) });
             if s == 0 {
-                // shard 0 finishes building before the rest start, so
-                // anything it warms (the shared BLIF netlist cache in
-                // particular) is already on disk when shards 1..N
-                // build — they load instead of re-synthesizing, and
-                // never race writes against an empty cache
-                ready_rx
-                    .recv()
-                    .map_err(|_| anyhow!("a shard died during startup"))??;
+                // shard 0 finishes building before the rest start. For
+                // an unplaced pool (every shard builds the whole
+                // catalog) that warms the shared BLIF netlist cache, so
+                // shards 1..N load instead of re-synthesizing. Under
+                // placement shard 0 only warms *its own subset*: with
+                // --replicas >= 2, the replicas of a key not on shard 0
+                // may still synthesize it concurrently on a cold cache
+                // — duplicated work bounded by the replica factor, never
+                // a correctness problem (cache writes are temp+rename
+                // atomic and care-set-verified on load).
+                note(ready_rx.recv(), &mut failures)?;
+                if !tolerate_failures && !failures.is_empty() {
+                    // fail fast: don't spawn shards 1..N (each would
+                    // build the whole catalog, cold) just to discard
+                    // them behind an error that is already known
+                    let (shard, e) = failures.swap_remove(0);
+                    return Err(e.context(format!("shard {shard} failed to start")));
+                }
             }
         }
         drop(ready_tx);
         for _ in 1..shards {
-            ready_rx
-                .recv()
-                .map_err(|_| anyhow!("a shard died during startup"))??;
+            note(ready_rx.recv(), &mut failures)?;
         }
-        Ok(EnginePool { shards: out, metrics, rr: AtomicUsize::new(0) })
+        if !failures.is_empty() {
+            if !tolerate_failures || failures.len() == shards {
+                let (shard, e) = failures.swap_remove(0);
+                return Err(e.context(format!("shard {shard} failed to start")));
+            }
+            for (shard, e) in failures {
+                eprintln!(
+                    "warning: shard {shard} failed to start ({e:#}); its models fail \
+                     over to the remaining shards via lazy registration"
+                );
+                out[shard].alive = false;
+            }
+        }
+        Ok(EnginePool { shards: out, metrics, placement, rr: AtomicUsize::new(0) })
     }
 
     pub fn shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The sticky placement this pool routes with, if any.
+    pub fn placement(&self) -> Option<&Placement> {
+        self.placement.as_ref()
     }
 
     /// Batches currently queued on (or running in) each shard.
@@ -248,25 +352,75 @@ impl EnginePool {
             .collect()
     }
 
-    /// Route a whole `ModelKey` batch to the least-loaded shard
-    /// (round-robin on ties). The shard executes it via
-    /// [`Executor::exec_batch`] and scatters the per-request replies.
-    pub fn submit(&self, job: BatchJob) -> Result<()> {
-        let start = self.rr.fetch_add(1, Ordering::Relaxed);
-        let n = self.shards.len();
-        let mut best = start % n;
-        let mut best_depth = usize::MAX;
+    /// Least-loaded live shard, scanning from a rotating start so ties
+    /// round-robin. `candidates` restricts the scan (replica sets).
+    fn least_loaded(&self, start: usize, candidates: Option<&[usize]>) -> Option<(usize, usize)> {
+        let n = candidates.map_or(self.shards.len(), |c| c.len());
+        let mut best: Option<(usize, usize)> = None;
         for i in 0..n {
-            let s = (start + i) % n;
+            let s = match candidates {
+                Some(c) => c[(start + i) % n],
+                None => (start + i) % n,
+            };
+            if !self.shards[s].alive {
+                continue;
+            }
             let d = self.shards[s].depth.load(Ordering::Relaxed);
-            if d < best_depth {
-                best = s;
-                best_depth = d;
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((s, d));
             }
         }
+        best
+    }
+
+    /// Pick the shard for a `key` batch: sticky-first among the key's
+    /// live replicas (least-loaded, round-robin on ties), spilling to
+    /// the globally least-loaded shard when every replica is at or past
+    /// the spill threshold and somewhere else is strictly quieter.
+    /// Returns `(shard, spilled)`.
+    fn route(&self, key: ModelKey) -> Result<(usize, bool)> {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let global = || {
+            self.least_loaded(start, None)
+                .ok_or_else(|| anyhow!("engine pool has no live shards"))
+        };
+        let Some(placement) = &self.placement else {
+            return Ok((global()?.0, false));
+        };
+        let Some(replicas) = placement.shards_of(key) else {
+            // unplaced key (unknown to the placement): no stickiness
+            return Ok((global()?.0, false));
+        };
+        match self.least_loaded(start, Some(replicas)) {
+            Some((s, d)) if d < placement.spill_threshold() => Ok((s, false)),
+            sticky => {
+                let (g, gd) = global()?;
+                match sticky {
+                    // every replica is backed up, but nowhere else is
+                    // quieter — stay sticky rather than force a lazy
+                    // registration for no queueing win
+                    Some((s, d)) if gd >= d => Ok((s, false)),
+                    _ => Ok((g, !replicas.contains(&g))),
+                }
+            }
+        }
+    }
+
+    /// Route a whole `ModelKey` batch to a shard (sticky placement when
+    /// configured, least-loaded otherwise). The shard executes it via
+    /// [`Executor::exec_batch`] and scatters the per-request replies.
+    pub fn submit(&self, job: BatchJob) -> Result<()> {
+        let (best, spilled) = self.route(job.key)?;
+        self.metrics.record_routed();
+        if spilled {
+            self.metrics.record_spill(job.key);
+        }
         let shard = &self.shards[best];
-        shard.depth.fetch_add(1, Ordering::Relaxed);
-        self.metrics.record_queue_depth(best, best_depth + 1);
+        // the post-increment depth is this submit's own observation of
+        // the queue high-water mark: two concurrent submits get 1 and 2,
+        // never a stale 1 and 1
+        let depth_now = shard.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.metrics.record_queue_depth(best, depth_now);
         shard.tx.send(Cmd::Batch(job)).map_err(|_| {
             shard.depth.fetch_sub(1, Ordering::Relaxed);
             anyhow!("engine pool is down")
@@ -285,15 +439,55 @@ impl EnginePool {
         Ok(resp.outputs)
     }
 
-    /// The registered catalog (asked of shard 0; every shard registers
-    /// the same keys).
+    /// Ask every live shard one `Cmd` question and collect the answers
+    /// as `(shard, reply)` pairs.
+    fn ask_shards(
+        &self,
+        make: impl Fn(mpsc::Sender<Vec<ModelKey>>) -> Cmd,
+    ) -> Result<Vec<(usize, Vec<ModelKey>)>> {
+        let mut waiting = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            if !shard.alive {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            shard
+                .tx
+                .send(make(tx))
+                .map_err(|_| anyhow!("engine pool is down"))?;
+            waiting.push((s, rx));
+        }
+        waiting
+            .into_iter()
+            .map(|(s, rx)| {
+                Ok((s, rx.recv().map_err(|_| anyhow!("engine dropped reply"))?))
+            })
+            .collect()
+    }
+
+    /// The servable catalog: the union of every live shard's keys, in
+    /// first-seen (catalog) order.
     pub fn keys(&self) -> Result<Vec<ModelKey>> {
-        let (tx, rx) = mpsc::channel();
-        self.shards[0]
-            .tx
-            .send(Cmd::Keys(tx))
-            .map_err(|_| anyhow!("engine pool is down"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped reply"))
+        let mut union: Vec<ModelKey> = Vec::new();
+        for (_, keys) in self.ask_shards(Cmd::Keys)? {
+            for k in keys {
+                if !union.contains(&k) {
+                    union.push(k);
+                }
+            }
+        }
+        Ok(union)
+    }
+
+    /// Per-shard resident (built) model keys — dead shards report an
+    /// empty set. Under sticky placement each live shard holds its
+    /// assigned subset plus whatever it lazily registered.
+    pub fn resident_keys(&self) -> Result<Vec<Vec<ModelKey>>> {
+        let mut out = vec![Vec::new(); self.shards.len()];
+        for (s, keys) in self.ask_shards(Cmd::Resident)? {
+            out[s] = keys;
+        }
+        Ok(out)
     }
 }
 
@@ -316,21 +510,28 @@ impl Drop for EnginePool {
 fn shard_loop<E, F>(
     shard: usize,
     factory: Arc<F>,
+    assigned: Vec<ModelKey>,
     metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
     rx: mpsc::Receiver<Cmd>,
-    ready: mpsc::Sender<Result<()>>,
+    ready: mpsc::Sender<(usize, Result<()>)>,
 ) where
     E: Executor + 'static,
-    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    F: Fn(usize, &[ModelKey]) -> Result<E> + Send + Sync + 'static,
 {
-    let executor = match (*factory)(shard) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    // a *panicking* factory must still answer the ready channel — the
+    // spawner holds its own sender while waiting for shard 0, so an
+    // unwound thread that never sends would hang spawn forever
+    let built = catch_unwind(AssertUnwindSafe(|| (*factory)(shard, &assigned)))
+        .unwrap_or_else(|_| Err(anyhow!("executor factory panicked")));
+    let executor = match built {
         Ok(e) => {
-            let _ = ready.send(Ok(()));
+            let _ = ready.send((shard, Ok(())));
             e
         }
         Err(e) => {
-            let _ = ready.send(Err(e));
+            let _ = ready.send((shard, Err(e)));
             return;
         }
     };
@@ -342,6 +543,9 @@ fn shard_loop<E, F>(
             }
             Cmd::Keys(reply) => {
                 let _ = reply.send(executor.keys());
+            }
+            Cmd::Resident(reply) => {
+                let _ = reply.send(executor.resident_keys());
             }
             Cmd::Shutdown => break,
         }
@@ -373,14 +577,17 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
         .unwrap_or_else(|_| Err(anyhow!("executor panicked on a {size}-request batch")));
     match batch_result {
         Ok(outs) if outs.len() == size => {
-            metrics.record_batch(shard, key, size, t0.elapsed());
+            metrics.record_batch(shard, key, size, t0.elapsed(), false);
             for ((reply, enqueued), outputs) in waiters.into_iter().zip(outs) {
                 metrics.record_latency(key, enqueued.elapsed());
                 let _ = reply.send(Ok(Response { outputs, route: key }));
             }
         }
         Ok(outs) => {
-            // executor contract violation — fail every request loudly
+            // executor contract violation — fail every request loudly,
+            // but still record the batch (degraded) so the stream stays
+            // complete in the per-shard stats
+            metrics.record_batch(shard, key, size, t0.elapsed(), true);
             let msg = format!(
                 "{key}: executor answered {} of {size} batch requests",
                 outs.len()
@@ -408,6 +615,11 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
                     }
                 }
             }
+            // the retried batch still executed — record it (degraded)
+            // so a shard that always falls back to the scalar path
+            // shows its real batch stream instead of zero batches and
+            // inflated lane stats
+            metrics.record_batch(shard, key, size, t0.elapsed(), true);
         }
     }
 }
@@ -464,6 +676,21 @@ mod tests {
             Err(anyhow!("boom"))
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn panicking_factory_is_an_error_not_a_hang() {
+        // a factory that panics (instead of returning Err) must still
+        // surface as a spawn error — shard 0's ready reply would
+        // otherwise never arrive and spawn would block forever
+        let r = EnginePool::spawn(2, Arc::new(Metrics::new()), |shard| -> Result<MockExecutor> {
+            if shard == 0 {
+                panic!("factory exploded");
+            }
+            Ok(MockExecutor::full_catalog())
+        });
+        let e = r.err().expect("panicking factory must be an error");
+        assert!(format!("{e:#}").contains("factory panicked"), "{e:#}");
     }
 
     #[test]
@@ -617,5 +844,228 @@ mod tests {
         assert_eq!(results[2].as_ref().unwrap().outputs[0].data, vec![2]);
         assert_eq!(metrics.completed(), 2);
         assert_eq!(metrics.errors(), 1);
+        // the retried batch is still a batch: it must appear in the
+        // stream (size 3, degraded), not vanish from the lane stats
+        let b = &metrics.batch_summaries()[&(0, mk("gdf/conv"))];
+        assert_eq!(b.batches, 1);
+        assert_eq!(b.degraded, 1);
+        assert_eq!(b.mean_size, 3.0);
+    }
+
+    /// An executor that blocks inside `exec` until the test hands it a
+    /// permit — lets a test pin batches inside (and behind) a shard.
+    struct Gated {
+        keys: Vec<ModelKey>,
+        permits: mpsc::Receiver<()>,
+    }
+
+    impl Executor for Gated {
+        fn exec(&self, _key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            self.permits.recv().map_err(|_| anyhow!("gate closed"))?;
+            Ok(vec![inputs[0].clone()])
+        }
+
+        fn keys(&self) -> Vec<ModelKey> {
+            self.keys.clone()
+        }
+    }
+
+    /// Build a pool of [`Gated`] shards. Each `send(())` on the returned
+    /// sender is broadcast to every shard's gate, releasing one blocked
+    /// `exec` per shard that is waiting (extra permits to idle shards
+    /// sit unread and are dropped with the pool).
+    fn gated_pool(
+        shards: usize,
+        placement: Option<Placement>,
+        metrics: Arc<Metrics>,
+    ) -> (EnginePool, mpsc::Sender<()>) {
+        let (permit_tx, permit_rx) = mpsc::channel::<()>();
+        let mut shard_txs = Vec::new();
+        let mut shard_rxs = Vec::new();
+        for _ in 0..shards {
+            let (tx, rx) = mpsc::channel::<()>();
+            shard_txs.push(tx);
+            shard_rxs.push(Mutex::new(Some(rx)));
+        }
+        let rxs = Arc::new(shard_rxs);
+        let take = move |shard: usize| -> Result<Gated> {
+            let permits = rxs[shard].lock().unwrap().take().unwrap();
+            Ok(Gated { keys: vec![mk("gdf/conv")], permits })
+        };
+        let pool = match placement {
+            Some(p) => EnginePool::spawn_placed(
+                p,
+                metrics,
+                move |shard: usize, _keys: &[ModelKey]| take(shard),
+            )
+            .unwrap(),
+            None => EnginePool::spawn(shards, metrics, take).unwrap(),
+        };
+        std::thread::spawn(move || {
+            while permit_rx.recv().is_ok() {
+                for tx in &shard_txs {
+                    let _ = tx.send(());
+                }
+            }
+        });
+        (pool, permit_tx)
+    }
+
+    use std::sync::Mutex;
+
+    #[test]
+    fn concurrent_submitters_record_the_true_peak_depth() {
+        // 12 threads each queue one batch on a single gated shard: the
+        // executor holds the first batch, so the real high-water mark is
+        // 12 queued batches. The recorded peak must not under-report it
+        // (the old stale pre-fetch_add read let two submits both record
+        // depth 1).
+        let metrics = Arc::new(Metrics::new());
+        let (pool, permits) = gated_pool(1, None, metrics.clone());
+        let pool = Arc::new(pool);
+        let mut handles = Vec::new();
+        let (rx_tx, rx_rx) = mpsc::channel();
+        for i in 0..12i32 {
+            let p = pool.clone();
+            let sink = rx_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let (reply, rx) = mpsc::channel();
+                p.submit(BatchJob {
+                    key: mk("gdf/conv"),
+                    items: vec![BatchItem {
+                        inputs: vec![Tensor::vector(vec![i])],
+                        reply,
+                        enqueued: Instant::now(),
+                    }],
+                })
+                .unwrap();
+                sink.send(rx).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        drop(rx_tx);
+        // all 12 submits incremented before any batch finished → the
+        // concurrent high-water mark is exactly 12
+        assert_eq!(metrics.peak_queue_depths()[&0], 12);
+        for _ in 0..12 {
+            permits.send(()).unwrap();
+        }
+        let mut seen = 0;
+        while let Ok(rx) = rx_rx.recv() {
+            rx.recv().unwrap().unwrap();
+            seen += 1;
+        }
+        assert_eq!(seen, 12);
+        drop(pool);
+    }
+
+    #[test]
+    fn sticky_placement_routes_to_the_replica_shard() {
+        let metrics = Arc::new(Metrics::new());
+        let placement = Placement::spread(&[mk("gdf/conv")], 4, 1)
+            .assign(mk("gdf/conv"), &[2])
+            .unwrap();
+        let pool = EnginePool::spawn_placed(placement, metrics.clone(), |_shard, keys| {
+            Ok(MockExecutor::new(keys))
+        })
+        .unwrap();
+        for i in 0..6i32 {
+            let out = pool.exec(mk("gdf/conv"), vec![Tensor::vector(vec![i * 2])]).unwrap();
+            assert_eq!(out[0].data, vec![i]);
+        }
+        // every batch landed on the sticky shard, none spilled
+        let b = metrics.batch_summaries();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[&(2, mk("gdf/conv"))].batches, 6);
+        assert_eq!(metrics.spills(), 0);
+        assert_eq!(metrics.placements()[&mk("gdf/conv")], vec![2]);
+        // per-shard residency reflects the subset build
+        let resident = pool.resident_keys().unwrap();
+        assert_eq!(resident[2], vec![mk("gdf/conv")]);
+        assert!(resident[0].is_empty() && resident[1].is_empty() && resident[3].is_empty());
+        // the servable catalog is the union across shards
+        assert_eq!(pool.keys().unwrap(), vec![mk("gdf/conv")]);
+    }
+
+    #[test]
+    fn backed_up_replica_spills_past_the_threshold() {
+        let metrics = Arc::new(Metrics::new());
+        let placement = Placement::spread(&[mk("gdf/conv")], 2, 1)
+            .assign(mk("gdf/conv"), &[0])
+            .unwrap()
+            .with_spill_threshold(1);
+        let (pool, permits) = gated_pool(2, Some(placement), metrics.clone());
+        let submit_one = |v: i32| {
+            let (reply, rx) = mpsc::channel();
+            pool.submit(BatchJob {
+                key: mk("gdf/conv"),
+                items: vec![BatchItem {
+                    inputs: vec![Tensor::vector(vec![v])],
+                    reply,
+                    enqueued: Instant::now(),
+                }],
+            })
+            .unwrap();
+            rx
+        };
+        // batch A occupies the sticky shard 0 (depth 1 = threshold)
+        let a = submit_one(1);
+        // batch B: sticky shard is at the threshold, shard 1 is idle →
+        // spill
+        let b = submit_one(2);
+        assert_eq!(metrics.spills(), 1);
+        // batch C: both shards now hold one batch — nowhere quieter, so
+        // it stays sticky instead of spilling again
+        let c = submit_one(3);
+        assert_eq!(metrics.spills(), 1);
+        for _ in 0..3 {
+            permits.send(()).unwrap();
+        }
+        for rx in [a, b, c] {
+            rx.recv().unwrap().unwrap();
+        }
+        drop(pool);
+        let sums = metrics.batch_summaries();
+        assert_eq!(sums[&(0, mk("gdf/conv"))].batches, 2, "sticky shard ran A and C");
+        assert_eq!(sums[&(1, mk("gdf/conv"))].batches, 1, "spill shard ran B");
+    }
+
+    #[test]
+    fn dead_shard_fails_over_to_a_live_one() {
+        // shard 1 owns the key but its factory fails: the placed pool
+        // tolerates it, routes the key's batches to a live shard, and
+        // counts them as spills (off-replica traffic)
+        let metrics = Arc::new(Metrics::new());
+        let placement = Placement::spread(&[mk("gdf/conv")], 2, 1)
+            .assign(mk("gdf/conv"), &[1])
+            .unwrap();
+        let pool = EnginePool::spawn_placed(placement, metrics.clone(), |shard, _keys| {
+            if shard == 1 {
+                Err(anyhow!("boom"))
+            } else {
+                Ok(MockExecutor::full_catalog())
+            }
+        })
+        .unwrap();
+        let out = pool.exec(mk("gdf/conv"), vec![Tensor::vector(vec![8])]).unwrap();
+        assert_eq!(out[0].data, vec![4]);
+        assert_eq!(metrics.spills(), 1);
+        assert_eq!(metrics.batch_summaries()[&(0, mk("gdf/conv"))].batches, 1);
+        // keys()/resident_keys() skip the dead shard instead of hanging
+        assert_eq!(pool.keys().unwrap(), ModelKey::catalog());
+        assert!(pool.resident_keys().unwrap()[1].is_empty());
+    }
+
+    #[test]
+    fn placed_pool_with_all_shards_dead_fails_to_spawn() {
+        let placement = Placement::spread(&[mk("gdf/conv")], 2, 1);
+        let r = EnginePool::spawn_placed(
+            placement,
+            Arc::new(Metrics::new()),
+            |_shard, _keys| -> Result<MockExecutor> { Err(anyhow!("boom")) },
+        );
+        assert!(r.is_err());
     }
 }

@@ -1,14 +1,26 @@
 //! Coordinator metrics: request counters, per-[`ModelKey`] latency
-//! records, and per-shard batch statistics (batch size, lane occupancy,
-//! batch latency, peak queue depth). Shared across threads behind a
-//! mutex (request rates here are far below contention territory; the
-//! hot path is model execution).
+//! records, per-shard batch statistics (batch size, lane occupancy,
+//! degraded batches, batch latency, peak queue depth), and sticky-
+//! placement accounting (per-key shard sets and spill counts). Shared
+//! across threads behind a mutex (request rates here are far below
+//! contention territory; the hot path is model execution).
 
 use crate::catalog::{ModelKey, LANES};
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Fraction of the bit-slice lanes a batch of `size` requests fills,
+/// over the netlist passes it actually needs: a 65-request batch takes
+/// two 64-lane words and fills 65/128 of them — not 100%.
+pub fn occupancy(size: usize) -> f64 {
+    if size == 0 {
+        return 0.0;
+    }
+    let words = size.div_ceil(LANES);
+    size as f64 / (words * LANES) as f64
+}
 
 /// Batch-level record stream of one `(shard, model)` pair.
 #[derive(Default)]
@@ -17,6 +29,8 @@ struct BatchStats {
     sizes: Vec<usize>,
     /// Wall-clock execution time per batch, seconds.
     latencies: Vec<f64>,
+    /// Batches that fell back to the per-request scalar retry.
+    degraded: usize,
 }
 
 /// Aggregated view of one `(shard, model)` batch stream.
@@ -26,8 +40,10 @@ pub struct BatchSummary {
     pub batches: usize,
     /// Mean requests per batch.
     pub mean_size: f64,
-    /// Fraction of the 64 bit-slice lanes the mean batch fills.
+    /// Mean fraction of the needed 64-lane words each batch fills.
     pub lane_occupancy: f64,
+    /// Batches that degraded to the per-request retry path.
+    pub degraded: usize,
     /// Batch execution latency (seconds).
     pub latency: Summary,
 }
@@ -44,6 +60,12 @@ struct Inner {
     batches: BTreeMap<(usize, ModelKey), BatchStats>,
     /// Per shard: peak queued-batch depth observed at submit time.
     peak_depth: BTreeMap<usize, usize>,
+    /// Sticky placement: each placed key's replica shard set.
+    placements: BTreeMap<ModelKey, Vec<usize>>,
+    /// Batches routed off their replica set (spill or failover).
+    spills: BTreeMap<ModelKey, u64>,
+    /// Batches routed through the pool (spill-rate denominator).
+    routed: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -85,12 +107,23 @@ impl Metrics {
     }
 
     /// One batch of `size` requests executed on `shard` for `key` in
-    /// `latency` wall-clock time.
-    pub fn record_batch(&self, shard: usize, key: ModelKey, size: usize, latency: Duration) {
+    /// `latency` wall-clock time; `degraded` marks a batch that fell
+    /// back to the per-request scalar retry.
+    pub fn record_batch(
+        &self,
+        shard: usize,
+        key: ModelKey,
+        size: usize,
+        latency: Duration,
+        degraded: bool,
+    ) {
         let mut m = self.inner.lock().unwrap();
         let s = m.batches.entry((shard, key)).or_default();
         s.sizes.push(size);
         s.latencies.push(latency.as_secs_f64());
+        if degraded {
+            s.degraded += 1;
+        }
     }
 
     /// Queue depth observed on `shard` when a batch was routed to it
@@ -99,6 +132,23 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         let d = m.peak_depth.entry(shard).or_default();
         *d = (*d).max(depth);
+    }
+
+    /// One batch routed through the pool — the spill-rate denominator.
+    pub fn record_routed(&self) {
+        self.inner.lock().unwrap().routed += 1;
+    }
+
+    /// The sticky placement the pool was spawned with (reported per
+    /// key alongside spill counts).
+    pub fn record_placement(&self, key: ModelKey, shards: &[usize]) {
+        self.inner.lock().unwrap().placements.insert(key, shards.to_vec());
+    }
+
+    /// One batch for `key` routed off its replica shard set (queue
+    /// spill or dead-shard failover).
+    pub fn record_spill(&self, key: ModelKey) {
+        *self.inner.lock().unwrap().spills.entry(key).or_default() += 1;
     }
 
     pub fn completed(&self) -> u64 {
@@ -111,6 +161,32 @@ impl Metrics {
 
     pub fn errors(&self) -> u64 {
         self.inner.lock().unwrap().errors
+    }
+
+    /// Batches routed off their sticky replica set, in total.
+    pub fn spills(&self) -> u64 {
+        self.inner.lock().unwrap().spills.values().sum()
+    }
+
+    /// Per-key spill counts.
+    pub fn spill_counts(&self) -> BTreeMap<ModelKey, u64> {
+        self.inner.lock().unwrap().spills.clone()
+    }
+
+    /// Per-key replica shard sets (as recorded at pool spawn).
+    pub fn placements(&self) -> BTreeMap<ModelKey, Vec<usize>> {
+        self.inner.lock().unwrap().placements.clone()
+    }
+
+    /// Fraction of routed batches that left their replica set.
+    pub fn spill_rate(&self) -> f64 {
+        let m = self.inner.lock().unwrap();
+        let spills: u64 = m.spills.values().sum();
+        if m.routed == 0 {
+            0.0
+        } else {
+            spills as f64 / m.routed as f64
+        }
     }
 
     /// Mean requests per executed batch, across every shard and model.
@@ -128,10 +204,21 @@ impl Metrics {
         }
     }
 
-    /// Mean fraction of the 64 bit-slice lanes a batch fills
-    /// (`mean_batch_size / LANES`, capped at 1).
+    /// Mean lane occupancy over every executed batch: each batch fills
+    /// `size / (ceil(size/LANES)·LANES)` of the lane words it needs, so
+    /// a 65-request batch reports 65/128 — not a clamped 100%.
     pub fn lane_occupancy(&self) -> f64 {
-        (self.mean_batch_size() / LANES as f64).min(1.0)
+        let m = self.inner.lock().unwrap();
+        let (mut n, mut total) = (0usize, 0.0f64);
+        for s in m.batches.values() {
+            n += s.sizes.len();
+            total += s.sizes.iter().map(|&sz| occupancy(sz)).sum::<f64>();
+        }
+        if n == 0 {
+            0.0
+        } else {
+            total / n as f64
+        }
     }
 
     /// Per-model end-to-end latency summaries (seconds).
@@ -149,17 +236,22 @@ impl Metrics {
         m.batches
             .iter()
             .map(|(k, s)| {
-                let mean_size = if s.sizes.is_empty() {
-                    0.0
+                let n = s.sizes.len();
+                let (mean_size, lane_occupancy) = if n == 0 {
+                    (0.0, 0.0)
                 } else {
-                    s.sizes.iter().sum::<usize>() as f64 / s.sizes.len() as f64
+                    (
+                        s.sizes.iter().sum::<usize>() as f64 / n as f64,
+                        s.sizes.iter().map(|&sz| occupancy(sz)).sum::<f64>() / n as f64,
+                    )
                 };
                 (
                     *k,
                     BatchSummary {
-                        batches: s.sizes.len(),
+                        batches: n,
                         mean_size,
-                        lane_occupancy: (mean_size / LANES as f64).min(1.0),
+                        lane_occupancy,
+                        degraded: s.degraded,
                         latency: Summary::of(s.latencies.clone()),
                     },
                 )
@@ -183,6 +275,23 @@ impl Metrics {
             self.mean_batch_size(),
             self.lane_occupancy() * 100.0
         ));
+        let placements = self.placements();
+        if !placements.is_empty() {
+            let spills = self.spill_counts();
+            s.push_str(&format!(
+                "placement: {} keys, spill_rate={:.1}%\n",
+                placements.len(),
+                self.spill_rate() * 100.0
+            ));
+            for (key, shards) in &placements {
+                s.push_str(&format!(
+                    "  {:<16} shards[{}] spills={}\n",
+                    key.to_string(),
+                    crate::coordinator::Placement::render_shards(shards),
+                    spills.get(key).copied().unwrap_or(0)
+                ));
+            }
+        }
         for (route, sum) in self.latency_summaries() {
             s.push_str(&format!(
                 "  {:<16} n={:<6} mean={:.3}ms p50={:.3}ms p99={:.3}ms\n",
@@ -197,11 +306,12 @@ impl Metrics {
         for ((shard, key), b) in self.batch_summaries() {
             s.push_str(&format!(
                 "  shard{shard} {:<14} batches={:<5} mean_batch={:<5.1} \
-                 occ={:.0}% batch_p50={:.3}ms peak_depth={}\n",
+                 occ={:.0}% degraded={} batch_p50={:.3}ms peak_depth={}\n",
                 key.to_string(),
                 b.batches,
                 b.mean_size,
                 b.lane_occupancy * 100.0,
+                b.degraded,
                 b.latency.p50 * 1e3,
                 depths.get(&shard).copied().unwrap_or(0)
             ));
@@ -223,7 +333,7 @@ mod tests {
         let m = Metrics::new();
         m.record_latency(mk("gdf/conv"), Duration::from_millis(2));
         m.record_latency(mk("gdf/conv"), Duration::from_millis(4));
-        m.record_batch(0, mk("gdf/conv"), 8, Duration::from_millis(3));
+        m.record_batch(0, mk("gdf/conv"), 8, Duration::from_millis(3), false);
         m.record_rejected();
         assert_eq!(m.completed(), 2);
         assert_eq!(m.rejected(), 1);
@@ -235,11 +345,64 @@ mod tests {
     }
 
     #[test]
+    fn occupancy_counts_the_lane_words_a_batch_actually_needs() {
+        // size / (ceil(size/64)·64): a 65-request batch takes two lane
+        // words and fills 65/128, never a clamped 100%
+        assert_eq!(occupancy(0), 0.0);
+        assert!((occupancy(1) - 1.0 / 64.0).abs() < 1e-12);
+        assert!((occupancy(64) - 1.0).abs() < 1e-12);
+        assert!((occupancy(65) - 65.0 / 128.0).abs() < 1e-12);
+        assert!((occupancy(128) - 1.0).abs() < 1e-12);
+        assert!((occupancy(129) - 129.0 / 192.0).abs() < 1e-12);
+
+        // the same formula backs the aggregate and per-(shard,key) views
+        let m = Metrics::new();
+        for size in [1usize, 64, 65, 128, 129] {
+            m.record_batch(0, mk("gdf/ds16"), size, Duration::from_millis(1), false);
+        }
+        let want =
+            [1usize, 64, 65, 128, 129].iter().map(|&s| occupancy(s)).sum::<f64>() / 5.0;
+        assert!((m.lane_occupancy() - want).abs() < 1e-12);
+        let b = &m.batch_summaries()[&(0, mk("gdf/ds16"))];
+        assert!((b.lane_occupancy - want).abs() < 1e-12);
+        assert!(b.lane_occupancy < 1.0, "65/129-sized batches are not 100% occupied");
+    }
+
+    #[test]
+    fn degraded_batches_are_counted() {
+        let m = Metrics::new();
+        m.record_batch(0, mk("gdf/ds16"), 3, Duration::from_millis(1), true);
+        m.record_batch(0, mk("gdf/ds16"), 4, Duration::from_millis(1), false);
+        let b = &m.batch_summaries()[&(0, mk("gdf/ds16"))];
+        assert_eq!(b.batches, 2);
+        assert_eq!(b.degraded, 1);
+        assert!(m.report().contains("degraded=1"), "{}", m.report());
+    }
+
+    #[test]
+    fn placement_and_spills_are_reported() {
+        let m = Metrics::new();
+        m.record_placement(mk("gdf/ds16"), &[0, 2]);
+        m.record_placement(mk("blend/ds32"), &[1]);
+        m.record_routed();
+        m.record_routed();
+        m.record_routed();
+        m.record_spill(mk("gdf/ds16"));
+        assert_eq!(m.spills(), 1);
+        assert_eq!(m.spill_counts()[&mk("gdf/ds16")], 1);
+        assert_eq!(m.placements()[&mk("gdf/ds16")], vec![0, 2]);
+        assert!((m.spill_rate() - 1.0 / 3.0).abs() < 1e-12);
+        let rep = m.report();
+        assert!(rep.contains("shards[0+2]"), "{rep}");
+        assert!(rep.contains("spill_rate=33.3%"), "{rep}");
+    }
+
+    #[test]
     fn per_shard_batch_stats_partition() {
         let m = Metrics::new();
-        m.record_batch(0, mk("gdf/ds16"), 4, Duration::from_millis(1));
-        m.record_batch(1, mk("gdf/ds16"), 8, Duration::from_millis(2));
-        m.record_batch(1, mk("frnn/ds32"), 2, Duration::from_millis(1));
+        m.record_batch(0, mk("gdf/ds16"), 4, Duration::from_millis(1), false);
+        m.record_batch(1, mk("gdf/ds16"), 8, Duration::from_millis(2), false);
+        m.record_batch(1, mk("frnn/ds32"), 2, Duration::from_millis(1), false);
         m.record_queue_depth(1, 3);
         m.record_queue_depth(1, 1);
         let b = m.batch_summaries();

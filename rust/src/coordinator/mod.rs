@@ -17,11 +17,19 @@
 //!                                     batch fills or its deadline hits
 //!                                                │
 //!                                     EnginePool: whole ModelKey
-//!                                     batches routed to the least-
-//!                                     loaded of N shards
+//!                                     batches routed sticky-first to
+//!                                     the key's Placement replicas
+//!                                     (least-loaded within, spill past
+//!                                     the threshold), or least-loaded
+//!                                     across all N shards when no
+//!                                     placement is configured
 //!                                        │           │
 //!                                     shard 0  …  shard N−1
-//!                                     (each owns its own executor;
+//!                                     (each owns its own executor and,
+//!                                      under placement, only its model
+//!                                      subset — off-subset traffic is
+//!                                      lazily registered from the
+//!                                      shared cache;
 //!                                      Executor::exec_batch lane-packs
 //!                                      up to 64 requests into the
 //!                                      bit-sliced netlist evaluator
@@ -49,11 +57,13 @@
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod placement;
 pub mod server;
 
 pub use crate::catalog::{App, ModelKey, PpcConfig, Quality, Tensor};
 pub use engine::{BatchItem, BatchJob, EnginePool, Executor, MockExecutor};
 pub use metrics::{BatchSummary, Metrics};
+pub use placement::Placement;
 pub use server::{
     BatchTicket, Coordinator, CoordinatorConfig, Job, Response, SubmitError, Ticket,
 };

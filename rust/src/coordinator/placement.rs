@@ -1,0 +1,333 @@
+//! Sticky model placement: which engine shards own which [`ModelKey`]s.
+//!
+//! The paper's premise is that an application-specific deployment
+//! serves a *fixed, predefined* model set, so the serving topology can
+//! be specialized too: instead of replicating the whole catalog on
+//! every shard (memory and warm-start cost × `shards`), a [`Placement`]
+//! assigns each key to a small subset of shards — its *replicas* — and
+//! the [`crate::coordinator::EnginePool`] routes that key's batches
+//! sticky-first to the least-loaded replica.
+//!
+//! The default assignment is a deterministic rendezvous
+//! (highest-random-weight) hash spread: every `(key, shard)` pair gets
+//! a score from an FNV-1a hash of the key's canonical string and the
+//! shard index, and the key lands on its top-`replicas` shards. The
+//! spread is stable under re-runs (no RNG, no global state), balanced
+//! to within the usual consistent-hashing slack, and individual keys
+//! can be pinned explicitly with [`Placement::assign`] (CLI:
+//! `serve --placement key=shard+shard,...`).
+//!
+//! Placement is a *routing preference*, not a capability boundary: a
+//! shard asked for a key outside its subset — spill when every replica
+//! is past [`Placement::spill_threshold`] queued batches, or failover
+//! after a replica shard failed to build — lazily registers the model
+//! instead of erroring (see [`crate::runtime::NativeExecutor`]); with
+//! the shared netlist cache attached that is a BLIF load, without one
+//! it is a full synthesis run on the shard thread.
+
+use crate::catalog::ModelKey;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Queued-batch depth on a key's best replica above which the pool
+/// spills the batch to the globally least-loaded shard.
+pub const DEFAULT_SPILL_THRESHOLD: usize = 4;
+
+/// A sticky assignment of model keys to engine-shard subsets.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    shards: usize,
+    replicas: usize,
+    spill_threshold: usize,
+    assignments: BTreeMap<ModelKey, Vec<usize>>,
+}
+
+impl Placement {
+    /// Spread `keys` over `shards` shards with `replicas` copies each
+    /// (clamped to `1..=shards`), by bounded-load rendezvous hashing:
+    /// each key prefers its highest-scoring shards, but no shard takes
+    /// more than `ceil(keys·replicas / shards)` models, so the spread
+    /// is both sticky under catalog changes and never lopsided (6
+    /// models over 4 shards with one replica means every shard builds
+    /// at most 2 datapaths).
+    pub fn spread(keys: &[ModelKey], shards: usize, replicas: usize) -> Placement {
+        let shards = shards.max(1);
+        let replicas = replicas.clamp(1, shards);
+        let cap = (keys.len() * replicas).div_ceil(shards).max(1);
+        let mut load = vec![0usize; shards];
+        let mut assignments: BTreeMap<ModelKey, Vec<usize>> = BTreeMap::new();
+        for &key in keys {
+            if assignments.contains_key(&key) {
+                continue; // duplicate input key
+            }
+            let mut ranked: Vec<(u64, usize)> =
+                (0..shards).map(|s| (rendezvous_score(key, s), s)).collect();
+            // highest score first; shard index breaks (improbable) ties
+            ranked.sort_by(|a, b| b.cmp(a));
+            let mut picked: Vec<usize> = Vec::with_capacity(replicas);
+            // honor the hash ranking among shards still under the cap…
+            for &(_, s) in &ranked {
+                if picked.len() == replicas {
+                    break;
+                }
+                if load[s] < cap {
+                    picked.push(s);
+                    load[s] += 1;
+                }
+            }
+            // …and overflow in ranking order if every shard is full
+            for &(_, s) in &ranked {
+                if picked.len() == replicas {
+                    break;
+                }
+                if !picked.contains(&s) {
+                    picked.push(s);
+                    load[s] += 1;
+                }
+            }
+            picked.sort_unstable();
+            assignments.insert(key, picked);
+        }
+        Placement { shards, replicas, spill_threshold: DEFAULT_SPILL_THRESHOLD, assignments }
+    }
+
+    /// Change the spill threshold (queued batches on the best replica
+    /// before a batch overflows to the least-loaded non-replica shard).
+    pub fn with_spill_threshold(mut self, threshold: usize) -> Placement {
+        self.spill_threshold = threshold.max(1);
+        self
+    }
+
+    /// Pin `key` to an explicit shard set, overriding the hash spread.
+    /// The key must be part of this placement's catalog (it got a
+    /// spread assignment) — a typo'd `--placement` key fails here
+    /// instead of silently dooming the pinned shard's subset build.
+    pub fn assign(mut self, key: ModelKey, shards: &[usize]) -> Result<Placement> {
+        if !self.assignments.contains_key(&key) {
+            bail!(
+                "{key}: not in the placed catalog (placed models: {})",
+                crate::catalog::join(self.assignments.keys())
+            );
+        }
+        if shards.is_empty() {
+            bail!("{key}: placement override needs at least one shard");
+        }
+        for &s in shards {
+            if s >= self.shards {
+                bail!(
+                    "{key}: shard {s} out of range (pool has {} shards)",
+                    self.shards
+                );
+            }
+        }
+        let mut sorted = shards.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        self.assignments.insert(key, sorted);
+        Ok(self)
+    }
+
+    /// Apply CLI overrides of the form `key=shard+shard,key=shard,...`
+    /// (e.g. `gdf/ds16=0+2,blend/ds32=1`).
+    pub fn with_overrides(mut self, spec: &str) -> Result<Placement> {
+        for entry in spec.split(',').filter(|e| !e.trim().is_empty()) {
+            let (key, shards) = entry
+                .trim()
+                .split_once('=')
+                .ok_or_else(|| anyhow!("placement override {entry:?} must be key=shard+shard"))?;
+            let key = ModelKey::parse(key.trim())?;
+            let shards: Vec<usize> = shards
+                .split('+')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("{key}: bad shard index {s:?}"))
+                })
+                .collect::<Result<_>>()?;
+            self = self.assign(key, &shards)?;
+        }
+        Ok(self)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn spill_threshold(&self) -> usize {
+        self.spill_threshold
+    }
+
+    /// The replica shard set of `key` (`None` for unplaced keys, which
+    /// route least-loaded like an unplaced pool).
+    pub fn shards_of(&self, key: ModelKey) -> Option<&[usize]> {
+        self.assignments.get(&key).map(|v| v.as_slice())
+    }
+
+    /// The keys assigned to `shard` — what that shard builds eagerly.
+    pub fn keys_for(&self, shard: usize) -> Vec<ModelKey> {
+        self.assignments
+            .iter()
+            .filter(|(_, shards)| shards.contains(&shard))
+            .map(|(&k, _)| k)
+            .collect()
+    }
+
+    /// Every `(key, shard set)` pair, in catalog order.
+    pub fn iter(&self) -> impl Iterator<Item = (ModelKey, &[usize])> {
+        self.assignments.iter().map(|(&k, v)| (k, v.as_slice()))
+    }
+
+    /// Render a shard set as the CLI/report spelling (`0+2`).
+    pub fn render_shards(shards: &[usize]) -> String {
+        shards
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, (key, shards)) in self.iter().enumerate() {
+            if i > 0 {
+                f.write_str(", ")?;
+            }
+            write!(f, "{key}={}", Placement::render_shards(shards))?;
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a over the key's canonical spelling and the shard index — the
+/// rendezvous weight of placing `key` on `shard`.
+fn rendezvous_score(key: ModelKey, shard: usize) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for b in key.to_string().bytes().chain([b'#']).chain((shard as u64).to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    // final avalanche so consecutive shard indices decorrelate
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^ (h >> 33)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
+    }
+
+    #[test]
+    fn spread_is_deterministic_and_respects_replicas() {
+        let keys = ModelKey::catalog();
+        let a = Placement::spread(&keys, 4, 2);
+        let b = Placement::spread(&keys, 4, 2);
+        for key in &keys {
+            let sa = a.shards_of(*key).unwrap();
+            assert_eq!(sa, b.shards_of(*key).unwrap(), "{key} moved between runs");
+            assert_eq!(sa.len(), 2, "{key} wants 2 replicas");
+            assert!(sa.iter().all(|&s| s < 4));
+            assert!(sa.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
+        }
+    }
+
+    #[test]
+    fn spread_is_load_bounded() {
+        // 9 keys × 1 replica over 3 shards: the load cap forces an
+        // exactly even split
+        let keys = ModelKey::catalog();
+        let p = Placement::spread(&keys, 3, 1);
+        let counts: Vec<usize> = (0..3).map(|s| p.keys_for(s).len()).collect();
+        assert_eq!(counts, vec![3, 3, 3], "cap = ceil(9/3) bounds every shard");
+        // 6 keys × 1 replica over 4 shards (the acceptance shape): no
+        // shard ever builds more than ceil(6/4) = 2 datapaths
+        let six = &keys[..6];
+        let p = Placement::spread(six, 4, 1);
+        let counts: Vec<usize> = (0..4).map(|s| p.keys_for(s).len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 6);
+        assert!(counts.iter().all(|&c| c <= 2), "{counts:?}");
+        // replicas multiply the slots but the cap still holds
+        let p = Placement::spread(&keys, 3, 2);
+        let counts: Vec<usize> = (0..3).map(|s| p.keys_for(s).len()).collect();
+        assert_eq!(counts, vec![6, 6, 6]);
+    }
+
+    #[test]
+    fn replicas_clamp_to_shard_count() {
+        let keys = [mk("gdf/ds16")];
+        let p = Placement::spread(&keys, 2, 10);
+        assert_eq!(p.replicas(), 2);
+        assert_eq!(p.shards_of(mk("gdf/ds16")).unwrap(), &[0, 1]);
+        let p = Placement::spread(&keys, 3, 0);
+        assert_eq!(p.replicas(), 1);
+    }
+
+    #[test]
+    fn keys_for_inverts_shards_of() {
+        let keys = ModelKey::catalog();
+        let p = Placement::spread(&keys, 4, 2);
+        for shard in 0..4 {
+            for key in p.keys_for(shard) {
+                assert!(p.shards_of(key).unwrap().contains(&shard));
+            }
+        }
+        // every key appears under each of its shards
+        let total: usize = (0..4).map(|s| p.keys_for(s).len()).sum();
+        assert_eq!(total, keys.len() * 2);
+    }
+
+    #[test]
+    fn overrides_pin_keys() {
+        let keys = ModelKey::catalog();
+        let p = Placement::spread(&keys, 4, 1)
+            .with_overrides("gdf/ds16=3, blend/ds32=0+2")
+            .unwrap();
+        assert_eq!(p.shards_of(mk("gdf/ds16")).unwrap(), &[3]);
+        assert_eq!(p.shards_of(mk("blend/ds32")).unwrap(), &[0, 2]);
+        // untouched keys keep their hash spread
+        assert_eq!(
+            p.shards_of(mk("gdf/ds32")),
+            Placement::spread(&keys, 4, 1).shards_of(mk("gdf/ds32"))
+        );
+    }
+
+    #[test]
+    fn bad_overrides_are_structured_errors() {
+        let keys = ModelKey::catalog();
+        let p = Placement::spread(&keys, 2, 1);
+        assert!(p.clone().with_overrides("gdf/ds16").is_err(), "missing =");
+        assert!(p.clone().with_overrides("nope/x=0").is_err(), "bad key");
+        assert!(p.clone().with_overrides("gdf/ds16=9").is_err(), "shard out of range");
+        assert!(p.clone().with_overrides("gdf/ds16=x").is_err(), "bad index");
+        let e = p.clone().with_overrides("gdf/ds16=5").unwrap_err();
+        assert!(format!("{e}").contains("out of range"), "{e}");
+        // a valid catalog key that is NOT part of this placement's
+        // model list is a typo'd flag, not a silent dead shard
+        let narrow = Placement::spread(&keys[..2], 2, 1);
+        let e = narrow.with_overrides("blend/ds16=0").unwrap_err();
+        assert!(format!("{e}").contains("not in the placed catalog"), "{e}");
+    }
+
+    #[test]
+    fn display_renders_cli_spelling() {
+        let p = Placement::spread(&[mk("gdf/ds16")], 2, 2);
+        assert_eq!(format!("{p}"), "gdf/ds16=0+1");
+    }
+
+    #[test]
+    fn unplaced_keys_have_no_shard_set() {
+        let p = Placement::spread(&[mk("gdf/ds16")], 2, 1);
+        assert!(p.shards_of(mk("blend/ds32")).is_none());
+    }
+}

@@ -19,6 +19,7 @@
 use super::batcher::{Batcher, Pending};
 use super::engine::{BatchItem, BatchJob, EnginePool, Executor};
 use super::metrics::Metrics;
+use super::placement::Placement;
 use crate::catalog::{App, ModelKey, Quality, Tensor, LANES};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -146,6 +147,10 @@ impl BatchTicket {
 pub struct Coordinator {
     tx: mpsc::SyncSender<WorkItem>,
     metrics: Arc<Metrics>,
+    /// Shared with the dispatcher thread so catalog/residency queries
+    /// ([`Coordinator::registered_keys`], [`Coordinator::resident_keys`])
+    /// don't have to round-trip through the work queue.
+    pool: Arc<EnginePool>,
     down: Arc<AtomicBool>,
     /// Max in-flight requests before [`Coordinator::submit`] pushes
     /// back (the dispatcher never blocks on execution anymore, so the
@@ -157,7 +162,7 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start with a custom executor factory: `factory(shard_index)`
     /// runs on each of `config.shards` shard threads and builds that
-    /// shard's executor.
+    /// shard's executor (the whole catalog on every shard).
     pub fn start<E, F>(config: CoordinatorConfig, factory: F) -> Result<Coordinator>
     where
         E: Executor + 'static,
@@ -165,15 +170,44 @@ impl Coordinator {
     {
         let metrics = Arc::new(Metrics::new());
         let pool = EnginePool::spawn(config.shards, metrics.clone(), factory)?;
+        Coordinator::run(config, pool, metrics)
+    }
+
+    /// Start under sticky `placement`: `factory(shard_index,
+    /// assigned_keys)` builds each shard's model *subset* on the
+    /// shard's own thread (placement's shard count wins over
+    /// `config.shards`). Batches route sticky-first with spill; shards
+    /// receiving off-subset traffic lazily register the model.
+    pub fn start_placed<E, F>(
+        config: CoordinatorConfig,
+        placement: Placement,
+        factory: F,
+    ) -> Result<Coordinator>
+    where
+        E: Executor + 'static,
+        F: Fn(usize, &[ModelKey]) -> Result<E> + Send + Sync + 'static,
+    {
+        let metrics = Arc::new(Metrics::new());
+        let pool = EnginePool::spawn_placed(placement, metrics.clone(), factory)?;
+        Coordinator::run(config, pool, metrics)
+    }
+
+    fn run(
+        config: CoordinatorConfig,
+        pool: EnginePool,
+        metrics: Arc<Metrics>,
+    ) -> Result<Coordinator> {
+        let pool = Arc::new(pool);
         let (tx, rx) = mpsc::sync_channel::<WorkItem>(config.queue_capacity);
         let down = Arc::new(AtomicBool::new(false));
         let m = metrics.clone();
         let d = down.clone();
+        let p = pool.clone();
         let in_flight_cap = config.queue_capacity as u64;
         let dispatcher = std::thread::Builder::new()
             .name("ppc-dispatch".into())
-            .spawn(move || dispatch_loop(config, pool, rx, m, d))?;
-        Ok(Coordinator { tx, metrics, down, in_flight_cap, dispatcher: Some(dispatcher) })
+            .spawn(move || dispatch_loop(config, p, rx, m, d))?;
+        Ok(Coordinator { tx, metrics, pool, down, in_flight_cap, dispatcher: Some(dispatcher) })
     }
 
     /// Start against the artifact directory (PJRT path; needs the
@@ -215,6 +249,41 @@ impl Coordinator {
         F: Fn(usize) -> Result<crate::runtime::NativeExecutor> + Send + Sync + 'static,
     {
         Coordinator::start(config, build)
+    }
+
+    /// Start a sticky-placed native pool: `build(shard_index,
+    /// assigned_keys)` constructs each shard's subset
+    /// [`crate::runtime::NativeExecutor`] (declare the full catalog,
+    /// [`crate::runtime::NativeExecutor::with_keys`] the assignment) on
+    /// the shard's own thread.
+    pub fn with_native_placed<F>(
+        config: CoordinatorConfig,
+        placement: Placement,
+        build: F,
+    ) -> Result<Coordinator>
+    where
+        F: Fn(usize, &[ModelKey]) -> Result<crate::runtime::NativeExecutor>
+            + Send
+            + Sync
+            + 'static,
+    {
+        Coordinator::start_placed(config, placement, build)
+    }
+
+    /// The servable catalog: the union of every live shard's keys.
+    pub fn registered_keys(&self) -> Result<Vec<ModelKey>> {
+        self.pool.keys()
+    }
+
+    /// Per-shard resident (built) model keys — under sticky placement,
+    /// each shard's assigned subset plus anything it lazily registered.
+    pub fn resident_keys(&self) -> Result<Vec<Vec<ModelKey>>> {
+        self.pool.resident_keys()
+    }
+
+    /// The sticky placement the engine pool routes with, if any.
+    pub fn placement(&self) -> Option<&Placement> {
+        self.pool.placement()
     }
 
     /// Submit a job; `Err(Busy)` when more than `queue_capacity`
@@ -287,7 +356,7 @@ impl Drop for Coordinator {
 
 fn dispatch_loop(
     config: CoordinatorConfig,
-    pool: EnginePool,
+    pool: Arc<EnginePool>,
     rx: mpsc::Receiver<WorkItem>,
     metrics: Arc<Metrics>,
     down: Arc<AtomicBool>,
@@ -322,7 +391,8 @@ fn dispatch_loop(
         while flush_model(&pool, &mut batcher, &metrics, key) {}
     }
     down.store(true, Ordering::Relaxed);
-    // `pool` drops here: shards drain their queued batches, then join
+    // the dispatcher's pool handle drops here; the Coordinator's drops
+    // right after the join, and the last handle drains the shards
 }
 
 /// Route one job to its model queue (batches are the unit of work, so
@@ -587,6 +657,43 @@ mod tests {
         }
         assert!(saw_busy, "bounded queue never pushed back");
         assert!(c.metrics().rejected() >= 1);
+    }
+
+    #[test]
+    fn placed_coordinator_exposes_placement_and_residency() {
+        use crate::coordinator::Placement;
+        let keys = [mk("gdf/ds16"), mk("gdf/ds32")];
+        let placement = Placement::spread(&keys, 2, 1)
+            .assign(mk("gdf/ds16"), &[0])
+            .unwrap()
+            .assign(mk("gdf/ds32"), &[1])
+            .unwrap();
+        let cfg = CoordinatorConfig {
+            queue_capacity: 32,
+            batch_size: 4,
+            classify_row: 8,
+            batch_max_wait: Duration::from_millis(2),
+            shards: 1, // ignored: the placement's shard count wins
+        };
+        let c = Coordinator::start_placed(cfg, placement, |_shard, assigned| {
+            Ok(MockExecutor::new(assigned))
+        })
+        .unwrap();
+        assert_eq!(c.placement().unwrap().shards(), 2);
+        assert_eq!(c.registered_keys().unwrap(), vec![mk("gdf/ds16"), mk("gdf/ds32")]);
+        let resident = c.resident_keys().unwrap();
+        assert_eq!(resident[0], vec![mk("gdf/ds16")]);
+        assert_eq!(resident[1], vec![mk("gdf/ds32")]);
+        // requests route by quality to both subsets and round-trip
+        for (q, want) in [(Quality::Balanced, "gdf/ds16"), (Quality::Economy, "gdf/ds32")] {
+            let t = c
+                .submit(Job::Denoise { image: Tensor::vector(vec![8, 4]) }, q)
+                .unwrap();
+            let r = t.wait().unwrap();
+            assert_eq!(r.route, mk(want));
+            assert_eq!(r.outputs[0].data, vec![4, 2]);
+        }
+        assert_eq!(c.metrics().spills(), 0);
     }
 
     #[test]

@@ -25,7 +25,9 @@
 //! - [`runtime`] + [`coordinator`] — the serving stack behind the
 //!   `Executor` trait: a lane-batched, sharded pipeline where whole
 //!   `ModelKey` batches are the unit of work (dynamic batcher →
-//!   least-loaded `EnginePool` shard → `Datapath::exec_batch` packing
+//!   sticky-placed `EnginePool` shard — each shard builds only its
+//!   assigned model subset, spill traffic lazily registers from the
+//!   shared cache → `Datapath::exec_batch` packing
 //!   up to 64 requests into the bit-sliced netlist evaluator). Two
 //!   backends: the default **native** backend executes the synthesized
 //!   PPC netlists themselves (bit-parallel, fully offline — no Python

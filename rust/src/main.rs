@@ -30,8 +30,9 @@ Pipeline:
   gen-faces [--out FILE] [--samples N]   synthetic face dataset (JSON)
   train-frnn [--faces F] [--out F]       rust reference trainer
   serve [--backend native|pjrt] [--requests N] [--image-size N]
-        [--models KEY,KEY,..] [--shards N] [--cache-dir DIR] [--no-cache]
-        [--list-models] [--artifacts DIR]
+        [--models KEY,KEY,..] [--shards N] [--replicas N]
+        [--placement KEY=S+S,..] [--spill-threshold N]
+        [--cache-dir DIR] [--no-cache] [--list-models] [--artifacts DIR]
                                          run the coordinator demo:
                                          native = synthesized netlists (offline),
                                          pjrt   = AOT artifacts (needs --features pjrt).
@@ -41,11 +42,18 @@ Pipeline:
                                          under --cache-dir (default
                                          artifacts/netlist-cache) so warm starts
                                          synthesize nothing. --shards N runs N engine
-                                         shards, each owning its own executor built
-                                         from the shared cache (default:
-                                         available_parallelism). --list-models prints
-                                         the catalog (build time, cached, gates,
-                                         lanes) and exits.
+                                         shards (default: available_parallelism) with
+                                         *sticky placement*: each model lands on
+                                         --replicas shards (default 1, consistent-hash
+                                         spread; pin keys with --placement, e.g.
+                                         gdf/ds16=0+2,blend/ds32=1) and each shard
+                                         builds only its own subset from the shared
+                                         cache. Batches route sticky-first and spill
+                                         to the least-loaded shard past
+                                         --spill-threshold queued batches (the
+                                         receiving shard lazily registers the model).
+                                         --list-models prints the catalog (build time,
+                                         cached, gates, lanes, shard set) and exits.
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
 
@@ -288,7 +296,7 @@ const DEFAULT_NATIVE_MODELS: [&str; 6] =
 /// Run the coordinator with a mixed workload over the chosen backend.
 fn serve_demo(args: &Args) -> Result<()> {
     use ppc::catalog::{App, ModelKey};
-    use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Quality, Tensor};
+    use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Placement, Quality, Tensor};
     let backend = args.get_or("backend", "native");
     let native = match backend {
         "native" => true,
@@ -320,6 +328,16 @@ fn serve_demo(args: &Args) -> Result<()> {
                 .map(|s| ModelKey::parse(s).expect("default catalog keys are valid"))
                 .collect(),
         };
+        // Sticky placement: each model lands on --replicas shards
+        // (consistent-hash spread, --placement pins individual keys),
+        // and each shard builds only its assigned subset.
+        let mut placement = Placement::spread(&keys, shards, args.usize_or("replicas", 1));
+        if let Some(spec) = args.get("placement") {
+            placement = placement.with_overrides(spec)?;
+        }
+        if let Some(t) = args.get("spill-threshold") {
+            placement = placement.with_spill_threshold(t.parse()?);
+        }
         let cache_dir: Option<String> = (!args.flag("no-cache"))
             .then(|| args.get_or("cache-dir", "artifacts/netlist-cache").to_string());
         // FRNN models carry weights: quick-train once if any requested,
@@ -332,64 +350,81 @@ fn serve_demo(args: &Args) -> Result<()> {
         } else {
             None
         };
-        // One registry build per shard; all builds share the BLIF cache,
-        // so only the first ever pays two-level synthesis.
-        let build = move |_shard: usize| -> Result<ppc::runtime::NativeExecutor> {
-            let mut exec = ppc::runtime::NativeExecutor::new();
-            if let Some(dir) = &cache_dir {
-                exec = exec.with_cache(dir)?;
+        // Each shard declares the whole catalog (so spill/failover
+        // traffic can lazily register any key from the shared cache)
+        // but eagerly builds only its assigned subset.
+        let build = {
+            let keys = keys.clone();
+            move |_shard: usize,
+                  assigned: &[ModelKey]|
+                  -> Result<ppc::runtime::NativeExecutor> {
+                let mut exec = ppc::runtime::NativeExecutor::new();
+                if let Some(dir) = &cache_dir {
+                    exec = exec.with_cache(dir)?;
+                }
+                for key in &keys {
+                    exec = match key.app {
+                        App::Frnn => exec.declare_frnn(
+                            key.config,
+                            quant.clone().expect("frnn weights were trained above"),
+                        )?,
+                        _ => exec.declare(*key)?,
+                    };
+                }
+                exec.with_keys(assigned)
             }
-            for key in &keys {
-                exec = match key.app {
-                    App::Frnn => exec.register_frnn(
-                        key.config,
-                        quant.clone().expect("frnn weights were trained above"),
-                    )?,
-                    _ => exec.register(*key)?,
-                };
-            }
-            Ok(exec)
         };
-        println!("building the native catalog (shard 0)…");
-        let exec0 = build(0)?;
-        println!(
-            "{:<16} {:>11} {:>8} {:>9} {:>6}",
-            "model", "build(ms)", "cached", "gates", "lanes"
-        );
-        for info in exec0.model_infos() {
-            println!(
-                "{:<16} {:>11.1} {:>8} {:>9} {:>6}",
-                info.key.to_string(),
-                info.build_time.as_secs_f64() * 1e3,
-                if info.cached { "yes" } else { "no" },
-                info.gates,
-                info.lanes
-            );
-        }
-        if let Some(cache) = exec0.cache() {
-            println!(
-                "netlist cache: {} hits, {} misses -> {}",
-                cache.hits(),
-                cache.misses(),
-                cache.dir().display()
-            );
-        }
         if args.flag("list-models") {
+            // build the full catalog once so every row has real build
+            // numbers, then show each model's sticky shard set
+            println!("building the native catalog…");
+            let exec = build(0, &keys)?;
+            println!(
+                "{:<16} {:>11} {:>8} {:>9} {:>6}  {:<8}",
+                "model", "build(ms)", "cached", "gates", "lanes", "shards"
+            );
+            for info in exec.model_infos() {
+                println!(
+                    "{:<16} {:>11.1} {:>8} {:>9} {:>6}  {:<8}",
+                    info.key.to_string(),
+                    info.build_time.as_secs_f64() * 1e3,
+                    if info.cached { "yes" } else { "no" },
+                    info.gates,
+                    info.lanes,
+                    placement
+                        .shards_of(info.key)
+                        .map(Placement::render_shards)
+                        .unwrap_or_else(|| "-".into())
+                );
+            }
+            if let Some(cache) = exec.cache() {
+                println!(
+                    "netlist cache: {} hits, {} misses -> {}",
+                    cache.hits(),
+                    cache.misses(),
+                    cache.dir().display()
+                );
+            }
             return Ok(());
         }
-        registered = exec0.registered_keys();
-        println!("spinning up {shards} engine shard(s)…");
-        let cfg = CoordinatorConfig { shards, ..CoordinatorConfig::default() };
-        // shard 0 reuses the registry built above; later shards build
-        // their own from the now-warm cache on their own threads
-        let first = std::sync::Mutex::new(Some(exec0));
-        Coordinator::with_native_sharded(cfg, move |shard| {
-            if let Some(e) = first.lock().unwrap().take() {
-                return Ok(e);
-            }
-            build(shard)
-        })
-        .map_err(|e| anyhow!("{e:#}"))?
+        registered = keys.clone();
+        println!(
+            "spinning up {shards} engine shard(s), sticky placement: {placement}\n\
+             (spill past {} queued batches)",
+            placement.spill_threshold()
+        );
+        let coord =
+            Coordinator::with_native_placed(CoordinatorConfig::default(), placement, build)
+                .map_err(|e| anyhow!("{e:#}"))?;
+        // per-shard residency after the subset builds
+        for (shard, resident) in coord.resident_keys()?.iter().enumerate() {
+            println!(
+                "shard{shard}: {} resident model(s) [{}]",
+                resident.len(),
+                ppc::catalog::join(resident.iter())
+            );
+        }
+        coord
     } else {
         if args.flag("list-models") {
             bail!("--list-models needs the native backend (artifact catalogs live in the manifest)");

@@ -1,10 +1,10 @@
 //! Native execution backend: serve the synthesized PPC netlists
 //! directly — no Python, no XLA, no artifacts.
 //!
-//! A [`NativeExecutor`] is the typed model registry: one
-//! `BTreeMap<ModelKey, Box<dyn Datapath>>` holding every registered
-//! application datapath ([`GdfHardware`], [`BlendHardware`],
-//! [`FrnnHardware`]) behind the one [`Datapath`] trait. Requests and
+//! A [`NativeExecutor`] is the typed model registry: one keyed map of
+//! registered application datapaths ([`GdfHardware`],
+//! [`BlendHardware`], [`FrnnHardware`]) behind the one [`Datapath`]
+//! trait, plus a *recipe* per declared-but-unbuilt key. Requests and
 //! responses are shape-carrying [`Tensor`]s, so non-square images
 //! survive the trip, and every lookup, registration and error message
 //! goes through the same [`ModelKey`] catalog the router and the CLI
@@ -27,6 +27,18 @@
 //! `th48ds16`) synthesize in well under a second even uncached;
 //! full-range `conv` blocks take the longest and profit the most from
 //! the cache.
+//!
+//! Under sticky placement a shard no longer builds the whole catalog:
+//! [`NativeExecutor::declare`] / [`NativeExecutor::declare_frnn`]
+//! record a *recipe* (how to build a key) without building it, and
+//! [`NativeExecutor::with_keys`] eagerly constructs just the shard's
+//! assigned subset. Any other declared key is built **lazily on
+//! demand** the first time a request for it arrives — spill traffic or
+//! failover after another shard's build error. With a persistent cache
+//! attached (the default for `serve`) that failover costs a BLIF load,
+//! not a synthesis run; without one (`--no-cache`) the first spilled
+//! request for a key pays full synthesis on the shard thread.
+//! [`ModelInfo::lazy`] records which residents arrived that way.
 
 use crate::apps::blend::{BlendConfig, BlendHardware};
 use crate::apps::frnn::hw::FrnnHardware;
@@ -40,6 +52,7 @@ use crate::ppc::units::{FreshSynth, NetlistSource};
 use crate::runtime::cache::NetlistCache;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Per-model registration record: what the catalog knows about one
@@ -54,6 +67,9 @@ pub struct ModelInfo {
     /// True when every netlist came from the persistent cache — i.e.
     /// registration performed zero two-level synthesis.
     pub cached: bool,
+    /// True when the model was registered lazily, on the first request
+    /// for an unplaced key, instead of at construction.
+    pub lazy: bool,
     /// Concurrent requests one bit-sliced netlist pass can carry
     /// ([`catalog::LANES`] word lanes).
     pub lanes: usize,
@@ -64,12 +80,18 @@ struct Model {
     info: ModelInfo,
 }
 
+/// How to build one declared model from a netlist source — stored so
+/// unbuilt keys can register lazily when a request arrives for them.
+type Recipe = Box<dyn Fn(&dyn NetlistSource, Objective) -> Box<dyn Datapath> + Send + Sync>;
+
 /// The native model registry: the typed catalog of servable PPC
-/// datapaths.
+/// datapaths. `recipes` is everything the executor *can* serve;
+/// `models` is what is built (resident) right now.
 pub struct NativeExecutor {
     objective: Objective,
     cache: Option<NetlistCache>,
-    models: BTreeMap<ModelKey, Model>,
+    recipes: BTreeMap<ModelKey, Recipe>,
+    models: Mutex<BTreeMap<ModelKey, Arc<Model>>>,
 }
 
 impl Default for NativeExecutor {
@@ -81,7 +103,12 @@ impl Default for NativeExecutor {
 impl NativeExecutor {
     /// An empty registry (area-optimized mapping, no persistent cache).
     pub fn new() -> NativeExecutor {
-        NativeExecutor { objective: Objective::Area, cache: None, models: BTreeMap::new() }
+        NativeExecutor {
+            objective: Objective::Area,
+            cache: None,
+            recipes: BTreeMap::new(),
+            models: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// Change the technology-mapping objective for *subsequently*
@@ -106,14 +133,15 @@ impl NativeExecutor {
         self.cache.as_ref()
     }
 
-    /// Synthesize (or cache-load) and register the datapath for `key`.
-    /// FRNN models carry weights, so they go through
-    /// [`NativeExecutor::register_frnn`] instead.
-    pub fn register(self, key: ModelKey) -> Result<NativeExecutor> {
+    /// Record how to build `key` without building it. Declared keys are
+    /// servable: a request for one that is not resident registers it
+    /// lazily. FRNN models carry weights, so they go through
+    /// [`NativeExecutor::declare_frnn`] instead.
+    pub fn declare(mut self, key: ModelKey) -> Result<NativeExecutor> {
         let key = ModelKey::new(key.app, key.config)?; // revalidate
         let config = key.config;
-        match key.app {
-            App::Gdf => self.insert(key, move |src, obj| {
+        let recipe: Recipe = match key.app {
+            App::Gdf => Box::new(move |src, obj| {
                 Box::new(GdfHardware::synthesize_via(
                     &ValueSet::full(8),
                     &config.chain(),
@@ -121,80 +149,150 @@ impl NativeExecutor {
                     src,
                 )) as Box<dyn Datapath>
             }),
-            App::Blend => self.insert(key, move |src, obj| {
+            App::Blend => Box::new(move |src, obj| {
                 // natural coefficient sparsity: alpha stays in [0, 127],
                 // the Job::Blend contract
                 let cfg = BlendConfig::of(true, config.chain());
                 Box::new(BlendHardware::synthesize_via(&cfg, obj, src)) as Box<dyn Datapath>
             }),
             App::Frnn => {
-                bail!("{key}: the FRNN datapath carries weights — register it with register_frnn")
+                bail!("{key}: the FRNN datapath carries weights — declare it with declare_frnn")
             }
+        };
+        self.recipes.insert(key, recipe);
+        Ok(self)
+    }
+
+    /// Record how to build the FRNN forward path under `frnn/{config}`
+    /// with the given quantized weights, without building it.
+    pub fn declare_frnn(mut self, config: PpcConfig, net: QuantFrnn) -> Result<NativeExecutor> {
+        let key = ModelKey::new(App::Frnn, config)?;
+        let recipe: Recipe = Box::new(move |src, obj| {
+            Box::new(FrnnHardware::synthesize_via(
+                net.clone(),
+                &config.chain(),
+                &config.weight_chain(),
+                obj,
+                src,
+            )) as Box<dyn Datapath>
+        });
+        self.recipes.insert(key, recipe);
+        Ok(self)
+    }
+
+    /// Eagerly build every key in `keys` (each must be declared) — the
+    /// subset-construction entry point for a placed shard. Keys already
+    /// resident are skipped.
+    pub fn with_keys(self, keys: &[ModelKey]) -> Result<NativeExecutor> {
+        for &key in keys {
+            if self.models.lock().unwrap().contains_key(&key) {
+                continue;
+            }
+            let recipe = self.recipes.get(&key).ok_or_else(|| self.unknown(key))?;
+            let model = Arc::new(build_model(
+                key,
+                recipe,
+                self.objective,
+                self.cache.as_ref(),
+                false,
+            ));
+            self.models.lock().unwrap().insert(key, model);
         }
+        Ok(self)
+    }
+
+    /// Synthesize (or cache-load) and register the datapath for `key`
+    /// immediately (declare + build). FRNN models carry weights, so
+    /// they go through [`NativeExecutor::register_frnn`] instead.
+    pub fn register(self, key: ModelKey) -> Result<NativeExecutor> {
+        self.declare(key)?.with_keys(&[key])
     }
 
     /// Synthesize (or cache-load) and register the FRNN forward path
     /// under `frnn/{config}` with the given quantized weights.
     pub fn register_frnn(self, config: PpcConfig, net: QuantFrnn) -> Result<NativeExecutor> {
         let key = ModelKey::new(App::Frnn, config)?;
-        self.insert(key, move |src, obj| {
-            Box::new(FrnnHardware::synthesize_via(
-                net,
-                &config.chain(),
-                &config.weight_chain(),
-                obj,
-                src,
-            )) as Box<dyn Datapath>
-        })
+        self.declare_frnn(config, net)?.with_keys(&[key])
     }
 
-    fn insert<F>(mut self, key: ModelKey, build: F) -> Result<NativeExecutor>
-    where
-        F: FnOnce(&dyn NetlistSource, Objective) -> Box<dyn Datapath>,
-    {
-        let t0 = Instant::now();
-        let objective = self.objective;
-        let (datapath, cached) = match &self.cache {
-            Some(cache) => {
-                let scope = cache.scope(key, objective);
-                let dp = build(&scope, objective);
-                let cached = scope.misses() == 0 && scope.hits() > 0;
-                (dp, cached)
-            }
-            None => (build(&FreshSynth, objective), false),
-        };
-        let info = ModelInfo {
-            key,
-            gates: datapath.num_gates(),
-            build_time: t0.elapsed(),
-            cached,
-            lanes: catalog::LANES,
-        };
-        self.models.insert(key, Model { datapath, info });
-        Ok(self)
-    }
-
-    /// Registered keys, in catalog order.
+    /// Resident (built) keys, in catalog order.
     pub fn registered_keys(&self) -> Vec<ModelKey> {
-        self.models.keys().copied().collect()
+        self.models.lock().unwrap().keys().copied().collect()
     }
 
-    /// Registration records for every model (the `--list-models` rows).
-    pub fn model_infos(&self) -> Vec<&ModelInfo> {
-        self.models.values().map(|m| &m.info).collect()
+    /// Every servable key — resident or lazily buildable — in catalog
+    /// order.
+    pub fn declared_keys(&self) -> Vec<ModelKey> {
+        self.recipes.keys().copied().collect()
+    }
+
+    /// Registration records for every resident model (the
+    /// `serve --list-models` rows).
+    pub fn model_infos(&self) -> Vec<ModelInfo> {
+        self.models.lock().unwrap().values().map(|m| m.info.clone()).collect()
     }
 
     fn unknown(&self, key: ModelKey) -> anyhow::Error {
         anyhow!(
             "unknown model {key}; available models: [{}]",
-            catalog::join(self.models.keys())
+            catalog::join(self.recipes.keys())
         )
     }
+
+    /// Fetch `key`'s resident datapath, lazily registering it from its
+    /// recipe (shared cache first) when it is declared but not built —
+    /// the failover path behind sticky-placement spills.
+    fn model(&self, key: ModelKey) -> Result<Arc<Model>> {
+        if let Some(m) = self.models.lock().unwrap().get(&key) {
+            return Ok(m.clone());
+        }
+        let recipe = self.recipes.get(&key).ok_or_else(|| self.unknown(key))?;
+        // build outside the lock: synthesis/cache-load can take a
+        // while, and an executor is driven by one shard thread anyway
+        let model = Arc::new(build_model(key, recipe, self.objective, self.cache.as_ref(), true));
+        eprintln!(
+            "lazy-registered {key} in {:.1} ms ({})",
+            model.info.build_time.as_secs_f64() * 1e3,
+            if model.info.cached { "from netlist cache" } else { "fresh synthesis" }
+        );
+        let mut models = self.models.lock().unwrap();
+        Ok(models.entry(key).or_insert(model).clone())
+    }
+}
+
+/// Build one model from its recipe, drawing netlists from the
+/// persistent cache when one is attached.
+fn build_model(
+    key: ModelKey,
+    recipe: &Recipe,
+    objective: Objective,
+    cache: Option<&NetlistCache>,
+    lazy: bool,
+) -> Model {
+    let t0 = Instant::now();
+    let (datapath, cached) = match cache {
+        Some(cache) => {
+            let scope = cache.scope(key, objective);
+            let dp = recipe(&scope, objective);
+            let cached = scope.misses() == 0 && scope.hits() > 0;
+            (dp, cached)
+        }
+        None => (recipe(&FreshSynth, objective), false),
+    };
+    let info = ModelInfo {
+        key,
+        gates: datapath.num_gates(),
+        build_time: t0.elapsed(),
+        cached,
+        lazy,
+        lanes: catalog::LANES,
+    };
+    Model { datapath, info }
 }
 
 impl Executor for NativeExecutor {
     fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let model = self.models.get(&key).ok_or_else(|| self.unknown(key))?;
+        let model = self.model(key)?;
         model.datapath.exec(inputs).map_err(|e| anyhow!("{key}: {e:#}"))
     }
 
@@ -202,11 +300,15 @@ impl Executor for NativeExecutor {
     /// [`Datapath::exec_batch`], which pools requests into the 64-way
     /// bit-sliced netlist passes.
     fn exec_batch(&self, key: ModelKey, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
-        let model = self.models.get(&key).ok_or_else(|| self.unknown(key))?;
+        let model = self.model(key)?;
         model.datapath.exec_batch(batch).map_err(|e| anyhow!("{key}: {e:#}"))
     }
 
     fn keys(&self) -> Vec<ModelKey> {
+        self.declared_keys()
+    }
+
+    fn resident_keys(&self) -> Vec<ModelKey> {
         self.registered_keys()
     }
 }
@@ -274,7 +376,84 @@ mod tests {
             .is_err());
         // frnn needs weights
         let e = NativeExecutor::new().register(mk("frnn/ds32")).unwrap_err();
-        assert!(format!("{e}").contains("register_frnn"), "{e}");
+        assert!(format!("{e}").contains("declare_frnn"), "{e}");
+    }
+
+    #[test]
+    fn with_keys_builds_only_the_assigned_subset() {
+        let ex = NativeExecutor::new()
+            .declare(mk("gdf/ds16"))
+            .unwrap()
+            .declare(mk("gdf/ds32"))
+            .unwrap()
+            .with_keys(&[mk("gdf/ds32")])
+            .unwrap();
+        assert_eq!(ex.declared_keys(), vec![mk("gdf/ds16"), mk("gdf/ds32")]);
+        assert_eq!(ex.registered_keys(), vec![mk("gdf/ds32")], "only the subset is resident");
+        assert_eq!(ex.keys(), ex.declared_keys(), "declared keys are servable");
+        // building an undeclared key is a structured error
+        let e = NativeExecutor::new().with_keys(&[mk("gdf/ds16")]).unwrap_err();
+        assert!(format!("{e}").contains("unknown model gdf/ds16"), "{e}");
+    }
+
+    #[test]
+    fn declared_but_unbuilt_keys_register_lazily_on_first_request() {
+        let ex = NativeExecutor::new()
+            .declare(mk("gdf/ds16"))
+            .unwrap()
+            .declare(mk("gdf/ds32"))
+            .unwrap()
+            .with_keys(&[mk("gdf/ds32")])
+            .unwrap();
+        let img = synthetic_photo(10, 10, 4);
+        // first request for the unbuilt key builds it on demand…
+        let out = ex.exec(mk("gdf/ds16"), &[img.to_tensor()]).unwrap();
+        assert_eq!(out[0], gdf::gdf_filter(&img, &PpcConfig::Ds16.chain()).to_tensor());
+        assert_eq!(
+            ex.registered_keys(),
+            vec![mk("gdf/ds16"), mk("gdf/ds32")],
+            "lazy registration makes the key resident"
+        );
+        let infos = ex.model_infos();
+        let ds16 = infos.iter().find(|i| i.key == mk("gdf/ds16")).unwrap();
+        assert!(ds16.lazy, "ds16 was built on demand");
+        assert!(!infos.iter().find(|i| i.key == mk("gdf/ds32")).unwrap().lazy);
+        // …and an undeclared key still fails with the declared catalog
+        let e = ex.exec(mk("blend/ds32"), &[img.to_tensor()]).unwrap_err();
+        assert!(
+            format!("{e}").contains("available models: [gdf/ds16, gdf/ds32]"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn lazy_registration_draws_from_the_shared_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("ppc_native_lazy_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // warm the cache with a plain registration…
+        NativeExecutor::new()
+            .with_cache(&dir)
+            .unwrap()
+            .register(mk("gdf/ds32"))
+            .unwrap();
+        // …then let a subset executor pick the key up lazily: the build
+        // must come from BLIF, not synthesis
+        let ex = NativeExecutor::new()
+            .with_cache(&dir)
+            .unwrap()
+            .declare(mk("gdf/ds32"))
+            .unwrap()
+            .with_keys(&[])
+            .unwrap();
+        assert!(ex.registered_keys().is_empty());
+        let img = synthetic_photo(8, 8, 2);
+        let out = ex.exec(mk("gdf/ds32"), &[img.to_tensor()]).unwrap();
+        assert_eq!(out[0], gdf::gdf_filter(&img, &PpcConfig::Ds32.chain()).to_tensor());
+        assert_eq!(ex.cache().unwrap().misses(), 0, "lazy failover must not synthesize");
+        let infos = ex.model_infos();
+        assert!(infos[0].lazy && infos[0].cached);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -339,6 +339,224 @@ fn sharded_native_coordinator_serves_from_shared_cache() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Acceptance for sticky placement: a 6-model catalog over 4 shards
+/// with one replica each. Every shard eagerly builds at most
+/// ceil(6/4) = 2 datapaths (asserted via per-shard residency), yet all
+/// six models answer bit-exactly through the coordinator — the catalog
+/// no longer multiplies by the shard count.
+#[test]
+fn placed_shards_build_subsets_and_serve_the_whole_catalog() {
+    use ppc::apps::frnn::dataset;
+    use ppc::coordinator::Placement;
+    use ppc::runtime::NativeExecutor;
+    let dir = std::env::temp_dir().join(format!("ppc_placed_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let keys = [
+        mk("gdf/ds16"),
+        mk("gdf/ds32"),
+        mk("blend/ds16"),
+        mk("blend/ds32"),
+        mk("frnn/th48ds16"),
+        mk("frnn/ds32"),
+    ];
+    let ds = dataset::generate(2, 0x9F1A);
+    let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
+    let q = net::quantize(&r.net);
+
+    let placement = Placement::spread(&keys, 4, 1);
+    let cfg = CoordinatorConfig {
+        queue_capacity: 64,
+        batch_size: 8,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(2),
+        shards: 4,
+    };
+    let cache = dir.clone();
+    let quant = q.clone();
+    let coord = Coordinator::with_native_placed(cfg, placement, move |_shard, assigned| {
+        let mut exec = NativeExecutor::new().with_cache(&cache)?;
+        for key in [
+            mk("gdf/ds16"),
+            mk("gdf/ds32"),
+            mk("blend/ds16"),
+            mk("blend/ds32"),
+        ] {
+            exec = exec.declare(key)?;
+        }
+        exec = exec
+            .declare_frnn(PpcConfig::Th48Ds16, quant.clone())?
+            .declare_frnn(PpcConfig::Ds32, quant.clone())?;
+        exec.with_keys(assigned)
+    })
+    .unwrap();
+
+    // every shard built at most 2 datapaths; the whole catalog is
+    // resident exactly once across the pool
+    let resident = coord.resident_keys().unwrap();
+    assert_eq!(resident.len(), 4);
+    for (shard, models) in resident.iter().enumerate() {
+        assert!(
+            models.len() <= 2,
+            "shard {shard} built {} datapaths (subset sharding must cap it at 2)",
+            models.len()
+        );
+    }
+    assert_eq!(resident.iter().map(|m| m.len()).sum::<usize>(), 6);
+    let mut all: Vec<_> = resident.into_iter().flatten().collect();
+    all.sort();
+    let mut want = keys.to_vec();
+    want.sort();
+    assert_eq!(all, want, "each model resident on exactly its sticky shard");
+    // the servable union is still the whole catalog
+    let mut served = coord.registered_keys().unwrap();
+    served.sort();
+    assert_eq!(served, want);
+
+    // …and every model answers bit-exactly through the coordinator
+    let mut rng = Rng::new(0x51C);
+    let img = Image {
+        width: 11,
+        height: 7,
+        pixels: (0..77).map(|_| rng.below(256) as u8).collect(),
+    };
+    let img2 = Image {
+        width: 11,
+        height: 7,
+        pixels: (0..77).map(|_| rng.below(256) as u8).collect(),
+    };
+    let face = ds.test[0].clone();
+    for quality in [Quality::Balanced, Quality::Economy] {
+        let (ci, cw) = match quality {
+            Quality::Balanced => (
+                Chain::of(Preproc::Th { x: 48, y: 48 }).then(Preproc::Ds(16)),
+                Chain::of(Preproc::Ds(16)),
+            ),
+            _ => (Chain::of(Preproc::Ds(32)), Chain::of(Preproc::Ds(32))),
+        };
+        let pixel_chain = match quality {
+            Quality::Balanced => Chain::of(Preproc::Ds(16)),
+            _ => Chain::of(Preproc::Ds(32)),
+        };
+
+        let t = coord
+            .submit_blocking(Job::Denoise { image: img.to_tensor() }, quality)
+            .unwrap();
+        assert_eq!(
+            t.wait().unwrap().outputs[0],
+            gdf::gdf_filter(&img, &pixel_chain).to_tensor(),
+            "gdf {quality:?} diverged"
+        );
+
+        let t = coord
+            .submit_blocking(
+                Job::Blend { p1: img.to_tensor(), p2: img2.to_tensor(), alpha: 48 },
+                quality,
+            )
+            .unwrap();
+        assert_eq!(
+            t.wait().unwrap().outputs[0],
+            blend::blend_images(&img, &img2, blend::Alpha(48), &pixel_chain, &pixel_chain)
+                .to_tensor(),
+            "blend {quality:?} diverged"
+        );
+
+        let pixels: Vec<i32> = face.pixels.iter().map(|&p| p as i32).collect();
+        let t = coord.submit_blocking(Job::Classify { pixels }, quality).unwrap();
+        let got: Vec<u8> = t
+            .wait_timeout(Duration::from_secs(60))
+            .unwrap()
+            .outputs[0]
+            .data
+            .iter()
+            .map(|&v| v as u8)
+            .collect();
+        let (_, want) = net::forward_fx(&q, &face, &ci, &cw);
+        assert_eq!(got, want.to_vec(), "frnn {quality:?} diverged");
+    }
+    assert_eq!(coord.metrics().errors(), 0);
+    assert_eq!(coord.metrics().spills(), 0, "an idle pool never spills");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A replica shard whose executor factory fails does not take its
+/// models down: the placed pool marks it dead, routes the key's
+/// batches to a live shard, and that shard lazily registers the
+/// datapath from the shared netlist cache — requests still answer
+/// bit-exactly.
+#[test]
+fn shard_build_failure_fails_over_via_lazy_registration() {
+    use ppc::coordinator::Placement;
+    use ppc::runtime::NativeExecutor;
+    let dir = std::env::temp_dir().join(format!("ppc_failover_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // warm the cache so the lazy failover build is a BLIF load
+    NativeExecutor::new()
+        .with_cache(&dir)
+        .unwrap()
+        .register(mk("gdf/ds16"))
+        .unwrap()
+        .register(mk("gdf/ds32"))
+        .unwrap();
+
+    let keys = [mk("gdf/ds16"), mk("gdf/ds32")];
+    let placement = Placement::spread(&keys, 2, 1)
+        .assign(mk("gdf/ds16"), &[0])
+        .unwrap()
+        .assign(mk("gdf/ds32"), &[1])
+        .unwrap();
+    let cfg = CoordinatorConfig {
+        queue_capacity: 32,
+        batch_size: 4,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(2),
+        shards: 2,
+    };
+    let cache = dir.clone();
+    let coord = Coordinator::with_native_placed(cfg, placement, move |shard, assigned| {
+        if shard == 1 {
+            anyhow::bail!("simulated shard build failure");
+        }
+        NativeExecutor::new()
+            .with_cache(&cache)?
+            .declare(mk("gdf/ds16"))?
+            .declare(mk("gdf/ds32"))?
+            .with_keys(assigned)
+    })
+    .unwrap();
+
+    // shard 1 (the gdf/ds32 owner) is dead; shard 0 starts with only
+    // its own subset resident
+    let resident = coord.resident_keys().unwrap();
+    assert_eq!(resident[0], vec![mk("gdf/ds16")]);
+    assert!(resident[1].is_empty(), "dead shard holds nothing");
+
+    // a request for the dead shard's model still answers, bit-exactly,
+    // via lazy registration on the live shard
+    let mut rng = Rng::new(0xFA11);
+    let img = Image {
+        width: 9,
+        height: 6,
+        pixels: (0..54).map(|_| rng.below(256) as u8).collect(),
+    };
+    let t = coord
+        .submit_blocking(Job::Denoise { image: img.to_tensor() }, Quality::Economy)
+        .unwrap();
+    assert_eq!(
+        t.wait().unwrap().outputs[0],
+        gdf::gdf_filter(&img, &PpcConfig::Ds32.chain()).to_tensor(),
+        "failover serving diverged"
+    );
+    let resident = coord.resident_keys().unwrap();
+    assert!(
+        resident[0].contains(&mk("gdf/ds32")),
+        "the live shard lazily registered the dead shard's model"
+    );
+    assert!(coord.metrics().spills() >= 1, "failover counts as off-replica traffic");
+    assert_eq!(coord.metrics().errors(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn gdf_artifact_matches_bit_accurate_rust() {
     let Some(dir) = artifacts_dir() else { return };
