@@ -4,7 +4,9 @@
 //! EXPERIMENTS.md §Perf).
 
 use ppc::catalog::Tensor;
-use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, MockExecutor, Quality};
+use ppc::coordinator::{
+    Coordinator, CoordinatorConfig, Job, MockExecutor, OverloadPolicy, Quality, SubmitError,
+};
 use ppc::util::bench::{black_box, Bencher};
 use ppc::util::prng::Rng;
 use std::path::PathBuf;
@@ -17,6 +19,7 @@ fn mock_coordinator(batch_wait_ms: u64) -> Coordinator {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(batch_wait_ms),
         shards: 2,
+        ..CoordinatorConfig::default()
     };
     Coordinator::start(cfg, |_shard| Ok(MockExecutor::full_catalog())).unwrap()
 }
@@ -56,6 +59,51 @@ fn main() {
         }
     });
     println!("\nmock metrics:\n{}", coord.metrics().report());
+
+    // admission gate under overload: a reject-policy coordinator with a
+    // tiny cap and a slow shard — measures the non-blocking shed fast
+    // path and reports the observed shed rate + gate wait
+    let overload_cfg = CoordinatorConfig {
+        queue_capacity: 8,
+        batch_size: 8,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Reject,
+        fair_share: 1.0,
+    };
+    let gated = Coordinator::start(overload_cfg, |_shard| {
+        let mut m = MockExecutor::full_catalog();
+        m.delay = Duration::from_millis(1);
+        Ok(m)
+    })
+    .unwrap();
+    b.run("admission: 32-submit burst vs cap 8 (reject)", || {
+        let mut tickets = Vec::new();
+        for i in 0..32i32 {
+            match gated.submit(
+                Job::Denoise { image: Tensor::vector(vec![i * 2]) },
+                Quality::Economy,
+            ) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Busy) => {}
+                Err(e) => panic!("unexpected submit error {e:?}"),
+            }
+        }
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    let m = gated.metrics();
+    let attempts = m.submitted() + m.shed();
+    println!(
+        "\nadmission: peak_in_flight={} shed={} ({:.1}% of {} attempts) wait_p50={:.3}ms",
+        m.peak_in_flight(),
+        m.shed(),
+        100.0 * m.shed() as f64 / attempts.max(1) as f64,
+        attempts,
+        m.admission_wait_summary().p50 * 1e3
+    );
 
     // real artifacts, when built (needs the pjrt feature — the default
     // build's engine factory fails with PJRT_DISABLED, so skip instead

@@ -14,7 +14,12 @@
 //!    cache-win number on the perf record, and
 //! 5. sticky-placed serving: a two-shard engine pool where each shard
 //!    builds only its assigned model subset, with the placement spill
-//!    rate and per-shard resident-model counts on the JSON record.
+//!    rate and per-shard resident-model counts on the JSON record, and
+//! 6. the admission front door under overload: a saturating
+//!    balanced-tier workload against a tiny capacity with the
+//!    `degrade` policy — `admission_wait_p50_us` and
+//!    `overload_shed_rate` join the JSON record so the perf trajectory
+//!    tracks the gate.
 //!
 //! Run: `cargo bench --bench native_exec` (PPC_BENCH_QUICK=1 shrinks
 //! budgets). Writes a machine-readable `BENCH_native_exec.json`
@@ -26,8 +31,8 @@ use ppc::apps::gdf::GdfHardware;
 use ppc::apps::image::{synthetic_photo, Image};
 use ppc::catalog::{Datapath, ModelKey, PpcConfig, Tensor};
 use ppc::coordinator::{
-    BatchItem, BatchJob, Coordinator, CoordinatorConfig, EnginePool, Job, Metrics, Placement,
-    Quality,
+    BatchItem, BatchJob, Coordinator, CoordinatorConfig, EnginePool, Job, Metrics,
+    OverloadPolicy, Placement, Quality, SubmitError,
 };
 use ppc::logic::map::Objective;
 use ppc::ppc::error;
@@ -37,7 +42,7 @@ use ppc::runtime::NativeExecutor;
 use ppc::util::bench::{self, black_box, Bencher};
 use ppc::util::prng::Rng;
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn main() {
     let b = Bencher::from_env();
@@ -149,6 +154,7 @@ fn main() {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(1),
         shards: 1,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::with_native(cfg, exec).unwrap();
 
@@ -242,11 +248,7 @@ fn main() {
                 .map(|im| {
                     let (reply, rx) = mpsc::channel();
                     rxs.push(rx);
-                    BatchItem {
-                        inputs: vec![im.to_tensor()],
-                        reply,
-                        enqueued: Instant::now(),
-                    }
+                    BatchItem::new(vec![im.to_tensor()], reply)
                 })
                 .collect();
             pool.submit(BatchJob { key, items }).unwrap();
@@ -264,6 +266,65 @@ fn main() {
     drop(pool);
     let _ = std::fs::remove_dir_all(&place_dir);
 
+    // -- 6. admission gate under overload: saturate a tiny-cap
+    // degrade-policy coordinator with balanced-tier traffic; the gate
+    // wait and the shed rate land on the JSON perf record
+    println!("\nsaturating the admission gate (cap 8, degrade policy, gdf ds16+ds32)…");
+    let adm_cfg = CoordinatorConfig {
+        queue_capacity: 8,
+        batch_size: 8,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Degrade,
+        fair_share: 0.5, // gdf/ds16 holds at most half the pool
+    };
+    let adm_exec = NativeExecutor::new()
+        .register(ModelKey::parse("gdf/ds16").unwrap())
+        .unwrap()
+        .register(gdf_key)
+        .unwrap();
+    let adm_coord = Coordinator::with_native(adm_cfg, adm_exec).unwrap();
+    let adm_imgs: Vec<Tensor> = imgs.iter().map(|im| im.to_tensor()).collect();
+    let overload_run = b.run("admission: 64 balanced req vs cap 8 (degrade)", || {
+        let mut tickets = Vec::new();
+        for (i, img) in adm_imgs.iter().enumerate() {
+            // half blocking (degrade candidates), half non-blocking
+            // (shed candidates) — a saturating front-door mix
+            let submitted = if i % 2 == 0 {
+                adm_coord.submit_blocking(Job::Denoise { image: img.clone() }, Quality::Balanced)
+            } else {
+                adm_coord.submit(Job::Denoise { image: img.clone() }, Quality::Balanced)
+            };
+            match submitted {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Busy) | Err(SubmitError::Shed) => {}
+                Err(e) => panic!("unexpected submit error {e:?}"),
+            }
+        }
+        for t in tickets {
+            black_box(t.wait().unwrap());
+        }
+    });
+    let am = adm_coord.metrics();
+    let admission_wait_p50_us = am.admission_wait_summary().p50 * 1e6;
+    let adm_attempts = am.submitted() + am.shed();
+    let overload_shed_rate = if adm_attempts == 0 {
+        0.0
+    } else {
+        am.shed() as f64 / adm_attempts as f64
+    };
+    println!(
+        "admission wait p50: {admission_wait_p50_us:.1}µs; shed rate {:.1}% \
+         ({} shed / {} attempts, {} degraded, peak_in_flight {})",
+        overload_shed_rate * 100.0,
+        am.shed(),
+        adm_attempts,
+        am.degrades(),
+        am.peak_in_flight()
+    );
+    drop(adm_coord);
+
     // machine-readable summary so the serving-throughput (and now
     // placement) trajectory is trackable across PRs
     let resident_metrics: Vec<(String, f64)> = resident_counts
@@ -276,6 +337,8 @@ fn main() {
         ("lane_batched_serving_speedup_64req_gdf", serving_speedup),
         ("warm_cache_speedup", cache_speedup),
         ("placement_spill_rate", placement_spill_rate),
+        ("admission_wait_p50_us", admission_wait_p50_us),
+        ("overload_shed_rate", overload_shed_rate),
     ];
     for (name, v) in &resident_metrics {
         metrics.push((name.as_str(), *v));
@@ -292,6 +355,7 @@ fn main() {
             &cold,
             &warm,
             &placed,
+            &overload_run,
         ],
         &metrics,
     );

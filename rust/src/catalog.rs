@@ -153,6 +153,36 @@ pub enum Quality {
     Economy,
 }
 
+impl Quality {
+    /// Every tier, best-first (the degrade order).
+    pub const ALL: [Quality; 3] = [Quality::Precise, Quality::Balanced, Quality::Economy];
+
+    /// Canonical lower-case name (the wire/CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Quality::Precise => "precise",
+            Quality::Balanced => "balanced",
+            Quality::Economy => "economy",
+        }
+    }
+
+    /// The next-lower tier — what an overloaded `degrade` admission
+    /// policy falls back to. `Economy` has nowhere lower to go.
+    pub fn lower(self) -> Option<Quality> {
+        match self {
+            Quality::Precise => Some(Quality::Balanced),
+            Quality::Balanced => Some(Quality::Economy),
+            Quality::Economy => None,
+        }
+    }
+}
+
+impl fmt::Display for Quality {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// The typed model key: which application datapath, synthesized for
 /// which preprocessing config. Displays as the canonical
 /// `"{app}/{config}"` string, and that string parses back.
@@ -368,6 +398,20 @@ mod tests {
                 assert!(ModelKey::catalog().contains(&key), "{key} not in catalog");
             }
         }
+    }
+
+    #[test]
+    fn quality_tiers_degrade_downward_and_bottom_out() {
+        assert_eq!(Quality::Precise.lower(), Some(Quality::Balanced));
+        assert_eq!(Quality::Balanced.lower(), Some(Quality::Economy));
+        assert_eq!(Quality::Economy.lower(), None);
+        // the declared order is exactly the lower() walk from Precise
+        let mut walk = vec![Quality::Precise];
+        while let Some(q) = walk.last().unwrap().lower() {
+            walk.push(q);
+        }
+        assert_eq!(walk, Quality::ALL.to_vec());
+        assert_eq!(Quality::Balanced.to_string(), "balanced");
     }
 
     #[test]

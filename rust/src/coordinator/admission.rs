@@ -1,0 +1,531 @@
+//! The admission gate — the coordinator's one front door.
+//!
+//! Every submit path ([`crate::coordinator::Coordinator::submit`],
+//! `submit_blocking`, `submit_all`, and the deadline variants) acquires
+//! a [`Permit`] here before anything is queued, so no path can push the
+//! system past its in-flight cap (the old `submit_blocking` bypass is
+//! gone). A permit is released when its request resolves — answered,
+//! errored, or deadline-expired — because the permit rides inside the
+//! work item and its `Drop` does the bookkeeping; there is no code path
+//! that can leak capacity.
+//!
+//! Two limits apply to each admission:
+//!
+//! - **total cap**: at most `cap` permits exist at once (the
+//!   `queue_capacity` backpressure boundary), and
+//! - **per-key fair share**: one [`ModelKey`] holds at most
+//!   `ceil(cap · fair_share)` permits, so a single hot model cannot
+//!   starve the rest of the catalog out of the capacity pool.
+//!
+//! What happens when a request cannot be admitted is the
+//! [`OverloadPolicy`] — the serving-time embodiment of the paper's
+//! quality/cost trade: under load, *degrading precision* is often the
+//! right answer, not rejecting work (cf. dynamic precision scaling and
+//! the QoS techniques in the approximate-computing literature).
+//!
+//! ```text
+//!   admit(app, quality, deadline)
+//!     │ deadline already passed? ──► Expired (never touches a queue)
+//!     │ headroom at the requested tier? ──► admitted
+//!     │ policy == degrade: next-lower *registered* tier with
+//!     │   headroom? ──► admitted (degraded; response says so)
+//!     │ policy == wait (blocking callers): sleep until a permit frees
+//!     │   or the deadline passes ──► admitted later / Expired
+//!     └ otherwise ──► Shed
+//! ```
+
+use super::metrics::{ExpiredAt, Metrics};
+use crate::catalog::{App, ModelKey, Quality};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// What the admission gate does with a request it has no capacity for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Shed immediately (classic load shedding).
+    Reject,
+    /// Blocking submitters wait for capacity, bounded by the request
+    /// deadline (non-blocking submitters still shed).
+    #[default]
+    Wait,
+    /// Re-admit at the next-lower *registered* [`Quality`] tier for the
+    /// request's [`App`] — trade precision for admission, per the
+    /// paper's quality knob. Sheds when every tier is out of headroom
+    /// or no lower tier is registered.
+    Degrade,
+}
+
+impl OverloadPolicy {
+    /// Canonical lower-case name (the CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadPolicy::Reject => "reject",
+            OverloadPolicy::Wait => "wait",
+            OverloadPolicy::Degrade => "degrade",
+        }
+    }
+
+    /// Parse the canonical name.
+    pub fn parse(s: &str) -> Result<OverloadPolicy> {
+        match s {
+            "reject" => Ok(OverloadPolicy::Reject),
+            "wait" => Ok(OverloadPolicy::Wait),
+            "degrade" => Ok(OverloadPolicy::Degrade),
+            other => bail!("unknown overload policy {other:?} (want reject|wait|degrade)"),
+        }
+    }
+}
+
+impl fmt::Display for OverloadPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed terminal outcome of an unserved request. Travels inside the
+/// `anyhow::Error` a ticket resolves with — downcast to tell overload
+/// shedding and deadline expiry apart from real execution errors:
+///
+/// ```
+/// use ppc::coordinator::Rejection;
+/// let err = anyhow::Error::new(Rejection::DeadlineExpired);
+/// assert_eq!(err.downcast_ref::<Rejection>(), Some(&Rejection::DeadlineExpired));
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejection {
+    /// Shed by the admission gate: over capacity under the active
+    /// overload policy.
+    Shed,
+    /// The request's deadline passed before it executed.
+    DeadlineExpired,
+}
+
+impl fmt::Display for Rejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejection::Shed => f.write_str("request shed: coordinator over capacity"),
+            Rejection::DeadlineExpired => {
+                f.write_str("request deadline expired before execution")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+/// Why an admission attempt failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// No capacity under the active overload policy.
+    Shed,
+    /// The request deadline passed (on arrival, or while waiting for
+    /// capacity).
+    Expired,
+}
+
+/// A successful admission: the (possibly degraded) route plus the
+/// capacity permit that must ride with the request.
+#[derive(Debug)]
+pub struct Admitted {
+    /// The admitted catalog key.
+    pub key: ModelKey,
+    /// The admitted quality tier (lower than requested when degraded).
+    pub quality: Quality,
+    /// True when the overload policy degraded the request below its
+    /// requested tier.
+    pub degraded: bool,
+    /// One unit of in-flight capacity; released when dropped.
+    pub permit: Permit,
+}
+
+/// One unit of in-flight capacity, bound to the admitted [`ModelKey`].
+/// Dropping it — wherever the request ends up resolving — releases the
+/// capacity and wakes admission waiters.
+pub struct Permit {
+    gate: Arc<Admission>,
+    key: ModelKey,
+}
+
+impl Permit {
+    /// The key this permit holds capacity under.
+    pub fn key(&self) -> ModelKey {
+        self.key
+    }
+}
+
+impl fmt::Debug for Permit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Permit").field("key", &self.key).finish()
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.gate.release(self.key);
+    }
+}
+
+#[derive(Default)]
+struct State {
+    total: u64,
+    per_key: BTreeMap<ModelKey, u64>,
+}
+
+/// The shared admission gate. See the module docs for the decision
+/// tree; [`Admission::admit`] is the only way in.
+pub struct Admission {
+    cap: u64,
+    key_cap: u64,
+    policy: OverloadPolicy,
+    /// Keys a degrade may fall back to (the servable catalog at
+    /// startup). The *requested* tier is always admissible — unknown
+    /// keys surface as structured engine errors, not silent admission
+    /// failures.
+    registered: Vec<ModelKey>,
+    metrics: Arc<Metrics>,
+    state: Mutex<State>,
+    freed: Condvar,
+}
+
+impl Admission {
+    /// `cap` is the in-flight ceiling (the coordinator's
+    /// `queue_capacity`); `fair_share` in (0, 1] caps any single key at
+    /// `ceil(cap · fair_share)` permits.
+    ///
+    /// Under [`OverloadPolicy::Degrade`] a full-pool fair share is
+    /// provably inert (whenever the requested tier is out of headroom,
+    /// so is every lower tier), so the gate normalizes it to half the
+    /// pool — the lower tiers must keep headroom for degrading into to
+    /// mean anything. A stricter explicit share is honored as-is.
+    pub fn new(
+        cap: usize,
+        policy: OverloadPolicy,
+        fair_share: f64,
+        registered: Vec<ModelKey>,
+        metrics: Arc<Metrics>,
+    ) -> Admission {
+        let cap = cap.max(1) as u64;
+        let share = fair_share.clamp(0.0, 1.0);
+        let mut key_cap = (((cap as f64) * share).ceil() as u64).clamp(1, cap);
+        // only the *unset/full* share is normalized — an explicit
+        // stricter share (even one whose ceiling reaches the cap, like
+        // 0.95 of 8) is the operator's call and honored as-is
+        if policy == OverloadPolicy::Degrade && share >= 1.0 && cap > 1 {
+            key_cap = cap.div_ceil(2);
+        }
+        Admission {
+            cap,
+            key_cap,
+            policy,
+            registered,
+            metrics,
+            state: Mutex::new(State::default()),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// The total in-flight cap.
+    pub fn cap(&self) -> u64 {
+        self.cap
+    }
+
+    /// The per-key fair-share cap.
+    pub fn key_cap(&self) -> u64 {
+        self.key_cap
+    }
+
+    /// The configured overload policy.
+    pub fn policy(&self) -> OverloadPolicy {
+        self.policy
+    }
+
+    /// Permits currently held.
+    pub fn in_flight(&self) -> u64 {
+        self.state.lock().unwrap().total
+    }
+
+    fn headroom(&self, st: &State, key: ModelKey) -> bool {
+        st.total < self.cap && st.per_key.get(&key).copied().unwrap_or(0) < self.key_cap
+    }
+
+    /// The admissible `(key, quality)` right now: the requested tier
+    /// when it has headroom; under [`OverloadPolicy::Degrade`], the
+    /// first lower *registered* tier with headroom.
+    fn pick(&self, st: &State, app: App, quality: Quality) -> Option<(ModelKey, Quality)> {
+        let mut q = quality;
+        let mut requested = true;
+        loop {
+            let key = ModelKey::route(app, q);
+            if (requested || self.registered.contains(&key)) && self.headroom(st, key) {
+                return Some((key, q));
+            }
+            match (self.policy, q.lower()) {
+                (OverloadPolicy::Degrade, Some(lower)) => {
+                    q = lower;
+                    requested = false;
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    /// Admit one request, or decide its overload fate. `block = false`
+    /// is the non-blocking `submit` path: it never sleeps, shedding
+    /// whatever the wait policy would have waited for. A `deadline`
+    /// bounds the wait — and an already-expired deadline is refused
+    /// here, before the request touches any queue.
+    pub fn admit(
+        gate: &Arc<Admission>,
+        app: App,
+        quality: Quality,
+        deadline: Option<Instant>,
+        block: bool,
+    ) -> Result<Admitted, AdmitError> {
+        let requested_key = ModelKey::route(app, quality);
+        if deadline.map_or(false, |d| Instant::now() >= d) {
+            gate.metrics.record_expired(requested_key, ExpiredAt::Admission);
+            return Err(AdmitError::Expired);
+        }
+        let t0 = Instant::now();
+        let mut st = gate.state.lock().unwrap();
+        loop {
+            if let Some((key, q)) = gate.pick(&st, app, quality) {
+                st.total += 1;
+                *st.per_key.entry(key).or_insert(0) += 1;
+                let depth = st.total;
+                drop(st);
+                gate.metrics.record_in_flight(depth);
+                gate.metrics.record_admission_wait(t0.elapsed());
+                let degraded = q != quality;
+                if degraded {
+                    gate.metrics.record_degrade(requested_key, key);
+                }
+                return Ok(Admitted {
+                    key,
+                    quality: q,
+                    degraded,
+                    permit: Permit { gate: gate.clone(), key },
+                });
+            }
+            if !block || gate.policy != OverloadPolicy::Wait {
+                drop(st);
+                gate.metrics.record_shed(requested_key);
+                return Err(AdmitError::Shed);
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        drop(st);
+                        gate.metrics.record_expired(requested_key, ExpiredAt::Admission);
+                        return Err(AdmitError::Expired);
+                    }
+                    let (guard, _) = gate.freed.wait_timeout(st, d - now).unwrap();
+                    st = guard;
+                }
+                None => st = gate.freed.wait(st).unwrap(),
+            }
+        }
+    }
+
+    fn release(&self, key: ModelKey) {
+        let mut st = self.state.lock().unwrap();
+        st.total = st.total.saturating_sub(1);
+        if let Some(c) = st.per_key.get_mut(&key) {
+            *c = c.saturating_sub(1);
+            if *c == 0 {
+                st.per_key.remove(&key);
+            }
+        }
+        drop(st);
+        self.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn mk(s: &str) -> ModelKey {
+        ModelKey::parse(s).unwrap()
+    }
+
+    fn gate(
+        cap: usize,
+        policy: OverloadPolicy,
+        fair_share: f64,
+    ) -> (Arc<Metrics>, Arc<Admission>) {
+        let metrics = Arc::new(Metrics::new());
+        let g = Arc::new(Admission::new(
+            cap,
+            policy,
+            fair_share,
+            ModelKey::catalog(),
+            metrics.clone(),
+        ));
+        (metrics, g)
+    }
+
+    #[test]
+    fn admits_to_the_cap_then_sheds_under_reject() {
+        let (m, g) = gate(2, OverloadPolicy::Reject, 1.0);
+        let p1 = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        let _p2 = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        assert_eq!(g.in_flight(), 2);
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap_err(),
+            AdmitError::Shed
+        );
+        assert_eq!(m.shed(), 1);
+        assert_eq!(m.shed_counts()[&mk("gdf/ds32")], 1);
+        // releasing a permit reopens the gate
+        drop(p1);
+        assert_eq!(g.in_flight(), 1);
+        assert!(Admission::admit(&g, App::Gdf, Quality::Economy, None, true).is_ok());
+        assert_eq!(m.peak_in_flight(), 2);
+    }
+
+    #[test]
+    fn fair_share_keeps_a_hot_key_from_starving_the_pool() {
+        // cap 4, fair_share 0.5 → one key holds at most 2 permits
+        let (m, g) = gate(4, OverloadPolicy::Reject, 0.5);
+        assert_eq!(g.key_cap(), 2);
+        let _a = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        let _b = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        // the hot key is at its share…
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap_err(),
+            AdmitError::Shed
+        );
+        // …but the rest of the catalog still has capacity
+        let _c = Admission::admit(&g, App::Blend, Quality::Economy, None, true).unwrap();
+        let _d = Admission::admit(&g, App::Frnn, Quality::Economy, None, true).unwrap();
+        assert_eq!(g.in_flight(), 4);
+        assert_eq!(m.shed(), 1);
+    }
+
+    #[test]
+    fn degrade_reroutes_to_the_next_lower_registered_tier() {
+        let (m, g) = gate(4, OverloadPolicy::Degrade, 0.25); // key_cap = 1
+        let a = Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap();
+        assert!(!a.degraded);
+        assert_eq!(a.key, mk("gdf/ds16"));
+        // the balanced tier is at its share → the same request admits
+        // one tier down, flagged degraded
+        let b = Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap();
+        assert!(b.degraded);
+        assert_eq!(b.key, mk("gdf/ds32"));
+        assert_eq!(b.quality, Quality::Economy);
+        assert_eq!(m.degrades(), 1);
+        assert_eq!(m.degrade_counts()[&(mk("gdf/ds16"), mk("gdf/ds32"))], 1);
+        // every tier at its share → shed, even for a blocking caller
+        // (degrade falls back to reject, it never waits)
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap_err(),
+            AdmitError::Shed
+        );
+    }
+
+    #[test]
+    fn degrade_normalizes_a_full_pool_fair_share() {
+        // fair_share 1.0 under degrade would make the policy inert
+        // (identical to reject); the gate reserves half the pool per
+        // key so lower tiers keep headroom to degrade into
+        let (m, g) = gate(4, OverloadPolicy::Degrade, 1.0);
+        assert_eq!(g.key_cap(), 2);
+        let _a = Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap();
+        let _b = Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap();
+        let c = Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap();
+        assert!(c.degraded, "the third balanced request degrades instead of shedding");
+        assert_eq!(c.key, mk("gdf/ds32"));
+        assert_eq!(m.degrades(), 1);
+    }
+
+    #[test]
+    fn degrade_without_a_registered_lower_tier_sheds() {
+        // only the balanced tier exists: nothing lower to degrade to
+        let metrics = Arc::new(Metrics::new());
+        let g = Arc::new(Admission::new(
+            1,
+            OverloadPolicy::Degrade,
+            1.0,
+            vec![mk("gdf/ds16")],
+            metrics,
+        ));
+        let _a = Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap();
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Balanced, None, true).unwrap_err(),
+            AdmitError::Shed
+        );
+    }
+
+    #[test]
+    fn expired_deadline_is_refused_before_any_queue() {
+        let (m, g) = gate(8, OverloadPolicy::Wait, 1.0);
+        let past = Instant::now() - Duration::from_millis(1);
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Economy, Some(past), true).unwrap_err(),
+            AdmitError::Expired
+        );
+        assert_eq!(g.in_flight(), 0);
+        assert_eq!(m.expired_at(ExpiredAt::Admission), 1);
+    }
+
+    #[test]
+    fn wait_policy_blocks_until_a_permit_frees() {
+        let (m, g) = gate(1, OverloadPolicy::Wait, 1.0);
+        let p = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        let g2 = g.clone();
+        let waiter = std::thread::spawn(move || {
+            Admission::admit(&g2, App::Gdf, Quality::Economy, None, true)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(p);
+        let admitted = waiter.join().unwrap().unwrap();
+        assert_eq!(admitted.key, mk("gdf/ds32"));
+        assert_eq!(g.in_flight(), 1, "the waiter holds the freed permit");
+        assert!(m.admission_wait_summary().max >= 0.015, "the waiter really waited");
+        drop(admitted);
+        assert_eq!(g.in_flight(), 0);
+    }
+
+    #[test]
+    fn wait_policy_expires_at_the_deadline_instead_of_hanging() {
+        let (m, g) = gate(1, OverloadPolicy::Wait, 1.0);
+        let _p = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        let d = Instant::now() + Duration::from_millis(15);
+        let t0 = Instant::now();
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Economy, Some(d), true).unwrap_err(),
+            AdmitError::Expired
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(14));
+        assert_eq!(m.expired_at(ExpiredAt::Admission), 1);
+    }
+
+    #[test]
+    fn non_blocking_admission_never_waits() {
+        let (m, g) = gate(1, OverloadPolicy::Wait, 1.0);
+        let _p = Admission::admit(&g, App::Gdf, Quality::Economy, None, true).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(
+            Admission::admit(&g, App::Gdf, Quality::Economy, None, false).unwrap_err(),
+            AdmitError::Shed
+        );
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert_eq!(m.shed(), 1);
+    }
+
+    #[test]
+    fn overload_policy_round_trips_through_parse() {
+        for p in [OverloadPolicy::Reject, OverloadPolicy::Wait, OverloadPolicy::Degrade] {
+            assert_eq!(OverloadPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(OverloadPolicy::parse("nope").is_err());
+        assert_eq!(OverloadPolicy::default(), OverloadPolicy::Wait);
+    }
+}

@@ -9,17 +9,28 @@
 //! padding and no flat `Vec<i32>` payload anywhere (the legacy
 //! row-based convention is gone — datapaths carry their own shapes).
 
+use super::admission::Permit;
 use crate::catalog::{ModelKey, Tensor};
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// One queued request: its input tensors, the reply channel, and when
-/// it entered the system.
+/// One queued request: its input tensors, the reply channel, when it
+/// entered the system, its optional deadline, and the admission state
+/// it carries (degraded routing, capacity permit).
 pub struct Pending<R> {
     pub inputs: Vec<Tensor>,
     pub reply: mpsc::Sender<R>,
     pub enqueued: Instant,
+    /// Absolute deadline; an entry still queued past it is dropped by
+    /// [`Batcher::drop_expired`] instead of lane-packed.
+    pub deadline: Option<Instant>,
+    /// True when admission degraded this request below its requested
+    /// quality tier.
+    pub degraded: bool,
+    /// In-flight capacity permit; travels with the request and releases
+    /// on drop, wherever the request resolves.
+    pub permit: Option<Permit>,
 }
 
 /// Per-model batch queues.
@@ -54,13 +65,56 @@ impl<R> Batcher<R> {
             .collect()
     }
 
-    /// Earliest deadline across queues (for the dispatcher's recv
-    /// timeout).
+    /// Earliest wakeup across queues (for the dispatcher's recv
+    /// timeout): the soonest batch flush deadline or per-request
+    /// expiry, whichever comes first.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.queues
+        let flush = self
+            .queues
             .values()
             .filter_map(|q| q.first().map(|p| p.enqueued + self.max_wait))
-            .min()
+            .min();
+        let expiry = self
+            .queues
+            .values()
+            .flat_map(|q| q.iter().filter_map(|p| p.deadline))
+            .min();
+        match (flush, expiry) {
+            (Some(f), Some(e)) => Some(f.min(e)),
+            (f, e) => f.or(e),
+        }
+    }
+
+    /// Remove every entry whose deadline is at or before `now`, across
+    /// all queues, and hand them back so the caller can answer them —
+    /// expired requests are dropped *before* lane-packing, never
+    /// shipped to a shard.
+    pub fn drop_expired(&mut self, now: Instant) -> Vec<(ModelKey, Pending<R>)> {
+        let expired = |p: &Pending<R>| p.deadline.map_or(false, |d| now >= d);
+        let mut out = Vec::new();
+        let keys: Vec<ModelKey> = self.queues.keys().copied().collect();
+        for key in keys {
+            let q = self.queues.get_mut(&key).expect("key listed above");
+            // single linear partition pass (a mass expiry hits exactly
+            // at the overload-recovery moment, so no O(expired·queued)
+            // Vec::remove shuffling on the dispatcher thread),
+            // preserving FIFO order of the survivors
+            if q.iter().any(&expired) {
+                let mut live = Vec::with_capacity(q.len());
+                for p in q.drain(..) {
+                    if expired(&p) {
+                        out.push((key, p));
+                    } else {
+                        live.push(p);
+                    }
+                }
+                *q = live;
+            }
+            if q.is_empty() {
+                self.queues.remove(&key);
+            }
+        }
+        out
     }
 
     /// Remove up to `batch_size` requests for a model — the whole
@@ -87,12 +141,22 @@ mod tests {
     }
 
     fn pending(v: i32) -> (Pending<Vec<i32>>, mpsc::Receiver<Vec<i32>>) {
+        pending_until(v, None)
+    }
+
+    fn pending_until(
+        v: i32,
+        deadline: Option<Instant>,
+    ) -> (Pending<Vec<i32>>, mpsc::Receiver<Vec<i32>>) {
         let (tx, rx) = mpsc::channel();
         (
             Pending {
                 inputs: vec![Tensor::vector(vec![v, v])],
                 reply: tx,
                 enqueued: Instant::now(),
+                deadline,
+                degraded: false,
+                permit: None,
             },
             rx,
         )
@@ -142,6 +206,27 @@ mod tests {
         b.push(mk("frnn/ds32"), p2);
         assert!(b.due(Instant::now()).is_empty());
         assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn drop_expired_removes_only_expired_entries() {
+        let mut b: Batcher<Vec<i32>> = Batcher::new(8, Duration::from_secs(10));
+        let now = Instant::now();
+        let (p1, _r1) = pending_until(1, Some(now - Duration::from_millis(1)));
+        let (p2, _r2) = pending_until(2, None);
+        let (p3, _r3) = pending_until(3, Some(now + Duration::from_secs(5)));
+        b.push(mk("frnn/conv"), p1);
+        b.push(mk("frnn/conv"), p2);
+        b.push(mk("gdf/ds16"), p3);
+        let dropped = b.drop_expired(Instant::now());
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0, mk("frnn/conv"));
+        assert_eq!(dropped[0].1.inputs[0].data, vec![1, 1]);
+        assert_eq!(b.queued(), 2, "live entries stay queued");
+        // a live entry's deadline bounds the dispatcher wakeup even
+        // when it is sooner than any flush deadline
+        let d = b.next_deadline().unwrap();
+        assert!(d <= now + Duration::from_secs(5));
     }
 
     #[test]

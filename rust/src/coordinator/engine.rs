@@ -30,7 +30,8 @@
 //! shape-carrying [`Tensor`]s through — so coordinator logic is
 //! testable without artifacts ([`MockExecutor`]).
 
-use super::metrics::Metrics;
+use super::admission::{Permit, Rejection};
+use super::metrics::{ExpiredAt, Metrics};
 use super::placement::Placement;
 use super::server::Response;
 use crate::catalog::{self, App, ModelKey, Tensor};
@@ -82,6 +83,25 @@ impl Executor for crate::runtime::Runtime {
                 && inputs[0].shape[1] == m.inputs[0].dims[1]
                 && inputs[0].shape[0] < m.inputs[0].dims[0]
             {
+                // Zero-row padding is only sound for row-independent
+                // models: FRNN classifies each 960-pixel row on its
+                // own, so padded rows are dead lanes whose outputs are
+                // sliced away. GDF (and blend) read *across* rows —
+                // their artifacts expect edge replication at the image
+                // boundary, and silently zero-padding a short image
+                // would corrupt the rows next to the pad. Fail loudly
+                // instead.
+                if key.app != App::Frnn {
+                    return Err(anyhow!(
+                        "{key}: request has {} rows but the artifact port is fixed at {} — \
+                         zero-row padding is only valid for row-independent models (frnn); \
+                         {} models expect edge replication, so submit a full-size image or \
+                         compile an artifact for this shape",
+                        inputs[0].shape[0],
+                        m.inputs[0].dims[0],
+                        key.app
+                    ));
+                }
                 let (b, c) = (m.inputs[0].dims[0], m.inputs[0].dims[1]);
                 let r = inputs[0].shape[0];
                 let mut flat = inputs[0].data.clone();
@@ -176,12 +196,38 @@ impl Executor for MockExecutor {
 }
 
 /// One request inside a [`BatchJob`]: its input tensors, where the
-/// response goes, and when it entered the system (for latency
-/// accounting).
+/// response goes, when it entered the system (for latency accounting),
+/// its optional deadline, and the admission state it carries.
 pub struct BatchItem {
     pub inputs: Vec<Tensor>,
     pub reply: mpsc::Sender<Result<Response>>,
     pub enqueued: Instant,
+    /// Absolute deadline: a shard skips the item (typed
+    /// [`Rejection::DeadlineExpired`] reply) instead of executing past
+    /// it.
+    pub deadline: Option<Instant>,
+    /// True when admission degraded this request below its requested
+    /// quality tier (echoed on the [`Response`]).
+    pub degraded: bool,
+    /// In-flight capacity permit; releases on drop, after the reply is
+    /// sent.
+    pub permit: Option<Permit>,
+}
+
+impl BatchItem {
+    /// A plain item: enqueued now, no deadline, not degraded, no
+    /// admission permit (direct [`EnginePool::submit`] callers — tests,
+    /// benches — bypass the gate by construction).
+    pub fn new(inputs: Vec<Tensor>, reply: mpsc::Sender<Result<Response>>) -> BatchItem {
+        BatchItem {
+            inputs,
+            reply,
+            enqueued: Instant::now(),
+            deadline: None,
+            degraded: false,
+            permit: None,
+        }
+    }
 }
 
 /// A whole `ModelKey` batch — the unit of work a shard executes.
@@ -431,10 +477,7 @@ impl EnginePool {
     /// the calling thread, not the pool).
     pub fn exec(&self, key: ModelKey, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         let (reply, rx) = mpsc::channel();
-        self.submit(BatchJob {
-            key,
-            items: vec![BatchItem { inputs, reply, enqueued: Instant::now() }],
-        })?;
+        self.submit(BatchJob { key, items: vec![BatchItem::new(inputs, reply)] })?;
         let resp = rx.recv().map_err(|_| anyhow!("engine dropped reply"))??;
         Ok(resp.outputs)
     }
@@ -553,13 +596,31 @@ fn shard_loop<E, F>(
 }
 
 /// Execute one batch on a shard and scatter the per-request replies.
-/// A failing batch is retried request-by-request so one malformed
-/// request cannot poison its batch-mates; a *panicking* executor is
-/// caught so one bad request cannot kill the shard thread (which would
-/// silently swallow ~1/N of all later traffic).
+/// Items whose deadline already passed are answered with a typed
+/// [`Rejection::DeadlineExpired`] instead of executed (a fully expired
+/// batch skips execution entirely). A failing batch is retried
+/// request-by-request so one malformed request cannot poison its
+/// batch-mates; a *panicking* executor is caught so one bad request
+/// cannot kill the shard thread (which would silently swallow ~1/N of
+/// all later traffic).
 fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: BatchJob) {
     use std::panic::{catch_unwind, AssertUnwindSafe};
     let BatchJob { key, items } = job;
+    // drop expired items before spending shard time on them: their
+    // callers have already given up, and the lanes are better spent on
+    // the live batch-mates
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(items.len());
+    for it in items {
+        if it.deadline.map_or(false, |d| now >= d) {
+            metrics.record_expired(key, ExpiredAt::Shard);
+            let _ = it.reply.send(Err(anyhow::Error::new(Rejection::DeadlineExpired)));
+            // it.permit drops here: expiry releases capacity too
+        } else {
+            live.push(it);
+        }
+    }
+    let items = live;
     if items.is_empty() {
         return;
     }
@@ -568,7 +629,9 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
     let mut waiters = Vec::with_capacity(size);
     for it in items {
         inputs.push(it.inputs);
-        waiters.push((it.reply, it.enqueued));
+        // the permit rides next to the reply sender so it drops (and
+        // releases capacity) right after the reply is scattered
+        waiters.push((it.reply, it.enqueued, it.degraded, it.permit));
     }
     let t0 = Instant::now();
     // a panic unwinds into an Err so the batch falls through to the
@@ -578,9 +641,9 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
     match batch_result {
         Ok(outs) if outs.len() == size => {
             metrics.record_batch(shard, key, size, t0.elapsed(), false);
-            for ((reply, enqueued), outputs) in waiters.into_iter().zip(outs) {
+            for ((reply, enqueued, degraded, _permit), outputs) in waiters.into_iter().zip(outs) {
                 metrics.record_latency(key, enqueued.elapsed());
-                let _ = reply.send(Ok(Response { outputs, route: key }));
+                let _ = reply.send(Ok(Response { outputs, route: key, degraded }));
             }
         }
         Ok(outs) => {
@@ -592,17 +655,17 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
                 "{key}: executor answered {} of {size} batch requests",
                 outs.len()
             );
-            for (reply, _) in waiters {
+            for (reply, _, _, _permit) in waiters {
                 metrics.record_error();
                 let _ = reply.send(Err(anyhow!("{msg}")));
             }
         }
         Err(_) => {
-            for ((reply, enqueued), ins) in waiters.into_iter().zip(inputs) {
+            for ((reply, enqueued, degraded, _permit), ins) in waiters.into_iter().zip(inputs) {
                 match catch_unwind(AssertUnwindSafe(|| executor.exec(key, &ins))) {
                     Ok(Ok(outputs)) => {
                         metrics.record_latency(key, enqueued.elapsed());
-                        let _ = reply.send(Ok(Response { outputs, route: key }));
+                        let _ = reply.send(Ok(Response { outputs, route: key, degraded }));
                     }
                     Ok(Err(e)) => {
                         metrics.record_error();
@@ -699,14 +762,7 @@ mod tests {
         let (items, rxs): (Vec<BatchItem>, Vec<_>) = (0..5)
             .map(|i| {
                 let (reply, rx) = mpsc::channel();
-                (
-                    BatchItem {
-                        inputs: vec![Tensor::vector(vec![i * 2])],
-                        reply,
-                        enqueued: Instant::now(),
-                    },
-                    rx,
-                )
+                (BatchItem::new(vec![Tensor::vector(vec![i * 2])], reply), rx)
             })
             .unzip();
         pool.submit(BatchJob { key: mk("gdf/ds16"), items }).unwrap();
@@ -759,11 +815,10 @@ mod tests {
                     let (reply, rx) = mpsc::channel();
                     p.submit(BatchJob {
                         key: mk("gdf/conv"),
-                        items: vec![BatchItem {
-                            inputs: vec![Tensor::vector(vec![(t * 10 + i) * 2])],
+                        items: vec![BatchItem::new(
+                            vec![Tensor::vector(vec![(t * 10 + i) * 2])],
                             reply,
-                            enqueued: Instant::now(),
-                        }],
+                        )],
                     })
                     .unwrap();
                     sink.send((t * 10 + i, rx)).unwrap();
@@ -827,14 +882,7 @@ mod tests {
             .map(|i| {
                 let (reply, rx) = mpsc::channel();
                 let v = if i == 1 { -5 } else { i };
-                (
-                    BatchItem {
-                        inputs: vec![Tensor::vector(vec![v])],
-                        reply,
-                        enqueued: Instant::now(),
-                    },
-                    rx,
-                )
+                (BatchItem::new(vec![Tensor::vector(vec![v])], reply), rx)
             })
             .unzip();
         pool.submit(BatchJob { key: mk("gdf/conv"), items }).unwrap();
@@ -850,6 +898,44 @@ mod tests {
         assert_eq!(b.batches, 1);
         assert_eq!(b.degraded, 1);
         assert_eq!(b.mean_size, 3.0);
+    }
+
+    #[test]
+    fn shards_skip_expired_items_with_typed_replies() {
+        let (metrics, pool) = pool(1);
+        let mk_item = |v: i32, deadline: Option<Instant>| {
+            let (reply, rx) = mpsc::channel();
+            let mut item = BatchItem::new(vec![Tensor::vector(vec![v])], reply);
+            item.deadline = deadline;
+            (item, rx)
+        };
+        // a deadline of "now" is already past by the time the shard
+        // picks the batch up; its batch-mate must still execute
+        let (dead, dead_rx) = mk_item(4, Some(Instant::now()));
+        let (live, live_rx) = mk_item(6, None);
+        pool.submit(BatchJob { key: mk("gdf/conv"), items: vec![dead, live] }).unwrap();
+        let err = dead_rx.recv().unwrap().unwrap_err();
+        assert_eq!(err.downcast_ref::<Rejection>(), Some(&Rejection::DeadlineExpired));
+        let r = live_rx.recv().unwrap().unwrap();
+        assert_eq!(r.outputs[0].data, vec![3]);
+        assert!(!r.degraded);
+        assert_eq!(metrics.expired_at(ExpiredAt::Shard), 1);
+        assert_eq!(metrics.completed(), 1);
+        assert_eq!(metrics.errors(), 0, "expiry is typed, not an error");
+
+        // a batch whose every item expired skips execution entirely:
+        // no batch record is added for it
+        let batches_before: usize =
+            metrics.batch_summaries().values().map(|b| b.batches).sum();
+        let (d1, r1) = mk_item(2, Some(Instant::now()));
+        let (d2, r2) = mk_item(8, Some(Instant::now()));
+        pool.submit(BatchJob { key: mk("gdf/conv"), items: vec![d1, d2] }).unwrap();
+        assert!(r1.recv().unwrap().is_err());
+        assert!(r2.recv().unwrap().is_err());
+        let batches_after: usize =
+            metrics.batch_summaries().values().map(|b| b.batches).sum();
+        assert_eq!(batches_after, batches_before, "expired batch must not execute");
+        assert_eq!(metrics.expired_at(ExpiredAt::Shard), 3);
     }
 
     /// An executor that blocks inside `exec` until the test hands it a
@@ -932,11 +1018,7 @@ mod tests {
                 let (reply, rx) = mpsc::channel();
                 p.submit(BatchJob {
                     key: mk("gdf/conv"),
-                    items: vec![BatchItem {
-                        inputs: vec![Tensor::vector(vec![i])],
-                        reply,
-                        enqueued: Instant::now(),
-                    }],
+                    items: vec![BatchItem::new(vec![Tensor::vector(vec![i])], reply)],
                 })
                 .unwrap();
                 sink.send(rx).unwrap();
@@ -1001,11 +1083,7 @@ mod tests {
             let (reply, rx) = mpsc::channel();
             pool.submit(BatchJob {
                 key: mk("gdf/conv"),
-                items: vec![BatchItem {
-                    inputs: vec![Tensor::vector(vec![v])],
-                    reply,
-                    enqueued: Instant::now(),
-                }],
+                items: vec![BatchItem::new(vec![Tensor::vector(vec![v])], reply)],
             })
             .unwrap();
             rx

@@ -11,6 +11,25 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Where a request's deadline expiry was detected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ExpiredAt {
+    /// At the admission gate — already expired on arrival, or expired
+    /// while waiting for capacity. The request never entered the
+    /// pipeline (it was never counted as submitted).
+    Admission,
+    /// In the batcher queue: dropped before lane-packing.
+    Queue,
+    /// On a shard: the batch was dispatched but the deadline passed
+    /// before execution.
+    Shard,
+}
+
+/// Admission-wait sample window: the gate records one wait per admitted
+/// request, so the sample store is a bounded ring (most recent wins)
+/// instead of an ever-growing Vec.
+pub const WAIT_SAMPLES: usize = 4096;
+
 /// Fraction of the bit-slice lanes a batch of `size` requests fills,
 /// over the netlist passes it actually needs: a 65-request batch takes
 /// two 64-lane words and fills 65/128 of them — not 100%.
@@ -66,6 +85,26 @@ struct Inner {
     spills: BTreeMap<ModelKey, u64>,
     /// Batches routed through the pool (spill-rate denominator).
     routed: u64,
+    /// Requests shed at the admission gate, per requested key (these
+    /// never entered the pipeline).
+    shed: BTreeMap<ModelKey, u64>,
+    /// Deadline expiries, per (key, detection stage). Admission-stage
+    /// expiries are keyed by the *requested* key; queue/shard-stage
+    /// expiries by the *routed* (possibly degraded) key — past the
+    /// gate, the routed key is the request's identity.
+    expired: BTreeMap<(ModelKey, ExpiredAt), u64>,
+    /// Overload degrades, per (requested key, degraded-to key).
+    degrades: BTreeMap<(ModelKey, ModelKey), u64>,
+    /// Seconds admitted requests waited at the gate for capacity — a
+    /// sliding window of the most recent [`WAIT_SAMPLES`] admits (one
+    /// sample lands here per admission, so an unbounded Vec would grow
+    /// forever on a long-running server).
+    admission_waits: Vec<f64>,
+    /// Total admits recorded (ring cursor for `admission_waits`).
+    wait_cursor: usize,
+    /// High-water mark of concurrently admitted (permit-holding)
+    /// requests — the observable proof the in-flight cap held.
+    peak_in_flight: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -79,16 +118,24 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// One request accepted into the pipeline (the backpressure
-    /// boundary counts `submitted − completed − errors` as in-flight).
+    /// One request accepted into the pipeline (admitted by the gate and
+    /// queued for dispatch).
     pub fn record_submitted(&self) {
         self.inner.lock().unwrap().submitted += 1;
     }
 
-    /// Requests currently somewhere between submit and reply.
+    /// Requests currently somewhere between submit and reply (every
+    /// submitted request resolves as exactly one of completed, error,
+    /// or post-admission deadline expiry).
     pub fn in_flight(&self) -> u64 {
         let m = self.inner.lock().unwrap();
-        m.submitted.saturating_sub(m.completed + m.errors)
+        let expired_in_pipeline: u64 = m
+            .expired
+            .iter()
+            .filter(|((_, at), _)| *at != ExpiredAt::Admission)
+            .map(|(_, &n)| n)
+            .sum();
+        m.submitted.saturating_sub(m.completed + m.errors + expired_in_pipeline)
     }
 
     /// One completed request for `key`, end-to-end latency `d`.
@@ -104,6 +151,99 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// One request shed at the admission gate for `key` (over capacity
+    /// under the active overload policy). Sheds also count as rejected
+    /// — the legacy backpressure counter.
+    pub fn record_shed(&self, key: ModelKey) {
+        let mut m = self.inner.lock().unwrap();
+        m.rejected += 1;
+        *m.shed.entry(key).or_default() += 1;
+    }
+
+    /// One deadline expiry for `key`, detected `at` the given stage.
+    pub fn record_expired(&self, key: ModelKey, at: ExpiredAt) {
+        *self.inner.lock().unwrap().expired.entry((key, at)).or_default() += 1;
+    }
+
+    /// One overload degrade: a request for `from` admitted at the
+    /// lower-tier `to` instead.
+    pub fn record_degrade(&self, from: ModelKey, to: ModelKey) {
+        *self.inner.lock().unwrap().degrades.entry((from, to)).or_default() += 1;
+    }
+
+    /// How long one admitted request waited at the gate for capacity.
+    /// Kept as a sliding window of the last [`WAIT_SAMPLES`] admits.
+    pub fn record_admission_wait(&self, d: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let v = d.as_secs_f64();
+        let i = m.wait_cursor;
+        m.wait_cursor = m.wait_cursor.wrapping_add(1);
+        if m.admission_waits.len() < WAIT_SAMPLES {
+            m.admission_waits.push(v);
+        } else {
+            m.admission_waits[i % WAIT_SAMPLES] = v;
+        }
+    }
+
+    /// The number of permits held right after an admission — the peak
+    /// is the observed in-flight high-water mark.
+    pub fn record_in_flight(&self, depth: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.peak_in_flight = m.peak_in_flight.max(depth);
+    }
+
+    /// Observed in-flight high-water mark (never exceeds the gate cap).
+    pub fn peak_in_flight(&self) -> u64 {
+        self.inner.lock().unwrap().peak_in_flight
+    }
+
+    /// Requests shed at the admission gate, in total.
+    pub fn shed(&self) -> u64 {
+        self.inner.lock().unwrap().shed.values().sum()
+    }
+
+    /// Per-key shed counts.
+    pub fn shed_counts(&self) -> BTreeMap<ModelKey, u64> {
+        self.inner.lock().unwrap().shed.clone()
+    }
+
+    /// Overload degrades, in total.
+    pub fn degrades(&self) -> u64 {
+        self.inner.lock().unwrap().degrades.values().sum()
+    }
+
+    /// Per-(requested, degraded-to) degrade counts.
+    pub fn degrade_counts(&self) -> BTreeMap<(ModelKey, ModelKey), u64> {
+        self.inner.lock().unwrap().degrades.clone()
+    }
+
+    /// Deadline expiries, in total (every stage).
+    pub fn expired(&self) -> u64 {
+        self.inner.lock().unwrap().expired.values().sum()
+    }
+
+    /// Deadline expiries detected at one stage.
+    pub fn expired_at(&self, at: ExpiredAt) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.expired.iter().filter(|((_, a), _)| *a == at).map(|(_, &n)| n).sum()
+    }
+
+    /// Per-key deadline-expiry totals (all stages).
+    pub fn expired_counts(&self) -> BTreeMap<ModelKey, u64> {
+        let m = self.inner.lock().unwrap();
+        let mut out: BTreeMap<ModelKey, u64> = BTreeMap::new();
+        for (&(key, _), &n) in &m.expired {
+            *out.entry(key).or_default() += n;
+        }
+        out
+    }
+
+    /// Admission wait-for-capacity times (seconds) over the most
+    /// recent [`WAIT_SAMPLES`] admits.
+    pub fn admission_wait_summary(&self) -> Summary {
+        Summary::of(self.inner.lock().unwrap().admission_waits.clone())
     }
 
     /// One batch of `size` requests executed on `shard` for `key` in
@@ -149,6 +289,11 @@ impl Metrics {
     /// spill or dead-shard failover).
     pub fn record_spill(&self, key: ModelKey) {
         *self.inner.lock().unwrap().spills.entry(key).or_default() += 1;
+    }
+
+    /// Requests accepted into the pipeline (admitted + queued).
+    pub fn submitted(&self) -> u64 {
+        self.inner.lock().unwrap().submitted
     }
 
     pub fn completed(&self) -> u64 {
@@ -275,6 +420,29 @@ impl Metrics {
             self.mean_batch_size(),
             self.lane_occupancy() * 100.0
         ));
+        let waits = self.admission_wait_summary();
+        s.push_str(&format!(
+            "admission: peak_in_flight={} shed={} degraded={} expired={} \
+             (admission={} queue={} shard={}) wait_p50={:.3}ms wait_p99={:.3}ms\n",
+            self.peak_in_flight(),
+            self.shed(),
+            self.degrades(),
+            self.expired(),
+            self.expired_at(ExpiredAt::Admission),
+            self.expired_at(ExpiredAt::Queue),
+            self.expired_at(ExpiredAt::Shard),
+            waits.p50 * 1e3,
+            waits.p99 * 1e3
+        ));
+        for (key, n) in self.shed_counts() {
+            s.push_str(&format!("  {:<16} shed={n}\n", key.to_string()));
+        }
+        for ((from, to), n) in self.degrade_counts() {
+            s.push_str(&format!("  {from} -> {to} degraded={n}\n"));
+        }
+        for (key, n) in self.expired_counts() {
+            s.push_str(&format!("  {:<16} expired={n}\n", key.to_string()));
+        }
         let placements = self.placements();
         if !placements.is_empty() {
             let spills = self.spill_counts();
@@ -395,6 +563,65 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("shards[0+2]"), "{rep}");
         assert!(rep.contains("spill_rate=33.3%"), "{rep}");
+    }
+
+    #[test]
+    fn admission_counters_partition_by_key_and_stage() {
+        let m = Metrics::new();
+        m.record_shed(mk("gdf/ds16"));
+        m.record_shed(mk("gdf/ds16"));
+        m.record_degrade(mk("gdf/ds16"), mk("gdf/ds32"));
+        m.record_expired(mk("gdf/ds16"), ExpiredAt::Admission);
+        m.record_expired(mk("gdf/ds16"), ExpiredAt::Queue);
+        m.record_expired(mk("blend/ds32"), ExpiredAt::Shard);
+        m.record_admission_wait(Duration::from_millis(2));
+        m.record_in_flight(3);
+        m.record_in_flight(1);
+        assert_eq!(m.shed(), 2);
+        assert_eq!(m.shed_counts()[&mk("gdf/ds16")], 2);
+        assert_eq!(m.rejected(), 2, "sheds count as rejected");
+        assert_eq!(m.degrades(), 1);
+        assert_eq!(m.degrade_counts()[&(mk("gdf/ds16"), mk("gdf/ds32"))], 1);
+        assert_eq!(m.expired(), 3);
+        assert_eq!(m.expired_at(ExpiredAt::Admission), 1);
+        assert_eq!(m.expired_at(ExpiredAt::Queue), 1);
+        assert_eq!(m.expired_at(ExpiredAt::Shard), 1);
+        assert_eq!(m.expired_counts()[&mk("gdf/ds16")], 2);
+        assert_eq!(m.peak_in_flight(), 3);
+        assert!((m.admission_wait_summary().p50 - 0.002).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("shed=2"), "{rep}");
+        assert!(rep.contains("gdf/ds16 -> gdf/ds32 degraded=1"), "{rep}");
+        assert!(rep.contains("expired=3"), "{rep}");
+        assert!(rep.contains("peak_in_flight=3"), "{rep}");
+    }
+
+    #[test]
+    fn admission_wait_window_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(WAIT_SAMPLES + 10) {
+            m.record_admission_wait(Duration::from_nanos(i as u64));
+        }
+        let s = m.admission_wait_summary();
+        assert_eq!(s.n, WAIT_SAMPLES, "the sample store is a bounded ring");
+        // the ring keeps recent samples: the very first (0ns .. 9ns)
+        // slots have been overwritten by the wrap-around
+        assert!(s.min >= 10e-9 - 1e-15, "oldest samples were overwritten, min={}", s.min);
+    }
+
+    #[test]
+    fn in_flight_subtracts_only_pipeline_expiries() {
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_submitted();
+        m.record_latency(mk("gdf/ds16"), Duration::from_millis(1));
+        assert_eq!(m.in_flight(), 1);
+        // an admission-stage expiry was never submitted — must not be
+        // subtracted; a queue-stage expiry resolves a submitted request
+        m.record_expired(mk("gdf/ds16"), ExpiredAt::Admission);
+        assert_eq!(m.in_flight(), 1);
+        m.record_expired(mk("gdf/ds16"), ExpiredAt::Queue);
+        assert_eq!(m.in_flight(), 0);
     }
 
     #[test]

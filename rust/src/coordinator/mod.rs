@@ -7,10 +7,16 @@
 //! Batches — not single requests — are the unit of work:
 //!
 //! ```text
-//!   clients ──submit(Job, Quality)──► bounded queue ──► dispatcher
-//!                  │                                        │
-//!             backpressure            ModelKey::route(app, quality)
-//!           (in-flight cap)           (the one typed catalog key)
+//!   clients ──submit(Job, Quality[, deadline])──► Admission gate
+//!                  │                                  │
+//!        every submit path            in-flight cap + per-key fair
+//!        (blocking or not)            share; overload policy decides
+//!        acquires a Permit            reject / wait / degrade-quality
+//!                                                │
+//!                                     bounded queue ──► dispatcher
+//!                                                        │
+//!                                     ModelKey::route(app, quality)
+//!                                     (the one typed catalog key)
 //!                                                │
 //!                                     dynamic batcher: every job kind
 //!                                     queues per ModelKey until the
@@ -54,6 +60,7 @@
 //! tolerates. See `rust/src/coordinator/README.md` for the batch
 //! lifecycle in detail.
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -61,8 +68,9 @@ pub mod placement;
 pub mod server;
 
 pub use crate::catalog::{App, ModelKey, PpcConfig, Quality, Tensor};
+pub use admission::{AdmitError, Admission, Admitted, OverloadPolicy, Permit, Rejection};
 pub use engine::{BatchItem, BatchJob, EnginePool, Executor, MockExecutor};
-pub use metrics::{BatchSummary, Metrics};
+pub use metrics::{BatchSummary, ExpiredAt, Metrics};
 pub use placement::Placement;
 pub use server::{
     BatchTicket, Coordinator, CoordinatorConfig, Job, Response, SubmitError, Ticket,

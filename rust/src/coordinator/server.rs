@@ -16,9 +16,10 @@
 //! The dispatcher never blocks on model execution; shards scatter the
 //! per-request replies themselves.
 
+use super::admission::{AdmitError, Admission, OverloadPolicy, Permit, Rejection};
 use super::batcher::{Batcher, Pending};
 use super::engine::{BatchItem, BatchJob, EnginePool, Executor};
-use super::metrics::Metrics;
+use super::metrics::{ExpiredAt, Metrics};
 use super::placement::Placement;
 use crate::catalog::{App, ModelKey, Quality, Tensor, LANES};
 use anyhow::{anyhow, Result};
@@ -54,12 +55,20 @@ pub struct Response {
     pub outputs: Vec<Tensor>,
     /// The catalog key that served the request.
     pub route: ModelKey,
+    /// True when the overload policy degraded the request below its
+    /// requested quality tier (`route` names the tier that answered).
+    pub degraded: bool,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// Bounded queue full — caller should back off.
+    /// Over capacity on a non-blocking submit — caller should back off.
     Busy,
+    /// Shed by the admission gate: over capacity under the active
+    /// overload policy (`reject`, or `degrade` with every tier full).
+    Shed,
+    /// The request deadline passed before admission.
+    Expired,
     /// Coordinator shut down.
     Down,
 }
@@ -67,7 +76,8 @@ pub enum SubmitError {
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Bounded submit queue (backpressure boundary).
+    /// Max in-flight requests — the admission gate's capacity (also
+    /// sizes the bounded submit queue).
     pub queue_capacity: usize,
     /// Max requests lane-packed into one batch (clamped to
     /// [`LANES`] — the word width of the bit-sliced evaluator).
@@ -79,6 +89,17 @@ pub struct CoordinatorConfig {
     pub batch_max_wait: Duration,
     /// Engine shards; each owns its own executor instance.
     pub shards: usize,
+    /// What the admission gate does with requests it has no capacity
+    /// for: reject, wait (deadline-bounded), or degrade quality.
+    pub overload: OverloadPolicy,
+    /// Per-[`ModelKey`] fair share of the capacity pool: one key holds
+    /// at most `ceil(queue_capacity · fair_share)` in-flight requests,
+    /// so a hot model cannot starve the rest of the catalog. The share
+    /// is a hard reservation (not work-conserving), so the default is
+    /// 1.0 — full capacity for single-model workloads; dial it down
+    /// when protecting a mixed catalog, or to give the `degrade`
+    /// policy per-tier headroom to degrade into.
+    pub fair_share: f64,
 }
 
 impl Default for CoordinatorConfig {
@@ -89,6 +110,8 @@ impl Default for CoordinatorConfig {
             classify_row: 960,
             batch_max_wait: Duration::from_millis(2),
             shards: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4),
+            overload: OverloadPolicy::Wait,
+            fair_share: 1.0,
         }
     }
 }
@@ -98,6 +121,9 @@ struct WorkItem {
     quality: Quality,
     reply: mpsc::Sender<Result<Response>>,
     submitted: Instant,
+    deadline: Option<Instant>,
+    degraded: bool,
+    permit: Option<Permit>,
 }
 
 /// Handle to an in-flight request.
@@ -113,6 +139,15 @@ impl Ticket {
         self.rx
             .recv_timeout(d)
             .map_err(|_| anyhow!("timeout waiting for response"))?
+    }
+
+    /// A ticket already resolved with a typed rejection — batch
+    /// submission hands these out for jobs the gate refused, so every
+    /// job keeps an observable slot in its [`BatchTicket`].
+    fn rejected(r: Rejection) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Err(anyhow::Error::new(r)));
+        Ticket { rx }
     }
 }
 
@@ -152,10 +187,10 @@ pub struct Coordinator {
     /// don't have to round-trip through the work queue.
     pool: Arc<EnginePool>,
     down: Arc<AtomicBool>,
-    /// Max in-flight requests before [`Coordinator::submit`] pushes
-    /// back (the dispatcher never blocks on execution anymore, so the
-    /// submit queue alone cannot provide backpressure).
-    in_flight_cap: u64,
+    /// The one front door: every submit path acquires a capacity permit
+    /// here before anything queues, so no path — blocking or not — can
+    /// push the system past `queue_capacity` in-flight requests.
+    admission: Arc<Admission>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -198,16 +233,28 @@ impl Coordinator {
         metrics: Arc<Metrics>,
     ) -> Result<Coordinator> {
         let pool = Arc::new(pool);
-        let (tx, rx) = mpsc::sync_channel::<WorkItem>(config.queue_capacity);
+        // the servable catalog at startup — what a `degrade` admission
+        // may fall back to (off-catalog tiers are never degrade targets)
+        let registered = pool.keys().unwrap_or_default();
+        let admission = Arc::new(Admission::new(
+            config.queue_capacity,
+            config.overload,
+            config.fair_share,
+            registered,
+            metrics.clone(),
+        ));
+        // the gate clamps its cap to >= 1, so the channel must match or
+        // a zero-capacity (rendezvous) channel would let the
+        // never-sleeps submit() block on send
+        let (tx, rx) = mpsc::sync_channel::<WorkItem>(config.queue_capacity.max(1));
         let down = Arc::new(AtomicBool::new(false));
         let m = metrics.clone();
         let d = down.clone();
         let p = pool.clone();
-        let in_flight_cap = config.queue_capacity as u64;
         let dispatcher = std::thread::Builder::new()
             .name("ppc-dispatch".into())
             .spawn(move || dispatch_loop(config, p, rx, m, d))?;
-        Ok(Coordinator { tx, metrics, pool, down, in_flight_cap, dispatcher: Some(dispatcher) })
+        Ok(Coordinator { tx, metrics, pool, down, admission, dispatcher: Some(dispatcher) })
     }
 
     /// Start against the artifact directory (PJRT path; needs the
@@ -286,35 +333,64 @@ impl Coordinator {
         self.pool.placement()
     }
 
-    /// Submit a job; `Err(Busy)` when more than `queue_capacity`
-    /// requests are already in flight — the backpressure boundary.
+    /// Non-blocking submit; `Err(Busy)` when the admission gate has no
+    /// capacity right now (under `degrade`, a lower registered tier is
+    /// tried first). Never sleeps.
     pub fn submit(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
+        self.submit_inner(job, quality, None, false)
+    }
+
+    /// Blocking submit, through the same admission gate as every other
+    /// path (the old cap bypass is gone). Under the `wait` policy this
+    /// sleeps until capacity frees; under `reject`/`degrade` it returns
+    /// a typed [`SubmitError::Shed`] instead of growing the queues.
+    pub fn submit_blocking(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
+        self.submit_inner(job, quality, None, true)
+    }
+
+    /// Blocking submit with an absolute deadline. An already-expired
+    /// deadline is refused at the gate ([`SubmitError::Expired`])
+    /// without touching any queue; a request that expires while queued
+    /// resolves its ticket with a typed [`Rejection::DeadlineExpired`].
+    pub fn submit_deadline(
+        &self,
+        job: Job,
+        quality: Quality,
+        deadline: Instant,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_inner(job, quality, Some(deadline), true)
+    }
+
+    fn submit_inner(
+        &self,
+        job: Job,
+        quality: Quality,
+        deadline: Option<Instant>,
+        block: bool,
+    ) -> Result<Ticket, SubmitError> {
         if self.down.load(Ordering::Relaxed) {
             return Err(SubmitError::Down);
         }
-        if self.metrics.in_flight() >= self.in_flight_cap {
-            self.metrics.record_rejected();
-            return Err(SubmitError::Busy);
-        }
+        let submitted = Instant::now();
+        let admitted = Admission::admit(&self.admission, job.app(), quality, deadline, block)
+            .map_err(|e| match e {
+                AdmitError::Shed if block => SubmitError::Shed,
+                AdmitError::Shed => SubmitError::Busy,
+                AdmitError::Expired => SubmitError::Expired,
+            })?;
         let (reply, rx) = mpsc::channel();
-        let item = WorkItem { job, quality, reply, submitted: Instant::now() };
-        match self.tx.try_send(item) {
-            Ok(()) => {
-                self.metrics.record_submitted();
-                Ok(Ticket { rx })
-            }
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.record_rejected();
-                Err(SubmitError::Busy)
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Down),
-        }
-    }
-
-    /// Blocking submit (waits for queue space; never `Busy`).
-    pub fn submit_blocking(&self, job: Job, quality: Quality) -> Result<Ticket, SubmitError> {
-        let (reply, rx) = mpsc::channel();
-        let item = WorkItem { job, quality, reply, submitted: Instant::now() };
+        let item = WorkItem {
+            job,
+            quality: admitted.quality,
+            reply,
+            submitted,
+            deadline,
+            degraded: admitted.degraded,
+            permit: Some(admitted.permit),
+        };
+        // the gate caps in-flight requests at the queue capacity, so
+        // the bounded channel always has room — send() only fails when
+        // the dispatcher is gone (the dropped permit releases the slot)
         self.tx.send(item).map_err(|_| SubmitError::Down)?;
         self.metrics.record_submitted();
         Ok(Ticket { rx })
@@ -322,16 +398,53 @@ impl Coordinator {
 
     /// Submit a whole batch of jobs and await them together: the batch
     /// future of the reworked serving API. Jobs routed to the same
-    /// [`ModelKey`] lane-pack into shared netlist passes.
+    /// [`ModelKey`] lane-pack into shared netlist passes. Each job
+    /// passes the admission gate individually, so a batch submission
+    /// cannot overrun the in-flight cap — and a job the gate refuses
+    /// (shed under `reject`/`degrade`, or an expired deadline) keeps
+    /// its slot in the returned [`BatchTicket`] as a ticket resolved
+    /// with the typed [`Rejection`], so already-admitted batch-mates
+    /// are never dropped unobserved. Only [`SubmitError::Down`] fails
+    /// the whole call.
     pub fn submit_all(
         &self,
         jobs: impl IntoIterator<Item = (Job, Quality)>,
     ) -> Result<BatchTicket, SubmitError> {
+        self.submit_all_inner(jobs, None)
+    }
+
+    /// [`Coordinator::submit_all`] with one absolute deadline applied
+    /// to every job in the batch.
+    pub fn submit_all_deadline(
+        &self,
+        jobs: impl IntoIterator<Item = (Job, Quality)>,
+        deadline: Instant,
+    ) -> Result<BatchTicket, SubmitError> {
+        self.submit_all_inner(jobs, Some(deadline))
+    }
+
+    fn submit_all_inner(
+        &self,
+        jobs: impl IntoIterator<Item = (Job, Quality)>,
+        deadline: Option<Instant>,
+    ) -> Result<BatchTicket, SubmitError> {
         let mut tickets = Vec::new();
         for (job, quality) in jobs {
-            tickets.push(self.submit_blocking(job, quality)?);
+            match self.submit_inner(job, quality, deadline, true) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Down) => return Err(SubmitError::Down),
+                Err(SubmitError::Expired) => {
+                    tickets.push(Ticket::rejected(Rejection::DeadlineExpired))
+                }
+                Err(_) => tickets.push(Ticket::rejected(Rejection::Shed)),
+            }
         }
         Ok(BatchTicket { tickets })
+    }
+
+    /// The admission gate (capacity, policy, live in-flight count).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -383,9 +496,11 @@ fn dispatch_loop(
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
+        expire_due(&mut batcher, &metrics);
         flush_due(&pool, &mut batcher, &metrics);
     }
     // drain remaining batches before exit
+    expire_due(&mut batcher, &metrics);
     let keys: Vec<ModelKey> = batcher.due(Instant::now() + Duration::from_secs(3600));
     for key in keys {
         while flush_model(&pool, &mut batcher, &metrics, key) {}
@@ -418,7 +533,27 @@ fn handle_item(
             vec![Tensor { shape: vec![1, config.classify_row], data: pixels }]
         }
     };
-    batcher.push(key, Pending { inputs, reply: item.reply, enqueued: item.submitted });
+    batcher.push(
+        key,
+        Pending {
+            inputs,
+            reply: item.reply,
+            enqueued: item.submitted,
+            deadline: item.deadline,
+            degraded: item.degraded,
+            permit: item.permit,
+        },
+    );
+}
+
+/// Drop every queued entry whose deadline has passed — *before*
+/// lane-packing — and answer each with a typed deadline-expired
+/// response (its capacity permit releases with it).
+fn expire_due(batcher: &mut Batcher<Result<Response>>, metrics: &Metrics) {
+    for (key, p) in batcher.drop_expired(Instant::now()) {
+        metrics.record_expired(key, ExpiredAt::Queue);
+        let _ = p.reply.send(Err(anyhow::Error::new(Rejection::DeadlineExpired)));
+    }
 }
 
 fn flush_due(pool: &EnginePool, batcher: &mut Batcher<Result<Response>>, metrics: &Metrics) {
@@ -452,7 +587,14 @@ fn flush_model(
     let size = pendings.len();
     let items: Vec<BatchItem> = pendings
         .into_iter()
-        .map(|p| BatchItem { inputs: p.inputs, reply: p.reply, enqueued: p.enqueued })
+        .map(|p| BatchItem {
+            inputs: p.inputs,
+            reply: p.reply,
+            enqueued: p.enqueued,
+            deadline: p.deadline,
+            degraded: p.degraded,
+            permit: p.permit,
+        })
         .collect();
     if pool.submit(BatchJob { key, items }).is_err() {
         // pool gone: the dropped reply senders surface as disconnects
@@ -486,6 +628,7 @@ mod tests {
             classify_row: 8,
             batch_max_wait: Duration::from_millis(2),
             shards,
+            ..CoordinatorConfig::default()
         };
         Coordinator::start(cfg, move |_shard| {
             let mut m = MockExecutor::full_catalog();
@@ -674,6 +817,7 @@ mod tests {
             classify_row: 8,
             batch_max_wait: Duration::from_millis(2),
             shards: 1, // ignored: the placement's shard count wins
+            ..CoordinatorConfig::default()
         };
         let c = Coordinator::start_placed(cfg, placement, |_shard, assigned| {
             Ok(MockExecutor::new(assigned))
@@ -702,5 +846,226 @@ mod tests {
         let t = c.submit(Job::Classify { pixels: vec![1, 2] }, Quality::Precise).unwrap();
         assert!(t.wait().is_err());
         assert_eq!(c.metrics().errors(), 1);
+    }
+
+    /// Permits release moments *after* the reply is scattered; spin
+    /// briefly instead of racing the shard thread.
+    fn wait_idle(c: &Coordinator) {
+        for _ in 0..500 {
+            if c.admission().in_flight() == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("admission permits leaked: {} still held", c.admission().in_flight());
+    }
+
+    #[test]
+    fn already_expired_deadline_rejects_at_admission() {
+        let c = mock_coordinator(8, 0);
+        let r = c.submit_deadline(
+            Job::Denoise { image: Tensor::vector(vec![2]) },
+            Quality::Balanced,
+            Instant::now() - Duration::from_millis(1),
+        );
+        assert_eq!(r.err(), Some(SubmitError::Expired));
+        // refused before touching any queue: never submitted, no permit
+        assert_eq!(c.metrics().expired_at(ExpiredAt::Admission), 1);
+        assert_eq!(c.metrics().submitted(), 0);
+        assert_eq!(c.admission().in_flight(), 0);
+        // the coordinator still serves afterwards
+        let t = c
+            .submit(Job::Denoise { image: Tensor::vector(vec![4]) }, Quality::Balanced)
+            .unwrap();
+        assert_eq!(t.wait().unwrap().outputs[0].data, vec![2]);
+    }
+
+    #[test]
+    fn deadline_expiring_while_queued_is_a_typed_response_not_a_hang() {
+        // batch never fills and max_wait is long, so the entry sits
+        // queued past its deadline; the dispatcher must answer it with
+        // a typed expiry instead of shipping it to a shard (or hanging)
+        let cfg = CoordinatorConfig {
+            queue_capacity: 8,
+            batch_size: 64,
+            classify_row: 8,
+            batch_max_wait: Duration::from_millis(40),
+            shards: 1,
+            ..CoordinatorConfig::default()
+        };
+        let c = Coordinator::start(cfg, |_shard| Ok(MockExecutor::full_catalog())).unwrap();
+        let t = c
+            .submit_deadline(
+                Job::Denoise { image: Tensor::vector(vec![6]) },
+                Quality::Balanced,
+                Instant::now() + Duration::from_millis(5),
+            )
+            .unwrap();
+        let err = t.wait_timeout(Duration::from_secs(2)).unwrap_err();
+        assert_eq!(err.downcast_ref::<Rejection>(), Some(&Rejection::DeadlineExpired));
+        assert_eq!(c.metrics().expired_at(ExpiredAt::Queue), 1);
+        assert_eq!(c.metrics().completed(), 0);
+        wait_idle(&c); // the expiry released its capacity permit
+    }
+
+    #[test]
+    fn degrade_policy_reroutes_overload_to_the_lower_tier() {
+        // cap 2 with fair_share 0.5 → each key holds at most 1 permit.
+        // A slow shard keeps the first request's permit held, so the
+        // second balanced request must admit one tier down.
+        let cfg = CoordinatorConfig {
+            queue_capacity: 2,
+            batch_size: 4,
+            classify_row: 8,
+            batch_max_wait: Duration::from_millis(1),
+            shards: 1,
+            overload: OverloadPolicy::Degrade,
+            fair_share: 0.5,
+        };
+        let c = Coordinator::start(cfg, |_shard| {
+            let mut m = MockExecutor::full_catalog();
+            m.delay = Duration::from_millis(30);
+            Ok(m)
+        })
+        .unwrap();
+        let a = c
+            .submit_blocking(Job::Denoise { image: Tensor::vector(vec![8, 4]) }, Quality::Balanced)
+            .unwrap();
+        let b = c
+            .submit_blocking(Job::Denoise { image: Tensor::vector(vec![8, 4]) }, Quality::Balanced)
+            .unwrap();
+        // with both tiers' permits held, degrade falls back to shedding
+        // (it never waits) — the third submit resolves immediately
+        let e = c.submit_blocking(
+            Job::Denoise { image: Tensor::vector(vec![2]) },
+            Quality::Balanced,
+        );
+        assert_eq!(e.err(), Some(SubmitError::Shed));
+        let ra = a.wait().unwrap();
+        assert_eq!(ra.route, mk("gdf/ds16"));
+        assert!(!ra.degraded);
+        let rb = b.wait().unwrap();
+        assert_eq!(rb.route, mk("gdf/ds32"), "second request degraded one tier down");
+        assert!(rb.degraded);
+        assert_eq!(rb.outputs[0].data, vec![4, 2]);
+        assert_eq!(c.metrics().degrades(), 1);
+        assert_eq!(c.metrics().degrade_counts()[&(mk("gdf/ds16"), mk("gdf/ds32"))], 1);
+        assert_eq!(c.metrics().shed(), 1);
+    }
+
+    #[test]
+    fn reject_policy_sheds_blocking_submitters_typed() {
+        let cfg = CoordinatorConfig {
+            queue_capacity: 1,
+            batch_size: 4,
+            classify_row: 8,
+            batch_max_wait: Duration::from_millis(1),
+            shards: 1,
+            overload: OverloadPolicy::Reject,
+            fair_share: 1.0,
+        };
+        let c = Coordinator::start(cfg, |_shard| {
+            let mut m = MockExecutor::full_catalog();
+            m.delay = Duration::from_millis(30);
+            Ok(m)
+        })
+        .unwrap();
+        let a = c
+            .submit_blocking(Job::Denoise { image: Tensor::vector(vec![4]) }, Quality::Economy)
+            .unwrap();
+        let e = c.submit_blocking(
+            Job::Denoise { image: Tensor::vector(vec![4]) },
+            Quality::Economy,
+        );
+        assert_eq!(e.err(), Some(SubmitError::Shed));
+        assert_eq!(c.metrics().shed(), 1);
+        assert!(a.wait().is_ok());
+    }
+
+    #[test]
+    fn submit_all_keeps_refused_jobs_observable() {
+        // under a shedding policy, a refused mid-batch job must not
+        // discard its admitted batch-mates' tickets — it keeps its slot
+        // as a typed rejection
+        let cfg = CoordinatorConfig {
+            queue_capacity: 1,
+            batch_size: 4,
+            classify_row: 8,
+            batch_max_wait: Duration::from_millis(1),
+            shards: 1,
+            overload: OverloadPolicy::Reject,
+            fair_share: 1.0,
+        };
+        let c = Coordinator::start(cfg, |_shard| {
+            let mut m = MockExecutor::full_catalog();
+            m.delay = Duration::from_millis(20);
+            Ok(m)
+        })
+        .unwrap();
+        let batch = c
+            .submit_all((0..3).map(|i| {
+                (Job::Denoise { image: Tensor::vector(vec![i * 2]) }, Quality::Economy)
+            }))
+            .unwrap();
+        assert_eq!(batch.len(), 3, "refused jobs keep their slot");
+        let results = batch.wait_each();
+        let answered = results.iter().filter(|r| r.is_ok()).count();
+        let shed = results
+            .iter()
+            .filter(|r| {
+                r.as_ref().err().and_then(|e| e.downcast_ref::<Rejection>())
+                    == Some(&Rejection::Shed)
+            })
+            .count();
+        assert_eq!(answered, 1, "cap 1 admits exactly the first job");
+        assert_eq!(shed, 2, "the refused jobs resolve as typed sheds");
+        assert_eq!(c.metrics().shed(), 2);
+    }
+
+    #[test]
+    fn report_counters_reconcile_with_submitted() {
+        let c = mock_coordinator(16, 1);
+        // answered
+        let batch = c
+            .submit_all((0..6).map(|i| {
+                (Job::Denoise { image: Tensor::vector(vec![i * 2]) }, Quality::Economy)
+            }))
+            .unwrap();
+        batch.wait().unwrap();
+        // a routing error
+        let t = c.submit(Job::Classify { pixels: vec![1, 2] }, Quality::Precise).unwrap();
+        assert!(t.wait().is_err());
+        // a tight deadline: answered or expired, either way terminal
+        let t = c
+            .submit_deadline(
+                Job::Denoise { image: Tensor::vector(vec![2]) },
+                Quality::Economy,
+                Instant::now() + Duration::from_millis(1),
+            )
+            .unwrap();
+        let _ = t.wait_timeout(Duration::from_secs(2));
+        // an admission-stage expiry: never counted as submitted
+        let r = c.submit_deadline(
+            Job::Denoise { image: Tensor::vector(vec![2]) },
+            Quality::Economy,
+            Instant::now() - Duration::from_millis(1),
+        );
+        assert_eq!(r.err(), Some(SubmitError::Expired));
+        // every submitted request resolved in exactly one bucket
+        let m = c.metrics();
+        assert_eq!(m.submitted(), 8);
+        assert_eq!(
+            m.submitted(),
+            m.completed()
+                + m.errors()
+                + m.expired_at(ExpiredAt::Queue)
+                + m.expired_at(ExpiredAt::Shard)
+        );
+        assert_eq!(m.in_flight(), 0);
+        wait_idle(&c);
+        // ...and the report surfaces the admission counters
+        let rep = m.report();
+        assert!(rep.contains("admission: peak_in_flight="), "{rep}");
+        assert!(rep.contains("wait_p50="), "{rep}");
     }
 }

@@ -24,7 +24,9 @@
 //!   CLI parsing all share,
 //! - [`runtime`] + [`coordinator`] — the serving stack behind the
 //!   `Executor` trait: a lane-batched, sharded pipeline where whole
-//!   `ModelKey` batches are the unit of work (dynamic batcher →
+//!   `ModelKey` batches are the unit of work (deadline-aware admission
+//!   gate — in-flight cap, per-key fair share, reject/wait/degrade
+//!   overload policy → dynamic batcher →
 //!   sticky-placed `EnginePool` shard — each shard builds only its
 //!   assigned model subset, spill traffic lazily registers from the
 //!   shared cache → `Datapath::exec_batch` packing

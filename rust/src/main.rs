@@ -32,6 +32,8 @@ Pipeline:
   serve [--backend native|pjrt] [--requests N] [--image-size N]
         [--models KEY,KEY,..] [--shards N] [--replicas N]
         [--placement KEY=S+S,..] [--spill-threshold N]
+        [--overload reject|wait|degrade] [--deadline-ms N]
+        [--queue-capacity N] [--fair-share F]
         [--cache-dir DIR] [--no-cache] [--list-models] [--artifacts DIR]
                                          run the coordinator demo:
                                          native = synthesized netlists (offline),
@@ -54,6 +56,16 @@ Pipeline:
                                          receiving shard lazily registers the model).
                                          --list-models prints the catalog (build time,
                                          cached, gates, lanes, shard set) and exits.
+                                         Every submit passes the admission gate:
+                                         at most --queue-capacity requests in flight
+                                         (one model holds at most a --fair-share
+                                         fraction of them; default 1.0, or 0.5 under
+                                         degrade so lower tiers keep headroom);
+                                         --overload picks what happens past the cap —
+                                         reject sheds, wait blocks (bounded by
+                                         --deadline-ms when set), degrade retries one
+                                         quality tier lower and marks the response
+                                         degraded.
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
 
@@ -296,7 +308,11 @@ const DEFAULT_NATIVE_MODELS: [&str; 6] =
 /// Run the coordinator with a mixed workload over the chosen backend.
 fn serve_demo(args: &Args) -> Result<()> {
     use ppc::catalog::{App, ModelKey};
-    use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, Placement, Quality, Tensor};
+    use ppc::coordinator::{
+        Coordinator, CoordinatorConfig, Job, OverloadPolicy, Placement, Quality, Rejection,
+        SubmitError, Tensor,
+    };
+    use std::time::{Duration, Instant};
     let backend = args.get_or("backend", "native");
     let native = match backend {
         "native" => true,
@@ -310,6 +326,22 @@ fn serve_demo(args: &Args) -> Result<()> {
         "shards",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     );
+    // The admission front door: every submit path goes through it.
+    let overload = OverloadPolicy::parse(args.get_or("overload", "wait"))?;
+    let deadline_ms: Option<u64> = match args.get("deadline-ms") {
+        Some(v) => Some(v.parse()?),
+        None => None,
+    };
+    // The fair share is a hard reservation, so it defaults off (1.0 =
+    // cap only); the gate itself normalizes a full-pool share to 0.5
+    // under `degrade`, where lower tiers must keep headroom.
+    let base = CoordinatorConfig::default();
+    let coord_cfg = CoordinatorConfig {
+        queue_capacity: args.usize_or("queue-capacity", base.queue_capacity),
+        overload,
+        fair_share: args.f64_or("fair-share", base.fair_share),
+        ..base
+    };
 
     // The registered catalog (native knows it up front; PJRT discovers
     // it from the artifact manifest, so assume the full catalog there).
@@ -413,9 +445,15 @@ fn serve_demo(args: &Args) -> Result<()> {
              (spill past {} queued batches)",
             placement.spill_threshold()
         );
-        let coord =
-            Coordinator::with_native_placed(CoordinatorConfig::default(), placement, build)
-                .map_err(|e| anyhow!("{e:#}"))?;
+        let coord = Coordinator::with_native_placed(coord_cfg.clone(), placement, build)
+            .map_err(|e| anyhow!("{e:#}"))?;
+        // effective gate limits (the gate normalizes the per-key share
+        // under degrade), not just the configured ones
+        println!(
+            "admission: policy={overload}, cap {} in flight, {} per model",
+            coord.admission().cap(),
+            coord.admission().key_cap()
+        );
         // per-shard residency after the subset builds
         for (shard, resident) in coord.resident_keys()?.iter().enumerate() {
             println!(
@@ -430,7 +468,7 @@ fn serve_demo(args: &Args) -> Result<()> {
             bail!("--list-models needs the native backend (artifact catalogs live in the manifest)");
         }
         let dir = artifacts_dir(args);
-        Coordinator::with_artifacts(&dir, CoordinatorConfig::default())
+        Coordinator::with_artifacts(&dir, coord_cfg.clone())
             .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` first"))?
     };
 
@@ -456,7 +494,9 @@ fn serve_demo(args: &Args) -> Result<()> {
 
     let mut rng = ppc::util::prng::Rng::new(0x5E12);
     let mut tickets = Vec::new();
-    let t0 = std::time::Instant::now();
+    let mut shed = 0u64;
+    let mut expired = 0u64;
+    let t0 = Instant::now();
     for i in 0..n {
         let app = apps[i % apps.len()];
         let quals = &qualities[i % apps.len()];
@@ -475,14 +515,41 @@ fn serve_demo(args: &Args) -> Result<()> {
             },
             App::Frnn => Job::Classify { pixels: random_pixels(&mut rng, 960, 160) },
         };
-        tickets.push(coord.submit_blocking(job, quality).map_err(|e| anyhow!("{e:?}"))?);
+        let submitted = match deadline_ms {
+            Some(ms) => {
+                coord.submit_deadline(job, quality, Instant::now() + Duration::from_millis(ms))
+            }
+            None => coord.submit_blocking(job, quality),
+        };
+        match submitted {
+            Ok(t) => tickets.push(t),
+            // typed overload outcomes are part of the demo, not errors
+            Err(SubmitError::Shed) | Err(SubmitError::Busy) => shed += 1,
+            Err(SubmitError::Expired) => expired += 1,
+            Err(SubmitError::Down) => bail!("coordinator went down mid-demo"),
+        }
     }
+    let mut answered = 0u64;
+    let mut degraded = 0u64;
     for t in tickets {
-        t.wait()?;
+        match t.wait() {
+            Ok(r) => {
+                answered += 1;
+                if r.degraded {
+                    degraded += 1;
+                }
+            }
+            Err(e) => match e.downcast_ref::<Rejection>() {
+                Some(Rejection::DeadlineExpired) => expired += 1,
+                Some(Rejection::Shed) => shed += 1,
+                None => return Err(e),
+            },
+        }
     }
     let dt = t0.elapsed();
     println!(
-        "{n} requests in {:.2}s ({:.1} req/s)",
+        "{n} requests in {:.2}s ({:.1} req/s): {answered} answered \
+         ({degraded} degraded), {shed} shed, {expired} expired",
         dt.as_secs_f64(),
         n as f64 / dt.as_secs_f64()
     );

@@ -62,6 +62,7 @@ fn native_coordinator_serves_ppc_adders_end_to_end() {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
         shards: 1,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::with_native(cfg, exec).unwrap();
 
@@ -157,6 +158,7 @@ fn native_coordinator_batches_classify_requests() {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
         shards: 1,
+        ..CoordinatorConfig::default()
     };
     let coord = Coordinator::with_native(cfg, exec).unwrap();
 
@@ -299,6 +301,7 @@ fn sharded_native_coordinator_serves_from_shared_cache() {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
         shards: 2,
+        ..CoordinatorConfig::default()
     };
     let cache = dir.clone();
     let coord = Coordinator::with_native_sharded(cfg, move |_shard| {
@@ -371,6 +374,7 @@ fn placed_shards_build_subsets_and_serve_the_whole_catalog() {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
         shards: 4,
+        ..CoordinatorConfig::default()
     };
     let cache = dir.clone();
     let quant = q.clone();
@@ -511,6 +515,7 @@ fn shard_build_failure_fails_over_via_lazy_registration() {
         classify_row: 960,
         batch_max_wait: Duration::from_millis(2),
         shards: 2,
+        ..CoordinatorConfig::default()
     };
     let cache = dir.clone();
     let coord = Coordinator::with_native_placed(cfg, placement, move |shard, assigned| {
@@ -712,6 +717,258 @@ fn runtime_rejects_bad_shapes() {
     let rt = Runtime::load_app(&dir, "gdf").unwrap();
     assert!(rt.exec_i32("gdf/conv", &[&[1, 2, 3]]).is_err());
     assert!(rt.exec_i32("gdf/nope", &[&[]]).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Admission control: stress + overload-degrade property tests.
+// Gated behind `--ignored` and run as a separate release-mode CI step
+// (`cargo test --release -- --ignored stress`).
+// ---------------------------------------------------------------------
+
+/// Tentpole acceptance: many threads hammering *every* submit path
+/// (`submit`, `submit_blocking`, `submit_deadline`, `submit_all`)
+/// against a tiny `queue_capacity` and a slow shard. The observed
+/// in-flight high-water mark must never exceed the cap — the old
+/// `submit_blocking` bypass is gone — and every request must resolve
+/// (answered, shed, or expired; none lost, none hung).
+#[test]
+#[ignore = "stress: run in release via `cargo test --release -- --ignored stress`"]
+fn stress_every_submit_path_respects_the_inflight_cap() {
+    use ppc::coordinator::{ExpiredAt, MockExecutor, OverloadPolicy, Rejection, SubmitError};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::Instant;
+    const CAP: usize = 4;
+    const THREADS: usize = 8;
+    const WAVES: usize = 30;
+    let cfg = CoordinatorConfig {
+        queue_capacity: CAP,
+        batch_size: 4,
+        classify_row: 8,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Wait,
+        fair_share: 1.0,
+    };
+    let coord = Arc::new(
+        Coordinator::start(cfg, |_shard| {
+            let mut m = MockExecutor::full_catalog();
+            // slow shard: without the gate, blocking submitters would
+            // grow the shard queue far past the cap
+            m.delay = Duration::from_millis(2);
+            Ok(m)
+        })
+        .unwrap(),
+    );
+    let attempts = Arc::new(AtomicU64::new(0));
+    let answered = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let expired = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let c = coord.clone();
+        let attempts = attempts.clone();
+        let answered = answered.clone();
+        let shed = shed.clone();
+        let expired = expired.clone();
+        handles.push(std::thread::spawn(move || {
+            let img = |v: i32| Job::Denoise { image: Tensor::vector(vec![v * 2]) };
+            let settle = |r: anyhow::Result<ppc::coordinator::Response>| match r {
+                Ok(_) => answered.fetch_add(1, Ordering::Relaxed),
+                Err(e) => match e.downcast_ref::<Rejection>() {
+                    Some(Rejection::DeadlineExpired) => expired.fetch_add(1, Ordering::Relaxed),
+                    Some(Rejection::Shed) => shed.fetch_add(1, Ordering::Relaxed),
+                    None => panic!("request lost to an unexpected error: {e:#}"),
+                },
+            };
+            for w in 0..WAVES {
+                let v = (t * WAVES + w) as i32;
+                match w % 3 {
+                    0 => {
+                        // a whole batch of blocking submits
+                        attempts.fetch_add(3, Ordering::Relaxed);
+                        let batch = c
+                            .submit_all((0..3).map(|k| (img(v + k), Quality::Economy)))
+                            .expect("wait policy never sheds blocking submits");
+                        for r in batch.wait_each() {
+                            settle(r);
+                        }
+                    }
+                    1 => {
+                        // one blocking submit + one non-blocking shove
+                        attempts.fetch_add(2, Ordering::Relaxed);
+                        let ticket = c
+                            .submit_blocking(img(v), Quality::Economy)
+                            .expect("wait policy never sheds blocking submits");
+                        match c.submit(img(v), Quality::Balanced) {
+                            Ok(extra) => settle(extra.wait()),
+                            Err(SubmitError::Busy) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("unexpected submit error {e:?}"),
+                        }
+                        settle(ticket.wait());
+                    }
+                    _ => {
+                        // a deadline submit: must answer or expire, never hang
+                        attempts.fetch_add(1, Ordering::Relaxed);
+                        match c.submit_deadline(
+                            img(v),
+                            Quality::Economy,
+                            Instant::now() + Duration::from_millis(30),
+                        ) {
+                            Ok(ticket) => settle(ticket.wait()),
+                            Err(SubmitError::Expired) => {
+                                expired.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => panic!("unexpected submit error {e:?}"),
+                        }
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let attempts = attempts.load(Ordering::Relaxed);
+    let answered = answered.load(Ordering::Relaxed);
+    let shed = shed.load(Ordering::Relaxed);
+    let expired = expired.load(Ordering::Relaxed);
+    assert_eq!(
+        answered + shed + expired,
+        attempts,
+        "every request must resolve: {answered} answered + {shed} shed + {expired} expired \
+         != {attempts} attempts"
+    );
+    let m = coord.metrics();
+    assert!(
+        m.peak_in_flight() <= CAP as u64,
+        "in-flight high-water mark {} exceeded queue_capacity {CAP}",
+        m.peak_in_flight()
+    );
+    assert!(m.peak_in_flight() >= 2, "the stress load never actually concurrent?");
+    // pipeline accounting reconciles: every submitted request resolved
+    assert_eq!(answered, m.completed());
+    assert_eq!(
+        m.submitted(),
+        m.completed()
+            + m.errors()
+            + m.expired_at(ExpiredAt::Queue)
+            + m.expired_at(ExpiredAt::Shard)
+    );
+    assert_eq!(m.errors(), 0);
+    // all permits returned once the dust settles
+    for _ in 0..500 {
+        if coord.admission().in_flight() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(coord.admission().in_flight(), 0, "admission permits leaked");
+}
+
+/// Degrade-policy property: under a saturating balanced-tier workload,
+/// every response served from the degraded tier is bit-exact with a
+/// *direct* `Executor::exec` at that degraded quality's key — the
+/// overload path bends quality, never correctness.
+#[test]
+#[ignore = "stress: run in release via `cargo test --release -- --ignored stress`"]
+fn stress_degrade_overload_serves_bit_exact_lower_tiers() {
+    use ppc::coordinator::{Executor, OverloadPolicy, Rejection, SubmitError};
+    use ppc::runtime::NativeExecutor;
+    use std::sync::{mpsc, Arc};
+    let dir = std::env::temp_dir().join(format!("ppc_degrade_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    // the reference executor doubles as the cache warmer, so the
+    // coordinator shard below builds warm
+    let reference = NativeExecutor::new()
+        .with_cache(&dir)
+        .unwrap()
+        .register(mk("gdf/ds16"))
+        .unwrap()
+        .register(mk("gdf/ds32"))
+        .unwrap();
+    let cfg = CoordinatorConfig {
+        queue_capacity: 2,
+        batch_size: 4,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Degrade,
+        fair_share: 0.5, // one key holds at most 1 of the 2 permits
+    };
+    let cache = dir.clone();
+    let coord = Arc::new(
+        Coordinator::with_native_sharded(cfg, move |_shard| {
+            NativeExecutor::new()
+                .with_cache(&cache)?
+                .register(mk("gdf/ds16"))?
+                .register(mk("gdf/ds32"))
+        })
+        .unwrap(),
+    );
+    let (sink, results) = mpsc::channel();
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let c = coord.clone();
+        let sink = sink.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xD16 + t);
+            for _ in 0..32 {
+                let (h, w) = (4 + rng.below(8) as usize, 4 + rng.below(8) as usize);
+                let img = Image {
+                    width: w,
+                    height: h,
+                    pixels: (0..h * w).map(|_| rng.below(256) as u8).collect(),
+                };
+                // every request asks for Balanced; overload degrades
+                match c.submit_blocking(Job::Denoise { image: img.to_tensor() }, Quality::Balanced)
+                {
+                    Ok(ticket) => match ticket.wait() {
+                        Ok(r) => sink.send((img.clone(), r)).unwrap(),
+                        Err(e) => match e.downcast_ref::<Rejection>() {
+                            Some(_) => {}
+                            None => panic!("unexpected serve error: {e:#}"),
+                        },
+                    },
+                    Err(SubmitError::Shed) => {}
+                    Err(e) => panic!("unexpected submit error {e:?}"),
+                }
+            }
+        }));
+    }
+    drop(sink);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut served = 0usize;
+    let mut degraded_seen = 0usize;
+    while let Ok((img, r)) = results.recv() {
+        served += 1;
+        assert!(
+            r.route == mk("gdf/ds16") || r.route == mk("gdf/ds32"),
+            "unexpected route {}",
+            r.route
+        );
+        assert_eq!(r.degraded, r.route == mk("gdf/ds32"), "degraded flag names the route");
+        if r.degraded {
+            degraded_seen += 1;
+        }
+        // the property: whatever tier answered, the response is
+        // bit-exact with a direct exec at that tier's key
+        let want = reference.exec(r.route, &[img.to_tensor()]).unwrap();
+        assert_eq!(r.outputs, want, "served {} response diverged from direct exec", r.route);
+    }
+    assert!(served > 0, "saturated pool served nothing");
+    assert!(
+        degraded_seen >= 1,
+        "a saturating balanced workload over cap 2 / share 1 never degraded \
+         ({served} served, {} metric degrades)",
+        coord.metrics().degrades()
+    );
+    assert_eq!(coord.metrics().errors(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
