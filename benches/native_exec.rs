@@ -1,11 +1,14 @@
 //! Native-execution benchmarks — the tentpole's acceptance numbers:
 //!
 //! 1. exhaustive verification of a composed 8×8 PPC multiplier netlist,
-//!    scalar `Netlist::eval` walk vs the 64-way bit-parallel `eval64`
-//!    path (target: ≥ 20× speedup),
+//!    scalar `Netlist::eval` walk vs the bit-parallel compiled-tape
+//!    batch path (target: ≥ 20× speedup),
 //! 2. **scalar-vs-lane-batched serving**: a 64-request GDF batch
 //!    through the per-request scalar netlist walk vs the pooled
-//!    `Datapath::exec_batch` lane path (target: ≥ 8× throughput),
+//!    `Datapath::exec_batch` compiled-tape lane path (target: ≥ 8×
+//!    throughput), plus the same comparison at a 256-request batch
+//!    that fills the full 256-lane `[u64; 4]` word in one tape pass
+//!    (lane occupancy lands on the JSON record),
 //! 3. the coordinator serving a batch through `NativeExecutor` with no
 //!    XLA/Python anywhere on the path,
 //! 4. cold start vs warm start: registering a model from scratch
@@ -24,12 +27,15 @@
 //! Run: `cargo bench --bench native_exec` (PPC_BENCH_QUICK=1 shrinks
 //! budgets). Writes a machine-readable `BENCH_native_exec.json`
 //! summary (override the path with PPC_BENCH_JSON; set it empty to
-//! skip) so future PRs can track the serving-throughput trajectory.
+//! skip) and appends the same record as one line to the committed
+//! `BENCH_history.jsonl` regression baseline (PPC_BENCH_HISTORY
+//! overrides; empty skips) so future PRs can track the
+//! serving-throughput trajectory.
 
 use ppc::apps::frnn::{dataset, net};
 use ppc::apps::gdf::GdfHardware;
 use ppc::apps::image::{synthetic_photo, Image};
-use ppc::catalog::{Datapath, ModelKey, PpcConfig, Tensor};
+use ppc::catalog::{Datapath, ModelKey, PpcConfig, Tensor, LANES};
 use ppc::coordinator::{
     BatchItem, BatchJob, Coordinator, CoordinatorConfig, EnginePool, Job, Metrics,
     OverloadPolicy, Placement, Quality, SubmitError,
@@ -135,6 +141,32 @@ fn main() {
         } else {
             "(below the 8x target!)"
         }
+    );
+
+    // -- 2b. the same comparison at the full 256-lane word: a batch
+    // that fills every lane of the `[u64; 4]` compiled-tape pass
+    let imgs256: Vec<Image> =
+        (0..LANES).map(|i| synthetic_photo(16, 16, 1000 + i as u64)).collect();
+    let batch256: Vec<Vec<Tensor>> = imgs256.iter().map(|im| vec![im.to_tensor()]).collect();
+    let serve_scalar_256 = b.run("gdf serving: 256 requests, scalar per-request walk", || {
+        for img in &imgs256 {
+            black_box(hw.filter_scalar(img));
+        }
+    });
+    let serve_batched_256 = b.run("gdf serving: 256 requests, lane-batched exec_batch", || {
+        black_box(hw.exec_batch(&batch256).unwrap());
+    });
+    let batched_out256 = hw.exec_batch(&batch256).unwrap();
+    for (i, img) in imgs256.iter().enumerate() {
+        assert_eq!(batched_out256[i][0], hw.filter_scalar(img).to_tensor(), "request {i}");
+    }
+    let serving_speedup_256 =
+        serve_scalar_256.summary.mean / serve_batched_256.summary.mean.max(1e-12);
+    let lane_occupancy_256 = ppc::coordinator::metrics::occupancy(LANES);
+    println!(
+        "\nlane-batched serving speedup on the 256-request GDF batch: \
+         {serving_speedup_256:.1}x at {:.0}% occupancy of the {LANES}-lane word",
+        lane_occupancy_256 * 100.0
     );
 
     // -- 3. coordinator batch through the native backend
@@ -335,6 +367,8 @@ fn main() {
     let mut metrics: Vec<(&str, f64)> = vec![
         ("bit_parallel_verify_speedup", verify_speedup),
         ("lane_batched_serving_speedup_64req_gdf", serving_speedup),
+        ("lane_batched_serving_speedup_256req_gdf", serving_speedup_256),
+        ("lane_occupancy_256req_gdf", lane_occupancy_256),
         ("warm_cache_speedup", cache_speedup),
         ("placement_spill_rate", placement_spill_rate),
         ("admission_wait_p50_us", admission_wait_p50_us),
@@ -350,6 +384,8 @@ fn main() {
             &errs,
             &serve_scalar,
             &serve_batched,
+            &serve_scalar_256,
+            &serve_batched_256,
             &e2e_denoise,
             &e2e_classify,
             &cold,
@@ -360,4 +396,5 @@ fn main() {
         &metrics,
     );
     bench::write_summary("BENCH_native_exec.json", &json);
+    bench::append_history("BENCH_history.jsonl", &json);
 }

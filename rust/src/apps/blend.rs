@@ -113,7 +113,8 @@ pub fn blend_signal_sets(cfg: &BlendConfig) -> BlendSignals {
 
 /// Netlist-backed IB datapath: the two composed 8×8 PPC multipliers and
 /// the output adder of Fig. 7 as synthesized units, executed
-/// bit-parallel (64 pixel pairs per pass). Bit-exact with
+/// bit-parallel ([`crate::catalog::LANES`] pixel pairs per
+/// compiled-tape pass). Bit-exact with
 /// [`blend_pixel`] under the config's preprocessing.
 pub struct BlendHardware {
     pub cfg: BlendConfig,
@@ -154,19 +155,20 @@ impl BlendHardware {
         self.m1.num_gates() + self.m2.num_gates() + self.add.num_gates()
     }
 
-    /// Blend up to 64 pixel pairs through the netlists. With a `natural`
+    /// Blend up to [`crate::catalog::LANES`] pixel pairs through the
+    /// netlists. With a `natural`
     /// config the coefficient restriction means `alpha.0` must be in
     /// `[0, 127]` (the Table-2 natural-sparsity contract). A thin
     /// fixed-capacity wrapper over [`BlendHardware::blend_many`].
     pub fn blend_batch(&self, p1: &[u8], p2: &[u8], alpha: Alpha, out: &mut [u8]) {
         let n = p1.len();
-        assert!(n <= 64 && p2.len() == n && out.len() >= n);
+        assert!(n <= crate::catalog::LANES && p2.len() == n && out.len() >= n);
         let pixels = self.blend_many(&[(p1, p2, alpha)]);
         out[..n].copy_from_slice(&pixels[0]);
     }
 
     /// Blend two flat pixel buffers of equal length (chunks the work
-    /// into 64-pixel netlist passes).
+    /// into [`crate::catalog::LANES`]-pixel tape passes).
     pub fn blend_flat(&self, p1: &[u8], p2: &[u8], alpha: Alpha) -> Vec<u8> {
         assert_eq!(p1.len(), p2.len());
         self.blend_many(&[(p1, p2, alpha)])
@@ -176,7 +178,7 @@ impl BlendHardware {
 
     /// Blend a whole batch of requests — each `(p1, p2, alpha)` with
     /// its own blending ratio — through one pooled pixel stream: the
-    /// lane-batched serving path. Every 64-lane multiplier pass mixes
+    /// lane-batched serving path. Every 256-lane multiplier pass mixes
     /// pixels (and coefficients) from as many requests as fit, so small
     /// images stop wasting tail lanes per request. The stream is
     /// processed in bounded segments ([`SEG_PIXELS`] pixels) so huge
@@ -249,7 +251,7 @@ impl BlendHardware {
     }
 }
 
-/// Pixel pairs per pooled netlist segment: 256 full 64-lane passes,
+/// Pixel pairs per pooled netlist segment: 64 full 256-lane passes,
 /// bounding lane buffers and truncated-product intermediates no matter
 /// how large the request images are.
 const SEG_PIXELS: usize = 16 * 1024;
@@ -299,7 +301,7 @@ impl Datapath for BlendHardware {
     }
 
     /// Lane-batched path: every request's pixels (each with its own
-    /// alpha) share the same 64-lane multiplier passes
+    /// alpha) share the same 256-lane multiplier passes
     /// ([`BlendHardware::blend_many`]). Bit-exact with per-request
     /// [`Datapath::exec`].
     fn exec_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {

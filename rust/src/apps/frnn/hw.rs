@@ -92,7 +92,8 @@ pub fn mac_flat_literals(cfg: &MacConfig) -> u64 {
 /// Netlist-backed FRNN forward path: each layer's MAC multiplier is a
 /// synthesized composed 8×8 PPC [`MultUnit8`] (layer 1 sees preprocessed
 /// pixels, layer 2 the full-range u8 activations; both see preprocessed
-/// weight bytes), executed bit-parallel 64 MACs per pass. The wide
+/// weight bytes), executed bit-parallel [`crate::catalog::LANES`] MACs
+/// per compiled-tape pass. The wide
 /// accumulator stays precise — software `i64`, as the paper keeps the
 /// accumulation adder conventional. Bit-exact with
 /// [`super::net::forward_fx`].
@@ -161,10 +162,10 @@ impl FrnnHardware {
     fn dot(&self, mult: &MultUnit8, xs: &[u32], ws: &[u32]) -> i64 {
         debug_assert_eq!(xs.len(), ws.len());
         let mut acc = 0i64;
-        let mut out = [0u64; 64];
+        let mut out = [0u64; crate::catalog::LANES];
         let mut i = 0;
         while i < xs.len() {
-            let end = (i + 64).min(xs.len());
+            let end = (i + crate::catalog::LANES).min(xs.len());
             mult.eval_batch(&xs[i..end], &ws[i..end], &mut out);
             for (j, &u) in out[..end - i].iter().enumerate() {
                 let (x, w) = (xs[i + j] as i64, ws[i + j]);
@@ -177,10 +178,10 @@ impl FrnnHardware {
 
     /// Forward many faces through the synthesized multipliers in one
     /// pooled pass — the lane-batched serving path. Layer 1 already
-    /// fills all 64 lanes per face (960-pixel dots), but layer 2's
-    /// 40-element dots waste a third of every pass when run per face;
-    /// here the hidden activations of *all* faces share the layer-2
-    /// multiplier lanes. Bit-exact with per-face
+    /// fills the multiplier lanes per face (960-pixel dots), but
+    /// layer 2's 40-element dots leave most of every pass idle when run
+    /// per face; here the hidden activations of *all* faces share the
+    /// layer-2 multiplier lanes. Bit-exact with per-face
     /// [`FrnnHardware::forward`].
     pub fn forward_many(&self, rows: &[&[u8]]) -> Vec<[u8; NUM_OUTPUTS]> {
         // layer 1: per face (already at full lane occupancy)

@@ -97,7 +97,8 @@ pub fn gdf_signal_sets(input: &ValueSet) -> GdfSignals {
 }
 
 /// Netlist-backed GDF datapath: the eight Fig. 5 adders as synthesized
-/// PPC [`AdderUnit`]s, executed bit-parallel (64 windows per pass).
+/// PPC [`AdderUnit`]s, executed bit-parallel
+/// ([`crate::catalog::LANES`] windows per compiled-tape pass).
 /// Bit-exact with [`gdf_filter`] under the same preprocessing — the
 /// execution engine behind the native serving backend.
 pub struct GdfHardware {
@@ -148,7 +149,7 @@ impl GdfHardware {
 
     /// Run an arbitrarily long stream of preprocessed windows through
     /// the tree; `p[k]` holds signal `A{k+1}` of every window. Each
-    /// adder pools the stream into 64-lane netlist passes
+    /// adder pools the stream into [`crate::catalog::LANES`]-lane tape passes
     /// ([`AdderUnit::add_many`]), so lane occupancy stays full except
     /// for the single global tail chunk.
     fn window_tree(&self, p: &[Vec<u32>; 9]) -> Vec<u32> {
@@ -177,7 +178,7 @@ impl GdfHardware {
 
     /// Filter a whole batch of images (shapes may differ) through one
     /// pooled window stream: the lane-batched serving path. Windows
-    /// from every image share the same 64-lane netlist passes, so a
+    /// from every image share the same 256-lane tape passes, so a
     /// batch of small images costs barely more than its total pixel
     /// count — tail lanes go idle once per *segment*, not once per
     /// request. The stream is processed in bounded segments
@@ -256,7 +257,7 @@ impl GdfHardware {
     }
 }
 
-/// Windows per pooled netlist segment: 256 full 64-lane passes, with
+/// Windows per pooled netlist segment: 64 full 256-lane passes, with
 /// lane buffers and tree intermediates bounded to a few hundred KB no
 /// matter how large the request images are.
 const SEG_WINDOWS: usize = 16 * 1024;
@@ -295,7 +296,7 @@ impl Datapath for GdfHardware {
     }
 
     /// Lane-batched path: every request's windows share the same
-    /// 64-lane netlist passes ([`GdfHardware::filter_many`]). Bit-exact
+    /// 256-lane tape passes ([`GdfHardware::filter_many`]). Bit-exact
     /// with per-request [`Datapath::exec`].
     fn exec_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
         let mut imgs = Vec::with_capacity(batch.len());
@@ -505,6 +506,42 @@ mod tests {
                     "{name}: request {i} diverged across the segment boundary"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn lane_word_boundary_is_bit_exact_at_255_256_257_requests() {
+        // the 256-wide lane word chunks the pooled window stream every
+        // LANES windows inside add_many; request counts one short of,
+        // exactly at, and one past that boundary must stay bit-exact
+        // with the per-request sim (the 256-lane mirror of the 16K
+        // segment-boundary test above)
+        use crate::catalog::LANES;
+        let chain = Chain::of(Preproc::Ds(32));
+        let hw = GdfHardware::synthesize(&ValueSet::full(8), &chain, Objective::Area);
+        assert_eq!(LANES, 256, "test is tuned to the lane width");
+        for n in [255usize, 256, 257] {
+            // n single-window (1×1) requests: window k comes from
+            // request k, so the lane chunk cut falls between requests
+            let imgs: Vec<Image> = (0..n).map(|i| synthetic_photo(1, 1, 31 + i as u64)).collect();
+            let batch: Vec<Vec<Tensor>> = imgs.iter().map(|im| vec![im.to_tensor()]).collect();
+            let got = hw.exec_batch(&batch).unwrap();
+            for (i, img) in imgs.iter().enumerate() {
+                assert_eq!(
+                    got[i][0],
+                    gdf_filter(img, &chain).to_tensor(),
+                    "n={n}: request {i} diverged across the lane-word boundary"
+                );
+            }
+        }
+        // and a cut that falls mid-request: 255 single windows then a
+        // 2×2 image whose four windows straddle the 256th lane
+        let mut imgs: Vec<Image> = (0..255).map(|i| synthetic_photo(1, 1, 97 + i as u64)).collect();
+        imgs.push(synthetic_photo(2, 2, 404));
+        let batch: Vec<Vec<Tensor>> = imgs.iter().map(|im| vec![im.to_tensor()]).collect();
+        let got = hw.exec_batch(&batch).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            assert_eq!(got[i][0], gdf_filter(img, &chain).to_tensor(), "mid-request cut: {i}");
         }
     }
 

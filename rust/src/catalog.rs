@@ -300,10 +300,13 @@ impl Tensor {
     }
 }
 
-/// Word width of the bit-sliced netlist evaluator: one `u64` lane per
-/// signal bit carries up to this many concurrent evaluations, so it is
-/// also the natural request-batch capacity of one netlist pass.
-pub const LANES: usize = 64;
+/// Lane width of the compiled bit-sliced netlist evaluator: one
+/// `[u64; 4]` lane word per signal bit carries up to this many
+/// concurrent evaluations per tape pass
+/// ([`crate::logic::compiled::CompiledNetlist`]), so it is also the
+/// natural request-batch capacity of one netlist pass. Batches of ≤ 64
+/// automatically drop to the narrow `u64` word.
+pub const LANES: usize = 256;
 
 /// A servable application datapath built from synthesized PPC
 /// netlists: one shape-carrying request in, shape-carrying responses
@@ -323,9 +326,10 @@ pub trait Datapath: Send + Sync {
     ///
     /// The default implementation loops over [`Datapath::exec`]; the
     /// netlist-backed hardwares override it to pool the work of up to
-    /// [`LANES`] concurrent requests into the 64-way bit-parallel
-    /// evaluator — the serving-side analogue of the paper's hardware
-    /// parallelism, and the hot path of the sharded engine pool.
+    /// [`LANES`] concurrent requests into the 256-wide bit-parallel
+    /// compiled-tape evaluator — the serving-side analogue of the
+    /// paper's hardware parallelism, and the hot path of the sharded
+    /// engine pool.
     ///
     /// # Example
     ///

@@ -11,7 +11,7 @@
 //!
 //! The unit of work is a [`BatchJob`] — a whole `ModelKey` batch with
 //! one reply channel per request. The receiving shard runs the batch
-//! through [`Executor::exec_batch`] (the 64-way lane-packed path on
+//! through [`Executor::exec_batch`] (the 256-lane compiled-tape path on
 //! the native backend), records per-shard/per-key batch metrics, and
 //! scatters the per-request responses itself, so no coordinator thread
 //! ever blocks on model execution.
@@ -136,6 +136,64 @@ impl Executor for crate::runtime::Runtime {
                 _ => Tensor::vector(data),
             })
             .collect())
+    }
+
+    /// Whole-batch execution against the AOT artifacts: when every
+    /// request in a row-independent (frnn) batch is a single `[r_i, C]`
+    /// tensor against the artifact's fixed `[B, C]` port and the rows
+    /// fit (`Σ r_i <= B`), the rows are packed contiguously into ONE
+    /// padded execution and each `[B, X]` output is sliced back per
+    /// request — one device dispatch for the whole batch instead of one
+    /// padded dispatch per request (the PJRT analogue of the native
+    /// backend's 256-lane tape pass). Zero-row padding is only sound
+    /// for row-independent models (see [`Executor::exec`] above), so
+    /// anything else falls back to the default per-request loop.
+    fn exec_batch(&self, key: ModelKey, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let route = key.to_string();
+        let port = self.meta(&route).and_then(|m| {
+            if m.inputs.len() == 1 && m.inputs[0].dims.len() == 2 {
+                Some((m.inputs[0].dims[0], m.inputs[0].dims[1]))
+            } else {
+                None
+            }
+        });
+        if let (App::Frnn, Some((b, c)), false) = (key.app, port, batch.is_empty()) {
+            // total row count, or None if any request breaks the
+            // single-[r, C]-tensor contract
+            let rows: Option<usize> = batch.iter().try_fold(0usize, |acc, ins| {
+                if ins.len() == 1 && ins[0].shape.len() == 2 && ins[0].shape[1] == c {
+                    Some(acc + ins[0].shape[0])
+                } else {
+                    None
+                }
+            });
+            if let Some(total) = rows {
+                if total <= b {
+                    let mut flat = Vec::with_capacity(b * c);
+                    for ins in batch {
+                        flat.extend_from_slice(&ins[0].data);
+                    }
+                    flat.resize(b * c, 0);
+                    let outs = self.exec_i32(&route, &[&flat])?;
+                    let mut results: Vec<Vec<Tensor>> =
+                        batch.iter().map(|_| Vec::new()).collect();
+                    for data in outs {
+                        let out_row = data.len() / b;
+                        let mut off = 0usize;
+                        for (i, ins) in batch.iter().enumerate() {
+                            let r = ins[0].shape[0];
+                            results[i].push(Tensor {
+                                shape: vec![r, out_row],
+                                data: data[off * out_row..(off + r) * out_row].to_vec(),
+                            });
+                            off += r;
+                        }
+                    }
+                    return Ok(results);
+                }
+            }
+        }
+        batch.iter().map(|inputs| self.exec(key, inputs)).collect()
     }
 
     fn keys(&self) -> Vec<ModelKey> {

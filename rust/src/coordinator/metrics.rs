@@ -31,8 +31,8 @@ pub enum ExpiredAt {
 pub const WAIT_SAMPLES: usize = 4096;
 
 /// Fraction of the bit-slice lanes a batch of `size` requests fills,
-/// over the netlist passes it actually needs: a 65-request batch takes
-/// two 64-lane words and fills 65/128 of them — not 100%.
+/// over the compiled-tape passes it actually needs: a 257-request batch
+/// takes two 256-lane words and fills 257/512 of them — not 100%.
 pub fn occupancy(size: usize) -> f64 {
     if size == 0 {
         return 0.0;
@@ -59,7 +59,7 @@ pub struct BatchSummary {
     pub batches: usize,
     /// Mean requests per batch.
     pub mean_size: f64,
-    /// Mean fraction of the needed 64-lane words each batch fills.
+    /// Mean fraction of the needed 256-lane words each batch fills.
     pub lane_occupancy: f64,
     /// Batches that degraded to the per-request retry path.
     pub degraded: usize,
@@ -351,7 +351,7 @@ impl Metrics {
 
     /// Mean lane occupancy over every executed batch: each batch fills
     /// `size / (ceil(size/LANES)·LANES)` of the lane words it needs, so
-    /// a 65-request batch reports 65/128 — not a clamped 100%.
+    /// a 257-request batch reports 257/512 — not a clamped 100%.
     pub fn lane_occupancy(&self) -> f64 {
         let m = self.inner.lock().unwrap();
         let (mut n, mut total) = (0usize, 0.0f64);
@@ -506,7 +506,7 @@ mod tests {
         assert_eq!(m.completed(), 2);
         assert_eq!(m.rejected(), 1);
         assert_eq!(m.mean_batch_size(), 8.0);
-        assert!((m.lane_occupancy() - 8.0 / 64.0).abs() < 1e-12);
+        assert!((m.lane_occupancy() - 8.0 / 256.0).abs() < 1e-12);
         let sums = m.latency_summaries();
         assert!((sums[&mk("gdf/conv")].mean - 0.003).abs() < 1e-9);
         assert!(m.report().contains("gdf/conv"));
@@ -514,26 +514,26 @@ mod tests {
 
     #[test]
     fn occupancy_counts_the_lane_words_a_batch_actually_needs() {
-        // size / (ceil(size/64)·64): a 65-request batch takes two lane
-        // words and fills 65/128, never a clamped 100%
+        // size / (ceil(size/256)·256): a 257-request batch takes two
+        // lane words and fills 257/512, never a clamped 100%
         assert_eq!(occupancy(0), 0.0);
-        assert!((occupancy(1) - 1.0 / 64.0).abs() < 1e-12);
-        assert!((occupancy(64) - 1.0).abs() < 1e-12);
-        assert!((occupancy(65) - 65.0 / 128.0).abs() < 1e-12);
-        assert!((occupancy(128) - 1.0).abs() < 1e-12);
-        assert!((occupancy(129) - 129.0 / 192.0).abs() < 1e-12);
+        assert!((occupancy(1) - 1.0 / 256.0).abs() < 1e-12);
+        assert!((occupancy(256) - 1.0).abs() < 1e-12);
+        assert!((occupancy(257) - 257.0 / 512.0).abs() < 1e-12);
+        assert!((occupancy(512) - 1.0).abs() < 1e-12);
+        assert!((occupancy(513) - 513.0 / 768.0).abs() < 1e-12);
 
         // the same formula backs the aggregate and per-(shard,key) views
         let m = Metrics::new();
-        for size in [1usize, 64, 65, 128, 129] {
+        for size in [1usize, 256, 257, 512, 513] {
             m.record_batch(0, mk("gdf/ds16"), size, Duration::from_millis(1), false);
         }
         let want =
-            [1usize, 64, 65, 128, 129].iter().map(|&s| occupancy(s)).sum::<f64>() / 5.0;
+            [1usize, 256, 257, 512, 513].iter().map(|&s| occupancy(s)).sum::<f64>() / 5.0;
         assert!((m.lane_occupancy() - want).abs() < 1e-12);
         let b = &m.batch_summaries()[&(0, mk("gdf/ds16"))];
         assert!((b.lane_occupancy - want).abs() < 1e-12);
-        assert!(b.lane_occupancy < 1.0, "65/129-sized batches are not 100% occupied");
+        assert!(b.lane_occupancy < 1.0, "257/513-sized batches are not 100% occupied");
     }
 
     #[test]
@@ -636,7 +636,7 @@ mod tests {
         assert_eq!(b.len(), 3);
         assert_eq!(b[&(0, mk("gdf/ds16"))].batches, 1);
         assert_eq!(b[&(1, mk("gdf/ds16"))].mean_size, 8.0);
-        assert!((b[&(1, mk("gdf/ds16"))].lane_occupancy - 0.125).abs() < 1e-12);
+        assert!((b[&(1, mk("gdf/ds16"))].lane_occupancy - 8.0 / 256.0).abs() < 1e-12);
         assert_eq!(m.peak_queue_depths()[&1], 3);
         // mean over all batches: (4 + 8 + 2) / 3
         assert!((m.mean_batch_size() - 14.0 / 3.0).abs() < 1e-12);

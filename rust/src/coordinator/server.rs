@@ -12,7 +12,7 @@
 //! type queues in the [`Batcher`] under its routed key, and due
 //! batches are routed whole to the least-loaded [`EnginePool`] shard,
 //! whose lane-batched [`crate::catalog::Datapath::exec_batch`] path
-//! packs the requests into the 64-way bit-sliced netlist evaluator.
+//! packs the requests into 256-lane compiled-tape netlist passes.
 //! The dispatcher never blocks on model execution; shards scatter the
 //! per-request replies themselves.
 

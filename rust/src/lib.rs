@@ -10,8 +10,9 @@
 //! - [`logic`] — the full synthesis substrate (truth tables, ISOP +
 //!   Espresso-style two-level minimization, algebraic factoring, AIG,
 //!   technology mapping onto a 90 nm-flavored cell library, gate-level
-//!   netlists with area/delay/power reports and a 64-way bit-parallel
-//!   evaluator),
+//!   netlists with area/delay/power reports, a bit-parallel interpreted
+//!   evaluator, and a levelized compiled tape serving up to 256 lanes
+//!   per pass),
 //! - `ppc` — the paper's contribution (DS/TH preprocessings, PPC block
 //!   generators, closed-form + exhaustive error analysis, the Fig. 3
 //!   design flow, and executable synthesized units),

@@ -1,0 +1,739 @@
+//! Compiled netlist evaluation: a levelized SIMD instruction tape.
+//!
+//! [`super::netlist::Netlist::eval64`] interprets the netlist on every
+//! pass — it chases `lib` cell lookups and re-derives each gate's
+//! sum-of-minterms per evaluation, over a single 64-bit lane word.
+//! [`CompiledNetlist`] specializes that work away once, at registration
+//! time:
+//!
+//! - **Flat tape.** Gates are lowered to a dense instruction array in
+//!   topological *level* order (level = longest input distance; the
+//!   schedule a hardware pipeline would use). Instruction `i` writes
+//!   value slot `first_gate_slot + i`; there is no indirection left to
+//!   resolve at run time.
+//! - **Specialized ops.** Each gate is classified by its masked truth
+//!   table into a direct boolean op (NOT/AND2/OR2/NAND2/NOR2/XOR2/…)
+//!   where possible; everything else falls back to a *precomputed*
+//!   minterm scan ([`GeneralOp`]) whose invert-the-smaller-half decision
+//!   and scan list were resolved at compile time.
+//! - **Wide lanes.** The tape is generic over [`LaneWord`]: the same
+//!   instruction stream runs 64 patterns per pass on `u64` or 256 on
+//!   `[u64; 4]` — plain bitwise word algebra, no intrinsics, no deps.
+//!
+//! The interpreted [`Netlist::eval`]/[`Netlist::eval64`] walks stay as
+//! the oracle: the property tests below pin the compiled tape bit-exact
+//! against them (and [`Aig::eval64`] for [`CompiledNetlist::from_aig`]).
+
+use super::aig::{self, Aig, Node};
+use super::netlist::{Driver, Netlist, CONSECUTIVE_PATTERNS};
+
+/// One SIMD lane word: `BITS` concurrent evaluation lanes carried as
+/// `WORDS` 64-bit machine words. Implemented for `u64` (64 lanes) and
+/// `[u64; 4]` (256 lanes); arrays cannot overload `&`/`|`/`^`/`!`, so
+/// the ops are trait methods with plain bitwise impls.
+pub trait LaneWord: Copy + PartialEq + Send + Sync {
+    /// Concurrent patterns per pass (64 × `WORDS`).
+    const BITS: usize;
+    /// 64-bit machine words per lane word.
+    const WORDS: usize;
+    const ZERO: Self;
+    const ONES: Self;
+    fn and(self, o: Self) -> Self;
+    fn or(self, o: Self) -> Self;
+    fn xor(self, o: Self) -> Self;
+    fn not(self) -> Self;
+    /// The `i`-th 64-bit word (lanes `64·i .. 64·i + 64`).
+    fn word(self, i: usize) -> u64;
+    fn set_word(&mut self, i: usize, w: u64);
+}
+
+impl LaneWord for u64 {
+    const BITS: usize = 64;
+    const WORDS: usize = 1;
+    const ZERO: u64 = 0;
+    const ONES: u64 = u64::MAX;
+    #[inline(always)]
+    fn and(self, o: u64) -> u64 {
+        self & o
+    }
+    #[inline(always)]
+    fn or(self, o: u64) -> u64 {
+        self | o
+    }
+    #[inline(always)]
+    fn xor(self, o: u64) -> u64 {
+        self ^ o
+    }
+    #[inline(always)]
+    fn not(self) -> u64 {
+        !self
+    }
+    #[inline(always)]
+    fn word(self, i: usize) -> u64 {
+        debug_assert_eq!(i, 0);
+        self
+    }
+    #[inline(always)]
+    fn set_word(&mut self, i: usize, w: u64) {
+        debug_assert_eq!(i, 0);
+        *self = w;
+    }
+}
+
+impl LaneWord for [u64; 4] {
+    const BITS: usize = 256;
+    const WORDS: usize = 4;
+    const ZERO: [u64; 4] = [0; 4];
+    const ONES: [u64; 4] = [u64::MAX; 4];
+    #[inline(always)]
+    fn and(self, o: [u64; 4]) -> [u64; 4] {
+        [self[0] & o[0], self[1] & o[1], self[2] & o[2], self[3] & o[3]]
+    }
+    #[inline(always)]
+    fn or(self, o: [u64; 4]) -> [u64; 4] {
+        [self[0] | o[0], self[1] | o[1], self[2] | o[2], self[3] | o[3]]
+    }
+    #[inline(always)]
+    fn xor(self, o: [u64; 4]) -> [u64; 4] {
+        [self[0] ^ o[0], self[1] ^ o[1], self[2] ^ o[2], self[3] ^ o[3]]
+    }
+    #[inline(always)]
+    fn not(self) -> [u64; 4] {
+        [!self[0], !self[1], !self[2], !self[3]]
+    }
+    #[inline(always)]
+    fn word(self, i: usize) -> u64 {
+        self[i]
+    }
+    #[inline(always)]
+    fn set_word(&mut self, i: usize, w: u64) {
+        self[i] = w;
+    }
+}
+
+/// Transpose up to [`LaneWord::BITS`] input minterms into per-input
+/// lanes (lane `i`, bit `j` = bit `i` of `minterms[j]`) — the wide
+/// generalization of [`super::netlist::pack_lanes`].
+pub fn pack_lanes_w<W: LaneWord>(minterms: &[u64], num_inputs: usize) -> Vec<W> {
+    debug_assert!(minterms.len() <= W::BITS);
+    let mut lanes = vec![W::ZERO; num_inputs];
+    for (j, &m) in minterms.iter().enumerate() {
+        let (wi, bj) = (j / 64, j % 64);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let w = lane.word(wi) | (((m >> i) & 1) << bj);
+            lane.set_word(wi, w);
+        }
+    }
+    lanes
+}
+
+/// Inverse of [`pack_lanes_w`]: gather packed per-pattern values from
+/// output lanes (`count` ≤ [`LaneWord::BITS`]).
+pub fn unpack_lanes_w<W: LaneWord>(lanes: &[W], count: usize) -> Vec<u64> {
+    debug_assert!(count <= W::BITS);
+    (0..count)
+        .map(|j| {
+            let (wi, bj) = (j / 64, j % 64);
+            lanes
+                .iter()
+                .enumerate()
+                .fold(0u64, |acc, (i, &lane)| acc | (((lane.word(wi) >> bj) & 1) << i))
+        })
+        .collect()
+}
+
+/// Input lanes for the [`LaneWord::BITS`] consecutive minterms starting
+/// at `base` (which must be `BITS`-aligned) — the wide generalization of
+/// [`super::netlist::consecutive_lanes`]. Inputs 0–5 repeat the standard
+/// interleave pattern in every word; input `i ≥ 6` splats its bit of the
+/// word's own base minterm per word.
+pub fn consecutive_lanes_w<W: LaneWord>(base: u64, num_inputs: usize) -> Vec<W> {
+    debug_assert_eq!(base % W::BITS as u64, 0);
+    (0..num_inputs)
+        .map(|i| {
+            let mut lane = W::ZERO;
+            for wi in 0..W::WORDS {
+                let w = if i < 6 {
+                    CONSECUTIVE_PATTERNS[i]
+                } else if ((base + 64 * wi as u64) >> i) & 1 == 1 {
+                    u64::MAX
+                } else {
+                    0
+                };
+                lane.set_word(wi, w);
+            }
+            lane
+        })
+        .collect()
+}
+
+/// A tape instruction. Operands are value-slot indices; the result goes
+/// to the instruction's implicit slot (`first_gate_slot + position`).
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Copy a slot (also serves constant-valued gates via slots 0/1).
+    Buf { a: u32 },
+    Not { a: u32 },
+    And2 { a: u32, b: u32 },
+    Or2 { a: u32, b: u32 },
+    Nand2 { a: u32, b: u32 },
+    Nor2 { a: u32, b: u32 },
+    Xor2 { a: u32, b: u32 },
+    Xnor2 { a: u32, b: u32 },
+    /// `!a & b` — the AND-with-one-complemented-edge shape AIG nodes
+    /// reduce to (and `tt = 0b0100`/`0b0010` cells).
+    AndcA { a: u32, b: u32 },
+    /// Fallback: index into [`CompiledNetlist::generals`].
+    General { g: u32 },
+}
+
+/// Precompiled general gate: the invert-the-smaller-half decision and
+/// the minterm scan list [`Netlist::eval64`] re-derives per pass, frozen
+/// at compile time.
+#[derive(Clone, Debug)]
+struct GeneralOp {
+    inputs: [u32; 4],
+    nin: u8,
+    invert: bool,
+    minterms: Vec<u8>,
+}
+
+/// One primary output: a value slot, optionally complemented (only
+/// [`CompiledNetlist::from_aig`] produces inverted taps — netlist
+/// outputs are plain drivers).
+#[derive(Clone, Copy, Debug)]
+struct OutTap {
+    slot: u32,
+    invert: bool,
+}
+
+/// A [`Netlist`] (or [`Aig`]) lowered to a levelized instruction tape
+/// over dense value slots. Slot layout:
+///
+/// ```text
+/// slot 0               constant FALSE
+/// slot 1               constant TRUE
+/// slots 2 .. 2+n       primary inputs 0..n
+/// slots 2+n ..         one per instruction, in tape (level) order
+/// ```
+#[derive(Clone, Debug)]
+pub struct CompiledNetlist {
+    pub num_inputs: usize,
+    num_outputs: usize,
+    first_gate_slot: usize,
+    tape: Vec<Op>,
+    generals: Vec<GeneralOp>,
+    outputs: Vec<OutTap>,
+    /// Original gate index → value slot (tape order is level-sorted, so
+    /// this is *not* the identity map). Lets callers that need per-gate
+    /// values — the power estimator's toggle counter — read them out of
+    /// the slot buffer.
+    gate_slots: Vec<u32>,
+    /// Tape index where each level's instructions begin (level `l`
+    /// spans `level_starts[l] .. level_starts[l+1]`); the last entry is
+    /// the tape length.
+    level_starts: Vec<usize>,
+}
+
+impl CompiledNetlist {
+    /// Lower a mapped netlist. Panics on a non-topological netlist (a
+    /// gate input referencing a later gate), which [`Netlist`] already
+    /// forbids.
+    pub fn from_netlist(nl: &Netlist) -> CompiledNetlist {
+        let first_gate_slot = 2 + nl.num_inputs;
+        // Levelize: level = 1 + max(level of gate inputs); inputs and
+        // constants are level 0.
+        let mut level = vec![0usize; nl.gates.len()];
+        for (gi, g) in nl.gates.iter().enumerate() {
+            let worst = g
+                .inputs
+                .iter()
+                .map(|&d| match d {
+                    Driver::Gate(p) => {
+                        assert!(p < gi, "netlist not topological: gate {gi} reads gate {p}");
+                        level[p]
+                    }
+                    _ => 0,
+                })
+                .max()
+                .unwrap_or(0);
+            level[gi] = worst + 1;
+        }
+        let mut order: Vec<usize> = (0..nl.gates.len()).collect();
+        order.sort_by_key(|&gi| level[gi]);
+        let mut gate_slots = vec![0u32; nl.gates.len()];
+        for (pos, &gi) in order.iter().enumerate() {
+            gate_slots[gi] = (first_gate_slot + pos) as u32;
+        }
+        let slot_of = |d: Driver| -> u32 {
+            match d {
+                Driver::ConstFalse => 0,
+                Driver::ConstTrue => 1,
+                Driver::Input(i) => (2 + i) as u32,
+                Driver::Gate(g) => gate_slots[g],
+            }
+        };
+        let mut tape = Vec::with_capacity(nl.gates.len());
+        let mut generals = Vec::new();
+        let mut level_starts = vec![0usize];
+        let mut cur_level = 1usize;
+        for &gi in &order {
+            while level[gi] > cur_level {
+                level_starts.push(tape.len());
+                cur_level += 1;
+            }
+            let g = &nl.gates[gi];
+            let cell = &nl.lib[g.cell];
+            let nin = g.inputs.len();
+            let rows = 1u64 << nin;
+            let mask = if rows >= 64 { u64::MAX } else { (1u64 << rows) - 1 };
+            let tt = cell.tt & mask;
+            let op = match nin {
+                0 => Op::Buf { a: if tt & 1 == 1 { 1 } else { 0 } },
+                1 => {
+                    let a = slot_of(g.inputs[0]);
+                    match tt {
+                        0 => Op::Buf { a: 0 },
+                        1 => Op::Not { a },
+                        2 => Op::Buf { a },
+                        _ => Op::Buf { a: 1 },
+                    }
+                }
+                2 => {
+                    let (a, b) = (slot_of(g.inputs[0]), slot_of(g.inputs[1]));
+                    match tt {
+                        0 => Op::Buf { a: 0 },
+                        15 => Op::Buf { a: 1 },
+                        8 => Op::And2 { a, b },
+                        14 => Op::Or2 { a, b },
+                        7 => Op::Nand2 { a, b },
+                        1 => Op::Nor2 { a, b },
+                        6 => Op::Xor2 { a, b },
+                        9 => Op::Xnor2 { a, b },
+                        2 => Op::AndcA { a: b, b: a }, // a & !b
+                        4 => Op::AndcA { a, b },       // !a & b
+                        _ => general(&mut generals, g, tt, nin, &slot_of),
+                    }
+                }
+                _ => general(&mut generals, g, tt, nin, &slot_of),
+            };
+            tape.push(op);
+        }
+        level_starts.push(tape.len());
+        let outputs = nl
+            .outputs
+            .iter()
+            .map(|&d| OutTap { slot: slot_of(d), invert: false })
+            .collect();
+        CompiledNetlist {
+            num_inputs: nl.num_inputs,
+            num_outputs: nl.outputs.len(),
+            first_gate_slot,
+            tape,
+            generals,
+            outputs,
+            gate_slots,
+            level_starts,
+        }
+    }
+
+    /// Lower an AIG: only live nodes (reachable from outputs) compile.
+    /// Each AND node's residual edge complements select the op — plain
+    /// AND2, NOR2 (`!a & !b`), or [`Op::AndcA`] — and complemented
+    /// outputs become inverted taps instead of extra instructions.
+    pub fn from_aig(g: &Aig) -> CompiledNetlist {
+        let num_inputs = g.num_inputs();
+        let first_gate_slot = 2 + num_inputs;
+        let live = g.live_mask();
+        // Levelize live AND nodes (node order is already topological).
+        let mut level = vec![0usize; g.nodes.len()];
+        let mut live_ands = Vec::new();
+        for (n, node) in g.nodes.iter().enumerate() {
+            if let Node::And(a, b) = node {
+                let l =
+                    1 + level[aig::node_of(*a)].max(level[aig::node_of(*b)]);
+                level[n] = l;
+                if live[n] {
+                    live_ands.push(n);
+                }
+            }
+        }
+        live_ands.sort_by_key(|&n| level[n]);
+        let mut node_slot = vec![0u32; g.nodes.len()];
+        for (pos, &n) in live_ands.iter().enumerate() {
+            node_slot[n] = (first_gate_slot + pos) as u32;
+        }
+        // Resolve an edge to (slot, residual complement): constants fold
+        // the complement into the slot choice (¬FALSE = slot 1).
+        let resolve = |e: aig::Edge| -> (u32, bool) {
+            let n = aig::node_of(e);
+            let inv = aig::is_compl(e);
+            match g.nodes[n] {
+                Node::Const => (if inv { 1 } else { 0 }, false),
+                Node::Input(i) => ((2 + i) as u32, inv),
+                Node::And(..) => (node_slot[n], inv),
+            }
+        };
+        let mut tape = Vec::with_capacity(live_ands.len());
+        let mut level_starts = vec![0usize];
+        let mut cur_level = 1usize;
+        for &n in &live_ands {
+            while level[n] > cur_level {
+                level_starts.push(tape.len());
+                cur_level += 1;
+            }
+            let Node::And(ea, eb) = g.nodes[n] else { unreachable!() };
+            let (a, ia) = resolve(ea);
+            let (b, ib) = resolve(eb);
+            tape.push(match (ia, ib) {
+                (false, false) => Op::And2 { a, b },
+                (true, true) => Op::Nor2 { a, b },
+                (true, false) => Op::AndcA { a, b },
+                (false, true) => Op::AndcA { a: b, b: a },
+            });
+        }
+        level_starts.push(tape.len());
+        let outputs = g
+            .outputs
+            .iter()
+            .map(|&e| {
+                let (slot, inv) = resolve(e);
+                OutTap { slot, invert: inv }
+            })
+            .collect();
+        CompiledNetlist {
+            num_inputs,
+            num_outputs: g.outputs.len(),
+            first_gate_slot,
+            tape,
+            generals: Vec::new(),
+            outputs,
+            gate_slots: Vec::new(),
+            level_starts,
+        }
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.num_outputs
+    }
+
+    /// Instructions on the tape (one per compiled gate / live AND).
+    pub fn num_instructions(&self) -> usize {
+        self.tape.len()
+    }
+
+    /// Depth of the level schedule (pipeline stages a hardware
+    /// implementation would need).
+    pub fn num_levels(&self) -> usize {
+        self.level_starts.len() - 1
+    }
+
+    /// Original gate index → value slot (see [`CompiledNetlist::eval_slots`];
+    /// empty for AIG-compiled tapes).
+    pub fn gate_slots(&self) -> &[u32] {
+        &self.gate_slots
+    }
+
+    /// Run the tape, leaving *every* value slot populated in `slots`
+    /// (reused across calls; resized internally). Callers that only
+    /// need outputs should use [`CompiledNetlist::eval_into`] /
+    /// [`CompiledNetlist::eval`].
+    pub fn eval_slots<W: LaneWord>(&self, in_lanes: &[W], slots: &mut Vec<W>) {
+        debug_assert_eq!(in_lanes.len(), self.num_inputs);
+        slots.clear();
+        slots.resize(self.first_gate_slot + self.tape.len(), W::ZERO);
+        slots[0] = W::ZERO;
+        slots[1] = W::ONES;
+        slots[2..self.first_gate_slot].copy_from_slice(in_lanes);
+        for (i, op) in self.tape.iter().enumerate() {
+            let v = match *op {
+                Op::Buf { a } => slots[a as usize],
+                Op::Not { a } => slots[a as usize].not(),
+                Op::And2 { a, b } => slots[a as usize].and(slots[b as usize]),
+                Op::Or2 { a, b } => slots[a as usize].or(slots[b as usize]),
+                Op::Nand2 { a, b } => slots[a as usize].and(slots[b as usize]).not(),
+                Op::Nor2 { a, b } => slots[a as usize].or(slots[b as usize]).not(),
+                Op::Xor2 { a, b } => slots[a as usize].xor(slots[b as usize]),
+                Op::Xnor2 { a, b } => slots[a as usize].xor(slots[b as usize]).not(),
+                Op::AndcA { a, b } => slots[a as usize].not().and(slots[b as usize]),
+                Op::General { g } => {
+                    let go = &self.generals[g as usize];
+                    let mut acc = W::ZERO;
+                    for &m in &go.minterms {
+                        let mut term = W::ONES;
+                        for k in 0..go.nin as usize {
+                            let lane = slots[go.inputs[k] as usize];
+                            term = term.and(if (m >> k) & 1 == 1 { lane } else { lane.not() });
+                        }
+                        acc = acc.or(term);
+                    }
+                    if go.invert {
+                        acc.not()
+                    } else {
+                        acc
+                    }
+                }
+            };
+            slots[self.first_gate_slot + i] = v;
+        }
+    }
+
+    /// Run the tape and write one lane per primary output into
+    /// `outs[..num_outputs]`. `slots` is caller-provided scratch so the
+    /// hot serving loop never reallocates.
+    pub fn eval_into<W: LaneWord>(&self, in_lanes: &[W], slots: &mut Vec<W>, outs: &mut [W]) {
+        self.eval_slots(in_lanes, slots);
+        for (k, t) in self.outputs.iter().enumerate() {
+            let v = slots[t.slot as usize];
+            outs[k] = if t.invert { v.not() } else { v };
+        }
+    }
+
+    /// Allocating convenience wrapper around [`CompiledNetlist::eval_into`].
+    pub fn eval<W: LaneWord>(&self, in_lanes: &[W]) -> Vec<W> {
+        let mut slots = Vec::new();
+        let mut outs = vec![W::ZERO; self.num_outputs];
+        self.eval_into(in_lanes, &mut slots, &mut outs);
+        outs
+    }
+}
+
+/// Compile a general gate's sum-of-minterms: freeze the
+/// invert-the-smaller-half decision and the scan list.
+fn general(
+    generals: &mut Vec<GeneralOp>,
+    g: &super::netlist::Gate,
+    tt: u64,
+    nin: usize,
+    slot_of: &impl Fn(Driver) -> u32,
+) -> Op {
+    let rows = 1u64 << nin;
+    let invert = tt.count_ones() as u64 * 2 > rows;
+    let mask = if rows >= 64 { u64::MAX } else { (1u64 << rows) - 1 };
+    let scan = if invert { !tt & mask } else { tt };
+    let mut inputs = [0u32; 4];
+    for (k, &d) in g.inputs.iter().enumerate() {
+        inputs[k] = slot_of(d);
+    }
+    let minterms = (0..rows).filter(|m| (scan >> m) & 1 == 1).map(|m| m as u8).collect();
+    generals.push(GeneralOp { inputs, nin: nin as u8, invert, minterms });
+    Op::General { g: (generals.len() - 1) as u32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::library::cells90;
+    use crate::logic::netlist::{consecutive_lanes, Gate};
+    use crate::util::prng::Rng;
+
+    fn cell(lib: &[crate::logic::library::Cell], name: &str) -> usize {
+        lib.iter().position(|c| c.name == name).unwrap()
+    }
+
+    /// A netlist exercising every op class: 2-input specializations,
+    /// INV/BUF, constants, and 3/4-input general-fallback cells.
+    fn zoo_netlist() -> Netlist {
+        let lib = cells90();
+        let g = |n: &str, ins: Vec<Driver>| Gate { cell: cell(&lib, n), inputs: ins };
+        let x = Driver::Input;
+        let w = Driver::Gate;
+        let gates = vec![
+            g("NAND2", vec![x(0), x(1)]),
+            g("NOR2", vec![x(2), x(3)]),
+            g("AND2", vec![x(0), w(0)]),
+            g("OR2", vec![w(1), x(4)]),
+            g("XOR2", vec![w(2), w(3)]),
+            g("XNOR2", vec![x(1), w(4)]),
+            g("INV", vec![w(5)]),
+            g("BUF", vec![w(6)]),
+            g("AOI21", vec![w(4), x(2), w(7)]),
+            g("OAI22", vec![w(8), x(3), w(5), x(0)]),
+            g("MAJ3", vec![w(8), w(9), x(4)]),
+            g("MUX2", vec![w(10), w(0), Driver::ConstTrue]),
+            g("AND2", vec![Driver::ConstFalse, w(11)]),
+            g("NOR3", vec![w(11), w(12), w(3)]),
+        ];
+        Netlist {
+            lib,
+            num_inputs: 5,
+            gates,
+            outputs: vec![Driver::Gate(13), Driver::Gate(10), Driver::Input(0), Driver::ConstTrue],
+        }
+    }
+
+    #[test]
+    fn compiled_matches_interpreter_exhaustively_u64() {
+        let nl = zoo_netlist();
+        let c = CompiledNetlist::from_netlist(&nl);
+        let lanes = consecutive_lanes(0, nl.num_inputs);
+        let want = nl.eval64(&lanes);
+        let got = c.eval::<u64>(&lanes);
+        let mask = (1u64 << 32) - 1; // 5 inputs -> 32 minterms
+        for k in 0..want.len() {
+            assert_eq!(got[k] & mask, want[k] & mask, "output {k}");
+        }
+        // and against the scalar walk, bit by bit
+        for m in 0..32u64 {
+            let packed = nl.eval(m);
+            for (k, o) in got.iter().enumerate() {
+                assert_eq!((o >> m) & 1, (packed >> k) & 1, "m={m} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_word_matches_u64_word_by_word() {
+        let nl = zoo_netlist();
+        let c = CompiledNetlist::from_netlist(&nl);
+        let mut rng = Rng::new(0xC0DE);
+        for _ in 0..20 {
+            let wide: Vec<[u64; 4]> = (0..nl.num_inputs)
+                .map(|_| [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()])
+                .collect();
+            let got = c.eval::<[u64; 4]>(&wide);
+            for wi in 0..4 {
+                let narrow: Vec<u64> = wide.iter().map(|l| l[wi]).collect();
+                let want = c.eval::<u64>(&narrow);
+                for k in 0..want.len() {
+                    assert_eq!(got[k][wi], want[k], "word {wi} output {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn levels_schedule_respects_dependencies() {
+        let nl = zoo_netlist();
+        let c = CompiledNetlist::from_netlist(&nl);
+        assert_eq!(c.num_instructions(), nl.gates.len());
+        assert!(c.num_levels() >= 3);
+        assert_eq!(*c.level_starts.last().unwrap(), c.tape.len());
+        // every gate's slot must be written after all its input slots
+        for (gi, g) in nl.gates.iter().enumerate() {
+            for &d in &g.inputs {
+                if let Driver::Gate(p) = d {
+                    assert!(
+                        c.gate_slots[p] < c.gate_slots[gi],
+                        "gate {gi} scheduled before its input {p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_wide() {
+        let ms: Vec<u64> = (0..256).map(|j| (j * 37) & 0x1ff).collect();
+        let lanes = pack_lanes_w::<[u64; 4]>(&ms, 9);
+        assert_eq!(unpack_lanes_w(&lanes, 256), ms);
+        // the u64 instantiation agrees with the scalar helpers
+        let short = &ms[..64];
+        let l64 = pack_lanes_w::<u64>(short, 9);
+        assert_eq!(l64, crate::logic::netlist::pack_lanes(short, 9));
+        assert_eq!(
+            unpack_lanes_w(&l64, 64),
+            crate::logic::netlist::unpack_lanes(&l64, 64)
+        );
+    }
+
+    #[test]
+    fn consecutive_lanes_wide_agree_with_narrow() {
+        // 9 inputs: minterms 256..512 span base bits above the first six
+        // interleave patterns, exercising the per-word splat path.
+        for base in [0u64, 256, 512, 3840] {
+            let wide = consecutive_lanes_w::<[u64; 4]>(base, 12);
+            for wi in 0..4 {
+                let narrow = consecutive_lanes(base + 64 * wi as u64, 12);
+                for (i, lane) in wide.iter().enumerate() {
+                    assert_eq!(lane[wi], narrow[i], "base={base} word={wi} input={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_aig_matches_aig_interpreter() {
+        // build a nontrivial AIG: a 3-bit adder out of xor/mux/and, with
+        // complemented outputs and a dead node
+        let mut g = Aig::new(6);
+        let mut carry = aig::FALSE_EDGE;
+        let mut outs = Vec::new();
+        for i in 0..3 {
+            let (x, y) = (g.input(i), g.input(i + 3));
+            let s = g.xor(x, y);
+            let s2 = g.xor(s, carry);
+            let c1 = g.and(x, y);
+            let c2 = g.and(s, carry);
+            carry = g.or(c1, c2);
+            outs.push(s2);
+        }
+        outs.push(aig::compl(carry)); // complemented output tap
+        outs.push(aig::TRUE_EDGE); // constant output
+        let dead_in = g.input(0);
+        let _dead = g.and(dead_in, aig::TRUE_EDGE); // folds, but try a real one:
+        let i5 = g.input(5);
+        let _dead2 = g.and(dead_in, aig::compl(i5)); // live node, not an output
+        g.outputs = outs;
+
+        let c = CompiledNetlist::from_aig(&g);
+        assert_eq!(c.num_outputs(), g.outputs.len());
+        let lanes = consecutive_lanes(0, 6);
+        let want = g.eval64(&lanes);
+        let got = c.eval::<u64>(&lanes);
+        assert_eq!(got, want);
+        // scalar oracle too
+        for m in 0..64u64 {
+            let bits = g.eval(m);
+            for (k, o) in got.iter().enumerate() {
+                assert_eq!((o >> m) & 1 == 1, bits[k], "m={m} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_matches_interpreter_on_synthesized_blocks() {
+        // end-to-end: real synthesized netlists from the design flow
+        use crate::logic::synth::{self, BlockSpec};
+        use crate::logic::tt::Tt;
+        let mut rng = Rng::new(0x51D);
+        for nvars in [4usize, 6, 8] {
+            let mut on = Vec::new();
+            for _ in 0..3 {
+                let mut t = Tt::zeros(nvars);
+                for m in 0..(1u64 << nvars) {
+                    if rng.below(3) == 0 {
+                        t.set(m);
+                    }
+                }
+                on.push(t);
+            }
+            let care = Tt::ones(nvars);
+            let spec =
+                BlockSpec { name: format!("rand{nvars}"), nvars, on, care, bdd_order: None };
+            let (_, nl) = synth::synthesize(&spec, crate::logic::map::Objective::Area);
+            let c = CompiledNetlist::from_netlist(&nl);
+            let mut slots = Vec::new();
+            let mut outs = vec![[0u64; 4]; nl.outputs.len()];
+            let total = 1u64 << nvars;
+            let mut base = 0u64;
+            while base < total {
+                let lanes = consecutive_lanes_w::<[u64; 4]>(base, nvars);
+                c.eval_into(&lanes, &mut slots, &mut outs);
+                for off in 0..total.saturating_sub(base).min(256) {
+                    let m = base + off;
+                    let want = nl.eval(m);
+                    let (wi, bj) = ((off / 64) as usize, off % 64);
+                    for (k, o) in outs.iter().enumerate() {
+                        assert_eq!(
+                            (o[wi] >> bj) & 1,
+                            (want >> k) & 1,
+                            "nvars={nvars} m={m} k={k}"
+                        );
+                    }
+                }
+                base += 256;
+            }
+        }
+    }
+}

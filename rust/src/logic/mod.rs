@@ -13,6 +13,7 @@
 //! ```
 
 pub mod aig;
+pub mod compiled;
 pub mod cover;
 pub mod espresso;
 pub mod factor;

@@ -15,12 +15,14 @@
 //! [`Netlist::eval64`] evaluates 64 input patterns per pass by packing
 //! each primary input into a `u64` *lane* (bit `j` of lane `i` = input
 //! `i` of pattern `j`) and computing every gate as word-wide boolean
-//! algebra over its cell truth table. Exhaustive verification, the
-//! power estimator and the native execution backend
-//! ([`crate::runtime::NativeExecutor`]) all run on this path; the
-//! one-pattern [`Netlist::eval`] walk is kept for spot checks and as
-//! the baseline the `native_exec` bench compares against.
+//! algebra over its cell truth table. This interpreted walk (and the
+//! one-pattern [`Netlist::eval`]) is the *oracle*: the hot paths —
+//! exhaustive verification, the power estimator, and the native
+//! execution backend ([`crate::runtime::NativeExecutor`]) — run on the
+//! compiled, 256-lane form in [`super::compiled`], which is property-
+//! tested bit-exact against the walks here.
 
+use super::compiled::{pack_lanes_w, CompiledNetlist};
 use super::library::Cell;
 use crate::util::prng::Rng;
 
@@ -254,8 +256,8 @@ impl Netlist {
     ///
     /// The toggle counts are exactly those of a one-vector-at-a-time
     /// simulation of the same sample sequence, but the netlist is
-    /// evaluated bit-parallel (64 vectors per pass) and transitions are
-    /// counted word-wide per gate.
+    /// compiled ([`CompiledNetlist`]) and evaluated 256 vectors per
+    /// pass, with transitions counted word-wide per gate.
     pub fn power_uw<F: FnMut(&mut Rng) -> u64>(&self, n_vectors: usize, mut sample: F) -> f64 {
         if self.gates.is_empty() || n_vectors == 0 {
             return 0.0;
@@ -264,26 +266,38 @@ impl Netlist {
         // Same draw order as the scalar loop: one seed vector, then
         // `n_vectors` toggling vectors.
         let seq: Vec<u64> = (0..=n_vectors).map(|_| sample(&mut rng)).collect();
+        let compiled = CompiledNetlist::from_netlist(self);
+        let gate_slots = compiled.gate_slots();
         let mut toggles = vec![0u64; self.gates.len()];
-        let mut vals = vec![0u64; self.gates.len()];
         let mut prev_last = vec![0u64; self.gates.len()];
+        let mut slots: Vec<[u64; 4]> = Vec::new();
         let mut first = true;
-        for chunk in seq.chunks(64) {
-            let lanes = pack_lanes(chunk, self.num_inputs);
-            self.eval64_into(&lanes, &mut vals);
-            let nbits = chunk.len();
-            let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
-            for (gi, v) in vals.iter().enumerate() {
-                let v = v & mask;
-                // bit j of `shifted` = value at step j-1 (the carry bit
-                // stitches blocks together; the very first step compares
-                // with itself, i.e. is not counted — as in the scalar loop)
-                let carry = if first { v & 1 } else { prev_last[gi] };
-                let shifted = (v << 1) | carry;
-                toggles[gi] += ((v ^ shifted) & mask).count_ones() as u64;
-                prev_last[gi] = (v >> (nbits - 1)) & 1;
+        for chunk in seq.chunks(256) {
+            let lanes = pack_lanes_w::<[u64; 4]>(chunk, self.num_inputs);
+            compiled.eval_slots(&lanes, &mut slots);
+            // walk the wide word 64 vectors at a time, stitching the
+            // carry bit across words exactly as across chunks
+            let mut done = 0usize;
+            for wi in 0..4 {
+                if done >= chunk.len() {
+                    break;
+                }
+                let nbits = (chunk.len() - done).min(64);
+                let mask = if nbits == 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+                for (gi, &slot) in gate_slots.iter().enumerate() {
+                    let v = slots[slot as usize][wi] & mask;
+                    // bit j of `shifted` = value at step j-1 (the carry
+                    // bit stitches words together; the very first step
+                    // compares with itself, i.e. is not counted — as in
+                    // the scalar loop)
+                    let carry = if first { v & 1 } else { prev_last[gi] };
+                    let shifted = (v << 1) | carry;
+                    toggles[gi] += ((v ^ shifted) & mask).count_ones() as u64;
+                    prev_last[gi] = (v >> (nbits - 1)) & 1;
+                }
+                first = false;
+                done += nbits;
             }
-            first = false;
         }
         let switched_cap: f64 = self
             .gates

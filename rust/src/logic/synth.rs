@@ -172,23 +172,36 @@ pub fn synthesize(spec: &BlockSpec, objective: Objective) -> (TwoLevel, Netlist)
 /// `nvars ≤ 20`). Returns the number of mismatching (care row, output)
 /// pairs.
 ///
-/// Runs bit-parallel: 64 consecutive minterms are evaluated per netlist
-/// pass and compared word-wide against the ON-set truth-table words, so
-/// the whole sweep costs `2^nvars / 64` netlist evaluations.
+/// Runs on the compiled tape ([`crate::logic::compiled`]), 256
+/// consecutive minterms per pass, compared word-wide against the ON-set
+/// truth-table words — so the whole sweep costs `2^nvars / 256` tape
+/// evaluations (all-zero care chunks are skipped entirely).
 pub fn verify_on_care_set(spec: &BlockSpec, nl: &Netlist) -> u64 {
+    use crate::logic::compiled::{consecutive_lanes_w, CompiledNetlist};
     assert!(spec.nvars <= 20, "exhaustive verify too large");
     debug_assert_eq!(nl.num_inputs, spec.nvars);
+    let cnl = CompiledNetlist::from_netlist(nl);
+    let care_words = spec.care.words();
     let mut bad = 0u64;
-    for (w, &care) in spec.care.words().iter().enumerate() {
-        if care == 0 {
+    let mut slots = Vec::new();
+    let mut outs = vec![[0u64; 4]; spec.on.len()];
+    let mut wb = 0usize;
+    while wb < care_words.len() {
+        let ncw = (care_words.len() - wb).min(4);
+        if care_words[wb..wb + ncw].iter().all(|&c| c == 0) {
+            wb += ncw;
             continue;
         }
-        let base = (w as u64) << 6;
-        let lanes = crate::logic::netlist::consecutive_lanes(base, spec.nvars);
-        let outs = nl.eval64(&lanes);
+        let base = (wb as u64) << 6;
+        let lanes = consecutive_lanes_w::<[u64; 4]>(base, spec.nvars);
+        cnl.eval_into(&lanes, &mut slots, &mut outs);
         for (k, t) in spec.on.iter().enumerate() {
-            bad += ((outs[k] ^ t.words()[w]) & care).count_ones() as u64;
+            let tw = t.words();
+            for (wi, &care) in care_words[wb..wb + ncw].iter().enumerate() {
+                bad += ((outs[k][wi] ^ tw[wb + wi]) & care).count_ones() as u64;
+            }
         }
+        wb += ncw;
     }
     bad
 }

@@ -76,7 +76,8 @@ fn exhaustive(wl: u32, pa: &Chain, pb: &Chain, f: impl Fn(u32, u32) -> i64 + Syn
 /// precise operation `f` — the netlist-level counterpart of
 /// [`exhaustive_adder`] / [`exhaustive_mult`]. Both operands are
 /// preprocessed before they reach the unit (the paper's datapath order),
-/// and the unit is evaluated bit-parallel, 64 operand pairs per pass.
+/// and the unit is evaluated bit-parallel,
+/// [`crate::catalog::LANES`] operand pairs per pass.
 ///
 /// With a unit that is exact on its care set and synthesized for the
 /// preprocessed value sets, this must reproduce the value-map model's
@@ -95,13 +96,13 @@ pub fn exhaustive_unit(
     let bmap: Vec<u32> = (0..n).map(|v| pb.apply(v)).collect();
     let partials = pool::scope_chunks(n as usize, pool::default_threads(), |s, e| {
         let (mut errs, mut sum, mut abs) = (0u64, 0i64, 0i64);
-        let mut asplat = [0u32; 64];
-        let mut outs = [0u64; 64];
+        let mut asplat = [0u32; crate::catalog::LANES];
+        let mut outs = [0u64; crate::catalog::LANES];
         for a in s as u32..e as u32 {
             asplat.fill(amap[a as usize]);
             let mut bbase = 0u32;
             while bbase < n {
-                let cnt = 64.min((n - bbase) as usize);
+                let cnt = crate::catalog::LANES.min((n - bbase) as usize);
                 unit.batch(
                     &asplat[..cnt],
                     &bmap[bbase as usize..bbase as usize + cnt],

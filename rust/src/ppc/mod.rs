@@ -10,7 +10,7 @@
 //! - [`flow`] — the Fig. 3 design flow: range analysis → preprocessing →
 //!   TT+DC → two-level → multi-level → report.
 //! - [`units`] — executable synthesized composites (segmented adders,
-//!   the composed 8×8 multiplier) with scalar and 64-way bit-parallel
+//!   the composed 8×8 multiplier) with scalar and 256-lane compiled-tape
 //!   evaluation; the arithmetic behind the native serving backend.
 //!
 //! ## Example: the whole paradigm in six lines

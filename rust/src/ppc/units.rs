@@ -12,10 +12,15 @@
 //!   `LL + ((LH + HL) << 4) + (HH << 8)`.
 //!
 //! Every unit offers two evaluation paths: a one-pair scalar walk
-//! ([`AdderUnit::eval_scalar`]) and the 64-pair bit-parallel path
-//! ([`AdderUnit::eval_batch`]) built on [`Netlist::eval64`] — the hot
-//! path of exhaustive verification and of the native serving backend
-//! ([`crate::runtime::NativeExecutor`]).
+//! ([`AdderUnit::eval_scalar`]) and the lane-batched bit-parallel path
+//! ([`AdderUnit::eval_batch`]): each netlist is lowered once at
+//! construction to a levelized instruction tape
+//! ([`crate::logic::compiled::CompiledNetlist`]) that evaluates
+//! [`crate::catalog::LANES`] operand pairs per pass — the hot path of
+//! exhaustive verification and of the native serving backend
+//! ([`crate::runtime::NativeExecutor`]). Batches of ≤ 64 pairs run the
+//! tape at the narrow `u64` word so small batches don't pay for lanes
+//! they don't fill.
 //!
 //! Units are exact **on their care sets only**: operands must come from
 //! the value sets the unit was synthesized with (for a serving backend
@@ -24,8 +29,10 @@
 
 use super::blocks::{self, SEG_BITS};
 use super::preprocess::ValueSet;
+use crate::catalog::LANES;
+use crate::logic::compiled::{unpack_lanes_w, CompiledNetlist, LaneWord};
 use crate::logic::map::Objective;
-use crate::logic::netlist::{unpack_lanes, Netlist};
+use crate::logic::netlist::Netlist;
 use crate::logic::synth::{self, BlockSpec};
 
 /// Where a unit obtains the mapped netlist for a block spec: fresh
@@ -54,30 +61,39 @@ impl NetlistSource for FreshSynth {
 /// A batched arithmetic operation over two unsigned operands — the
 /// interface [`crate::ppc::error::exhaustive_unit`] measures against.
 pub trait BatchOp: Sync {
-    /// Evaluate up to 64 operand pairs bit-parallel into `out[..a.len()]`.
+    /// Evaluate up to [`LANES`] operand pairs bit-parallel into
+    /// `out[..a.len()]`.
     fn batch(&self, a: &[u32], b: &[u32], out: &mut [u64]);
     /// Evaluate one pair through the scalar netlist walk (the baseline
     /// the `native_exec` bench compares the bit-parallel path against).
     fn scalar(&self, a: u32, b: u32) -> u64;
 }
 
-/// Pack up to 64 `u32` operand values into `nlanes` bit lanes
-/// (lane `i`, bit `j` = bit `i` of `vals[j]`).
-pub fn pack_values(vals: &[u32], nlanes: usize) -> Vec<u64> {
-    debug_assert!(vals.len() <= 64);
-    let mut lanes = vec![0u64; nlanes];
+/// Pack up to [`LaneWord::BITS`] `u32` operand values into `nlanes` bit
+/// lanes (lane `i`, bit `j` = bit `i` of `vals[j]`).
+pub fn pack_values_w<W: LaneWord>(vals: &[u32], nlanes: usize) -> Vec<W> {
+    debug_assert!(vals.len() <= W::BITS);
+    let mut lanes = vec![W::ZERO; nlanes];
     for (j, &v) in vals.iter().enumerate() {
         debug_assert!(nlanes >= 32 || (v >> nlanes) == 0, "operand {v} exceeds {nlanes} bits");
+        let (wi, bj) = (j / 64, j % 64);
         for (i, lane) in lanes.iter_mut().enumerate() {
-            *lane |= (((v as u64) >> i) & 1) << j;
+            let w = lane.word(wi) | ((((v as u64) >> i) & 1) << bj);
+            lane.set_word(wi, w);
         }
     }
     lanes
 }
 
-/// Chunk an arbitrarily long operand stream into ≤ 64-lane passes of
-/// `eval` — the one chunking loop behind [`AdderUnit::add_many`] and
-/// [`MultUnit8::mul_many`].
+/// [`pack_values_w`] at the narrow 64-lane word (kept for callers that
+/// stay within one machine word).
+pub fn pack_values(vals: &[u32], nlanes: usize) -> Vec<u64> {
+    pack_values_w::<u64>(vals, nlanes)
+}
+
+/// Chunk an arbitrarily long operand stream into ≤ [`LANES`]-lane
+/// passes of `eval` — the one chunking loop behind
+/// [`AdderUnit::add_many`] and [`MultUnit8::mul_many`].
 fn eval_many(
     a: &[u32],
     b: &[u32],
@@ -85,10 +101,10 @@ fn eval_many(
 ) -> Vec<u64> {
     assert_eq!(a.len(), b.len());
     let mut out = vec![0u64; a.len()];
-    let mut buf = [0u64; 64];
+    let mut buf = [0u64; LANES];
     let mut i = 0;
     while i < a.len() {
-        let end = (i + 64).min(a.len());
+        let end = (i + LANES).min(a.len());
         eval(&a[i..end], &b[i..end], &mut buf);
         out[i..end].copy_from_slice(&buf[..end - i]);
         i = end;
@@ -98,11 +114,11 @@ fn eval_many(
 
 /// Resize a lane vector, asserting (in debug) that no nonzero lane is
 /// dropped — lanes past a value's width must be all-zero wiring.
-fn pad_lanes(lanes: &[u64], n: usize) -> Vec<u64> {
-    let mut out = vec![0u64; n];
+fn pad_lanes<W: LaneWord>(lanes: &[W], n: usize) -> Vec<W> {
+    let mut out = vec![W::ZERO; n];
     let k = lanes.len().min(n);
     out[..k].copy_from_slice(&lanes[..k]);
-    debug_assert!(lanes[k..].iter().all(|&l| l == 0), "nonzero lane dropped by pad");
+    debug_assert!(lanes[k..].iter().all(|&l| l == W::ZERO), "nonzero lane dropped by pad");
     out
 }
 
@@ -114,6 +130,9 @@ pub struct AdderUnit {
     pub wl_a: u32,
     pub wl_b: u32,
     segs: Vec<Netlist>,
+    /// One compiled tape per segment, lowered at construction — what
+    /// the lane-batched paths actually run.
+    tapes: Vec<CompiledNetlist>,
 }
 
 impl AdderUnit {
@@ -146,7 +165,7 @@ impl AdderUnit {
         source: &dyn NetlistSource,
     ) -> AdderUnit {
         let specs = blocks::adder_segment_specs(wl_a, wl_b, a_set, b_set);
-        let segs = specs
+        let segs: Vec<Netlist> = specs
             .iter()
             .map(|spec| {
                 let nl = source.netlist(name, spec, objective);
@@ -159,7 +178,8 @@ impl AdderUnit {
                 nl
             })
             .collect();
-        AdderUnit { name: name.to_string(), wl_a, wl_b, segs }
+        let tapes = segs.iter().map(CompiledNetlist::from_netlist).collect();
+        AdderUnit { name: name.to_string(), wl_a, wl_b, segs, tapes }
     }
 
     /// Operand width in lanes (`num_segments × 4`); the sum adds one
@@ -176,18 +196,22 @@ impl AdderUnit {
     /// Lane-level bit-parallel sum: `a_lanes`/`b_lanes` hold
     /// [`AdderUnit::lane_width`] lanes each (operand bit `i` in lane
     /// `i`, upper lanes zero); returns `lane_width() + 1` sum lanes.
-    pub fn eval_lanes(&self, a_lanes: &[u64], b_lanes: &[u64]) -> Vec<u64> {
+    /// Generic over the lane word: 64 patterns per pass at `u64`, 256
+    /// at `[u64; 4]`.
+    pub fn eval_lanes<W: LaneWord>(&self, a_lanes: &[W], b_lanes: &[W]) -> Vec<W> {
         let sb = SEG_BITS as usize;
         debug_assert_eq!(a_lanes.len(), self.lane_width());
         debug_assert_eq!(b_lanes.len(), self.lane_width());
-        let mut sum = vec![0u64; self.lane_width() + 1];
-        let mut carry = 0u64;
-        let mut in_lanes = vec![0u64; 2 * sb + 1];
-        for (s, seg) in self.segs.iter().enumerate() {
+        let mut sum = vec![W::ZERO; self.lane_width() + 1];
+        let mut carry = W::ZERO;
+        let mut in_lanes = vec![W::ZERO; 2 * sb + 1];
+        let mut slots = Vec::new();
+        let mut outs = vec![W::ZERO; sb + 1];
+        for (s, tape) in self.tapes.iter().enumerate() {
             in_lanes[..sb].copy_from_slice(&a_lanes[s * sb..(s + 1) * sb]);
             in_lanes[sb..2 * sb].copy_from_slice(&b_lanes[s * sb..(s + 1) * sb]);
             in_lanes[2 * sb] = carry;
-            let outs = seg.eval64(&in_lanes);
+            tape.eval_into(&in_lanes, &mut slots, &mut outs);
             sum[s * sb..(s + 1) * sb].copy_from_slice(&outs[..sb]);
             carry = outs[sb];
         }
@@ -196,20 +220,28 @@ impl AdderUnit {
         sum
     }
 
-    /// Bit-parallel sum of up to 64 operand pairs.
+    /// Bit-parallel sum of up to [`LANES`] operand pairs. Batches of
+    /// ≤ 64 run the narrow `u64` word; wider ones the `[u64; 4]` word.
     pub fn eval_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
         let n = a.len();
-        // hard contract: lane capacity is 64 (a >64 batch would silently
-        // wrap the shift in release builds)
-        assert!(n <= 64 && b.len() == n && out.len() >= n);
-        let al = pack_values(a, self.lane_width());
-        let bl = pack_values(b, self.lane_width());
-        let sum = self.eval_lanes(&al, &bl);
-        out[..n].copy_from_slice(&unpack_lanes(&sum, n));
+        // hard contract: lane capacity is LANES (a wider batch would
+        // silently wrap the pack shift in release builds)
+        assert!(n <= LANES && b.len() == n && out.len() >= n);
+        if n <= 64 {
+            let al = pack_values_w::<u64>(a, self.lane_width());
+            let bl = pack_values_w::<u64>(b, self.lane_width());
+            let sum = self.eval_lanes(&al, &bl);
+            out[..n].copy_from_slice(&unpack_lanes_w(&sum, n));
+        } else {
+            let al = pack_values_w::<[u64; 4]>(a, self.lane_width());
+            let bl = pack_values_w::<[u64; 4]>(b, self.lane_width());
+            let sum = self.eval_lanes(&al, &bl);
+            out[..n].copy_from_slice(&unpack_lanes_w(&sum, n));
+        }
     }
 
-    /// Sum arbitrarily many operand pairs, 64 lanes per netlist pass —
-    /// the batch entry point the lane-batched serving path pools
+    /// Sum arbitrarily many operand pairs, [`LANES`] lanes per tape
+    /// pass — the batch entry point the lane-batched serving path pools
     /// requests through (only the single global tail chunk runs with
     /// idle lanes).
     pub fn add_many(&self, a: &[u32], b: &[u32]) -> Vec<u64> {
@@ -251,6 +283,8 @@ pub struct MultUnit8 {
     /// Quadrant netlists in LL, LH, HL, HH order (inputs: the a-nibble
     /// in bits 0..4, the b-nibble in bits 4..8).
     quads: Vec<Netlist>,
+    /// Compiled quadrant tapes, lowered at construction.
+    qtapes: Vec<CompiledNetlist>,
     a1: AdderUnit, // LH + HL
     a2: AdderUnit, // (mid << 4) + LL
     a3: AdderUnit, // (HH << 8) + lo
@@ -324,7 +358,8 @@ impl MultUnit8 {
             objective,
             source,
         );
-        MultUnit8 { name: name.to_string(), quads, a1, a2, a3 }
+        let qtapes = quads.iter().map(CompiledNetlist::from_netlist).collect();
+        MultUnit8 { name: name.to_string(), quads, qtapes, a1, a2, a3 }
     }
 
     /// Total gate count (quadrants + adder tree).
@@ -336,49 +371,58 @@ impl MultUnit8 {
     }
 
     /// Lane-level bit-parallel product: 8 operand lanes each side,
-    /// 16 product lanes back.
-    pub fn eval_lanes(&self, a_lanes: &[u64], b_lanes: &[u64]) -> Vec<u64> {
+    /// 16 product lanes back. Generic over the lane word like
+    /// [`AdderUnit::eval_lanes`].
+    pub fn eval_lanes<W: LaneWord>(&self, a_lanes: &[W], b_lanes: &[W]) -> Vec<W> {
         debug_assert_eq!(a_lanes.len(), 8);
         debug_assert_eq!(b_lanes.len(), 8);
         // quadrant products: (a half, b half) per LL, LH, HL, HH
         let pairs = [(0usize, 0usize), (0, 4), (4, 0), (4, 4)];
-        let mut qin = [0u64; 8];
-        let mut qouts: Vec<Vec<u64>> = Vec::with_capacity(4);
+        let mut qin = [W::ZERO; 8];
+        let mut qouts: Vec<Vec<W>> = Vec::with_capacity(4);
         for (k, &(ai, bi)) in pairs.iter().enumerate() {
             qin[..4].copy_from_slice(&a_lanes[ai..ai + 4]);
             qin[4..].copy_from_slice(&b_lanes[bi..bi + 4]);
-            qouts.push(self.quads[k].eval64(&qin));
+            qouts.push(self.qtapes[k].eval(&qin));
         }
         // mid = LH + HL (9 bits)
         let w1 = self.a1.lane_width();
         let mid = self.a1.eval_lanes(&pad_lanes(&qouts[1], w1), &pad_lanes(&qouts[2], w1));
         // lo = (mid << 4) + LL (13 bits)
         let w2 = self.a2.lane_width();
-        let mut mid_shift = vec![0u64; w2];
+        let mut mid_shift = vec![W::ZERO; w2];
         mid_shift[4..4 + mid.len()].copy_from_slice(&mid);
         let lo = self.a2.eval_lanes(&mid_shift, &pad_lanes(&qouts[0], w2));
         // product = (HH << 8) + lo (16 bits)
         let w3 = self.a3.lane_width();
-        let mut hh_shift = vec![0u64; w3];
+        let mut hh_shift = vec![W::ZERO; w3];
         hh_shift[8..16].copy_from_slice(&qouts[3]);
         let prod = self.a3.eval_lanes(&hh_shift, &pad_lanes(&lo, w3));
         prod[..16].to_vec()
     }
 
-    /// Bit-parallel product of up to 64 operand pairs.
+    /// Bit-parallel product of up to [`LANES`] operand pairs (≤ 64 run
+    /// the narrow `u64` word; wider batches the `[u64; 4]` word).
     pub fn eval_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
         let n = a.len();
-        // hard contract: lane capacity is 64 (see AdderUnit::eval_batch)
-        assert!(n <= 64 && b.len() == n && out.len() >= n);
-        let al = pack_values(a, 8);
-        let bl = pack_values(b, 8);
-        let prod = self.eval_lanes(&al, &bl);
-        out[..n].copy_from_slice(&unpack_lanes(&prod, n));
+        // hard contract: lane capacity is LANES (see AdderUnit::eval_batch)
+        assert!(n <= LANES && b.len() == n && out.len() >= n);
+        if n <= 64 {
+            let al = pack_values_w::<u64>(a, 8);
+            let bl = pack_values_w::<u64>(b, 8);
+            let prod = self.eval_lanes(&al, &bl);
+            out[..n].copy_from_slice(&unpack_lanes_w(&prod, n));
+        } else {
+            let al = pack_values_w::<[u64; 4]>(a, 8);
+            let bl = pack_values_w::<[u64; 4]>(b, 8);
+            let prod = self.eval_lanes(&al, &bl);
+            out[..n].copy_from_slice(&unpack_lanes_w(&prod, n));
+        }
     }
 
-    /// Multiply arbitrarily many operand pairs, 64 lanes per netlist
-    /// pass — the batch entry point the lane-batched serving path pools
-    /// requests through.
+    /// Multiply arbitrarily many operand pairs, [`LANES`] lanes per
+    /// tape pass — the batch entry point the lane-batched serving path
+    /// pools requests through.
     pub fn mul_many(&self, a: &[u32], b: &[u32]) -> Vec<u64> {
         eval_many(a, b, |x, y, out| self.eval_batch(x, y, out))
     }
@@ -445,6 +489,24 @@ mod tests {
     }
 
     #[test]
+    fn adder_unit_wide_batch_matches_scalar() {
+        // a single eval_batch past 64 pairs runs the [u64; 4] word —
+        // check it against the scalar walk lane by lane
+        let set = ValueSet::full(8).map_chain(&ds(8));
+        let unit = AdderUnit::synthesize("add8_wide", 8, 8, &set, &set, Objective::Area);
+        let vals: Vec<u32> = set.iter().collect();
+        let n = 200usize;
+        let a: Vec<u32> = (0..n).map(|i| vals[i % vals.len()]).collect();
+        let b: Vec<u32> = (0..n).map(|i| vals[(i * 13 + 2) % vals.len()]).collect();
+        let mut out = vec![0u64; n];
+        unit.eval_batch(&a, &b, &mut out);
+        for j in 0..n {
+            assert_eq!(out[j], unit.eval_scalar(a[j], b[j]), "j={j}");
+            assert_eq!(out[j], (a[j] + b[j]) as u64);
+        }
+    }
+
+    #[test]
     fn mult_unit_exact_on_care_set() {
         let set = ValueSet::full(8).map_chain(&ds(16));
         let unit = MultUnit8::synthesize("mul8_ds16", &set, &set, Objective::Area);
@@ -476,8 +538,9 @@ mod tests {
         let set = ValueSet::full(8).map_chain(&ds(16));
         let unit = AdderUnit::synthesize("add8_many", 8, 8, &set, &set, Objective::Area);
         let vals: Vec<u32> = set.iter().collect();
-        // 0, 1, lane-exact, and straddling multiples of 64
-        for n in [0usize, 1, 63, 64, 65, 150] {
+        // 0, 1, the u64-word boundary, the full 256-lane word, and
+        // straddles of both
+        for n in [0usize, 1, 63, 64, 65, 150, 255, 256, 257, 300] {
             let a: Vec<u32> = (0..n).map(|i| vals[i % vals.len()]).collect();
             let b: Vec<u32> = (0..n).map(|i| vals[(i * 11 + 5) % vals.len()]).collect();
             let out = unit.add_many(&a, &b);
@@ -494,7 +557,7 @@ mod tests {
         let set = ValueSet::full(8).map_chain(&ds(32));
         let unit = MultUnit8::synthesize("mul8_many", &set, &set, Objective::Area);
         let vals: Vec<u32> = set.iter().collect();
-        for n in [1usize, 64, 65, 130] {
+        for n in [1usize, 64, 65, 130, 255, 256, 257] {
             let a: Vec<u32> = (0..n).map(|i| vals[i % vals.len()]).collect();
             let b: Vec<u32> = (0..n).map(|i| vals[(i * 3 + 1) % vals.len()]).collect();
             let out = unit.mul_many(&a, &b);

@@ -297,8 +297,8 @@ impl Executor for NativeExecutor {
     }
 
     /// Lane-batched execution: the whole batch goes to the datapath's
-    /// [`Datapath::exec_batch`], which pools requests into the 64-way
-    /// bit-sliced netlist passes.
+    /// [`Datapath::exec_batch`], which pools requests into 256-lane
+    /// compiled-tape passes.
     fn exec_batch(&self, key: ModelKey, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
         let model = self.model(key)?;
         model.datapath.exec_batch(batch).map_err(|e| anyhow!("{key}: {e:#}"))

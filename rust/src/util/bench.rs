@@ -116,6 +116,28 @@ pub fn write_summary(default_path: &str, json: &Json) {
     }
 }
 
+/// Append one bench summary as a single JSON line to the committed
+/// history log (`BENCH_history.jsonl`) — the regression baseline CI
+/// diffs fresh runs against. The path can be overridden with
+/// `PPC_BENCH_HISTORY` (set it empty to disable the append entirely);
+/// failures warn instead of aborting the bench.
+pub fn append_history(default_path: &str, json: &Json) {
+    let path = std::env::var("PPC_BENCH_HISTORY").unwrap_or_else(|_| default_path.to_string());
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write;
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{}", json.to_string()));
+    match appended {
+        Ok(()) => println!("bench history -> {path}"),
+        Err(e) => eprintln!("warning: could not append bench history {path}: {e}"),
+    }
+}
+
 /// Human-readable seconds.
 pub fn fmt_time(seconds: f64) -> String {
     if seconds < 1e-6 {

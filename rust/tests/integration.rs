@@ -4,8 +4,10 @@
 //! queue, dynamic batcher, engine thread — serves the *synthesized PPC
 //! netlists* through `NativeExecutor`, bit-exact with the fixed-point
 //! application simulations, with graceful errors on unknown keys. Plus
-//! a property test holding the 64-way bit-parallel netlist evaluator
-//! against the scalar walk.
+//! property tests holding the bit-parallel interpreted netlist oracle
+//! against the scalar walk, and the 256-lane compiled-tape serving
+//! path against both per-request `exec` and the fixed-point
+//! application oracles, for every registered catalog key.
 //!
 //! PJRT tests (feature `pjrt` + `make artifacts`): the AOT artifacts
 //! (python/JAX/Pallas → HLO text) must reproduce the rust bit-accurate
@@ -183,9 +185,9 @@ fn native_coordinator_batches_classify_requests() {
     assert_eq!(coord.metrics().errors(), 0);
 }
 
-/// Property test: the 64-way bit-parallel netlist evaluator agrees with
-/// the scalar walk on random pattern batches (a synthesized 4-bit adder
-/// segment — NAND/AOI/XOR-heavy mapped logic).
+/// Property test: the bit-parallel interpreted netlist oracle
+/// (`eval64`) agrees with the scalar walk on random pattern batches (a
+/// synthesized 4-bit adder segment — NAND/AOI/XOR-heavy mapped logic).
 #[test]
 fn bit_parallel_eval_matches_scalar_on_random_patterns() {
     use ppc::logic::map::Objective;
@@ -265,13 +267,13 @@ fn exec_batch_bit_exact_with_scalar_exec_for_every_registered_model() {
     assert_eq!(exec.keys().len(), 6);
     let mut rng = Rng::new(0x64EC);
     for key in exec.keys() {
-        // one tiny, one sub-lane, one past-the-64-lane-boundary batch
-        // (the FRNN's forwards dominate runtime, so its batches are
-        // smaller while still crossing the lane boundary)
+        // one tiny, one sub-word, one past-the-256-lane-word-boundary
+        // batch for the image apps (the FRNN's forwards dominate
+        // runtime, so its batches stay small)
         let (mid, large) = if key.app == App::Frnn {
             (2 + rng.below(20) as usize, 65 + rng.below(8) as usize)
         } else {
-            (2 + rng.below(62) as usize, 65 + rng.below(136) as usize)
+            (2 + rng.below(62) as usize, 257 + rng.below(16) as usize)
         };
         for n in [1usize, mid, large] {
             let batch: Vec<Vec<Tensor>> =
@@ -281,6 +283,86 @@ fn exec_batch_bit_exact_with_scalar_exec_for_every_registered_model() {
             for (i, inputs) in batch.iter().enumerate() {
                 let want = exec.exec(key, inputs).unwrap();
                 assert_eq!(got[i], want, "{key}: request {i} of a {n}-batch diverged");
+            }
+        }
+    }
+}
+
+/// Compiled-tape serving vs the fixed-point application oracles, for
+/// **every registered catalog key**: the 256-lane compiled netlist
+/// path behind `exec_batch` must reproduce `gdf_filter`,
+/// `blend_images`, and `forward_fx` bit-for-bit — on image-app batches
+/// sized past the full 256-lane word, so the widened `[u64; 4]` tape
+/// pass (not just the narrow 64-lane fallback) is what's checked.
+#[test]
+fn compiled_tape_serving_matches_the_fixed_point_oracles_for_every_key() {
+    use ppc::apps::frnn::dataset;
+    use ppc::catalog::App;
+    use ppc::coordinator::Executor;
+    use ppc::runtime::NativeExecutor;
+    let ds = dataset::generate(2, 0xC0DE);
+    let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
+    let q = net::quantize(&r.net);
+    let exec = NativeExecutor::new()
+        .register(mk("gdf/ds16"))
+        .unwrap()
+        .register(mk("gdf/ds32"))
+        .unwrap()
+        .register(mk("blend/ds16"))
+        .unwrap()
+        .register(mk("blend/ds32"))
+        .unwrap()
+        .register_frnn(PpcConfig::Th48Ds16, q.clone())
+        .unwrap()
+        .register_frnn(PpcConfig::Ds32, q.clone())
+        .unwrap();
+    let to_img = |t: &Tensor| Image {
+        width: t.shape[1],
+        height: t.shape[0],
+        pixels: t.data.iter().map(|&v| v as u8).collect(),
+    };
+    let mut rng = Rng::new(0x257);
+    for key in exec.keys() {
+        // straddle the 256-lane word for the image apps; the FRNN's
+        // forwards dominate runtime, so its batch stays small
+        let n = if key.app == App::Frnn { 9 } else { 257 };
+        let batch: Vec<Vec<Tensor>> = (0..n).map(|_| random_request(&mut rng, key)).collect();
+        let got = exec.exec_batch(key, &batch).unwrap();
+        assert_eq!(got.len(), n);
+        let chain = key.config.chain();
+        for (i, inputs) in batch.iter().enumerate() {
+            match key.app {
+                App::Gdf => {
+                    let want = gdf::gdf_filter(&to_img(&inputs[0]), &chain).to_tensor();
+                    assert_eq!(got[i][0], want, "{key}: request {i} diverged from gdf_filter");
+                }
+                App::Blend => {
+                    let want = blend::blend_images(
+                        &to_img(&inputs[0]),
+                        &to_img(&inputs[1]),
+                        blend::Alpha(inputs[2].data[0] as u8),
+                        &chain,
+                        &chain,
+                    )
+                    .to_tensor();
+                    assert_eq!(got[i][0], want, "{key}: request {i} diverged from blend_images");
+                }
+                App::Frnn => {
+                    let face = dataset::Face {
+                        pixels: inputs[0].data.iter().map(|&v| v as u8).collect(),
+                        id: 0,
+                        pose: 0,
+                        sunglasses: false,
+                    };
+                    let (_, want) =
+                        net::forward_fx(&q, &face, &chain, &key.config.weight_chain());
+                    let bytes: Vec<u8> = got[i][0].data.iter().map(|&v| v as u8).collect();
+                    assert_eq!(
+                        bytes,
+                        want.to_vec(),
+                        "{key}: request {i} diverged from forward_fx"
+                    );
+                }
             }
         }
     }
