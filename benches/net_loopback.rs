@@ -1,0 +1,68 @@
+//! Loopback serving benchmark: the open-loop load generator against
+//! the TCP front door, end to end — framing, pipelining, admission,
+//! batching and the reply path, all over a real socket.
+//!
+//! The backend is the mock executor on purpose: the numbers isolate
+//! the *wire* path (connection handling + JSON framing + coordinator
+//! hand-off), not netlist synthesis. Latency percentiles are honest
+//! under coordinated omission because arrivals follow a fixed
+//! schedule and each sample is measured from its scheduled time.
+//!
+//! Run: `cargo bench --bench net_loopback` (PPC_BENCH_QUICK=1 shrinks
+//! the run). Writes `BENCH_net_loopback.json` (PPC_BENCH_JSON
+//! overrides; empty skips) and appends one line to
+//! `BENCH_history.jsonl` (PPC_BENCH_HISTORY overrides; empty skips).
+
+use ppc::coordinator::{Coordinator, CoordinatorConfig, MockExecutor};
+use ppc::net::loadgen::{self, LoadgenConfig};
+use ppc::net::server::{NetServer, NetServerConfig};
+use ppc::util::bench;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("PPC_BENCH_QUICK").map_or(false, |v| v == "1");
+    let cfg = CoordinatorConfig {
+        queue_capacity: 256,
+        batch_size: 16,
+        batch_max_wait: Duration::from_millis(1),
+        ..CoordinatorConfig::default()
+    };
+    let coord =
+        Arc::new(Coordinator::start(cfg, |_shard| Ok(MockExecutor::full_catalog())).unwrap());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server =
+        NetServer::spawn(listener, coord.clone(), NetServerConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let load = LoadgenConfig {
+        addr: addr.clone(),
+        clients: if quick { 2 } else { 4 },
+        rps: if quick { 400.0 } else { 2000.0 },
+        duration: Duration::from_secs(if quick { 1 } else { 3 }),
+        image_size: 16,
+        seed: 0xBE7C,
+        ..LoadgenConfig::default()
+    };
+    println!(
+        "loopback loadgen -> {addr}: {} clients, {:.0} req/s for {:.0}s{}",
+        load.clients,
+        load.rps,
+        load.duration.as_secs_f64(),
+        if quick { " (quick)" } else { "" }
+    );
+    let report = loadgen::run(&load).expect("load run completes");
+    print!("{}", report.render());
+
+    loadgen::send_shutdown(&addr).expect("server drains on the shutdown frame");
+    server.join();
+    println!("{}", coord.metrics().report());
+
+    assert_eq!(report.protocol_errors, 0, "loopback must be protocol-clean");
+    assert!(report.answered > 0, "the server answered nothing");
+
+    let json = report.summary_json("loopback open-loop e2e latency (scheduled->response)");
+    bench::write_summary("BENCH_net_loopback.json", &json);
+    bench::append_history("BENCH_history.jsonl", &json);
+}

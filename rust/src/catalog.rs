@@ -20,6 +20,7 @@
 //!   application.
 
 use crate::ppc::preprocess::{Chain, Preproc};
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::fmt;
 
@@ -166,6 +167,19 @@ impl Quality {
         }
     }
 
+    /// Parse the canonical [`Quality::name`] spelling (wire and CLI).
+    pub fn parse(s: &str) -> Result<Quality> {
+        Quality::ALL
+            .into_iter()
+            .find(|q| q.name() == s)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown quality {s:?} (valid: {})",
+                    join(Quality::ALL.iter().map(|q| q.name()))
+                )
+            })
+    }
+
     /// The next-lower tier — what an overloaded `degrade` admission
     /// policy falls back to. `Economy` has nowhere lower to go.
     pub fn lower(self) -> Option<Quality> {
@@ -297,6 +311,46 @@ impl Tensor {
 
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    /// Wire form: `{"shape": [...], "data": [...]}`. The inverse of
+    /// [`Tensor::from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shape", Json::Arr(self.shape.iter().map(|&d| Json::Num(d as f64)).collect())),
+            ("data", Json::Arr(self.data.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ])
+    }
+
+    /// Decode the wire form, re-running the `∏shape == data.len()`
+    /// check so a malformed peer cannot smuggle in an inconsistent
+    /// tensor.
+    pub fn from_json(j: &Json) -> Result<Tensor> {
+        let dims = j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("tensor wants a \"shape\" array"))?;
+        let vals = j
+            .get("data")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("tensor wants a \"data\" array"))?;
+        let mut shape = Vec::with_capacity(dims.len());
+        for d in dims {
+            let x = d.as_f64().ok_or_else(|| anyhow!("tensor shape entry is not a number"))?;
+            if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                bail!("tensor dimension {x} is not a valid extent");
+            }
+            shape.push(x as usize);
+        }
+        let mut data = Vec::with_capacity(vals.len());
+        for v in vals {
+            let x = v.as_f64().ok_or_else(|| anyhow!("tensor data entry is not a number"))?;
+            if x.fract() != 0.0 || x < i32::MIN as f64 || x > i32::MAX as f64 {
+                bail!("tensor element {x} is not an i32");
+            }
+            data.push(x as i32);
+        }
+        Tensor::new(shape, data)
     }
 }
 
@@ -444,5 +498,50 @@ mod tests {
     fn join_renders_lists() {
         assert_eq!(join(ModelKey::catalog().iter().take(2)), "gdf/conv, gdf/ds16");
         assert_eq!(join(Vec::<ModelKey>::new()), "(none)");
+    }
+
+    #[test]
+    fn quality_parses_every_canonical_name() {
+        for q in Quality::ALL {
+            assert_eq!(Quality::parse(q.name()).unwrap(), q);
+        }
+        let e = Quality::parse("ultra").unwrap_err();
+        assert!(format!("{e}").contains("precise, balanced, economy"), "{e}");
+    }
+
+    #[test]
+    fn tensor_json_round_trips() {
+        for t in [
+            Tensor::scalar(-7),
+            Tensor::vector(vec![]),
+            Tensor::vector(vec![1, -2, 3]),
+            Tensor::matrix(2, 3, vec![0, 1, 2, 3, 4, 5]).unwrap(),
+        ] {
+            let j = t.to_json();
+            assert_eq!(Tensor::from_json(&j).unwrap(), t);
+            // and the textual wire form survives a parse cycle too
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(Tensor::from_json(&reparsed).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn tensor_from_json_rejects_inconsistent_wire_forms() {
+        let bad_shape = Json::obj(vec![
+            ("shape", Json::num_arr(&[2.0, 2.0])),
+            ("data", Json::num_arr(&[1.0, 2.0, 3.0])),
+        ]);
+        assert!(Tensor::from_json(&bad_shape).is_err());
+        let not_i32 = Json::obj(vec![
+            ("shape", Json::num_arr(&[1.0])),
+            ("data", Json::num_arr(&[0.5])),
+        ]);
+        assert!(Tensor::from_json(&not_i32).is_err());
+        let negative_dim = Json::obj(vec![
+            ("shape", Json::num_arr(&[-1.0])),
+            ("data", Json::Arr(Vec::new())),
+        ]);
+        assert!(Tensor::from_json(&negative_dim).is_err());
+        assert!(Tensor::from_json(&Json::Null).is_err());
     }
 }

@@ -101,6 +101,35 @@ pub enum Rejection {
     Shed,
     /// The request's deadline passed before it executed.
     DeadlineExpired,
+    /// The request routed to a model the serving catalog does not
+    /// have registered (a wire-boundary outcome — in-process callers
+    /// can only submit typed keys).
+    UnknownModel,
+}
+
+impl Rejection {
+    /// Every rejection kind, in wire order.
+    pub const ALL: [Rejection; 3] =
+        [Rejection::Shed, Rejection::DeadlineExpired, Rejection::UnknownModel];
+
+    /// Stable wire discriminant. Clients switch on this string; it is
+    /// part of the protocol and must never change for an existing
+    /// variant.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            Rejection::Shed => "shed",
+            Rejection::DeadlineExpired => "expired",
+            Rejection::UnknownModel => "unknown_model",
+        }
+    }
+
+    /// Parse a [`Rejection::wire_name`] discriminant back.
+    pub fn parse_wire(s: &str) -> anyhow::Result<Rejection> {
+        Rejection::ALL
+            .into_iter()
+            .find(|r| r.wire_name() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown rejection kind {s:?}"))
+    }
 }
 
 impl fmt::Display for Rejection {
@@ -109,6 +138,9 @@ impl fmt::Display for Rejection {
             Rejection::Shed => f.write_str("request shed: coordinator over capacity"),
             Rejection::DeadlineExpired => {
                 f.write_str("request deadline expired before execution")
+            }
+            Rejection::UnknownModel => {
+                f.write_str("requested model is not in the registered catalog")
             }
         }
     }
@@ -527,5 +559,19 @@ mod tests {
         }
         assert!(OverloadPolicy::parse("nope").is_err());
         assert_eq!(OverloadPolicy::default(), OverloadPolicy::Wait);
+    }
+
+    #[test]
+    fn rejection_wire_names_are_stable_and_round_trip() {
+        // these strings are protocol: clients switch on them
+        assert_eq!(Rejection::Shed.wire_name(), "shed");
+        assert_eq!(Rejection::DeadlineExpired.wire_name(), "expired");
+        assert_eq!(Rejection::UnknownModel.wire_name(), "unknown_model");
+        for r in Rejection::ALL {
+            assert_eq!(Rejection::parse_wire(r.wire_name()).unwrap(), r);
+            // every kind has a human Display too
+            assert!(!r.to_string().is_empty());
+        }
+        assert!(Rejection::parse_wire("dropped").is_err());
     }
 }

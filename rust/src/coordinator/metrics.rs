@@ -105,6 +105,19 @@ struct Inner {
     /// High-water mark of concurrently admitted (permit-holding)
     /// requests — the observable proof the in-flight cap held.
     peak_in_flight: u64,
+    /// TCP front-door connections ever accepted.
+    net_conns_opened: u64,
+    /// TCP front-door connections fully drained and closed.
+    net_conns_closed: u64,
+    /// High-water mark of concurrently open connections.
+    net_peak_conns: u64,
+    /// Well-framed requests decoded off the wire.
+    net_frames_in: u64,
+    /// Frames written back to clients (responses, rejections, errors).
+    net_frames_out: u64,
+    /// Wire-protocol violations observed (malformed / oversized /
+    /// truncated frames).
+    net_protocol_errors: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -409,6 +422,65 @@ impl Metrics {
         self.inner.lock().unwrap().peak_depth.clone()
     }
 
+    /// One front-door TCP connection accepted.
+    pub fn record_conn_opened(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.net_conns_opened += 1;
+        let active = m.net_conns_opened - m.net_conns_closed;
+        m.net_peak_conns = m.net_peak_conns.max(active);
+    }
+
+    /// One front-door TCP connection drained and closed.
+    pub fn record_conn_closed(&self) {
+        self.inner.lock().unwrap().net_conns_closed += 1;
+    }
+
+    /// One well-framed request decoded off the wire.
+    pub fn record_net_frame_in(&self) {
+        self.inner.lock().unwrap().net_frames_in += 1;
+    }
+
+    /// One frame written back to a client.
+    pub fn record_net_frame_out(&self) {
+        self.inner.lock().unwrap().net_frames_out += 1;
+    }
+
+    /// One wire-protocol violation (malformed / oversized / truncated).
+    pub fn record_net_protocol_error(&self) {
+        self.inner.lock().unwrap().net_protocol_errors += 1;
+    }
+
+    /// Connections ever accepted by the front door.
+    pub fn net_connections(&self) -> u64 {
+        self.inner.lock().unwrap().net_conns_opened
+    }
+
+    /// Connections currently open.
+    pub fn net_active_connections(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        m.net_conns_opened - m.net_conns_closed
+    }
+
+    /// High-water mark of concurrently open connections.
+    pub fn net_peak_connections(&self) -> u64 {
+        self.inner.lock().unwrap().net_peak_conns
+    }
+
+    /// Request frames decoded off the wire.
+    pub fn net_frames_in(&self) -> u64 {
+        self.inner.lock().unwrap().net_frames_in
+    }
+
+    /// Frames written back to clients.
+    pub fn net_frames_out(&self) -> u64 {
+        self.inner.lock().unwrap().net_frames_out
+    }
+
+    /// Wire-protocol violations observed.
+    pub fn net_protocol_errors(&self) -> u64 {
+        self.inner.lock().unwrap().net_protocol_errors
+    }
+
     /// Human-readable report block.
     pub fn report(&self) -> String {
         let mut s = String::new();
@@ -442,6 +514,18 @@ impl Metrics {
         }
         for (key, n) in self.expired_counts() {
             s.push_str(&format!("  {:<16} expired={n}\n", key.to_string()));
+        }
+        if self.net_connections() > 0 {
+            s.push_str(&format!(
+                "net: conns={} (peak {} concurrent, {} open) frames_in={} \
+                 frames_out={} protocol_errors={}\n",
+                self.net_connections(),
+                self.net_peak_connections(),
+                self.net_active_connections(),
+                self.net_frames_in(),
+                self.net_frames_out(),
+                self.net_protocol_errors()
+            ));
         }
         let placements = self.placements();
         if !placements.is_empty() {
@@ -643,5 +727,29 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("shard0"), "{rep}");
         assert!(rep.contains("shard1"), "{rep}");
+    }
+
+    #[test]
+    fn net_counters_track_connections_and_frames() {
+        let m = Metrics::new();
+        // no front-door traffic -> no net line in the report
+        assert!(!m.report().contains("net:"), "{}", m.report());
+        m.record_conn_opened();
+        m.record_conn_opened();
+        m.record_conn_closed();
+        m.record_conn_opened();
+        m.record_net_frame_in();
+        m.record_net_frame_in();
+        m.record_net_frame_out();
+        m.record_net_protocol_error();
+        assert_eq!(m.net_connections(), 3);
+        assert_eq!(m.net_active_connections(), 2);
+        assert_eq!(m.net_peak_connections(), 2);
+        assert_eq!(m.net_frames_in(), 2);
+        assert_eq!(m.net_frames_out(), 1);
+        assert_eq!(m.net_protocol_errors(), 1);
+        let rep = m.report();
+        assert!(rep.contains("net: conns=3 (peak 2 concurrent, 2 open)"), "{rep}");
+        assert!(rep.contains("protocol_errors=1"), "{rep}");
     }
 }

@@ -40,7 +40,9 @@ pub enum Job {
 }
 
 impl Job {
-    fn app(&self) -> App {
+    /// Which application datapath serves this job kind (public so the
+    /// network front door can route before submitting).
+    pub fn app(&self) -> App {
         match self {
             Job::Denoise { .. } => App::Gdf,
             Job::Blend { .. } => App::Blend,
@@ -72,6 +74,34 @@ pub enum SubmitError {
     /// Coordinator shut down.
     Down,
 }
+
+impl SubmitError {
+    /// Stable wire discriminant (protocol — never change for an
+    /// existing variant).
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            SubmitError::Busy => "busy",
+            SubmitError::Shed => "shed",
+            SubmitError::Expired => "expired",
+            SubmitError::Down => "down",
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => f.write_str("submit refused: over capacity (back off)"),
+            SubmitError::Shed => {
+                f.write_str("submit shed: over capacity under the overload policy")
+            }
+            SubmitError::Expired => f.write_str("submit refused: deadline already expired"),
+            SubmitError::Down => f.write_str("submit failed: coordinator is down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -1067,5 +1097,25 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("admission: peak_in_flight="), "{rep}");
         assert!(rep.contains("wait_p50="), "{rep}");
+    }
+
+    #[test]
+    fn submit_errors_are_displayable_with_stable_wire_names() {
+        let all = [
+            SubmitError::Busy,
+            SubmitError::Shed,
+            SubmitError::Expired,
+            SubmitError::Down,
+        ];
+        assert_eq!(
+            all.map(SubmitError::wire_name),
+            ["busy", "shed", "expired", "down"]
+        );
+        for e in all {
+            assert!(!e.to_string().is_empty());
+        }
+        // shed vs expired stay distinguishable through an anyhow chain
+        let chained = anyhow::Error::new(SubmitError::Shed);
+        assert_eq!(chained.downcast_ref::<SubmitError>(), Some(&SubmitError::Shed));
     }
 }

@@ -37,6 +37,12 @@
 //!   or XLA anywhere, with a persistent BLIF netlist cache for instant
 //!   cold starts), and the `pjrt` cargo feature adds the AOT-compiled
 //!   JAX/Pallas artifact path,
+//! - [`net`] — the wire boundary: length-prefixed JSON framing with
+//!   typed rejections (`net::proto`), the threaded TCP front door in
+//!   front of the coordinator (`serve --listen`), and the open-loop
+//!   multi-client load generator (`loadgen`) whose percentiles stay
+//!   honest under coordinated omission — all on `std::net`, no new
+//!   dependencies,
 //! - [`util`] — offline-friendly stand-ins for rand/serde/rayon/clap/
 //!   criterion/proptest (plus the in-tree `vendor/anyhow`).
 //!
@@ -51,6 +57,7 @@ pub mod apps;
 pub mod catalog;
 pub mod coordinator;
 pub mod logic;
+pub mod net;
 pub mod ppc;
 pub mod runtime;
 pub mod tables;

@@ -35,6 +35,7 @@ Pipeline:
         [--overload reject|wait|degrade] [--deadline-ms N]
         [--queue-capacity N] [--fair-share F]
         [--cache-dir DIR] [--no-cache] [--list-models] [--artifacts DIR]
+        [--listen ADDR]
                                          run the coordinator demo:
                                          native = synthesized netlists (offline),
                                          pjrt   = AOT artifacts (needs --features pjrt).
@@ -66,6 +67,30 @@ Pipeline:
                                          --deadline-ms when set), degrade retries one
                                          quality tier lower and marks the response
                                          degraded.
+                                         --listen ADDR binds the TCP front door
+                                         instead of running the demo workload:
+                                         length-prefixed JSON frames in, typed
+                                         response/rejection frames out, until a
+                                         client sends a `shutdown` control frame
+                                         (then the server drains and prints the
+                                         metrics report). The readiness line is
+                                         `listening on HOST:PORT` (use port 0 to
+                                         pick a free port).
+  loadgen --connect HOST:PORT [--clients N] [--rps F] [--duration-s F]
+          [--app gdf|blend|frnn] [--quality Q] [--deadline-ms N]
+          [--image-size N] [--classify-row N] [--seed N]
+          [--quick] [--shutdown]
+                                         open-loop load generator against a
+                                         `serve --listen` front door: fixed
+                                         arrival schedule (honest under
+                                         coordinated omission), latency measured
+                                         from each request's *scheduled* time.
+                                         Prints p50/p99/p999 + shed/degrade
+                                         rates, writes BENCH_loadgen.json and
+                                         appends to BENCH_history.jsonl.
+                                         --shutdown sends the control frame that
+                                         drains the server afterwards; exits
+                                         nonzero on any protocol error.
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
 
@@ -275,6 +300,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "serve" => serve_demo(args),
+        "loadgen" => loadgen_cmd(args),
         "synth" => synth_adhoc(args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
@@ -472,6 +498,30 @@ fn serve_demo(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("{e:#}\nhint: run `make artifacts` first"))?
     };
 
+    // --listen: put the TCP front door in front of the coordinator
+    // instead of running the in-process demo workload. The server runs
+    // until a client sends a `shutdown` control frame (there is no
+    // portable std signal handling), then drains every connection and
+    // flushes the metrics report.
+    if let Some(listen) = args.get("listen") {
+        let listener = std::net::TcpListener::bind(listen)
+            .map_err(|e| anyhow!("bind {listen}: {e}"))?;
+        let coord = std::sync::Arc::new(coord);
+        let server = ppc::net::NetServer::spawn(
+            listener,
+            coord.clone(),
+            ppc::net::NetServerConfig::default(),
+        )?;
+        // this exact line is the readiness signal scripts poll for
+        println!("listening on {}", server.local_addr());
+        let _ = std::io::Write::flush(&mut std::io::stdout());
+        server.join();
+        println!("shutdown frame received; drained");
+        println!("{}", coord.metrics().report());
+        // dropping the last Coordinator handle drains the engine pool
+        return Ok(());
+    }
+
     // Workload shaped to the registered catalog: only apps with at
     // least one model, each request routed to a quality its app serves.
     let apps: Vec<App> = App::ALL
@@ -542,7 +592,9 @@ fn serve_demo(args: &Args) -> Result<()> {
             Err(e) => match e.downcast_ref::<Rejection>() {
                 Some(Rejection::DeadlineExpired) => expired += 1,
                 Some(Rejection::Shed) => shed += 1,
-                None => return Err(e),
+                // unknown-model is a wire-boundary outcome; in-process
+                // demo submits always route to registered keys
+                Some(Rejection::UnknownModel) | None => return Err(e),
             },
         }
     }
@@ -554,6 +606,67 @@ fn serve_demo(args: &Args) -> Result<()> {
         n as f64 / dt.as_secs_f64()
     );
     println!("{}", coord.metrics().report());
+    Ok(())
+}
+
+/// Open-loop load generation against a `serve --listen` front door.
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    use ppc::catalog::{App, Quality};
+    use ppc::net::loadgen::{self, LoadgenConfig};
+    use ppc::util::bench;
+    use std::time::Duration;
+
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("loadgen needs --connect HOST:PORT (from `serve --listen`)"))?;
+    let quick = args.flag("quick");
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(v) => Some(v.parse().map_err(|e| anyhow!("--deadline-ms {v:?}: {e}"))?),
+        None => None,
+    };
+    let cfg = LoadgenConfig {
+        addr: addr.to_string(),
+        clients: args.usize_or("clients", if quick { 2 } else { 4 }),
+        rps: args.f64_or("rps", if quick { 40.0 } else { 200.0 }),
+        duration: Duration::from_secs_f64(args.f64_or(
+            "duration-s",
+            if quick { 2.0 } else { 10.0 },
+        )),
+        app: App::parse(args.get_or("app", "gdf"))?,
+        quality: Quality::parse(args.get_or("quality", "balanced"))?,
+        deadline_ms,
+        image_size: args.usize_or("image-size", if quick { 16 } else { 64 }),
+        classify_row: args.usize_or("classify-row", 960),
+        seed: args.u64_or("seed", 0x10AD),
+    };
+    println!(
+        "open-loop loadgen -> {}: {} clients, {:.0} req/s target for {:.1}s ({} @ {})",
+        cfg.addr,
+        cfg.clients,
+        cfg.rps,
+        cfg.duration.as_secs_f64(),
+        cfg.app.name(),
+        cfg.quality.name(),
+    );
+    let report = loadgen::run(&cfg)?;
+    print!("{}", report.render());
+    let json = report.summary_json("open-loop e2e latency (scheduled->response)");
+    bench::write_summary("BENCH_loadgen.json", &json);
+    bench::append_history("BENCH_history.jsonl", &json);
+    if args.flag("shutdown") {
+        loadgen::send_shutdown(addr)?;
+        println!("server drained (shutdown frame acked)");
+    }
+    if report.protocol_errors > 0 {
+        bail!(
+            "{} protocol error(s) across {} sent requests",
+            report.protocol_errors,
+            report.sent
+        );
+    }
+    if report.answered == 0 {
+        bail!("no requests answered — is the server reachable and the model registered?");
+    }
     Ok(())
 }
 

@@ -1,0 +1,399 @@
+//! Multi-client **open-loop** load generator for the TCP front door.
+//!
+//! Open loop means arrivals follow a fixed schedule: client `c` sends
+//! request `k` at `start + offset_c + k·interval`, whether or not
+//! earlier responses came back, and each latency sample is measured
+//! from the request's *scheduled* time — not from when the socket
+//! write happened. A closed-loop generator (request-after-response)
+//! silently stops offering load exactly when the server stalls, which
+//! is the coordinated-omission trap; this harness keeps the pressure
+//! on, so a stalled server shows up as a fat p99/p999 tail instead of
+//! a flattering mean.
+//!
+//! Each client owns one connection with a sender and a receiver
+//! thread (responses are pipelined, so the receiver drains
+//! continuously while the sender keeps the schedule). Typed outcomes
+//! — answered / degraded / shed / expired / unknown-model / error —
+//! are tallied per frame and merged into a [`LoadReport`], which
+//! renders the human block and the `BENCH_*.json`-style summary.
+
+use crate::catalog::{App, Quality, Tensor};
+use crate::coordinator::{Job, Rejection};
+use crate::net::proto::{
+    self, ClientFrame, FrameError, FrameReader, Request, ServerFrame, ERR_EXEC, MAX_FRAME,
+};
+use crate::util::bench::{self, BenchResult};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::util::stats::Summary;
+use anyhow::{anyhow, Context, Result};
+use std::net::{Shutdown, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Load-run parameters.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent connections.
+    pub clients: usize,
+    /// Aggregate target arrival rate across all clients, requests/s.
+    pub rps: f64,
+    /// How long to keep offering load.
+    pub duration: Duration,
+    /// Application every request targets.
+    pub app: App,
+    /// Quality hint on every request.
+    pub quality: Quality,
+    /// Relative per-request deadline, if any.
+    pub deadline_ms: Option<u64>,
+    /// Square image edge for gdf/blend payloads.
+    pub image_size: usize,
+    /// FRNN pixel-row length (must match the server's `classify_row`).
+    pub classify_row: usize,
+    /// Payload PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:0".to_string(),
+            clients: 4,
+            rps: 200.0,
+            duration: Duration::from_secs(2),
+            app: App::Gdf,
+            quality: Quality::Balanced,
+            deadline_ms: None,
+            image_size: 32,
+            classify_row: 960,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Aggregate outcome of one load run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// Requests on the arrival schedule (clients × per-client count).
+    pub scheduled: usize,
+    /// Requests actually written to a socket.
+    pub sent: usize,
+    /// Typed `response` frames received.
+    pub answered: usize,
+    /// ...of which served below the requested tier.
+    pub degraded: usize,
+    /// Typed shed rejections.
+    pub shed: usize,
+    /// Typed deadline-expired rejections.
+    pub expired: usize,
+    /// Typed unknown-model rejections.
+    pub unknown_model: usize,
+    /// Execution errors (the request ran and failed).
+    pub exec_errors: usize,
+    /// Wire-protocol violations seen by the clients (malformed frames,
+    /// early disconnects, receiver stalls).
+    pub protocol_errors: usize,
+    /// Scheduled-time → response latency, seconds, answered only.
+    pub latency: Summary,
+    /// Wall-clock of the whole run.
+    pub wall: Duration,
+}
+
+impl LoadReport {
+    pub fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.sent.max(1) as f64
+    }
+
+    pub fn degrade_rate(&self) -> f64 {
+        self.degraded as f64 / self.sent.max(1) as f64
+    }
+
+    pub fn expired_rate(&self) -> f64 {
+        self.expired as f64 / self.sent.max(1) as f64
+    }
+
+    /// Answered requests per wall-clock second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.answered as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Human-readable block.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "open-loop: {} scheduled, {} sent, {} answered ({} degraded), {} shed, \
+             {} expired, {} unknown-model, {} exec errors, {} protocol errors \
+             in {:.2}s ({:.1} answered/s)\n",
+            self.scheduled,
+            self.sent,
+            self.answered,
+            self.degraded,
+            self.shed,
+            self.expired,
+            self.unknown_model,
+            self.exec_errors,
+            self.protocol_errors,
+            self.wall.as_secs_f64(),
+            self.throughput_rps()
+        ));
+        s.push_str(&format!(
+            "latency (scheduled->response): p50={:.3}ms p90={:.3}ms p99={:.3}ms \
+             p999={:.3}ms max={:.3}ms (n={})\n",
+            self.latency.p50 * 1e3,
+            self.latency.p90 * 1e3,
+            self.latency.p99 * 1e3,
+            self.latency.p999 * 1e3,
+            self.latency.max * 1e3,
+            self.latency.n
+        ));
+        s
+    }
+
+    /// The `BENCH_native_exec.json`-shaped machine summary
+    /// (`{"results": [...], "metrics": {...}}`), ready for
+    /// [`bench::write_summary`] / [`bench::append_history`].
+    pub fn summary_json(&self, name: &str) -> Json {
+        let row =
+            BenchResult { name: name.to_string(), iters: self.latency.n, summary: self.latency.clone() };
+        bench::summary_json(
+            &[&row],
+            &[
+                ("loadgen_throughput_rps", self.throughput_rps()),
+                ("loadgen_p50_ms", self.latency.p50 * 1e3),
+                ("loadgen_p99_ms", self.latency.p99 * 1e3),
+                ("loadgen_p999_ms", self.latency.p999 * 1e3),
+                ("loadgen_shed_rate", self.shed_rate()),
+                ("loadgen_degrade_rate", self.degrade_rate()),
+                ("loadgen_expired_rate", self.expired_rate()),
+                ("loadgen_answered", self.answered as f64),
+                ("loadgen_protocol_errors", self.protocol_errors as f64),
+            ],
+        )
+    }
+}
+
+#[derive(Default)]
+struct ClientStats {
+    sent: usize,
+    answered: usize,
+    degraded: usize,
+    shed: usize,
+    expired: usize,
+    unknown_model: usize,
+    exec_errors: usize,
+    protocol_errors: usize,
+    latencies: Vec<f64>,
+}
+
+impl ClientStats {
+    /// Frames that terminally settle one request.
+    fn terminal(&self) -> usize {
+        self.answered + self.shed + self.expired + self.unknown_model + self.exec_errors
+    }
+
+    fn merge(&mut self, o: ClientStats) {
+        self.sent += o.sent;
+        self.answered += o.answered;
+        self.degraded += o.degraded;
+        self.shed += o.shed;
+        self.expired += o.expired;
+        self.unknown_model += o.unknown_model;
+        self.exec_errors += o.exec_errors;
+        self.protocol_errors += o.protocol_errors;
+        self.latencies.extend(o.latencies);
+    }
+}
+
+/// Run one open-loop load generation pass against a serving address.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.clients == 0 {
+        return Err(anyhow!("loadgen wants at least one client"));
+    }
+    let per_client =
+        (((cfg.rps * cfg.duration.as_secs_f64()) / cfg.clients as f64).ceil() as usize).max(1);
+    let interval = Duration::from_secs_f64(cfg.clients as f64 / cfg.rps.max(1e-9));
+    let t0 = Instant::now();
+    // let every client connect before the schedule starts ticking
+    let start = t0 + Duration::from_millis(50);
+    let mut handles = Vec::new();
+    for c in 0..cfg.clients {
+        let cfg = cfg.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("ppc-loadgen-{c}"))
+                .spawn(move || client_run(&cfg, c, per_client, interval, start))?,
+        );
+    }
+    let mut agg = ClientStats::default();
+    for h in handles {
+        agg.merge(h.join().map_err(|_| anyhow!("loadgen client panicked"))??);
+    }
+    let wall = t0.elapsed();
+    Ok(LoadReport {
+        scheduled: per_client * cfg.clients,
+        sent: agg.sent,
+        answered: agg.answered,
+        degraded: agg.degraded,
+        shed: agg.shed,
+        expired: agg.expired,
+        unknown_model: agg.unknown_model,
+        exec_errors: agg.exec_errors,
+        protocol_errors: agg.protocol_errors,
+        latency: Summary::of(agg.latencies),
+        wall,
+    })
+}
+
+fn client_run(
+    cfg: &LoadgenConfig,
+    client: usize,
+    n: usize,
+    interval: Duration,
+    start: Instant,
+) -> Result<ClientStats> {
+    let stream =
+        TcpStream::connect(&cfg.addr).with_context(|| format!("connect {}", cfg.addr))?;
+    let _ = stream.set_nodelay(true);
+    let read_half = stream.try_clone()?;
+    // phase-offset the clients so aggregate arrivals are evenly spaced
+    let offset = interval.mul_f64(client as f64 / cfg.clients as f64);
+    let receiver = thread::spawn(move || receive_loop(read_half, n, start, offset, interval));
+    let mut rng = Rng::new(cfg.seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut w = stream;
+    let mut sent = 0usize;
+    for k in 0..n {
+        let due = start + offset + interval.mul_f64(k as f64);
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        let req = Request {
+            id: k as u64,
+            job: random_job(cfg, &mut rng),
+            quality: cfg.quality,
+            deadline_ms: cfg.deadline_ms,
+        };
+        if proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).is_err() {
+            // server gone mid-run; the receiver will tally the EOF
+            break;
+        }
+        sent += 1;
+    }
+    // half-close: the server answers everything it got, then EOFs us
+    let _ = w.shutdown(Shutdown::Write);
+    let mut st = receiver.join().map_err(|_| anyhow!("loadgen receiver panicked"))?;
+    st.sent = sent;
+    if st.terminal() < sent {
+        // some requests never settled (server stall or disconnect)
+        st.protocol_errors += sent - st.terminal();
+    }
+    Ok(st)
+}
+
+fn receive_loop(
+    stream: TcpStream,
+    n: usize,
+    start: Instant,
+    offset: Duration,
+    interval: Duration,
+) -> ClientStats {
+    // a finite read timeout lets the receiver give up on a stalled
+    // server instead of wedging the harness (and CI) forever
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let idle_limit = Duration::from_secs(60);
+    let mut last_frame = Instant::now();
+    let mut reader = FrameReader::new(stream, MAX_FRAME);
+    let mut st = ClientStats::default();
+    loop {
+        if st.terminal() >= n {
+            break;
+        }
+        match reader.poll_frame() {
+            Ok(None) => {
+                if last_frame.elapsed() > idle_limit {
+                    st.protocol_errors += 1;
+                    break;
+                }
+            }
+            Ok(Some(json)) => {
+                last_frame = Instant::now();
+                match ServerFrame::from_json(&json) {
+                    Ok(ServerFrame::Response { id, degraded, .. }) => {
+                        let scheduled = start + offset + interval.mul_f64(id as f64);
+                        let lat = Instant::now().saturating_duration_since(scheduled);
+                        st.latencies.push(lat.as_secs_f64());
+                        st.answered += 1;
+                        if degraded {
+                            st.degraded += 1;
+                        }
+                    }
+                    Ok(ServerFrame::Rejected { rejection, .. }) => match rejection {
+                        Rejection::Shed => st.shed += 1,
+                        Rejection::DeadlineExpired => st.expired += 1,
+                        Rejection::UnknownModel => st.unknown_model += 1,
+                    },
+                    Ok(ServerFrame::Error { kind, .. }) => {
+                        if kind == ERR_EXEC {
+                            st.exec_errors += 1;
+                        } else {
+                            st.protocol_errors += 1;
+                        }
+                    }
+                    Ok(ServerFrame::ShutdownAck) | Ok(ServerFrame::Pong) => {}
+                    Err(_) => st.protocol_errors += 1,
+                }
+            }
+            Err(FrameError::Closed) | Err(FrameError::Truncated) => break,
+            Err(_) => {
+                st.protocol_errors += 1;
+                break;
+            }
+        }
+    }
+    st
+}
+
+fn random_job(cfg: &LoadgenConfig, rng: &mut Rng) -> Job {
+    let pixels = |rng: &mut Rng, len: usize, max: u64| -> Vec<i32> {
+        (0..len).map(|_| rng.below(max) as i32).collect()
+    };
+    let side = cfg.image_size.max(1);
+    match cfg.app {
+        App::Gdf => Job::Denoise {
+            image: Tensor::matrix(side, side, pixels(rng, side * side, 256))
+                .expect("square loadgen image"),
+        },
+        App::Blend => Job::Blend {
+            p1: Tensor::matrix(side, side, pixels(rng, side * side, 256))
+                .expect("square loadgen image"),
+            p2: Tensor::matrix(side, side, pixels(rng, side * side, 256))
+                .expect("square loadgen image"),
+            alpha: 64,
+        },
+        App::Frnn => Job::Classify { pixels: pixels(rng, cfg.classify_row, 160) },
+    }
+}
+
+/// Send a `shutdown` control frame on a fresh connection and wait for
+/// the ack (or the drain-close) — how `loadgen --shutdown` and the CI
+/// smoke step stop a `serve --listen` process cleanly.
+pub fn send_shutdown(addr: &str) -> Result<()> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    proto::write_frame(&mut stream, &ClientFrame::Shutdown.to_json())?;
+    let mut reader = FrameReader::new(stream, MAX_FRAME);
+    loop {
+        match reader.next_frame() {
+            Ok(j) => {
+                if matches!(ServerFrame::from_json(&j), Ok(ServerFrame::ShutdownAck)) {
+                    return Ok(());
+                }
+            }
+            // the server may close right after draining — that is a
+            // successful shutdown too
+            Err(FrameError::Closed) | Err(FrameError::Truncated) => return Ok(()),
+            Err(e) => return Err(anyhow!("waiting for shutdown ack: {e}")),
+        }
+    }
+}

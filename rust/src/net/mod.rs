@@ -1,0 +1,32 @@
+//! The network front door — the wire boundary of the serving stack.
+//!
+//! ```text
+//!  client                      server (`serve --listen ADDR`)
+//!  ──────                      ───────────────────────────────
+//!  ClientFrame::Request ──►  FrameReader ─► route check ─► Coordinator::submit_*
+//!   (id, app, quality,          │ (per-conn reader thread)        │
+//!    deadline_ms, tensors)      │                                 ▼
+//!                               │                        Admission ─► Batcher ─► EnginePool
+//!  ServerFrame::{Response, ◄── writer thread ◄─ Ticket::wait ◄────┘
+//!    Rejected, Error}          (replies in submit order = pipelining)
+//! ```
+//!
+//! Three layers, all std-only (`std::net` + the in-tree JSON):
+//!
+//! - [`proto`] — length-prefixed JSON framing with typed payloads and
+//!   survivable oversized/malformed outcomes;
+//! - [`server`] — the threaded TCP server in front of a shared
+//!   [`crate::coordinator::Coordinator`], with graceful control-frame
+//!   shutdown and per-connection metrics folded into
+//!   [`crate::coordinator::Metrics::report`];
+//! - [`loadgen`] — the multi-client open-loop load generator
+//!   (`loadgen` subcommand) whose percentiles stay honest under
+//!   coordinated omission.
+
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use proto::{ClientFrame, FrameError, FrameReader, Request, ServerFrame, MAX_FRAME};
+pub use server::{NetServer, NetServerConfig};

@@ -1,0 +1,655 @@
+//! Wire protocol of the network front door: length-prefixed JSON
+//! frames carrying typed requests and responses.
+//!
+//! Every frame is a 4-byte big-endian `u32` body length followed by a
+//! UTF-8 JSON object (the in-tree [`crate::util::json::Json`] — no
+//! external serialization deps). The framing layer and the payload
+//! layer fail independently on purpose:
+//!
+//! - a frame whose declared length exceeds the reader's cap is
+//!   **drained** (the bytes are consumed and discarded) and surfaced
+//!   as [`FrameError::Oversized`] — the stream stays frame-aligned
+//!   and the connection survives;
+//! - a well-framed body that is not UTF-8 JSON is
+//!   [`FrameError::Malformed`] — again survivable;
+//! - EOF mid-frame is [`FrameError::Truncated`]; EOF on a frame
+//!   boundary is the clean [`FrameError::Closed`].
+//!
+//! Payloads are typed: [`ClientFrame`] (requests with pipelined ids,
+//! quality hints and relative deadlines, plus `shutdown`/`ping`
+//! control frames) and [`ServerFrame`] (responses with the serving
+//! route and `degraded` flag, typed rejections keyed by
+//! [`Rejection::wire_name`], protocol/execution errors, and the
+//! control acks). Tensors travel as `{"shape": [...], "data": [...]}`
+//! via [`Tensor::to_json`] / [`Tensor::from_json`].
+
+use crate::catalog::{App, ModelKey, Quality, Tensor};
+use crate::coordinator::{Job, Rejection};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Default largest accepted frame body, in bytes. Generous enough for
+/// a few thousand-element tensors spelled out as JSON; small enough
+/// that one hostile connection cannot balloon server memory.
+pub const MAX_FRAME: usize = 8 << 20;
+
+/// Stable `kind` discriminant of an oversized-frame [`ServerFrame::Error`].
+pub const ERR_OVERSIZED: &str = "oversized";
+/// Stable `kind` discriminant of a malformed-frame [`ServerFrame::Error`].
+pub const ERR_MALFORMED: &str = "malformed";
+/// Stable `kind`: the frame was valid JSON but not a valid request.
+pub const ERR_BAD_REQUEST: &str = "bad_request";
+/// Stable `kind`: the request executed and failed (not a wire problem).
+pub const ERR_EXEC: &str = "exec";
+/// Stable `kind`: the coordinator is shutting down.
+pub const ERR_DOWN: &str = "down";
+
+/// How reading a frame can fail. `Oversized` and `Malformed` leave the
+/// stream frame-aligned — the reader can keep going; the rest are
+/// terminal for the connection.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean EOF on a frame boundary.
+    Closed,
+    /// EOF in the middle of a frame.
+    Truncated,
+    /// The declared body length exceeded the reader's cap; the body
+    /// was drained so the next frame still parses.
+    Oversized { len: usize, max: usize },
+    /// Well-framed bytes that are not UTF-8 JSON.
+    Malformed(String),
+    /// Transport error.
+    Io(io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Closed => f.write_str("connection closed at a frame boundary"),
+            FrameError::Truncated => f.write_str("connection closed mid-frame"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte cap")
+            }
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Incremental frame decoder over any [`Read`]. Tolerates arbitrarily
+/// split delivery (state survives across `poll_frame` calls) and read
+/// timeouts (`WouldBlock`/`TimedOut` surface as `Ok(None)` so a server
+/// thread can interleave a shutdown-flag check between polls).
+pub struct FrameReader<R> {
+    r: R,
+    max: usize,
+    hdr: [u8; 4],
+    hdr_got: usize,
+    body: Vec<u8>,
+    body_got: usize,
+    /// Body length of the frame in progress (`None` = reading header).
+    want: Option<usize>,
+    /// Bytes left to discard of an oversized body.
+    drain_left: usize,
+    /// Original declared length of the frame being drained.
+    drain_len: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap `r`, rejecting (and draining) bodies larger than `max`.
+    pub fn new(r: R, max: usize) -> FrameReader<R> {
+        FrameReader {
+            r,
+            max,
+            hdr: [0; 4],
+            hdr_got: 0,
+            body: Vec::new(),
+            body_got: 0,
+            want: None,
+            drain_left: 0,
+            drain_len: 0,
+        }
+    }
+
+    /// Advance the decoder. Returns `Ok(Some(json))` when a frame
+    /// completed, `Ok(None)` when the underlying read timed out (poll
+    /// again), or a [`FrameError`].
+    pub fn poll_frame(&mut self) -> Result<Option<Json>, FrameError> {
+        loop {
+            if self.drain_left > 0 {
+                let mut scratch = [0u8; 4096];
+                let want = self.drain_left.min(scratch.len());
+                match self.r.read(&mut scratch[..want]) {
+                    Ok(0) => return Err(FrameError::Truncated),
+                    Ok(n) => {
+                        self.drain_left -= n;
+                        if self.drain_left == 0 {
+                            let len = self.drain_len;
+                            self.drain_len = 0;
+                            return Err(FrameError::Oversized { len, max: self.max });
+                        }
+                    }
+                    Err(e) => match e.kind() {
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => return Ok(None),
+                        io::ErrorKind::Interrupted => continue,
+                        _ => return Err(FrameError::Io(e)),
+                    },
+                }
+            } else if self.want.is_none() {
+                match self.r.read(&mut self.hdr[self.hdr_got..]) {
+                    Ok(0) => {
+                        return Err(if self.hdr_got == 0 {
+                            FrameError::Closed
+                        } else {
+                            FrameError::Truncated
+                        });
+                    }
+                    Ok(n) => {
+                        self.hdr_got += n;
+                        if self.hdr_got == 4 {
+                            self.hdr_got = 0;
+                            let len = u32::from_be_bytes(self.hdr) as usize;
+                            if len > self.max {
+                                self.drain_left = len;
+                                self.drain_len = len;
+                            } else {
+                                self.want = Some(len);
+                                self.body.resize(len, 0);
+                                self.body_got = 0;
+                            }
+                        }
+                    }
+                    Err(e) => match e.kind() {
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => return Ok(None),
+                        io::ErrorKind::Interrupted => continue,
+                        _ => return Err(FrameError::Io(e)),
+                    },
+                }
+            } else {
+                let len = self.want.unwrap();
+                if self.body_got == len {
+                    self.want = None;
+                    let text = match std::str::from_utf8(&self.body[..len]) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            return Err(FrameError::Malformed(format!("body is not utf-8: {e}")))
+                        }
+                    };
+                    return match Json::parse(text) {
+                        Ok(j) => Ok(Some(j)),
+                        Err(e) => Err(FrameError::Malformed(format!("body is not json: {e}"))),
+                    };
+                }
+                match self.r.read(&mut self.body[self.body_got..len]) {
+                    Ok(0) => return Err(FrameError::Truncated),
+                    Ok(n) => self.body_got += n,
+                    Err(e) => match e.kind() {
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => return Ok(None),
+                        io::ErrorKind::Interrupted => continue,
+                        _ => return Err(FrameError::Io(e)),
+                    },
+                }
+            }
+        }
+    }
+
+    /// Block until a whole frame arrives (re-polls through timeouts).
+    pub fn next_frame(&mut self) -> Result<Json, FrameError> {
+        loop {
+            if let Some(j) = self.poll_frame()? {
+                return Ok(j);
+            }
+        }
+    }
+}
+
+/// Write one frame: 4-byte big-endian length, then the JSON body.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Json) -> io::Result<()> {
+    write_raw_frame(w, frame.to_string().as_bytes())
+}
+
+/// Write arbitrary bytes under a valid frame header — the tests use
+/// this to craft well-framed-but-malformed payloads.
+pub fn write_raw_frame<W: Write>(w: &mut W, body: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(body.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame body over 4 GiB"))?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// One serving request as it travels over the wire. `id` is chosen by
+/// the client and echoed on the reply, which is what makes pipelining
+/// work: many requests may be in flight on one connection, and the
+/// server answers in submit order. Keep ids within 2^53 — they ride a
+/// JSON number.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub job: Job,
+    pub quality: Quality,
+    /// Relative deadline in milliseconds, anchored at server receipt
+    /// (clients and servers do not share a clock).
+    pub deadline_ms: Option<u64>,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        let (app, inputs, alpha) = match &self.job {
+            Job::Denoise { image } => (App::Gdf, vec![image.to_json()], None),
+            Job::Blend { p1, p2, alpha } => {
+                (App::Blend, vec![p1.to_json(), p2.to_json()], Some(*alpha))
+            }
+            Job::Classify { pixels } => {
+                (App::Frnn, vec![Tensor::vector(pixels.clone()).to_json()], None)
+            }
+        };
+        let mut pairs = vec![
+            ("type", Json::Str("request".to_string())),
+            ("id", Json::Num(self.id as f64)),
+            ("app", Json::Str(app.name().to_string())),
+            ("quality", Json::Str(self.quality.name().to_string())),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        if let Some(a) = alpha {
+            pairs.push(("alpha", Json::Num(a as f64)));
+        }
+        pairs.push(("inputs", Json::Arr(inputs)));
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        let id = u64_field(j, "id")?;
+        let app = App::parse(str_field(j, "app")?)?;
+        let quality = Quality::parse(str_field(j, "quality")?)?;
+        let deadline_ms = match j.get("deadline_ms") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(num_u64(v, "deadline_ms")?),
+        };
+        let raw = j
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("request wants an \"inputs\" array"))?;
+        let mut inputs = Vec::with_capacity(raw.len());
+        for t in raw {
+            inputs.push(Tensor::from_json(t)?);
+        }
+        let job = match app {
+            App::Gdf => {
+                let [image] = fixed_arity(inputs, app, 1)?;
+                Job::Denoise { image }
+            }
+            App::Blend => {
+                let alpha = i32_field(j, "alpha")?;
+                let [p1, p2] = fixed_arity(inputs, app, 2)?;
+                Job::Blend { p1, p2, alpha }
+            }
+            App::Frnn => {
+                let [pixels] = fixed_arity(inputs, app, 1)?;
+                Job::Classify { pixels: pixels.data }
+            }
+        };
+        Ok(Request { id, job, quality, deadline_ms })
+    }
+}
+
+/// Everything a client may send.
+#[derive(Clone, Debug)]
+pub enum ClientFrame {
+    Request(Request),
+    /// Ask the server to drain and exit (answered with
+    /// [`ServerFrame::ShutdownAck`] after all pipelined replies).
+    Shutdown,
+    /// Liveness probe (answered with [`ServerFrame::Pong`]).
+    Ping,
+}
+
+impl ClientFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClientFrame::Request(r) => r.to_json(),
+            ClientFrame::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".to_string()))]),
+            ClientFrame::Ping => Json::obj(vec![("type", Json::Str("ping".to_string()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClientFrame> {
+        match str_field(j, "type")? {
+            "request" => Ok(ClientFrame::Request(Request::from_json(j)?)),
+            "shutdown" => Ok(ClientFrame::Shutdown),
+            "ping" => Ok(ClientFrame::Ping),
+            other => bail!("unknown client frame type {other:?}"),
+        }
+    }
+}
+
+/// Everything a server may send back.
+#[derive(Clone, Debug)]
+pub enum ServerFrame {
+    /// The request executed; `route` names the catalog key that
+    /// answered and `degraded` is set when the overload policy served
+    /// a lower tier than requested.
+    Response { id: u64, route: ModelKey, degraded: bool, outputs: Vec<Tensor> },
+    /// The request was refused with a typed [`Rejection`]
+    /// (shed / expired / unknown-model — see [`Rejection::wire_name`]).
+    Rejected { id: u64, rejection: Rejection, message: String },
+    /// A protocol or execution error; `id` is `None` when the frame
+    /// could not be tied to a request (e.g. malformed bytes). `kind`
+    /// is one of the stable `ERR_*` discriminants.
+    Error { id: Option<u64>, kind: String, message: String },
+    ShutdownAck,
+    Pong,
+}
+
+impl ServerFrame {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerFrame::Response { id, route, degraded, outputs } => Json::obj(vec![
+                ("type", Json::Str("response".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("route", Json::Str(route.to_string())),
+                ("degraded", Json::Bool(*degraded)),
+                ("outputs", Json::Arr(outputs.iter().map(Tensor::to_json).collect())),
+            ]),
+            ServerFrame::Rejected { id, rejection, message } => Json::obj(vec![
+                ("type", Json::Str("rejection".to_string())),
+                ("id", Json::Num(*id as f64)),
+                ("rejection", Json::Str(rejection.wire_name().to_string())),
+                ("message", Json::Str(message.clone())),
+            ]),
+            ServerFrame::Error { id, kind, message } => Json::obj(vec![
+                ("type", Json::Str("error".to_string())),
+                ("id", id.map_or(Json::Null, |v| Json::Num(v as f64))),
+                ("kind", Json::Str(kind.clone())),
+                ("message", Json::Str(message.clone())),
+            ]),
+            ServerFrame::ShutdownAck => {
+                Json::obj(vec![("type", Json::Str("shutdown_ack".to_string()))])
+            }
+            ServerFrame::Pong => Json::obj(vec![("type", Json::Str("pong".to_string()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServerFrame> {
+        match str_field(j, "type")? {
+            "response" => {
+                let raw = j
+                    .get("outputs")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("response wants an \"outputs\" array"))?;
+                let mut outputs = Vec::with_capacity(raw.len());
+                for t in raw {
+                    outputs.push(Tensor::from_json(t)?);
+                }
+                Ok(ServerFrame::Response {
+                    id: u64_field(j, "id")?,
+                    route: ModelKey::parse(str_field(j, "route")?)?,
+                    degraded: matches!(j.get("degraded"), Some(Json::Bool(true))),
+                    outputs,
+                })
+            }
+            "rejection" => Ok(ServerFrame::Rejected {
+                id: u64_field(j, "id")?,
+                rejection: Rejection::parse_wire(str_field(j, "rejection")?)?,
+                message: str_field(j, "message").unwrap_or_default().to_string(),
+            }),
+            "error" => Ok(ServerFrame::Error {
+                id: match j.get("id") {
+                    Some(v) if v.as_f64().is_some() => Some(num_u64(v, "id")?),
+                    _ => None,
+                },
+                kind: str_field(j, "kind").unwrap_or("protocol").to_string(),
+                message: str_field(j, "message").unwrap_or_default().to_string(),
+            }),
+            "shutdown_ack" => Ok(ServerFrame::ShutdownAck),
+            "pong" => Ok(ServerFrame::Pong),
+            other => bail!("unknown server frame type {other:?}"),
+        }
+    }
+}
+
+fn str_field<'a>(j: &'a Json, k: &str) -> Result<&'a str> {
+    j.get(k)
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("frame is missing string field {k:?}"))
+}
+
+fn num_u64(v: &Json, k: &str) -> Result<u64> {
+    let x = v.as_f64().ok_or_else(|| anyhow!("frame field {k:?} is not a number"))?;
+    if x < 0.0 || x.fract() != 0.0 || x > u64::MAX as f64 {
+        bail!("frame field {k:?} is not a non-negative integer: {x}");
+    }
+    Ok(x as u64)
+}
+
+fn u64_field(j: &Json, k: &str) -> Result<u64> {
+    num_u64(j.get(k).ok_or_else(|| anyhow!("frame is missing field {k:?}"))?, k)
+}
+
+fn i32_field(j: &Json, k: &str) -> Result<i32> {
+    let x = j
+        .get(k)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| anyhow!("frame is missing numeric field {k:?}"))?;
+    if x.fract() != 0.0 || x < i32::MIN as f64 || x > i32::MAX as f64 {
+        bail!("frame field {k:?} is not an i32: {x}");
+    }
+    Ok(x as i32)
+}
+
+fn fixed_arity<const N: usize>(v: Vec<Tensor>, app: App, n: usize) -> Result<[Tensor; N]> {
+    let got = v.len();
+    v.try_into()
+        .map_err(|_| anyhow!("{app} request wants {n} input tensors, got {got}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+    use crate::util::prng::Rng;
+    use std::io::Cursor;
+
+    fn frame_bytes(j: &Json) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, j).unwrap();
+        buf
+    }
+
+    /// Delivers at most one byte per read — the harshest split.
+    struct Trickle<R>(R);
+    impl<R: Read> Read for Trickle<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let n = buf.len().min(1);
+            self.0.read(&mut buf[..n])
+        }
+    }
+
+    fn random_tensor(rng: &mut Rng) -> Tensor {
+        match rng.below(3) {
+            0 => Tensor::scalar(rng.below(512) as i32 - 256),
+            1 => Tensor::vector((0..rng.below(8)).map(|_| rng.below(512) as i32 - 256).collect()),
+            _ => {
+                let r = rng.below(4) as usize + 1;
+                let c = rng.below(4) as usize + 1;
+                Tensor::matrix(r, c, (0..r * c).map(|_| rng.below(256) as i32).collect()).unwrap()
+            }
+        }
+    }
+
+    fn random_request(rng: &mut Rng) -> Request {
+        let app = App::ALL[rng.below(3) as usize];
+        let quality = Quality::ALL[rng.below(3) as usize];
+        let job = match app {
+            App::Gdf => Job::Denoise { image: random_tensor(rng) },
+            App::Blend => Job::Blend {
+                p1: random_tensor(rng),
+                p2: random_tensor(rng),
+                alpha: rng.below(128) as i32,
+            },
+            App::Frnn => Job::Classify {
+                pixels: (0..rng.below(16)).map(|_| rng.below(256) as i32).collect(),
+            },
+        };
+        Request {
+            id: rng.below(1 << 32),
+            job,
+            quality,
+            deadline_ms: if rng.below(2) == 0 { None } else { Some(rng.below(100_000)) },
+        }
+    }
+
+    fn random_server_frame(rng: &mut Rng) -> ServerFrame {
+        let keys = ModelKey::catalog();
+        match rng.below(3) {
+            0 => ServerFrame::Response {
+                id: rng.below(1 << 32),
+                route: keys[rng.below(keys.len() as u64) as usize],
+                degraded: rng.below(2) == 0,
+                outputs: (0..rng.below(3)).map(|_| random_tensor(rng)).collect(),
+            },
+            1 => ServerFrame::Rejected {
+                id: rng.below(1 << 32),
+                rejection: Rejection::ALL[rng.below(3) as usize],
+                message: "tricky \"message\"\nwith\tescapes \\".to_string(),
+            },
+            _ => ServerFrame::Error {
+                id: if rng.below(2) == 0 { None } else { Some(rng.below(1 << 32)) },
+                kind: ERR_EXEC.to_string(),
+                message: "boom".to_string(),
+            },
+        }
+    }
+
+    #[test]
+    fn request_wire_form_round_trips() {
+        forall(0xF7A3, 128, random_request, |req| {
+            let j1 = ClientFrame::Request(req.clone()).to_json();
+            let mut rd = FrameReader::new(Cursor::new(frame_bytes(&j1)), MAX_FRAME);
+            let j2 = rd.next_frame().unwrap();
+            if j2 != j1 {
+                return false;
+            }
+            match ClientFrame::from_json(&j2) {
+                Ok(decoded) => decoded.to_json() == j1,
+                Err(_) => false,
+            }
+        });
+    }
+
+    #[test]
+    fn server_frame_wire_form_round_trips() {
+        forall(0xBEEF, 128, random_server_frame, |frame| {
+            let j1 = frame.to_json();
+            let mut rd = FrameReader::new(Cursor::new(frame_bytes(&j1)), MAX_FRAME);
+            let j2 = rd.next_frame().unwrap();
+            if j2 != j1 {
+                return false;
+            }
+            match ServerFrame::from_json(&j2) {
+                Ok(decoded) => decoded.to_json() == j1,
+                Err(_) => false,
+            }
+        });
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        for f in [ClientFrame::Shutdown, ClientFrame::Ping] {
+            let j = f.to_json();
+            assert_eq!(ClientFrame::from_json(&j).unwrap().to_json(), j);
+        }
+        for f in [ServerFrame::ShutdownAck, ServerFrame::Pong] {
+            let j = f.to_json();
+            assert_eq!(ServerFrame::from_json(&j).unwrap().to_json(), j);
+        }
+    }
+
+    #[test]
+    fn reader_reassembles_byte_by_byte_delivery() {
+        let a = ClientFrame::Ping.to_json();
+        let b = ClientFrame::Shutdown.to_json();
+        let mut bytes = frame_bytes(&a);
+        bytes.extend(frame_bytes(&b));
+        let mut rd = FrameReader::new(Trickle(Cursor::new(bytes)), MAX_FRAME);
+        assert_eq!(rd.next_frame().unwrap(), a);
+        assert_eq!(rd.next_frame().unwrap(), b);
+        assert!(matches!(rd.next_frame(), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn oversized_frame_is_drained_and_the_stream_stays_aligned() {
+        let big = Json::Str("x".repeat(200));
+        let mut bytes = frame_bytes(&big);
+        let ok = ClientFrame::Ping.to_json();
+        bytes.extend(frame_bytes(&ok));
+        let mut rd = FrameReader::new(Cursor::new(bytes), 64);
+        match rd.next_frame() {
+            Err(FrameError::Oversized { len, max: 64 }) => assert!(len > 64),
+            other => panic!("wanted Oversized, got {other:?}"),
+        }
+        // the oversized body was fully consumed: the next frame parses
+        assert_eq!(rd.next_frame().unwrap(), ok);
+    }
+
+    #[test]
+    fn malformed_bodies_fail_typed_but_keep_the_stream_alive() {
+        let mut bytes = Vec::new();
+        write_raw_frame(&mut bytes, b"{not json").unwrap();
+        write_raw_frame(&mut bytes, &[0xFF, 0xFE, 0x00]).unwrap();
+        let ok = ClientFrame::Ping.to_json();
+        bytes.extend(frame_bytes(&ok));
+        let mut rd = FrameReader::new(Cursor::new(bytes), MAX_FRAME);
+        assert!(matches!(rd.next_frame(), Err(FrameError::Malformed(_))));
+        assert!(matches!(rd.next_frame(), Err(FrameError::Malformed(_))));
+        assert_eq!(rd.next_frame().unwrap(), ok);
+    }
+
+    #[test]
+    fn truncation_is_distinguished_from_clean_close() {
+        // EOF inside the header
+        let mut rd = FrameReader::new(Cursor::new(vec![0u8, 0]), MAX_FRAME);
+        assert!(matches!(rd.next_frame(), Err(FrameError::Truncated)));
+        // EOF inside the body
+        let mut bytes = frame_bytes(&ClientFrame::Ping.to_json());
+        bytes.truncate(bytes.len() - 2);
+        let mut rd = FrameReader::new(Cursor::new(bytes), MAX_FRAME);
+        assert!(matches!(rd.next_frame(), Err(FrameError::Truncated)));
+        // EOF on the boundary
+        let mut rd = FrameReader::new(Cursor::new(Vec::new()), MAX_FRAME);
+        assert!(matches!(rd.next_frame(), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn bad_requests_decode_to_typed_errors() {
+        // wrong arity for blend
+        let req = Request {
+            id: 1,
+            job: Job::Denoise { image: Tensor::scalar(1) },
+            quality: Quality::Balanced,
+            deadline_ms: None,
+        };
+        let mut j = req.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("app".to_string(), Json::Str("blend".to_string()));
+            o.insert("alpha".to_string(), Json::Num(64.0));
+        }
+        let e = ClientFrame::from_json(&j).unwrap_err();
+        assert!(format!("{e}").contains("input tensors"), "{e}");
+        // unknown quality
+        let mut j = req.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("quality".to_string(), Json::Str("ultra".to_string()));
+        }
+        assert!(ClientFrame::from_json(&j).is_err());
+        // unknown frame type
+        let j = Json::obj(vec![("type", Json::Str("gossip".to_string()))]);
+        assert!(ClientFrame::from_json(&j).is_err());
+    }
+}

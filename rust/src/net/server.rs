@@ -1,0 +1,372 @@
+//! The threaded TCP front door: one connection handler per client in
+//! front of a shared [`Coordinator`].
+//!
+//! Per connection, a reader thread decodes frames and submits jobs
+//! (blocking inside the connection, so one slow client never stalls
+//! another), and a writer thread resolves tickets **in submit order**
+//! and streams the replies back — which is what gives clients
+//! pipelining: any number of requests may be in flight per connection,
+//! and replies carry the client's own ids.
+//!
+//! Shutdown is a control frame rather than a signal (`std` has no
+//! portable signal handling): any client may send
+//! `{"type":"shutdown"}`; the server acks it *after* every reply
+//! already queued on that connection, stops accepting, drains every
+//! other connection's in-flight work, and joins. The caller then
+//! flushes [`Metrics::report`] and drops the coordinator, which drains
+//! the engine pool — nothing dies mid-batch.
+
+use crate::catalog::{join, ModelKey};
+use crate::coordinator::{Coordinator, Rejection, SubmitError, Ticket};
+use crate::net::proto::{
+    self, ClientFrame, FrameError, FrameReader, Request, ServerFrame, MAX_FRAME,
+};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Front-door tuning knobs.
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Largest accepted frame body in bytes; larger payloads are
+    /// drained and answered with a typed `oversized` error (the
+    /// connection survives).
+    pub max_frame: usize,
+    /// How often blocked accepts/reads wake to check the stop flag.
+    pub poll: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { max_frame: MAX_FRAME, poll: Duration::from_millis(50) }
+    }
+}
+
+/// A running TCP server. Dropping it (or calling [`NetServer::join`])
+/// stops accepting and joins every connection handler.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Start serving `coord` on `listener`. The listener may be bound
+    /// to port 0; [`NetServer::local_addr`] reports what the OS chose.
+    pub fn spawn(
+        listener: TcpListener,
+        coord: Arc<Coordinator>,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let registered = Arc::new(coord.registered_keys().unwrap_or_default());
+        let accept = {
+            let stop = stop.clone();
+            thread::Builder::new().name("ppc-net-accept".to_string()).spawn(move || {
+                accept_loop(listener, coord, registered, cfg, stop)
+            })?
+        };
+        Ok(NetServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the server to stop accepting and drain (same effect as a
+    /// client `shutdown` frame).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Block until the server has drained every connection and exited.
+    /// Returns when a `shutdown` control frame arrives (or after
+    /// [`NetServer::shutdown`]).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    registered: Arc<Vec<ModelKey>>,
+    cfg: NetServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    let nap = cfg.poll.min(Duration::from_millis(20));
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                coord.metrics().record_conn_opened();
+                let conn_coord = coord.clone();
+                let registered = registered.clone();
+                let cfg = cfg.clone();
+                let stop = stop.clone();
+                let spawned = thread::Builder::new()
+                    .name(format!("ppc-net-conn-{peer}"))
+                    .spawn(move || handle_connection(stream, conn_coord, registered, cfg, stop));
+                match spawned {
+                    Ok(h) => conns.push(h),
+                    // thread exhaustion: count the connection closed and
+                    // drop the stream (the client sees EOF)
+                    Err(_) => coord.metrics().record_conn_closed(),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(nap),
+            Err(_) => thread::sleep(nap),
+        }
+        // reap finished handlers so a long-lived server does not
+        // accumulate dead JoinHandles
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// What the reader queues for the writer: an immediate frame, or a
+/// ticket whose response is still in flight (FIFO per connection —
+/// this ordering is the pipelining contract).
+enum Out {
+    Now(Json),
+    Later(u64, Ticket),
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    registered: Arc<Vec<ModelKey>>,
+    cfg: NetServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_read_timeout(Some(cfg.poll));
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            coord.metrics().record_conn_closed();
+            return;
+        }
+    };
+    let (out_tx, out_rx) = mpsc::channel::<Out>();
+    let writer = {
+        let coord = coord.clone();
+        thread::spawn(move || writer_loop(write_half, out_rx, coord))
+    };
+    let mut reader = FrameReader::new(stream, cfg.max_frame);
+    while !stop.load(Ordering::Relaxed) {
+        match reader.poll_frame() {
+            Ok(None) => continue,
+            Ok(Some(json)) => {
+                coord.metrics().record_net_frame_in();
+                match ClientFrame::from_json(&json) {
+                    Ok(ClientFrame::Request(req)) => {
+                        handle_request(&coord, &registered, &out_tx, req)
+                    }
+                    Ok(ClientFrame::Shutdown) => {
+                        // ack *after* every reply already queued, then
+                        // stop the whole server
+                        let _ = out_tx.send(Out::Now(ServerFrame::ShutdownAck.to_json()));
+                        stop.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                    Ok(ClientFrame::Ping) => {
+                        let _ = out_tx.send(Out::Now(ServerFrame::Pong.to_json()));
+                    }
+                    Err(e) => {
+                        coord.metrics().record_net_protocol_error();
+                        let _ = out_tx.send(Out::Now(
+                            ServerFrame::Error {
+                                id: None,
+                                kind: proto::ERR_BAD_REQUEST.to_string(),
+                                message: format!("{e:#}"),
+                            }
+                            .to_json(),
+                        ));
+                    }
+                }
+            }
+            Err(e @ FrameError::Oversized { .. }) | Err(e @ FrameError::Malformed(_)) => {
+                // survivable: the stream is still frame-aligned
+                coord.metrics().record_net_protocol_error();
+                let kind = match e {
+                    FrameError::Oversized { .. } => proto::ERR_OVERSIZED,
+                    _ => proto::ERR_MALFORMED,
+                };
+                let _ = out_tx.send(Out::Now(
+                    ServerFrame::Error { id: None, kind: kind.to_string(), message: e.to_string() }
+                        .to_json(),
+                ));
+            }
+            Err(FrameError::Closed) => break,
+            Err(FrameError::Truncated) | Err(FrameError::Io(_)) => {
+                coord.metrics().record_net_protocol_error();
+                break;
+            }
+        }
+    }
+    // closing the channel lets the writer drain every queued reply
+    // (including still-running tickets) before the connection closes
+    drop(out_tx);
+    let _ = writer.join();
+    coord.metrics().record_conn_closed();
+}
+
+fn handle_request(
+    coord: &Coordinator,
+    registered: &[ModelKey],
+    out_tx: &mpsc::Sender<Out>,
+    req: Request,
+) {
+    let route = ModelKey::route(req.job.app(), req.quality);
+    if !registered.contains(&route) {
+        let _ = out_tx.send(Out::Now(
+            ServerFrame::Rejected {
+                id: req.id,
+                rejection: Rejection::UnknownModel,
+                message: format!(
+                    "no {route} in the registered catalog (registered: {})",
+                    join(registered.iter())
+                ),
+            }
+            .to_json(),
+        ));
+        return;
+    }
+    let submitted = match req.deadline_ms {
+        Some(ms) => coord.submit_deadline(
+            req.job,
+            req.quality,
+            Instant::now() + Duration::from_millis(ms),
+        ),
+        None => coord.submit_blocking(req.job, req.quality),
+    };
+    let frame = match submitted {
+        Ok(ticket) => {
+            let _ = out_tx.send(Out::Later(req.id, ticket));
+            return;
+        }
+        Err(e @ SubmitError::Shed) | Err(e @ SubmitError::Busy) => ServerFrame::Rejected {
+            id: req.id,
+            rejection: Rejection::Shed,
+            message: e.to_string(),
+        },
+        Err(e @ SubmitError::Expired) => ServerFrame::Rejected {
+            id: req.id,
+            rejection: Rejection::DeadlineExpired,
+            message: e.to_string(),
+        },
+        Err(e @ SubmitError::Down) => ServerFrame::Error {
+            id: Some(req.id),
+            kind: proto::ERR_DOWN.to_string(),
+            message: e.to_string(),
+        },
+    };
+    let _ = out_tx.send(Out::Now(frame.to_json()));
+}
+
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>, coord: Arc<Coordinator>) {
+    let mut alive = true;
+    while let Ok(out) = rx.recv() {
+        let frame = match out {
+            Out::Now(j) => j,
+            Out::Later(id, ticket) => match ticket.wait() {
+                Ok(r) => ServerFrame::Response {
+                    id,
+                    route: r.route,
+                    degraded: r.degraded,
+                    outputs: r.outputs,
+                }
+                .to_json(),
+                Err(e) => match e.downcast_ref::<Rejection>() {
+                    Some(&rej) => {
+                        ServerFrame::Rejected { id, rejection: rej, message: format!("{e:#}") }
+                            .to_json()
+                    }
+                    None => ServerFrame::Error {
+                        id: Some(id),
+                        kind: proto::ERR_EXEC.to_string(),
+                        message: format!("{e:#}"),
+                    }
+                    .to_json(),
+                },
+            },
+        };
+        // even after a dead client we keep draining the channel so
+        // every in-flight ticket resolves (permits release on drop)
+        if alive && proto::write_frame(&mut stream, &frame).is_err() {
+            alive = false;
+        }
+        if alive {
+            coord.metrics().record_net_frame_out();
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, MockExecutor};
+
+    fn mock_server() -> (Arc<Coordinator>, NetServer) {
+        let cfg = CoordinatorConfig { queue_capacity: 16, ..CoordinatorConfig::default() };
+        let coord =
+            Arc::new(Coordinator::start(cfg, |_s| Ok(MockExecutor::full_catalog())).unwrap());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server =
+            NetServer::spawn(listener, coord.clone(), NetServerConfig::default()).unwrap();
+        (coord, server)
+    }
+
+    #[test]
+    fn ping_pong_over_loopback() {
+        let (coord, server) = mock_server();
+        let mut w = TcpStream::connect(server.local_addr()).unwrap();
+        let r = w.try_clone().unwrap();
+        proto::write_frame(&mut w, &ClientFrame::Ping.to_json()).unwrap();
+        let mut rd = FrameReader::new(r, MAX_FRAME);
+        let frame = ServerFrame::from_json(&rd.next_frame().unwrap()).unwrap();
+        assert!(matches!(frame, ServerFrame::Pong), "{frame:?}");
+        server.shutdown();
+        server.join();
+        assert_eq!(coord.metrics().net_frames_in(), 1);
+        assert_eq!(coord.metrics().net_frames_out(), 1);
+        assert_eq!(coord.metrics().net_protocol_errors(), 0);
+    }
+
+    #[test]
+    fn shutdown_frame_acks_then_drains_the_server() {
+        let (coord, server) = mock_server();
+        let mut w = TcpStream::connect(server.local_addr()).unwrap();
+        let r = w.try_clone().unwrap();
+        proto::write_frame(&mut w, &ClientFrame::Shutdown.to_json()).unwrap();
+        let mut rd = FrameReader::new(r, MAX_FRAME);
+        let frame = ServerFrame::from_json(&rd.next_frame().unwrap()).unwrap();
+        assert!(matches!(frame, ServerFrame::ShutdownAck), "{frame:?}");
+        // the accept loop exits on its own — join returns
+        server.join();
+        assert_eq!(coord.metrics().net_active_connections(), 0);
+    }
+}

@@ -76,6 +76,7 @@ impl BenchResult {
             ("mean_s", Json::Num(self.summary.mean)),
             ("p50_s", Json::Num(self.summary.p50)),
             ("p99_s", Json::Num(self.summary.p99)),
+            ("p999_s", Json::Num(self.summary.p999)),
             ("throughput_per_s", Json::Num(self.throughput_per_sec())),
         ])
     }

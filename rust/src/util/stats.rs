@@ -12,6 +12,7 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -33,6 +34,7 @@ impl Summary {
             p50: percentile_sorted(&samples, 0.50),
             p90: percentile_sorted(&samples, 0.90),
             p99: percentile_sorted(&samples, 0.99),
+            p999: percentile_sorted(&samples, 0.999),
         }
     }
 }
@@ -91,6 +93,8 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        // the tail percentiles of a tiny sample collapse toward the max
+        assert!(s.p999 >= s.p99 && s.p999 <= s.max + 1e-12);
     }
 
     #[test]

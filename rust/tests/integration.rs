@@ -860,7 +860,9 @@ fn stress_every_submit_path_respects_the_inflight_cap() {
                 Err(e) => match e.downcast_ref::<Rejection>() {
                     Some(Rejection::DeadlineExpired) => expired.fetch_add(1, Ordering::Relaxed),
                     Some(Rejection::Shed) => shed.fetch_add(1, Ordering::Relaxed),
-                    None => panic!("request lost to an unexpected error: {e:#}"),
+                    Some(Rejection::UnknownModel) | None => {
+                        panic!("request lost to an unexpected error: {e:#}")
+                    }
                 },
             };
             for w in 0..WAVES {

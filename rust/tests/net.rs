@@ -1,0 +1,346 @@
+//! Network front-door integration tests, all over real loopback
+//! sockets: concurrent wire clients must be bit-exact with in-process
+//! `Coordinator::submit` for every registered catalog key; overload,
+//! deadline and unknown-model outcomes must come back as *typed*
+//! frames (never hangs or bare disconnects); and protocol violations
+//! (malformed / oversized / truncated frames) must be survivable
+//! exactly where the framing layer promises.
+
+use ppc::catalog::{App, ModelKey, Quality, Tensor};
+use ppc::coordinator::{
+    Coordinator, CoordinatorConfig, Job, MockExecutor, OverloadPolicy, Rejection,
+};
+use ppc::net::proto::{self, ClientFrame, FrameReader, Request, ServerFrame, MAX_FRAME};
+use ppc::net::server::{NetServer, NetServerConfig};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// FRNN row length all these tests use (small keeps frames cheap).
+const ROW: usize = 8;
+
+fn base_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        queue_capacity: 256,
+        batch_size: 4,
+        classify_row: ROW,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 2,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Spawn a mock-backed coordinator + TCP server. `keys: None` serves
+/// the full catalog; `delay` slows every batch to force overlap.
+fn spawn_mock(
+    cfg: CoordinatorConfig,
+    keys: Option<Vec<ModelKey>>,
+    delay: Duration,
+    net: NetServerConfig,
+) -> (Arc<Coordinator>, NetServer) {
+    let coord = Arc::new(
+        Coordinator::start(cfg, move |_shard| {
+            let mut e = match &keys {
+                Some(k) => MockExecutor::new(k),
+                None => MockExecutor::full_catalog(),
+            };
+            e.delay = delay;
+            Ok(e)
+        })
+        .unwrap(),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server = NetServer::spawn(listener, coord.clone(), net).unwrap();
+    (coord, server)
+}
+
+/// Deterministic payload for `(app, seed)` — both the wire client and
+/// the in-process reference build the exact same job from these.
+fn job_for(app: App, seed: i32) -> Job {
+    let base: Vec<i32> = (0..4).map(|i| (seed + i).rem_euclid(256)).collect();
+    match app {
+        App::Gdf => Job::Denoise { image: Tensor::matrix(2, 2, base).unwrap() },
+        App::Blend => Job::Blend {
+            p1: Tensor::matrix(2, 2, base.clone()).unwrap(),
+            p2: Tensor::matrix(2, 2, base.iter().map(|v| (v + 7) % 256).collect()).unwrap(),
+            alpha: 64,
+        },
+        App::Frnn => {
+            Job::Classify { pixels: (0..ROW as i32).map(|i| (seed + i).rem_euclid(160)).collect() }
+        }
+    }
+}
+
+/// Every (app, quality) combo with a stable pipelined id.
+fn combos() -> Vec<(u64, App, Quality)> {
+    let mut v = Vec::new();
+    for (ai, app) in App::ALL.into_iter().enumerate() {
+        for (qi, quality) in Quality::ALL.into_iter().enumerate() {
+            v.push(((ai * Quality::ALL.len() + qi) as u64, app, quality));
+        }
+    }
+    v
+}
+
+/// Read one server frame, bounded so a wedged server fails the test
+/// instead of hanging it (needs a read timeout on the stream).
+fn read_frame_within(reader: &mut FrameReader<TcpStream>, within: Duration) -> ServerFrame {
+    let t0 = Instant::now();
+    loop {
+        match reader.poll_frame() {
+            Ok(Some(j)) => return ServerFrame::from_json(&j).unwrap(),
+            Ok(None) => assert!(t0.elapsed() < within, "no frame within {within:?}"),
+            Err(e) => panic!("read failed: {e}"),
+        }
+    }
+}
+
+/// The loopback ground truth: N concurrent TCP clients, each
+/// pipelining one request per (app, quality) combo, must get back
+/// exactly what the same jobs produce through in-process
+/// `Coordinator::submit` — same route, same `degraded` flag, same
+/// output tensors, for every registered key.
+#[test]
+fn concurrent_wire_clients_match_in_process_submit_for_every_key() {
+    const CLIENTS: usize = 4;
+    let (coord, server) =
+        spawn_mock(base_config(), None, Duration::ZERO, NetServerConfig::default());
+    let addr = server.local_addr();
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|client| {
+            thread::spawn(move || {
+                let mut w = TcpStream::connect(addr).unwrap();
+                let _ = w.set_nodelay(true);
+                let r = w.try_clone().unwrap();
+                let _ = r.set_read_timeout(Some(Duration::from_millis(100)));
+                let combos = combos();
+                // pipelined: every request goes out before any reply is read
+                for &(id, app, quality) in &combos {
+                    let req = Request {
+                        id,
+                        job: job_for(app, (client * 100) as i32 + id as i32),
+                        quality,
+                        deadline_ms: None,
+                    };
+                    proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).unwrap();
+                }
+                let mut reader = FrameReader::new(r, MAX_FRAME);
+                let mut got = Vec::new();
+                for _ in 0..combos.len() {
+                    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+                        ServerFrame::Response { id, route, degraded, outputs } => {
+                            got.push((id, route, degraded, outputs))
+                        }
+                        other => panic!("wanted a response, got {other:?}"),
+                    }
+                }
+                (client, got)
+            })
+        })
+        .collect();
+    let answers: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // replies arrive in submit order — the pipelining contract
+    for (_, got) in &answers {
+        let ids: Vec<u64> = got.iter().map(|(id, ..)| *id).collect();
+        let expected: Vec<u64> = combos().iter().map(|&(id, ..)| id).collect();
+        assert_eq!(ids, expected, "replies must come back in submit order");
+    }
+
+    // bit-exactness against the in-process path, same config + backend
+    let reference =
+        Coordinator::start(base_config(), |_shard| Ok(MockExecutor::full_catalog())).unwrap();
+    for (client, got) in answers {
+        for (id, route, degraded, outputs) in got {
+            let (_, app, quality) =
+                combos().into_iter().find(|&(cid, ..)| cid == id).unwrap();
+            assert_eq!(route, ModelKey::route(app, quality));
+            assert!(!degraded, "nothing should degrade under an empty queue");
+            let want = reference
+                .submit(job_for(app, (client * 100) as i32 + id as i32), quality)
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(route, want.route);
+            assert_eq!(outputs, want.outputs, "client {client} id {id} ({app:?} {quality:?})");
+        }
+    }
+    assert_eq!(coord.metrics().net_protocol_errors(), 0);
+    server.shutdown();
+    server.join();
+}
+
+/// A saturating client must see *typed* shed / degraded / expired
+/// outcomes over the wire — every pipelined request settles with a
+/// frame, none hang, and the connection never drops.
+#[test]
+fn overload_and_deadlines_are_typed_over_the_wire_not_hangs() {
+    const BURST: usize = 12;
+    let cfg = CoordinatorConfig {
+        queue_capacity: 2,
+        batch_size: 1,
+        classify_row: ROW,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Degrade,
+        // each tier holds at most 1 in-flight request, so the burst
+        // forces both a degrade (balanced -> economy) and sheds
+        fair_share: 0.5,
+    };
+    let (coord, server) =
+        spawn_mock(cfg, None, Duration::from_millis(50), NetServerConfig::default());
+    let mut w = TcpStream::connect(server.local_addr()).unwrap();
+    let _ = w.set_nodelay(true);
+    let r = w.try_clone().unwrap();
+    let _ = r.set_read_timeout(Some(Duration::from_millis(100)));
+    for id in 0..BURST as u64 {
+        let req = Request {
+            id,
+            job: job_for(App::Gdf, id as i32),
+            quality: Quality::Balanced,
+            deadline_ms: Some(5_000),
+        };
+        proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).unwrap();
+    }
+    let mut reader = FrameReader::new(r, MAX_FRAME);
+    let (mut answered, mut degraded, mut shed) = (0, 0, 0);
+    for _ in 0..BURST {
+        match read_frame_within(&mut reader, Duration::from_secs(20)) {
+            ServerFrame::Response { degraded: d, .. } => {
+                answered += 1;
+                if d {
+                    degraded += 1;
+                }
+            }
+            ServerFrame::Rejected { rejection: Rejection::Shed, .. } => shed += 1,
+            other => panic!("wanted response|shed, got {other:?}"),
+        }
+    }
+    assert_eq!(answered + shed, BURST, "every request settles with a typed frame");
+    assert!(shed >= 1, "a 2-slot gate must shed part of a {BURST}-deep burst");
+    assert!(degraded >= 1, "the degrade policy must re-admit at least one request lower");
+
+    // an already-expired relative deadline is a typed rejection too
+    let req = Request {
+        id: 100,
+        job: job_for(App::Gdf, 7),
+        quality: Quality::Balanced,
+        deadline_ms: Some(0),
+    };
+    proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).unwrap();
+    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+        ServerFrame::Rejected { id, rejection: Rejection::DeadlineExpired, .. } => {
+            assert_eq!(id, 100)
+        }
+        other => panic!("wanted a deadline rejection, got {other:?}"),
+    }
+    assert_eq!(coord.metrics().net_protocol_errors(), 0);
+    server.shutdown();
+    server.join();
+}
+
+/// Requests routing to an unregistered key come back as typed
+/// `unknown_model` rejections naming the catalog — and the connection
+/// keeps serving afterwards.
+#[test]
+fn unknown_model_rejections_name_the_catalog_and_spare_the_connection() {
+    let keys = vec![ModelKey::parse("gdf/ds16").unwrap(), ModelKey::parse("gdf/ds32").unwrap()];
+    let (coord, server) = spawn_mock(
+        base_config(),
+        Some(keys),
+        Duration::ZERO,
+        NetServerConfig::default(),
+    );
+    let mut w = TcpStream::connect(server.local_addr()).unwrap();
+    let r = w.try_clone().unwrap();
+    let _ = r.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = FrameReader::new(r, MAX_FRAME);
+
+    let req = Request {
+        id: 7,
+        job: job_for(App::Frnn, 3),
+        quality: Quality::Balanced,
+        deadline_ms: None,
+    };
+    proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).unwrap();
+    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+        ServerFrame::Rejected { id, rejection: Rejection::UnknownModel, message } => {
+            assert_eq!(id, 7);
+            assert!(message.contains("frnn/th48ds16"), "{message}");
+            assert!(message.contains("gdf/ds16"), "{message}");
+        }
+        other => panic!("wanted unknown_model, got {other:?}"),
+    }
+
+    // same connection, registered key: still serving
+    let req = Request {
+        id: 8,
+        job: job_for(App::Gdf, 11),
+        quality: Quality::Economy,
+        deadline_ms: None,
+    };
+    proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).unwrap();
+    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+        ServerFrame::Response { id, route, .. } => {
+            assert_eq!(id, 8);
+            assert_eq!(route, ModelKey::parse("gdf/ds32").unwrap());
+        }
+        other => panic!("wanted a response, got {other:?}"),
+    }
+    // unknown-model is an application outcome, not a wire violation
+    assert_eq!(coord.metrics().net_protocol_errors(), 0);
+    server.shutdown();
+    server.join();
+}
+
+/// Malformed and oversized frames get typed error frames and the
+/// connection survives (the stream stays frame-aligned); truncation is
+/// terminal and counted. All over a real socket, against a server
+/// with a deliberately tiny frame cap.
+#[test]
+fn protocol_violations_are_typed_and_survivable_on_a_real_socket() {
+    let net = NetServerConfig { max_frame: 1024, ..NetServerConfig::default() };
+    let (coord, server) = spawn_mock(base_config(), None, Duration::ZERO, net);
+    let mut w = TcpStream::connect(server.local_addr()).unwrap();
+    let _ = w.set_nodelay(true);
+    let r = w.try_clone().unwrap();
+    let _ = r.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = FrameReader::new(r, MAX_FRAME);
+
+    // well-framed bytes that are not JSON: typed error, stream survives
+    proto::write_raw_frame(&mut w, b"{ not json").unwrap();
+    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+        ServerFrame::Error { id: None, kind, .. } => assert_eq!(kind, proto::ERR_MALFORMED),
+        other => panic!("wanted a malformed error, got {other:?}"),
+    }
+
+    // a frame over the server's cap: drained + typed error, survives
+    proto::write_raw_frame(&mut w, &[b'x'; 2000]).unwrap();
+    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+        ServerFrame::Error { id: None, kind, .. } => assert_eq!(kind, proto::ERR_OVERSIZED),
+        other => panic!("wanted an oversized error, got {other:?}"),
+    }
+
+    // the stream is still frame-aligned: a ping gets its pong
+    proto::write_frame(&mut w, &ClientFrame::Ping.to_json()).unwrap();
+    match read_frame_within(&mut reader, Duration::from_secs(20)) {
+        ServerFrame::Pong => {}
+        other => panic!("wanted a pong, got {other:?}"),
+    }
+
+    // half a header then half-close: terminal truncation, counted
+    use std::io::Write;
+    w.write_all(&[0u8, 1]).unwrap();
+    w.flush().unwrap();
+    w.shutdown(Shutdown::Write).unwrap();
+    let t0 = Instant::now();
+    while coord.metrics().net_active_connections() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "handler did not close on truncation");
+        thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(coord.metrics().net_protocol_errors(), 3);
+    server.shutdown();
+    server.join();
+}
