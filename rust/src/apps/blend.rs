@@ -7,11 +7,12 @@
 //! combined by an 8-bit adder, exactly as Fig. 7 draws it.
 
 use super::image::{pixels_from_i32, Image};
-use crate::catalog::{Datapath, Tensor};
+use crate::catalog::{Datapath, Tensor, LANES};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
-use crate::ppc::units::{AdderUnit, FreshSynth, MultUnit8, NetlistSource};
+use crate::ppc::units::{combined_backend, AdderUnit, FreshSynth, MultUnit8, NetlistSource};
+use crate::util::pool;
 use anyhow::{anyhow, bail, Result};
 
 /// Quantized blending ratio: `alpha ∈ [0,127]`, the complementary
@@ -155,6 +156,16 @@ impl BlendHardware {
         self.m1.num_gates() + self.m2.num_gates() + self.add.num_gates()
     }
 
+    /// Which unit backend serves batches: `"lut"`, `"tape"`, or
+    /// `"mixed"`.
+    pub fn backend_name(&self) -> &'static str {
+        combined_backend([
+            self.m1.backend_name(),
+            self.m2.backend_name(),
+            self.add.backend_name(),
+        ])
+    }
+
     /// Blend up to [`crate::catalog::LANES`] pixel pairs through the
     /// netlists. With a `natural`
     /// config the coefficient restriction means `alpha.0` must be in
@@ -222,6 +233,11 @@ impl BlendHardware {
 
     /// Run one pooled segment through both multipliers and the output
     /// adder, scattering results to their `(request, pixel)` slots.
+    /// The segment splits into [`LANES`]-aligned chunks across
+    /// [`pool::batch_threads`] workers; each worker runs mult → mult →
+    /// add serially over its chunk (no nested parallel regions), and
+    /// alignment keeps the per-pass lane grouping — and the bits —
+    /// identical at any thread count.
     fn flush_segment(
         &self,
         i1: &[u32],
@@ -234,9 +250,30 @@ impl BlendHardware {
         if dest.is_empty() {
             return;
         }
-        let t1: Vec<u32> = self.m1.mul_many(i1, c1).iter().map(|&v| (v >> 8) as u32).collect();
-        let t2: Vec<u32> = self.m2.mul_many(i2, c2).iter().map(|&v| (v >> 8) as u32).collect();
-        let sum = self.add.add_many(&t1, &t2);
+        let n = dest.len();
+        let run = |s: usize, e: usize| -> Vec<u64> {
+            let t1: Vec<u32> = self
+                .m1
+                .mul_many_threads(&i1[s..e], &c1[s..e], 1)
+                .iter()
+                .map(|&v| (v >> 8) as u32)
+                .collect();
+            let t2: Vec<u32> = self
+                .m2
+                .mul_many_threads(&i2[s..e], &c2[s..e], 1)
+                .iter()
+                .map(|&v| (v >> 8) as u32)
+                .collect();
+            self.add.add_many_threads(&t1, &t2, 1)
+        };
+        let nblocks = n.div_ceil(LANES);
+        let threads = pool::batch_threads().min(nblocks.max(1));
+        let sum: Vec<u64> = if threads <= 1 {
+            run(0, n)
+        } else {
+            pool::scope_chunks(nblocks, threads, |bs, be| run(bs * LANES, (be * LANES).min(n)))
+                .concat()
+        };
         for (&(r, j), &s) in dest.iter().zip(&sum) {
             outs[r][j] = s.min(255) as u8;
         }
@@ -328,6 +365,10 @@ impl Datapath for BlendHardware {
 
     fn num_gates(&self) -> usize {
         BlendHardware::num_gates(self)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        BlendHardware::backend_name(self)
     }
 }
 

@@ -14,7 +14,8 @@ use crate::catalog::{Datapath, Tensor};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
-use crate::ppc::units::{FreshSynth, MultUnit8, NetlistSource};
+use crate::ppc::units::{combined_backend, FreshSynth, MultUnit8, NetlistSource};
+use crate::util::pool;
 use anyhow::{anyhow, bail, Result};
 
 /// A Table-3 row configuration for the MAC hardware.
@@ -154,6 +155,12 @@ impl FrnnHardware {
         self.mult1.num_gates() + self.mult2.num_gates()
     }
 
+    /// Execution backend combined across both layer multipliers
+    /// (`"lut"`, `"tape"`, or `"mixed"`).
+    pub fn backend_name(&self) -> &'static str {
+        combined_backend([self.mult1.backend_name(), self.mult2.backend_name()])
+    }
+
     /// `Σ x_i · signed(w_i)` with the product netlists: the unit
     /// multiplies unsigned byte patterns; a weight byte ≥ 128 represents
     /// `w − 256`, so the accumulator subtracts `x·256` (free wiring in
@@ -184,21 +191,22 @@ impl FrnnHardware {
     /// layer-2 multiplier lanes. Bit-exact with per-face
     /// [`FrnnHardware::forward`].
     pub fn forward_many(&self, rows: &[&[u8]]) -> Vec<[u8; NUM_OUTPUTS]> {
-        // layer 1: per face (already at full lane occupancy)
-        let hxs: Vec<Vec<u32>> = rows
-            .iter()
-            .map(|pixels| {
-                let px: Vec<u32> =
-                    pixels.iter().map(|&p| self.pre_image.apply(p as u32)).collect();
-                (0..HIDDEN)
-                    .map(|j| {
-                        let row = &self.w1p[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
-                        let acc = self.q.b1[j] as i64 + self.dot(&self.mult1, &px, row);
-                        sigmoid_fx(&self.q.sigmoid_lut, acc, self.q.d1) as u32
-                    })
-                    .collect()
-            })
-            .collect();
+        // layer 1: per face (already at full lane occupancy); faces are
+        // independent, so they split across [`pool::batch_threads`]
+        // workers — each face's 960-pixel dots stay serial inside its
+        // worker (no nested parallel regions)
+        let threads = pool::batch_threads().min(rows.len().max(1));
+        let hxs: Vec<Vec<u32>> = pool::par_map_index(rows.len(), threads, |i| {
+            let px: Vec<u32> =
+                rows[i].iter().map(|&p| self.pre_image.apply(p as u32)).collect();
+            (0..HIDDEN)
+                .map(|j| {
+                    let row = &self.w1p[j * IMG_PIXELS..(j + 1) * IMG_PIXELS];
+                    let acc = self.q.b1[j] as i64 + self.dot(&self.mult1, &px, row);
+                    sigmoid_fx(&self.q.sigmoid_lut, acc, self.q.d1) as u32
+                })
+                .collect()
+        });
         // layer 2: lane-packed across faces — one mul_many per output
         // neuron over every face's hidden vector
         let nf = rows.len();
@@ -332,6 +340,10 @@ impl Datapath for FrnnHardware {
 
     fn num_gates(&self) -> usize {
         FrnnHardware::num_gates(self)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        FrnnHardware::backend_name(self)
     }
 }
 

@@ -19,11 +19,12 @@
 //! the value-set propagation in [`gdf_signal_sets`].
 
 use super::image::Image;
-use crate::catalog::{Datapath, Tensor};
+use crate::catalog::{Datapath, Tensor, LANES};
 use crate::logic::map::Objective;
 use crate::ppc::flow::{self, BlockReport};
 use crate::ppc::preprocess::{Chain, ValueSet};
-use crate::ppc::units::{AdderUnit, FreshSynth, NetlistSource};
+use crate::ppc::units::{combined_backend, AdderUnit, FreshSynth, NetlistSource};
+use crate::util::pool;
 use anyhow::{anyhow, bail, Result};
 
 /// Bit-accurate GDF datapath for one window (pixels in row-major A1..A9
@@ -147,14 +148,21 @@ impl GdfHardware {
         self.adders.iter().map(|a| a.num_gates()).sum()
     }
 
-    /// Run an arbitrarily long stream of preprocessed windows through
-    /// the tree; `p[k]` holds signal `A{k+1}` of every window. Each
-    /// adder pools the stream into [`crate::catalog::LANES`]-lane tape passes
-    /// ([`AdderUnit::add_many`]), so lane occupancy stays full except
-    /// for the single global tail chunk.
-    fn window_tree(&self, p: &[Vec<u32>; 9]) -> Vec<u32> {
+    /// Which unit backend serves batches: `"lut"`, `"tape"`, or
+    /// `"mixed"`.
+    pub fn backend_name(&self) -> &'static str {
+        combined_backend(self.adders.iter().map(|a| a.backend_name()))
+    }
+
+    /// Run one contiguous run of preprocessed windows through the tree
+    /// serially; `p[k]` holds signal `A{k+1}` of every window. Each
+    /// adder pools the run into [`crate::catalog::LANES`]-lane passes
+    /// ([`AdderUnit::add_many_threads`] at one thread — parallelism
+    /// lives one level up, in [`GdfHardware::segment_values`], so tree
+    /// levels never nest parallel regions).
+    fn window_tree_range(&self, p: &[Vec<u32>; 9]) -> Vec<u32> {
         let add = |unit: &AdderUnit, a: &[u32], b: &[u32]| -> Vec<u32> {
-            unit.add_many(a, b).iter().map(|&v| v as u32).collect()
+            unit.add_many_threads(a, b, 1).iter().map(|&v| v as u32).collect()
         };
         let shl = |v: &[u32], k: u32| -> Vec<u32> { v.iter().map(|&x| x << k).collect() };
         let a1 = add(&self.adders[0], &p[0], &p[2]);
@@ -183,56 +191,82 @@ impl GdfHardware {
     /// count — tail lanes go idle once per *segment*, not once per
     /// request. The stream is processed in bounded segments
     /// ([`SEG_WINDOWS`] windows ≈ a few hundred KB of lane buffers) so
-    /// huge images cannot balloon shard memory.
+    /// huge images cannot balloon shard memory; within a segment the
+    /// gather + tree work splits across [`pool::batch_threads`] workers
+    /// ([`GdfHardware::segment_values`]).
     pub fn filter_many(&self, imgs: &[Image]) -> Vec<Image> {
         let mut outs: Vec<Image> =
             imgs.iter().map(|im| Image::new(im.width, im.height)).collect();
-        let mut win: [Vec<u32>; 9] = Default::default();
-        // (image index, pixel index) of every window pooled in `win`
-        let mut dest: Vec<(usize, usize)> = Vec::new();
-        for (ii, img) in imgs.iter().enumerate() {
-            for y in 0..img.height {
-                for x in 0..img.width {
-                    let px = gather_window(img, x, y);
-                    for (k, w) in win.iter_mut().enumerate() {
-                        w.push(self.pre.apply(px[k] as u32));
-                    }
-                    dest.push((ii, y * img.width + x));
-                    if dest.len() >= SEG_WINDOWS {
-                        self.flush_segment(&mut win, &mut dest, &mut outs);
-                    }
-                }
-            }
+        // flat window-index space across the whole batch: window `f` of
+        // the stream is pixel `f - offs[ii]` of image `ii`
+        let mut offs = Vec::with_capacity(imgs.len() + 1);
+        let mut acc = 0usize;
+        offs.push(0);
+        for img in imgs {
+            acc += img.width * img.height;
+            offs.push(acc);
         }
-        self.flush_segment(&mut win, &mut dest, &mut outs);
+        let total = acc;
+        let mut seg = 0usize;
+        while seg < total {
+            let seg_end = (seg + SEG_WINDOWS).min(total);
+            let vals = self.segment_values(imgs, &offs, seg, seg_end);
+            // scatter the segment's results back to their pixels
+            let mut ii = offs.partition_point(|&o| o <= seg) - 1;
+            for (d, &v) in vals.iter().enumerate() {
+                let flat = seg + d;
+                while offs[ii + 1] <= flat {
+                    ii += 1;
+                }
+                outs[ii].pixels[flat - offs[ii]] = v.min(255) as u8;
+            }
+            seg = seg_end;
+        }
         outs
     }
 
-    /// Run the pooled windows in `win` through the tree and scatter the
-    /// results to their `(image, pixel)` destinations.
-    fn flush_segment(
-        &self,
-        win: &mut [Vec<u32>; 9],
-        dest: &mut Vec<(usize, usize)>,
-        outs: &mut [Image],
-    ) {
-        if dest.is_empty() {
-            return;
+    /// Gather + tree for the flat window range `[s, e)` of one segment:
+    /// the range splits into [`LANES`]-aligned chunks across
+    /// [`pool::batch_threads`] workers, each gathering its own window
+    /// columns and running the tree serially. Alignment keeps the
+    /// per-pass lane grouping identical at any thread count, so the
+    /// bits can't depend on the worker count.
+    fn segment_values(&self, imgs: &[Image], offs: &[usize], s: usize, e: usize) -> Vec<u32> {
+        let n = e - s;
+        let run = |cs: usize, ce: usize| -> Vec<u32> {
+            let mut win: [Vec<u32>; 9] = Default::default();
+            for w in win.iter_mut() {
+                w.reserve(ce - cs);
+            }
+            let mut ii = offs.partition_point(|&o| o <= cs) - 1;
+            for flat in cs..ce {
+                while offs[ii + 1] <= flat {
+                    ii += 1;
+                }
+                let img = &imgs[ii];
+                let p = flat - offs[ii];
+                let px = gather_window(img, p % img.width, p / img.width);
+                for (k, w) in win.iter_mut().enumerate() {
+                    w.push(self.pre.apply(px[k] as u32));
+                }
+            }
+            self.window_tree_range(&win)
+        };
+        let nblocks = n.div_ceil(LANES);
+        let threads = pool::batch_threads().min(nblocks.max(1));
+        if threads <= 1 {
+            return run(s, e);
         }
-        let vals = self.window_tree(win);
-        for (&(ii, px), &v) in dest.iter().zip(&vals) {
-            outs[ii].pixels[px] = v.min(255) as u8;
-        }
-        for w in win.iter_mut() {
-            w.clear();
-        }
-        dest.clear();
+        pool::scope_chunks(nblocks, threads, |bs, be| {
+            run(s + bs * LANES, s + (be * LANES).min(n))
+        })
+        .concat()
     }
 
     /// Filter one image through the *scalar* netlist walk (one minterm
     /// at a time, no bit-slicing) — the per-request baseline the
     /// lane-batched serving bench compares against. Kept wiring-for-
-    /// wiring parallel to [`GdfHardware::window_tree`]; the
+    /// wiring parallel to [`GdfHardware::window_tree_range`]; the
     /// `lane_batched_and_scalar_paths_agree` test pins the two
     /// together.
     pub fn filter_scalar(&self, img: &Image) -> Image {
@@ -312,6 +346,10 @@ impl Datapath for GdfHardware {
 
     fn num_gates(&self) -> usize {
         GdfHardware::num_gates(self)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        GdfHardware::backend_name(self)
     }
 }
 

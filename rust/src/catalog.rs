@@ -415,6 +415,13 @@ pub trait Datapath: Send + Sync {
 
     /// Total mapped-gate count across the datapath's netlists.
     fn num_gates(&self) -> usize;
+
+    /// Which unit execution backend serves batches: `"tape"`, `"lut"`,
+    /// `"mixed"`, or `"-"` for datapaths without synthesized units
+    /// (shown per model in `serve --list-models`).
+    fn backend_name(&self) -> &'static str {
+        "-"
+    }
 }
 
 #[cfg(test)]

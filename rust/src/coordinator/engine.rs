@@ -692,13 +692,21 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
         waiters.push((it.reply, it.enqueued, it.degraded, it.permit));
     }
     let t0 = Instant::now();
+    // the batch's queueing share: how long its oldest request sat
+    // between submit and dispatch (reported separately from execute so
+    // a backed-up batcher and a slow datapath are distinguishable)
+    let queue_wait = waiters
+        .iter()
+        .map(|(_, enqueued, _, _)| t0.saturating_duration_since(*enqueued))
+        .max()
+        .unwrap_or_default();
     // a panic unwinds into an Err so the batch falls through to the
     // per-request retry like any other wholesale failure
     let batch_result = catch_unwind(AssertUnwindSafe(|| executor.exec_batch(key, &inputs)))
         .unwrap_or_else(|_| Err(anyhow!("executor panicked on a {size}-request batch")));
     match batch_result {
         Ok(outs) if outs.len() == size => {
-            metrics.record_batch(shard, key, size, t0.elapsed(), false);
+            metrics.record_batch(shard, key, size, queue_wait, t0.elapsed(), false);
             for ((reply, enqueued, degraded, _permit), outputs) in waiters.into_iter().zip(outs) {
                 metrics.record_latency(key, enqueued.elapsed());
                 let _ = reply.send(Ok(Response { outputs, route: key, degraded }));
@@ -708,7 +716,7 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
             // executor contract violation — fail every request loudly,
             // but still record the batch (degraded) so the stream stays
             // complete in the per-shard stats
-            metrics.record_batch(shard, key, size, t0.elapsed(), true);
+            metrics.record_batch(shard, key, size, queue_wait, t0.elapsed(), true);
             let msg = format!(
                 "{key}: executor answered {} of {size} batch requests",
                 outs.len()
@@ -740,7 +748,7 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
             // so a shard that always falls back to the scalar path
             // shows its real batch stream instead of zero batches and
             // inflated lane stats
-            metrics.record_batch(shard, key, size, t0.elapsed(), true);
+            metrics.record_batch(shard, key, size, queue_wait, t0.elapsed(), true);
         }
     }
 }

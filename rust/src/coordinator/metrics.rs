@@ -1,6 +1,7 @@
 //! Coordinator metrics: request counters, per-[`ModelKey`] latency
 //! records, per-shard batch statistics (batch size, lane occupancy,
-//! degraded batches, batch latency, peak queue depth), and sticky-
+//! degraded batches, queue-wait and execute latency, peak queue depth),
+//! and sticky-
 //! placement accounting (per-key shard sets and spill counts). Shared
 //! across threads behind a mutex (request rates here are far below
 //! contention territory; the hot path is model execution).
@@ -46,8 +47,11 @@ pub fn occupancy(size: usize) -> f64 {
 struct BatchStats {
     /// Requests per flushed batch.
     sizes: Vec<usize>,
-    /// Wall-clock execution time per batch, seconds.
-    latencies: Vec<f64>,
+    /// Seconds the batch's longest-waiting request sat queued before
+    /// the shard picked the batch up.
+    queue_waits: Vec<f64>,
+    /// Wall-clock execution time per batch, seconds (dispatch → reply).
+    executes: Vec<f64>,
     /// Batches that fell back to the per-request scalar retry.
     degraded: usize,
 }
@@ -63,8 +67,11 @@ pub struct BatchSummary {
     pub lane_occupancy: f64,
     /// Batches that degraded to the per-request retry path.
     pub degraded: usize,
-    /// Batch execution latency (seconds).
-    pub latency: Summary,
+    /// Time the batch's oldest request waited in the queue (seconds) —
+    /// the batcher/queueing share of per-batch latency.
+    pub queue_wait: Summary,
+    /// Batch execution latency (seconds) — the datapath share.
+    pub execute: Summary,
 }
 
 #[derive(Default)]
@@ -259,21 +266,27 @@ impl Metrics {
         Summary::of(self.inner.lock().unwrap().admission_waits.clone())
     }
 
-    /// One batch of `size` requests executed on `shard` for `key` in
-    /// `latency` wall-clock time; `degraded` marks a batch that fell
-    /// back to the per-request scalar retry.
+    /// One batch of `size` requests executed on `shard` for `key`.
+    /// `queue_wait` is how long the batch's oldest request sat queued
+    /// before dispatch; `execute` is the dispatch → reply wall-clock
+    /// time; `degraded` marks a batch that fell back to the per-request
+    /// scalar retry. Keeping the two halves separate tells a saturated
+    /// datapath (execute grows) apart from a backed-up batcher
+    /// (queue_wait grows) at a glance.
     pub fn record_batch(
         &self,
         shard: usize,
         key: ModelKey,
         size: usize,
-        latency: Duration,
+        queue_wait: Duration,
+        execute: Duration,
         degraded: bool,
     ) {
         let mut m = self.inner.lock().unwrap();
         let s = m.batches.entry((shard, key)).or_default();
         s.sizes.push(size);
-        s.latencies.push(latency.as_secs_f64());
+        s.queue_waits.push(queue_wait.as_secs_f64());
+        s.executes.push(execute.as_secs_f64());
         if degraded {
             s.degraded += 1;
         }
@@ -410,7 +423,8 @@ impl Metrics {
                         mean_size,
                         lane_occupancy,
                         degraded: s.degraded,
-                        latency: Summary::of(s.latencies.clone()),
+                        queue_wait: Summary::of(s.queue_waits.clone()),
+                        execute: Summary::of(s.executes.clone()),
                     },
                 )
             })
@@ -558,13 +572,15 @@ impl Metrics {
         for ((shard, key), b) in self.batch_summaries() {
             s.push_str(&format!(
                 "  shard{shard} {:<14} batches={:<5} mean_batch={:<5.1} \
-                 occ={:.0}% degraded={} batch_p50={:.3}ms peak_depth={}\n",
+                 occ={:.0}% degraded={} queue_p50={:.3}ms exec_p50={:.3}ms \
+                 peak_depth={}\n",
                 key.to_string(),
                 b.batches,
                 b.mean_size,
                 b.lane_occupancy * 100.0,
                 b.degraded,
-                b.latency.p50 * 1e3,
+                b.queue_wait.p50 * 1e3,
+                b.execute.p50 * 1e3,
                 depths.get(&shard).copied().unwrap_or(0)
             ));
         }
@@ -585,7 +601,14 @@ mod tests {
         let m = Metrics::new();
         m.record_latency(mk("gdf/conv"), Duration::from_millis(2));
         m.record_latency(mk("gdf/conv"), Duration::from_millis(4));
-        m.record_batch(0, mk("gdf/conv"), 8, Duration::from_millis(3), false);
+        m.record_batch(
+            0,
+            mk("gdf/conv"),
+            8,
+            Duration::from_millis(1),
+            Duration::from_millis(3),
+            false,
+        );
         m.record_rejected();
         assert_eq!(m.completed(), 2);
         assert_eq!(m.rejected(), 1);
@@ -593,7 +616,14 @@ mod tests {
         assert!((m.lane_occupancy() - 8.0 / 256.0).abs() < 1e-12);
         let sums = m.latency_summaries();
         assert!((sums[&mk("gdf/conv")].mean - 0.003).abs() < 1e-9);
-        assert!(m.report().contains("gdf/conv"));
+        // queue wait and execute are recorded separately, not summed
+        let b = &m.batch_summaries()[&(0, mk("gdf/conv"))];
+        assert!((b.queue_wait.p50 - 0.001).abs() < 1e-9);
+        assert!((b.execute.p50 - 0.003).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("gdf/conv"));
+        assert!(rep.contains("queue_p50=1.000ms"), "{rep}");
+        assert!(rep.contains("exec_p50=3.000ms"), "{rep}");
     }
 
     #[test]
@@ -610,7 +640,14 @@ mod tests {
         // the same formula backs the aggregate and per-(shard,key) views
         let m = Metrics::new();
         for size in [1usize, 256, 257, 512, 513] {
-            m.record_batch(0, mk("gdf/ds16"), size, Duration::from_millis(1), false);
+            m.record_batch(
+                0,
+                mk("gdf/ds16"),
+                size,
+                Duration::ZERO,
+                Duration::from_millis(1),
+                false,
+            );
         }
         let want =
             [1usize, 256, 257, 512, 513].iter().map(|&s| occupancy(s)).sum::<f64>() / 5.0;
@@ -623,8 +660,8 @@ mod tests {
     #[test]
     fn degraded_batches_are_counted() {
         let m = Metrics::new();
-        m.record_batch(0, mk("gdf/ds16"), 3, Duration::from_millis(1), true);
-        m.record_batch(0, mk("gdf/ds16"), 4, Duration::from_millis(1), false);
+        m.record_batch(0, mk("gdf/ds16"), 3, Duration::ZERO, Duration::from_millis(1), true);
+        m.record_batch(0, mk("gdf/ds16"), 4, Duration::ZERO, Duration::from_millis(1), false);
         let b = &m.batch_summaries()[&(0, mk("gdf/ds16"))];
         assert_eq!(b.batches, 2);
         assert_eq!(b.degraded, 1);
@@ -711,9 +748,16 @@ mod tests {
     #[test]
     fn per_shard_batch_stats_partition() {
         let m = Metrics::new();
-        m.record_batch(0, mk("gdf/ds16"), 4, Duration::from_millis(1), false);
-        m.record_batch(1, mk("gdf/ds16"), 8, Duration::from_millis(2), false);
-        m.record_batch(1, mk("frnn/ds32"), 2, Duration::from_millis(1), false);
+        m.record_batch(0, mk("gdf/ds16"), 4, Duration::ZERO, Duration::from_millis(1), false);
+        m.record_batch(
+            1,
+            mk("gdf/ds16"),
+            8,
+            Duration::from_millis(5),
+            Duration::from_millis(2),
+            false,
+        );
+        m.record_batch(1, mk("frnn/ds32"), 2, Duration::ZERO, Duration::from_millis(1), false);
         m.record_queue_depth(1, 3);
         m.record_queue_depth(1, 1);
         let b = m.batch_summaries();
@@ -721,6 +765,9 @@ mod tests {
         assert_eq!(b[&(0, mk("gdf/ds16"))].batches, 1);
         assert_eq!(b[&(1, mk("gdf/ds16"))].mean_size, 8.0);
         assert!((b[&(1, mk("gdf/ds16"))].lane_occupancy - 8.0 / 256.0).abs() < 1e-12);
+        // a backed-up queue shows in queue_wait without inflating execute
+        assert!((b[&(1, mk("gdf/ds16"))].queue_wait.p50 - 0.005).abs() < 1e-9);
+        assert!((b[&(1, mk("gdf/ds16"))].execute.p50 - 0.002).abs() < 1e-9);
         assert_eq!(m.peak_queue_depths()[&1], 3);
         // mean over all batches: (4 + 8 + 2) / 3
         assert!((m.mean_batch_size() - 14.0 / 3.0).abs() < 1e-12);

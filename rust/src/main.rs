@@ -35,7 +35,8 @@ Pipeline:
         [--overload reject|wait|degrade] [--deadline-ms N]
         [--queue-capacity N] [--fair-share F]
         [--cache-dir DIR] [--no-cache] [--list-models] [--artifacts DIR]
-        [--listen ADDR]
+        [--listen ADDR] [--unit-backend tape|lut|auto]
+        [--threads-per-shard N]
                                          run the coordinator demo:
                                          native = synthesized netlists (offline),
                                          pjrt   = AOT artifacts (needs --features pjrt).
@@ -56,7 +57,18 @@ Pipeline:
                                          --spill-threshold queued batches (the
                                          receiving shard lazily registers the model).
                                          --list-models prints the catalog (build time,
-                                         cached, gates, lanes, shard set) and exits.
+                                         cached, gates, lanes, execution backend,
+                                         shard set) and exits.
+                                         --unit-backend picks how synthesized units
+                                         execute batches: tape walks the compiled
+                                         SIMD tape, lut serves precomputed
+                                         word-level tables, auto (default)
+                                         calibrates once per unit kind and keeps
+                                         the winner. --threads-per-shard N splits
+                                         each shard's 256-lane chunk loops over N
+                                         worker threads (default:
+                                         available_parallelism / shards; the
+                                         PPC_THREADS env var overrides both).
                                          Every submit passes the admission gate:
                                          at most --queue-capacity requests in flight
                                          (one model holds at most a --fair-share
@@ -352,6 +364,21 @@ fn serve_demo(args: &Args) -> Result<()> {
         "shards",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
     );
+    // Unit execution backend (tape / lut / auto-calibrated), applied
+    // before any executor builds its units.
+    if let Some(b) = args.get("unit-backend") {
+        let backend = ppc::ppc::lut::UnitBackend::parse(b)
+            .ok_or_else(|| anyhow!("unknown --unit-backend {b:?} (tape|lut|auto)"))?;
+        ppc::ppc::lut::set_unit_backend(backend);
+    }
+    // Chunk-parallel batch execution: split each shard's 256-lane chunk
+    // loops over this many worker threads. PPC_THREADS (the established
+    // env knob) wins over both the flag and the derived default.
+    if std::env::var("PPC_THREADS").is_err() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let per_shard = args.usize_or("threads-per-shard", (cores / shards).max(1));
+        ppc::util::pool::set_batch_threads(per_shard.max(1));
+    }
     // The admission front door: every submit path goes through it.
     let overload = OverloadPolicy::parse(args.get_or("overload", "wait"))?;
     let deadline_ms: Option<u64> = match args.get("deadline-ms") {
@@ -438,17 +465,18 @@ fn serve_demo(args: &Args) -> Result<()> {
             println!("building the native catalog…");
             let exec = build(0, &keys)?;
             println!(
-                "{:<16} {:>11} {:>8} {:>9} {:>6}  {:<8}",
-                "model", "build(ms)", "cached", "gates", "lanes", "shards"
+                "{:<16} {:>11} {:>8} {:>9} {:>6} {:>8}  {:<8}",
+                "model", "build(ms)", "cached", "gates", "lanes", "backend", "shards"
             );
             for info in exec.model_infos() {
                 println!(
-                    "{:<16} {:>11.1} {:>8} {:>9} {:>6}  {:<8}",
+                    "{:<16} {:>11.1} {:>8} {:>9} {:>6} {:>8}  {:<8}",
                     info.key.to_string(),
                     info.build_time.as_secs_f64() * 1e3,
                     if info.cached { "yes" } else { "no" },
                     info.gates,
                     info.lanes,
+                    info.backend,
                     placement
                         .shards_of(info.key)
                         .map(Placement::render_shards)

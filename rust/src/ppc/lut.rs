@@ -1,0 +1,291 @@
+//! Word-level lookup-table unit backend (function memoization).
+//!
+//! A PPC block is precise only on a *predefined* set of input values —
+//! the logical software endpoint of that relaxation is to memoize the
+//! unit outright: sweep the compiled tape over the unit's small operand
+//! space once at construction and serve word-level lookups afterwards,
+//! with no bit packing and no per-gate tape walk.
+//!
+//! Two table shapes cover the synthesized units:
+//!
+//! - [`SegmentedLut`] — one `2^(2·SEG_BITS+1)`-entry table per adder
+//!   segment (4+4 bits + carry-in → 512 entries), the carry chain
+//!   stitched in software exactly like `AdderUnit::eval_scalar`.
+//! - [`PairLut`] — the whole 8×8 multiplier as one 64Ki × `u16` product
+//!   table (≈ 128 KiB).
+//!
+//! **Don't-care contract.** Off the care set a PPC unit's output is
+//! unspecified but *deterministic*: the synthesized netlist, the
+//! compiled tape, and the LUT all realize the same logic network, so all
+//! three agree bit-for-bit on **every** input, care or don't-care. The
+//! tables here are built by sweeping the tape (not by re-deriving the
+//! spec), which makes that agreement true by construction; the property
+//! tests in `ppc::units` hold it for every registered unit config.
+//!
+//! Backend choice per unit is [`UnitBackend`]: `Tape` and `Lut` force a
+//! path, `Auto` (the default) applies a width heuristic (total table
+//! input bits ≤ [`MAX_TABLE_BITS`]) plus a one-shot calibration
+//! microbench per unit kind, cached process-wide. `serve --unit-backend`
+//! sets the process-global default before any unit is constructed.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use crate::logic::compiled::{consecutive_lanes_w, unpack_lanes_w, CompiledNetlist};
+
+/// How a unit evaluates batches: the compiled levelized tape, a
+/// precomputed lookup table, or a per-kind calibrated choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitBackend {
+    /// Width heuristic + one-shot calibration microbench (the default).
+    Auto,
+    /// Always the compiled SIMD tape (the bit-parallel oracle path).
+    Tape,
+    /// Always the precomputed lookup table.
+    Lut,
+}
+
+impl UnitBackend {
+    /// Parse a `serve --unit-backend` value.
+    pub fn parse(s: &str) -> Option<UnitBackend> {
+        match s {
+            "auto" => Some(UnitBackend::Auto),
+            "tape" => Some(UnitBackend::Tape),
+            "lut" => Some(UnitBackend::Lut),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            UnitBackend::Auto => "auto",
+            UnitBackend::Tape => "tape",
+            UnitBackend::Lut => "lut",
+        }
+    }
+}
+
+/// Width heuristic ceiling: a table is only considered when its total
+/// input space is at most `2^MAX_TABLE_BITS` entries (the 8×8 multiplier
+/// pair table, 64Ki × u16 ≈ 128 KiB, is the intended maximum).
+pub const MAX_TABLE_BITS: usize = 16;
+
+static BACKEND: AtomicU8 = AtomicU8::new(0); // 0=Auto 1=Tape 2=Lut
+
+/// Set the process-global backend default consulted by unit
+/// constructors (`serve --unit-backend`). Call before building
+/// executors; already-built units are unaffected (use the units'
+/// `apply_backend` to rebuild).
+pub fn set_unit_backend(b: UnitBackend) {
+    let v = match b {
+        UnitBackend::Auto => 0,
+        UnitBackend::Tape => 1,
+        UnitBackend::Lut => 2,
+    };
+    BACKEND.store(v, Ordering::Relaxed);
+}
+
+/// The process-global backend default.
+pub fn unit_backend() -> UnitBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => UnitBackend::Tape,
+        2 => UnitBackend::Lut,
+        _ => UnitBackend::Auto,
+    }
+}
+
+/// Unit kinds calibrated independently — an adder's 512-entry segment
+/// tables and a multiplier's 64Ki pair table have very different cache
+/// behavior, so one verdict per kind.
+#[derive(Debug, Clone, Copy)]
+pub enum UnitKind {
+    Adder,
+    Mult,
+}
+
+fn verdict_cell(kind: UnitKind) -> &'static OnceLock<bool> {
+    static ADDER: OnceLock<bool> = OnceLock::new();
+    static MULT: OnceLock<bool> = OnceLock::new();
+    match kind {
+        UnitKind::Adder => &ADDER,
+        UnitKind::Mult => &MULT,
+    }
+}
+
+/// The cached calibration verdict for `kind`, if one exists — lets a
+/// constructor skip building a candidate table the microbench already
+/// rejected.
+pub fn cached_verdict(kind: UnitKind) -> Option<bool> {
+    verdict_cell(kind).get().copied()
+}
+
+/// One-shot calibration: time `tape_run` against `lut_run` (alternating,
+/// best of three each) and cache "LUT wins" per unit kind for the life
+/// of the process. Both closures should evaluate the same microbatch.
+pub fn calibrate(kind: UnitKind, mut tape_run: impl FnMut(), mut lut_run: impl FnMut()) -> bool {
+    *verdict_cell(kind).get_or_init(|| {
+        fn best(f: &mut dyn FnMut(), reps: usize) -> Duration {
+            let mut b = Duration::MAX;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                f();
+                b = b.min(t0.elapsed());
+            }
+            b
+        }
+        // warm both paths once (page in the table, fill the icache)
+        tape_run();
+        lut_run();
+        let t = best(&mut tape_run, 3);
+        let l = best(&mut lut_run, 3);
+        l <= t
+    })
+}
+
+/// Sweep a compiled tape over its full `2^bits` input space and return
+/// the output word per minterm — the table builder. Runs the wide
+/// `[u64; 4]` word, 256 minterms per pass.
+pub fn sweep_tape(tape: &CompiledNetlist, bits: usize) -> Vec<u64> {
+    assert!(bits <= MAX_TABLE_BITS, "table sweep over 2^{bits} inputs exceeds the width ceiling");
+    const W: usize = 256; // <[u64; 4] as LaneWord>::BITS
+    let total = 1usize << bits;
+    let mut out = Vec::with_capacity(total);
+    let mut base = 0usize;
+    while base < total {
+        let count = (total - base).min(W);
+        let in_lanes = consecutive_lanes_w::<[u64; 4]>(base as u64, bits);
+        let outs = tape.eval(&in_lanes);
+        out.extend(unpack_lanes_w(&outs, count));
+        base += count;
+    }
+    out
+}
+
+/// Per-segment tables for a segmented (ripple-of-slices) adder. Entry
+/// `m` of table `s` is segment `s`'s full output word (`seg_bits` sum
+/// bits, then the carry-out bit) for the 2·`seg_bits`+1-bit minterm
+/// `a_slice | b_slice << seg_bits | carry_in << 2·seg_bits` — the same
+/// layout `AdderUnit::eval_scalar` walks, so [`SegmentedLut::eval`]
+/// stitches the carry chain identically.
+pub struct SegmentedLut {
+    seg_bits: u32,
+    tables: Vec<Vec<u8>>,
+}
+
+impl SegmentedLut {
+    /// Build by sweeping each segment's compiled tape over its full
+    /// input space (care *and* don't-care minterms — see the module
+    /// docs for why both must match).
+    pub fn from_tapes(tapes: &[CompiledNetlist], seg_bits: u32) -> SegmentedLut {
+        assert!(seg_bits + 1 <= 8, "segment output must fit a u8 table entry");
+        let bits = 2 * seg_bits as usize + 1;
+        let tables = tapes
+            .iter()
+            .map(|t| sweep_tape(t, bits).into_iter().map(|v| v as u8).collect())
+            .collect();
+        SegmentedLut { seg_bits, tables }
+    }
+
+    /// One sum via table lookups, carry stitched across segments.
+    #[inline]
+    pub fn eval(&self, a: u32, b: u32) -> u64 {
+        let sb = self.seg_bits;
+        let seg_mask = (1u64 << sb) - 1;
+        let mut sum = 0u64;
+        let mut carry = 0usize;
+        for (s, t) in self.tables.iter().enumerate() {
+            let sh = s as u32 * sb;
+            let m = (((a as u64 >> sh) & seg_mask) as usize)
+                | ((((b as u64 >> sh) & seg_mask) as usize) << sb)
+                | (carry << (2 * sb));
+            let o = t[m] as u64;
+            sum |= (o & seg_mask) << sh;
+            carry = ((o >> sb) & 1) as usize;
+        }
+        sum | ((carry as u64) << (self.tables.len() as u32 * self.seg_bits))
+    }
+
+    /// Table footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.tables.iter().map(Vec::len).sum()
+    }
+}
+
+/// A whole-unit product table over two 8-bit operands: 64Ki × `u16`
+/// (the 8×8 multiplier's product is at most 16 bits).
+pub struct PairLut {
+    table: Vec<u16>,
+}
+
+impl PairLut {
+    /// Wrap a table built by the unit (index `a << 8 | b`).
+    pub fn new(table: Vec<u16>) -> PairLut {
+        assert_eq!(table.len(), 1 << 16);
+        PairLut { table }
+    }
+
+    /// One product via a single word-level lookup.
+    #[inline]
+    pub fn eval(&self, a: u32, b: u32) -> u64 {
+        self.table[(((a & 0xff) as usize) << 8) | (b & 0xff) as usize] as u64
+    }
+
+    /// Table footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.table.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::library::cells90;
+    use crate::logic::netlist::{Driver, Gate, Netlist};
+
+    #[test]
+    fn backend_parse_and_name_round_trip() {
+        for b in [UnitBackend::Auto, UnitBackend::Tape, UnitBackend::Lut] {
+            assert_eq!(UnitBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(UnitBackend::parse("simd"), None);
+    }
+
+    #[test]
+    fn sweep_tape_matches_interpreted_eval_on_every_minterm() {
+        // a 9-input netlist (the adder-segment shape)
+        let lib = cells90();
+        let cell = |n: &str| lib.iter().position(|c| c.name == n).unwrap();
+        let (xor2, and2, or2) = (cell("XOR2"), cell("AND2"), cell("OR2"));
+        let nl = Netlist {
+            lib,
+            num_inputs: 9,
+            gates: vec![
+                Gate { cell: xor2, inputs: vec![Driver::Input(0), Driver::Input(1)] },
+                Gate { cell: and2, inputs: vec![Driver::Input(2), Driver::Input(3)] },
+                Gate { cell: or2, inputs: vec![Driver::Gate(0), Driver::Gate(1)] },
+                Gate { cell: xor2, inputs: vec![Driver::Gate(2), Driver::Input(8)] },
+            ],
+            outputs: vec![Driver::Gate(3), Driver::Gate(2)],
+        };
+        let tape = CompiledNetlist::from_netlist(&nl);
+        let table = sweep_tape(&tape, 9);
+        assert_eq!(table.len(), 512);
+        for (m, &got) in table.iter().enumerate() {
+            assert_eq!(got, nl.eval(m as u64), "minterm {m}");
+        }
+    }
+
+    #[test]
+    fn calibration_verdict_is_cached_once_per_kind() {
+        let mut tape_calls = 0usize;
+        let v1 = calibrate(UnitKind::Adder, || tape_calls += 1, || {});
+        let before = tape_calls;
+        assert!(before > 0 || cached_verdict(UnitKind::Adder).is_some());
+        // second call must not re-run the microbench
+        let v2 = calibrate(UnitKind::Adder, || tape_calls += 1, || {});
+        assert_eq!(v1, v2);
+        assert_eq!(tape_calls, before);
+        assert_eq!(cached_verdict(UnitKind::Adder), Some(v1));
+    }
+}

@@ -12,6 +12,9 @@
 //! - [`units`] — executable synthesized composites (segmented adders,
 //!   the composed 8×8 multiplier) with scalar and 256-lane compiled-tape
 //!   evaluation; the arithmetic behind the native serving backend.
+//! - [`lut`] — the word-level lookup-table backend (function
+//!   memoization over a unit's small operand space) plus per-unit
+//!   backend selection and calibration.
 //!
 //! ## Example: the whole paradigm in six lines
 //!
@@ -28,5 +31,6 @@
 pub mod blocks;
 pub mod error;
 pub mod flow;
+pub mod lut;
 pub mod preprocess;
 pub mod units;

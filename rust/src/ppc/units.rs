@@ -25,15 +25,28 @@
 //! Units are exact **on their care sets only**: operands must come from
 //! the value sets the unit was synthesized with (for a serving backend
 //! that means "preprocess first, then multiply/add" — exactly the
-//! paper's datapath order).
+//! paper's datapath order). Off the care set the output is unspecified
+//! but **deterministic** — every backend (interpreted netlist walk,
+//! compiled tape, LUT) realizes the same logic network and therefore
+//! agrees bit-for-bit on every input, care or don't-care (the don't-care
+//! contract; see [`super::lut`]).
+//!
+//! Each unit additionally carries an optional word-level LUT backend
+//! ([`super::lut`]): when active, `eval_batch`/`add_many`/`mul_many`
+//! serve table lookups instead of tape passes. `add_many`/`mul_many`
+//! also split large batches across [`crate::util::pool::batch_threads`]
+//! threads, [`LANES`]-aligned so the pass structure (and the bits) are
+//! identical at any thread count.
 
 use super::blocks::{self, SEG_BITS};
+use super::lut::{self, PairLut, SegmentedLut, UnitBackend, UnitKind};
 use super::preprocess::ValueSet;
 use crate::catalog::LANES;
 use crate::logic::compiled::{unpack_lanes_w, CompiledNetlist, LaneWord};
 use crate::logic::map::Objective;
 use crate::logic::netlist::Netlist;
 use crate::logic::synth::{self, BlockSpec};
+use crate::util::pool;
 
 /// Where a unit obtains the mapped netlist for a block spec: fresh
 /// synthesis ([`FreshSynth`]) or a persistent on-disk cache
@@ -93,14 +106,41 @@ pub fn pack_values(vals: &[u32], nlanes: usize) -> Vec<u64> {
 
 /// Chunk an arbitrarily long operand stream into ≤ [`LANES`]-lane
 /// passes of `eval` — the one chunking loop behind
-/// [`AdderUnit::add_many`] and [`MultUnit8::mul_many`].
+/// [`AdderUnit::add_many`] and [`MultUnit8::mul_many`]. With
+/// `threads > 1` the [`LANES`]-aligned blocks are split across
+/// [`pool::scope_chunks`] workers; alignment keeps the per-pass lane
+/// grouping (and therefore the bits) identical at any thread count.
 fn eval_many(
     a: &[u32],
     b: &[u32],
-    mut eval: impl FnMut(&[u32], &[u32], &mut [u64]),
+    threads: usize,
+    eval: impl Fn(&[u32], &[u32], &mut [u64]) + Sync,
 ) -> Vec<u64> {
     assert_eq!(a.len(), b.len());
-    let mut out = vec![0u64; a.len()];
+    let n = a.len();
+    let nblocks = n.div_ceil(LANES);
+    let threads = threads.min(nblocks.max(1));
+    if threads <= 1 {
+        let mut out = vec![0u64; n];
+        eval_range(a, b, &eval, &mut out);
+        return out;
+    }
+    pool::scope_chunks(nblocks, threads, |bs, be| {
+        let (s, e) = (bs * LANES, (be * LANES).min(n));
+        let mut out = vec![0u64; e - s];
+        eval_range(&a[s..e], &b[s..e], &eval, &mut out);
+        out
+    })
+    .concat()
+}
+
+/// The serial ≤ [`LANES`]-per-pass loop over one contiguous range.
+fn eval_range(
+    a: &[u32],
+    b: &[u32],
+    eval: &(impl Fn(&[u32], &[u32], &mut [u64]) + Sync),
+    out: &mut [u64],
+) {
     let mut buf = [0u64; LANES];
     let mut i = 0;
     while i < a.len() {
@@ -109,7 +149,6 @@ fn eval_many(
         out[i..end].copy_from_slice(&buf[..end - i]);
         i = end;
     }
-    out
 }
 
 /// Resize a lane vector, asserting (in debug) that no nonzero lane is
@@ -131,8 +170,12 @@ pub struct AdderUnit {
     pub wl_b: u32,
     segs: Vec<Netlist>,
     /// One compiled tape per segment, lowered at construction — what
-    /// the lane-batched paths actually run.
+    /// the lane-batched paths run on the tape backend (and the oracle
+    /// the LUT backend is swept from).
     tapes: Vec<CompiledNetlist>,
+    /// Word-level per-segment lookup tables; when present,
+    /// [`AdderUnit::eval_batch`] serves lookups instead of tape passes.
+    lut: Option<SegmentedLut>,
 }
 
 impl AdderUnit {
@@ -179,7 +222,65 @@ impl AdderUnit {
             })
             .collect();
         let tapes = segs.iter().map(CompiledNetlist::from_netlist).collect();
-        AdderUnit { name: name.to_string(), wl_a, wl_b, segs, tapes }
+        let mut unit = AdderUnit { name: name.to_string(), wl_a, wl_b, segs, tapes, lut: None };
+        unit.apply_backend(lut::unit_backend());
+        unit
+    }
+
+    /// (Re)resolve the execution backend: `Tape` drops any table, `Lut`
+    /// always builds one, `Auto` applies the width heuristic plus the
+    /// one-shot per-kind calibration microbench.
+    pub fn apply_backend(&mut self, backend: UnitBackend) {
+        self.lut = match backend {
+            UnitBackend::Tape => None,
+            UnitBackend::Lut => Some(self.build_lut()),
+            UnitBackend::Auto => self.auto_lut(),
+        };
+    }
+
+    /// Which backend batches run: `"lut"` or `"tape"`.
+    pub fn backend_name(&self) -> &'static str {
+        if self.lut.is_some() {
+            "lut"
+        } else {
+            "tape"
+        }
+    }
+
+    fn build_lut(&self) -> SegmentedLut {
+        SegmentedLut::from_tapes(&self.tapes, SEG_BITS)
+    }
+
+    fn auto_lut(&self) -> Option<SegmentedLut> {
+        // width heuristic: the per-segment table space (2·SEG_BITS+1
+        // input bits) must stay under the ceiling
+        if 2 * SEG_BITS as usize + 1 > lut::MAX_TABLE_BITS {
+            return None;
+        }
+        // skip building a candidate the microbench already rejected
+        if lut::cached_verdict(UnitKind::Adder) == Some(false) {
+            return None;
+        }
+        let cand = self.build_lut();
+        let mask = (1u32 << self.lane_width().min(16)) - 1;
+        let a: Vec<u32> = (0..LANES as u32).map(|i| (i * 17 + 3) & mask).collect();
+        let b: Vec<u32> = (0..LANES as u32).map(|i| (i * 11 + 7) & mask).collect();
+        let wins = lut::calibrate(
+            UnitKind::Adder,
+            || {
+                let mut out = [0u64; LANES];
+                self.eval_batch_tape(&a, &b, &mut out);
+                std::hint::black_box(&out);
+            },
+            || {
+                let mut out = [0u64; LANES];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = cand.eval(a[j], b[j]);
+                }
+                std::hint::black_box(&out);
+            },
+        );
+        wins.then_some(cand)
     }
 
     /// Operand width in lanes (`num_segments × 4`); the sum adds one
@@ -220,13 +321,28 @@ impl AdderUnit {
         sum
     }
 
-    /// Bit-parallel sum of up to [`LANES`] operand pairs. Batches of
-    /// ≤ 64 run the narrow `u64` word; wider ones the `[u64; 4]` word.
+    /// Bit-parallel sum of up to [`LANES`] operand pairs, dispatched to
+    /// the active backend: word-level table lookups when the LUT is
+    /// resident, otherwise tape passes (batches of ≤ 64 run the narrow
+    /// `u64` word; wider ones the `[u64; 4]` word).
     pub fn eval_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
         let n = a.len();
         // hard contract: lane capacity is LANES (a wider batch would
         // silently wrap the pack shift in release builds)
         assert!(n <= LANES && b.len() == n && out.len() >= n);
+        if let Some(l) = &self.lut {
+            for (j, o) in out[..n].iter_mut().enumerate() {
+                *o = l.eval(a[j], b[j]);
+            }
+            return;
+        }
+        self.eval_batch_tape(a, b, out);
+    }
+
+    /// The compiled-tape batch path (always available; the oracle the
+    /// LUT is swept from).
+    fn eval_batch_tape(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        let n = a.len();
         if n <= 64 {
             let al = pack_values_w::<u64>(a, self.lane_width());
             let bl = pack_values_w::<u64>(b, self.lane_width());
@@ -240,12 +356,20 @@ impl AdderUnit {
         }
     }
 
-    /// Sum arbitrarily many operand pairs, [`LANES`] lanes per tape
-    /// pass — the batch entry point the lane-batched serving path pools
+    /// Sum arbitrarily many operand pairs, [`LANES`] lanes per pass —
+    /// the batch entry point the lane-batched serving path pools
     /// requests through (only the single global tail chunk runs with
-    /// idle lanes).
+    /// idle lanes). Large batches split across
+    /// [`pool::batch_threads`] workers.
     pub fn add_many(&self, a: &[u32], b: &[u32]) -> Vec<u64> {
-        eval_many(a, b, |x, y, out| self.eval_batch(x, y, out))
+        self.add_many_threads(a, b, pool::batch_threads())
+    }
+
+    /// [`AdderUnit::add_many`] with an explicit thread count — callers
+    /// already running inside a parallel region pass `1` to avoid
+    /// nested parallelism.
+    pub fn add_many_threads(&self, a: &[u32], b: &[u32], threads: usize) -> Vec<u64> {
+        eval_many(a, b, threads, |x, y, out| self.eval_batch(x, y, out))
     }
 
     /// One sum through the scalar netlist walk.
@@ -288,6 +412,9 @@ pub struct MultUnit8 {
     a1: AdderUnit, // LH + HL
     a2: AdderUnit, // (mid << 4) + LL
     a3: AdderUnit, // (HH << 8) + lo
+    /// Whole-unit 64Ki × u16 product table; when present,
+    /// [`MultUnit8::eval_batch`] serves one lookup per pair.
+    lut: Option<PairLut>,
 }
 
 impl MultUnit8 {
@@ -359,7 +486,81 @@ impl MultUnit8 {
             source,
         );
         let qtapes = quads.iter().map(CompiledNetlist::from_netlist).collect();
-        MultUnit8 { name: name.to_string(), quads, qtapes, a1, a2, a3 }
+        let mut unit = MultUnit8 { name: name.to_string(), quads, qtapes, a1, a2, a3, lut: None };
+        unit.apply_backend(lut::unit_backend());
+        unit
+    }
+
+    /// (Re)resolve the execution backend (see
+    /// [`AdderUnit::apply_backend`]).
+    pub fn apply_backend(&mut self, backend: UnitBackend) {
+        self.lut = match backend {
+            UnitBackend::Tape => None,
+            UnitBackend::Lut => Some(self.build_lut()),
+            UnitBackend::Auto => self.auto_lut(),
+        };
+    }
+
+    /// Which backend batches run: `"lut"` or `"tape"`.
+    pub fn backend_name(&self) -> &'static str {
+        if self.lut.is_some() {
+            "lut"
+        } else {
+            "tape"
+        }
+    }
+
+    /// Sweep the whole unit's 16-bit operand-pair space through the
+    /// tape path ([`LANES`] pairs per pass) into one product table —
+    /// don't-care pairs included, so the table agrees with the tape
+    /// everywhere.
+    fn build_lut(&self) -> PairLut {
+        let mut table = vec![0u16; 1 << 16];
+        let bvals: Vec<u32> = (0..256).collect();
+        let mut out = [0u64; LANES];
+        for a in 0..256u32 {
+            let avals = [a; 256];
+            let mut j = 0usize;
+            while j < 256 {
+                let end = (j + LANES).min(256);
+                self.eval_batch_tape(&avals[j..end], &bvals[j..end], &mut out);
+                for (k, &p) in out[..end - j].iter().enumerate() {
+                    table[((a as usize) << 8) | (j + k)] = p as u16;
+                }
+                j = end;
+            }
+        }
+        PairLut::new(table)
+    }
+
+    fn auto_lut(&self) -> Option<PairLut> {
+        // width heuristic: the pair table's 16 input bits must stay
+        // under the ceiling
+        if 16 > lut::MAX_TABLE_BITS {
+            return None;
+        }
+        if lut::cached_verdict(UnitKind::Mult) == Some(false) {
+            return None;
+        }
+        let cand = self.build_lut();
+        let a: Vec<u32> = (0..LANES as u32).map(|i| (i * 29 + 5) & 0xff).collect();
+        let b: Vec<u32> = (0..LANES as u32).map(|i| (i * 13 + 11) & 0xff).collect();
+        let wins = lut::calibrate(
+            UnitKind::Mult,
+            || {
+                let mut out = [0u64; LANES];
+                self.eval_batch_tape(&a, &b, &mut out);
+                std::hint::black_box(&out);
+            },
+            || {
+                let mut out = [0u64; LANES];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = cand.eval(a[j], b[j]);
+                }
+                std::hint::black_box(&out);
+            },
+        );
+        wins.then_some(cand)
     }
 
     /// Total gate count (quadrants + adder tree).
@@ -401,12 +602,27 @@ impl MultUnit8 {
         prod[..16].to_vec()
     }
 
-    /// Bit-parallel product of up to [`LANES`] operand pairs (≤ 64 run
-    /// the narrow `u64` word; wider batches the `[u64; 4]` word).
+    /// Bit-parallel product of up to [`LANES`] operand pairs,
+    /// dispatched to the active backend: one table lookup per pair when
+    /// the LUT is resident, otherwise tape passes (≤ 64 run the narrow
+    /// `u64` word; wider batches the `[u64; 4]` word).
     pub fn eval_batch(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
         let n = a.len();
         // hard contract: lane capacity is LANES (see AdderUnit::eval_batch)
         assert!(n <= LANES && b.len() == n && out.len() >= n);
+        if let Some(l) = &self.lut {
+            for (j, o) in out[..n].iter_mut().enumerate() {
+                *o = l.eval(a[j], b[j]);
+            }
+            return;
+        }
+        self.eval_batch_tape(a, b, out);
+    }
+
+    /// The compiled-tape batch path (always available; the oracle the
+    /// LUT is swept from).
+    fn eval_batch_tape(&self, a: &[u32], b: &[u32], out: &mut [u64]) {
+        let n = a.len();
         if n <= 64 {
             let al = pack_values_w::<u64>(a, 8);
             let bl = pack_values_w::<u64>(b, 8);
@@ -421,10 +637,18 @@ impl MultUnit8 {
     }
 
     /// Multiply arbitrarily many operand pairs, [`LANES`] lanes per
-    /// tape pass — the batch entry point the lane-batched serving path
-    /// pools requests through.
+    /// pass — the batch entry point the lane-batched serving path
+    /// pools requests through. Large batches split across
+    /// [`pool::batch_threads`] workers.
     pub fn mul_many(&self, a: &[u32], b: &[u32]) -> Vec<u64> {
-        eval_many(a, b, |x, y, out| self.eval_batch(x, y, out))
+        self.mul_many_threads(a, b, pool::batch_threads())
+    }
+
+    /// [`MultUnit8::mul_many`] with an explicit thread count — callers
+    /// already running inside a parallel region pass `1` to avoid
+    /// nested parallelism.
+    pub fn mul_many_threads(&self, a: &[u32], b: &[u32], threads: usize) -> Vec<u64> {
+        eval_many(a, b, threads, |x, y, out| self.eval_batch(x, y, out))
     }
 
     /// One product through the scalar netlist walk.
@@ -449,6 +673,23 @@ impl BatchOp for MultUnit8 {
     }
     fn scalar(&self, a: u32, b: u32) -> u64 {
         self.eval_scalar(a, b)
+    }
+}
+
+/// Aggregate several units' backend names for display: the common name
+/// when uniform (`"lut"`/`"tape"`), `"mixed"` otherwise — how an app
+/// hardware built from several units reports itself in `--list-models`.
+pub fn combined_backend<'a>(names: impl IntoIterator<Item = &'a str>) -> &'static str {
+    let mut it = names.into_iter();
+    let Some(first) = it.next() else {
+        return "-";
+    };
+    let uniform = it.all(|n| n == first);
+    match (uniform, first) {
+        (true, "lut") => "lut",
+        (true, "tape") => "tape",
+        (true, _) => "-",
+        (false, _) => "mixed",
     }
 }
 
@@ -564,6 +805,127 @@ mod tests {
             for j in 0..n {
                 assert_eq!(out[j], (a[j] as u64) * (b[j] as u64), "n={n} j={j}");
             }
+        }
+    }
+
+    /// The chains behind every registered serving config (`ds16`,
+    /// `ds32`, `th48+ds16` — `conv` serves the full value set, which
+    /// `ds16`'s domain superset covers at unit level).
+    fn registered_chains() -> Vec<(&'static str, Chain)> {
+        vec![
+            ("ds16", ds(16)),
+            ("ds32", ds(32)),
+            ("th48ds16", Chain::of(Preproc::Th { x: 48, y: 48 }).then(Preproc::Ds(16))),
+        ]
+    }
+
+    #[test]
+    fn adder_lut_tape_and_interpreted_agree_on_every_input() {
+        // The don't-care contract: off the care set the output is
+        // unspecified but deterministic — netlist walk, tape, and LUT
+        // realize the same logic network, so all three must agree
+        // bit-for-bit on EVERY 8-bit pair, care or not. Exhaustive.
+        for (label, chain) in registered_chains() {
+            let set = ValueSet::full(8).map_chain(&chain);
+            let name = format!("pt_add_{label}");
+            let mut unit = AdderUnit::synthesize(&name, 8, 8, &set, &set, Objective::Area);
+            let all: Vec<u32> = (0..256u32).collect();
+            let mut pairs_a = Vec::with_capacity(1 << 16);
+            let mut pairs_b = Vec::with_capacity(1 << 16);
+            for &a in &all {
+                for &b in &all {
+                    pairs_a.push(a);
+                    pairs_b.push(b);
+                }
+            }
+            unit.apply_backend(UnitBackend::Tape);
+            assert_eq!(unit.backend_name(), "tape");
+            let tape = unit.add_many_threads(&pairs_a, &pairs_b, 1);
+            unit.apply_backend(UnitBackend::Lut);
+            assert_eq!(unit.backend_name(), "lut");
+            let lut = unit.add_many_threads(&pairs_a, &pairs_b, 1);
+            for j in 0..pairs_a.len() {
+                let interp = unit.eval_scalar(pairs_a[j], pairs_b[j]);
+                assert_eq!(tape[j], interp, "{label} tape a={} b={}", pairs_a[j], pairs_b[j]);
+                assert_eq!(lut[j], interp, "{label} lut a={} b={}", pairs_a[j], pairs_b[j]);
+            }
+            // and on the care set all of them are the exact sum
+            for a in set.iter() {
+                for b in set.iter() {
+                    assert_eq!(unit.eval_scalar(a, b), (a + b) as u64, "{label} a={a} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mult_lut_tape_and_interpreted_agree_on_and_off_the_care_set() {
+        // Same three-way agreement for the composed multiplier: the
+        // full care-set product exhaustively, plus pseudorandom
+        // off-care-set pairs over the whole 8×8 operand space.
+        for (label, chain) in registered_chains() {
+            let set = ValueSet::full(8).map_chain(&chain);
+            let name = format!("pt_mul_{label}");
+            let mut unit = MultUnit8::synthesize(&name, &set, &set, Objective::Area);
+            let care: Vec<u32> = set.iter().collect();
+            let mut pairs_a: Vec<u32> = Vec::new();
+            let mut pairs_b: Vec<u32> = Vec::new();
+            for &a in &care {
+                for &b in &care {
+                    pairs_a.push(a);
+                    pairs_b.push(b);
+                }
+            }
+            // xorshift off-care samples (deterministic seed)
+            let mut s = 0x9e3779b97f4a7c15u64 ^ (label.len() as u64);
+            for _ in 0..2048 {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                pairs_a.push((s & 0xff) as u32);
+                pairs_b.push(((s >> 8) & 0xff) as u32);
+            }
+            unit.apply_backend(UnitBackend::Tape);
+            let tape = unit.mul_many_threads(&pairs_a, &pairs_b, 1);
+            unit.apply_backend(UnitBackend::Lut);
+            let lut = unit.mul_many_threads(&pairs_a, &pairs_b, 1);
+            for j in 0..pairs_a.len() {
+                let interp = unit.eval_scalar(pairs_a[j], pairs_b[j]);
+                assert_eq!(tape[j], interp, "{label} tape a={} b={}", pairs_a[j], pairs_b[j]);
+                assert_eq!(lut[j], interp, "{label} lut a={} b={}", pairs_a[j], pairs_b[j]);
+            }
+            // care-set pairs are the exact product on every backend
+            for j in 0..care.len() * care.len() {
+                let (a, b) = (pairs_a[j], pairs_b[j]);
+                assert_eq!(lut[j], (a as u64) * (b as u64), "{label} a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_entry_points_bit_exact_at_1_and_4_threads() {
+        let _guard = pool::batch_threads_test_lock();
+        let set = ValueSet::full(8).map_chain(&ds(16));
+        let add = AdderUnit::synthesize("pt_add_thr", 8, 8, &set, &set, Objective::Area);
+        let mul = MultUnit8::synthesize("pt_mul_thr", &set, &set, Objective::Area);
+        let vals: Vec<u32> = set.iter().collect();
+        // crosses several 256-lane blocks with a ragged tail
+        let n = 1029usize;
+        let a: Vec<u32> = (0..n).map(|i| vals[i % vals.len()]).collect();
+        let b: Vec<u32> = (0..n).map(|i| vals[(i * 7 + 3) % vals.len()]).collect();
+        let mut sums = Vec::new();
+        let mut prods = Vec::new();
+        for t in [1usize, 4] {
+            pool::set_batch_threads(t);
+            sums.push(add.add_many(&a, &b));
+            prods.push(mul.mul_many(&a, &b));
+        }
+        pool::set_batch_threads(0);
+        assert_eq!(sums[0], sums[1]);
+        assert_eq!(prods[0], prods[1]);
+        for j in 0..n {
+            assert_eq!(sums[0][j], (a[j] + b[j]) as u64, "j={j}");
+            assert_eq!(prods[0][j], (a[j] as u64) * (b[j] as u64), "j={j}");
         }
     }
 

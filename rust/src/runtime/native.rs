@@ -73,6 +73,9 @@ pub struct ModelInfo {
     /// Concurrent requests one bit-sliced netlist pass can carry
     /// ([`catalog::LANES`] word lanes).
     pub lanes: usize,
+    /// Execution backend of the datapath's units: `"lut"`, `"tape"`, or
+    /// `"mixed"` (per-unit selection under `--unit-backend auto`).
+    pub backend: String,
 }
 
 struct Model {
@@ -286,6 +289,7 @@ fn build_model(
         cached,
         lazy,
         lanes: catalog::LANES,
+        backend: datapath.backend_name().to_string(),
     };
     Model { datapath, info }
 }
@@ -328,6 +332,10 @@ mod tests {
     fn gdf_exec_matches_fixed_point_sim() {
         let ex = NativeExecutor::new().register(mk("gdf/ds32")).unwrap();
         assert_eq!(ex.registered_keys(), vec![mk("gdf/ds32")]);
+        // GDF is all-adder hardware, so auto selection lands on one
+        // uniform backend, never "mixed"
+        let backend = &ex.model_infos()[0].backend;
+        assert!(backend == "lut" || backend == "tape", "{backend}");
         let img = synthetic_photo(16, 16, 9);
         let out = ex.exec(mk("gdf/ds32"), &[img.to_tensor()]).unwrap();
         let want = gdf::gdf_filter(&img, &PpcConfig::Ds32.chain());

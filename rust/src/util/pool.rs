@@ -4,18 +4,59 @@
 //! need: split an index range into contiguous chunks and run a closure per
 //! chunk on `std::thread::scope` threads, collecting per-chunk results.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
 /// Number of worker threads to use: respects `PPC_THREADS` if set,
 /// otherwise `available_parallelism`, capped at 16.
+///
+/// The resolved count is cached on first call — this is consulted inside
+/// batch hot loops, and an env-var read per lane pass is measurable.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("PPC_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("PPC_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    })
+}
+
+/// Explicit per-process batch-execution thread count (0 = unset).
+///
+/// Precedence: an explicit [`set_batch_threads`] always wins (benches and
+/// `serve` use it for exact control); otherwise [`default_threads`] applies,
+/// which itself honors `PPC_THREADS`.
+static BATCH_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the thread count used by batch execution (`add_many`/`mul_many` and
+/// the app `exec_batch` poolers). `0` clears the override, falling back to
+/// [`default_threads`].
+pub fn set_batch_threads(n: usize) {
+    BATCH_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Thread count for chunk-parallel batch execution: the explicit
+/// [`set_batch_threads`] value if set, else [`default_threads`].
+pub fn batch_threads() -> usize {
+    match BATCH_THREADS.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
+}
+
+/// Serializes tests that mutate the process-global batch-thread override —
+/// any thread count is bit-exact, but a test asserting a *specific* count
+/// must not interleave with another test's override.
+#[doc(hidden)]
+pub fn batch_threads_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
@@ -99,6 +140,17 @@ mod tests {
     fn single_thread_and_empty() {
         assert_eq!(par_map_index(0, 4, |i| i).len(), 0);
         assert_eq!(par_map_index(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn batch_threads_override_wins_and_clears() {
+        let _guard = batch_threads_test_lock();
+        // default_threads() is >= 1 whatever the environment
+        assert!(batch_threads() >= 1);
+        set_batch_threads(3);
+        assert_eq!(batch_threads(), 3);
+        set_batch_threads(0);
+        assert_eq!(batch_threads(), default_threads());
     }
 
     #[test]

@@ -288,6 +288,55 @@ fn exec_batch_bit_exact_with_scalar_exec_for_every_registered_model() {
     }
 }
 
+/// Property: chunk-parallel `exec_batch` is bit-exact across thread
+/// counts — the same batch executed with the batch-thread override at
+/// 1 and at 4 must produce identical bytes for **every registered
+/// ModelKey**. LANES-aligned chunking keeps the per-pass lane grouping
+/// (and therefore the don't-care resolutions) identical at any thread
+/// count; this is the observable proof.
+#[test]
+fn exec_batch_bit_exact_at_one_and_four_threads_for_every_registered_model() {
+    use ppc::apps::frnn::dataset;
+    use ppc::catalog::App;
+    use ppc::coordinator::Executor;
+    use ppc::runtime::NativeExecutor;
+    use ppc::util::pool;
+    let ds = dataset::generate(2, 0x7D41);
+    let r = net::train(&ds, &net::TrainConfig { max_epochs: 6, ..Default::default() });
+    let q = net::quantize(&r.net);
+    let exec = NativeExecutor::new()
+        .register(mk("gdf/ds16"))
+        .unwrap()
+        .register(mk("gdf/ds32"))
+        .unwrap()
+        .register(mk("blend/ds16"))
+        .unwrap()
+        .register(mk("blend/ds32"))
+        .unwrap()
+        .register_frnn(PpcConfig::Th48Ds16, q.clone())
+        .unwrap()
+        .register_frnn(PpcConfig::Ds32, q)
+        .unwrap();
+    let mut rng = Rng::new(0x7442);
+    // the override is process-global: serialize with the other tests
+    // that assert under a specific thread count
+    let _guard = pool::batch_threads_test_lock();
+    for key in exec.keys() {
+        // image-app batches reach past one 256-lane word so every
+        // worker sees whole lane blocks; FRNN forwards are pricier, so
+        // its batch stays small (layer 1 still splits across faces)
+        let n = if key.app == App::Frnn { 6 } else { 300 };
+        let batch: Vec<Vec<Tensor>> =
+            (0..n).map(|_| random_request(&mut rng, key)).collect();
+        pool::set_batch_threads(1);
+        let serial = exec.exec_batch(key, &batch).unwrap();
+        pool::set_batch_threads(4);
+        let parallel = exec.exec_batch(key, &batch).unwrap();
+        assert_eq!(serial, parallel, "{key}: thread count changed the bits");
+    }
+    pool::set_batch_threads(0);
+}
+
 /// Compiled-tape serving vs the fixed-point application oracles, for
 /// **every registered catalog key**: the 256-lane compiled netlist
 /// path behind `exec_batch` must reproduce `gdf_filter`,
