@@ -1,0 +1,266 @@
+//! Adaptive-quality serving under a load ramp: the closed-loop
+//! autopilot against a static precise-only baseline.
+//!
+//! One shard serves gdf at three tiers whose (mocked) lane-batched
+//! execution gets cheaper as quality drops — the partially-precise
+//! trade the paper builds into hardware. An identical open-loop
+//! arrival schedule (low -> saturating -> low) runs twice: once with
+//! the admission gate pinned to the requested Precise tier (shed is
+//! the only relief valve), once with the autopilot steering between
+//! registered tiers under a psnr>=32 floor. The bench asserts the
+//! controller's whole story — full precision at low load, descent
+//! under saturation, recovery to Precise after — and emits
+//! `adaptive_vs_static_shed_ratio` (lower is better) for the CI
+//! regression gate.
+
+use anyhow::Result;
+use ppc::catalog::{App, ModelKey, Quality, QualityProfile, Tensor};
+use ppc::coordinator::{
+    Autopilot, AutopilotConfig, Coordinator, CoordinatorConfig, Executor, Job, MockExecutor,
+    OverloadPolicy, QualityFloor, SubmitError, Ticket,
+};
+use ppc::util::bench::{self, BenchResult};
+use ppc::util::prng::Rng;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Per-tier cost of one lane-batched pass (the whole batch), mirroring
+/// the native backend where lower tiers run fewer, narrower gates.
+fn tier_delay(q: Quality) -> Duration {
+    match q {
+        Quality::Precise => Duration::from_millis(25),
+        Quality::Balanced => Duration::from_millis(8),
+        Quality::Economy => Duration::from_millis(3),
+    }
+}
+
+/// Mock executor whose batch cost depends on the tier it serves.
+struct TieredExec {
+    inner: MockExecutor,
+}
+
+impl TieredExec {
+    fn new(keys: &[ModelKey]) -> TieredExec {
+        TieredExec { inner: MockExecutor::new(keys) }
+    }
+}
+
+impl Executor for TieredExec {
+    fn exec(&self, key: ModelKey, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        thread::sleep(tier_delay(key.tier()));
+        self.inner.exec(key, inputs)
+    }
+
+    fn exec_batch(&self, key: ModelKey, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        // one lane-batched pass: the whole batch costs one tier delay
+        thread::sleep(tier_delay(key.tier()));
+        batch.iter().map(|inputs| self.inner.exec(key, inputs)).collect()
+    }
+
+    fn keys(&self) -> Vec<ModelKey> {
+        self.inner.keys.clone()
+    }
+
+    fn quality(&self, key: ModelKey) -> Option<QualityProfile> {
+        self.inner.quality(key)
+    }
+}
+
+/// Offer `rps` arrivals for `dur` on a fixed schedule (open loop):
+/// the schedule keeps ticking whether requests are admitted or shed,
+/// so a saturated gate shows up as shed count, not reduced pressure.
+/// Every request asks for Precise. Returns (tickets, offered, shed).
+fn offer(
+    coord: &Coordinator,
+    rng: &mut Rng,
+    rps: f64,
+    dur: Duration,
+) -> (Vec<Ticket>, usize, usize) {
+    let n = ((rps * dur.as_secs_f64()).round() as usize).max(1);
+    let interval = Duration::from_secs_f64(1.0 / rps.max(1e-9));
+    let start = Instant::now();
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for k in 0..n {
+        let due = start + interval.mul_f64(k as f64);
+        let now = Instant::now();
+        if due > now {
+            thread::sleep(due - now);
+        }
+        let image: Vec<i32> = (0..256).map(|_| rng.below(256) as i32).collect();
+        let job = Job::Denoise { image: Tensor::matrix(16, 16, image).expect("square image") };
+        match coord.submit(job, Quality::Precise) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Busy) | Err(SubmitError::Shed) => shed += 1,
+            Err(e) => panic!("unexpected submit outcome {e:?}"),
+        }
+    }
+    (tickets, n, shed)
+}
+
+/// Wait out every ticket; returns per-tier answer counts and the
+/// lowest measured quality value seen on any response.
+fn drain(tickets: Vec<Ticket>) -> (BTreeMap<Quality, usize>, f64) {
+    let mut tiers: BTreeMap<Quality, usize> = BTreeMap::new();
+    let mut min_quality = f64::INFINITY;
+    for t in tickets {
+        let r = t.wait().expect("bench responses settle");
+        *tiers.entry(r.tier).or_insert(0) += 1;
+        let q = r.quality.expect("mock tiers carry measured quality");
+        min_quality = min_quality.min(q.value);
+    }
+    (tiers, min_quality)
+}
+
+fn main() {
+    let quick = std::env::var("PPC_BENCH_QUICK").map_or(false, |v| v == "1");
+    let (low_s, high_s) = if quick { (0.4, 1.0) } else { (1.0, 2.5) };
+    let (low_rps, high_rps) = (15.0, 600.0);
+    let keys: Vec<ModelKey> = ["gdf/conv", "gdf/ds16", "gdf/ds32"]
+        .iter()
+        .map(|s| ModelKey::parse(s).unwrap())
+        .collect();
+    let base_cfg = CoordinatorConfig {
+        queue_capacity: 8,
+        batch_size: 4,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Reject,
+        fair_share: 1.0,
+        autopilot: None,
+    };
+    println!(
+        "load ramp: {low_rps:.0} -> {high_rps:.0} -> {low_rps:.0} req/s \
+         ({low_s:.1}s / {high_s:.1}s / {low_s:.1}s), precise requested throughout"
+    );
+
+    // -- static baseline: precise only, shed is the only relief valve
+    let static_keys = keys.clone();
+    let static_coord =
+        Coordinator::start(base_cfg.clone(), move |_s| Ok(TieredExec::new(&static_keys))).unwrap();
+    let mut rng = Rng::new(0xADA9);
+    let mut s_sent = 0usize;
+    let mut s_shed = 0usize;
+    for (rps, dur_s) in [(low_rps, low_s), (high_rps, high_s), (low_rps, low_s)] {
+        let (tickets, sent, shed) =
+            offer(&static_coord, &mut rng, rps, Duration::from_secs_f64(dur_s));
+        s_sent += sent;
+        s_shed += shed;
+        let (tiers, _) = drain(tickets);
+        assert!(
+            tiers.keys().all(|&q| q == Quality::Precise),
+            "the static baseline never changes tier, got {tiers:?}"
+        );
+    }
+    let s_rate = s_shed as f64 / s_sent.max(1) as f64;
+    println!("static precise-only: {s_shed}/{s_sent} shed ({:.1}%)", s_rate * 100.0);
+    assert!(s_shed > 0, "the ramp's high phase must actually saturate the static tier");
+    drop(static_coord);
+
+    // -- adaptive: the same schedule, autopilot steering between tiers
+    let probe = TieredExec::new(&keys);
+    let mut profiles = BTreeMap::new();
+    for k in &keys {
+        profiles.insert(*k, probe.quality(*k).expect("mock tiers are measured"));
+    }
+    let ap = Arc::new(Autopilot::new(
+        AutopilotConfig {
+            tick: Duration::from_millis(10),
+            refractory: Duration::from_millis(60),
+            floor: QualityFloor::parse("psnr>=32").unwrap(),
+            ..AutopilotConfig::default()
+        },
+        keys.clone(),
+        profiles,
+        base_cfg.queue_capacity,
+    ));
+    let adaptive_cfg = CoordinatorConfig { autopilot: Some(ap.clone()), ..base_cfg };
+    let adaptive_keys = keys.clone();
+    let coord =
+        Coordinator::start(adaptive_cfg, move |_s| Ok(TieredExec::new(&adaptive_keys))).unwrap();
+    let mut rng = Rng::new(0xADA9);
+    let mut a_sent = 0usize;
+    let mut a_shed = 0usize;
+    let mut min_q = f64::INFINITY;
+
+    // low load: every answer at full precision
+    let (tickets, sent, shed) = offer(&coord, &mut rng, low_rps, Duration::from_secs_f64(low_s));
+    a_sent += sent;
+    a_shed += shed;
+    let (tiers, mq) = drain(tickets);
+    min_q = min_q.min(mq);
+    assert!(
+        tiers.keys().all(|&q| q == Quality::Precise),
+        "low load serves full precision, got {tiers:?}"
+    );
+    assert_eq!(ap.current(App::Gdf), Quality::Precise, "no descent at low load");
+
+    // saturating load: the controller walks down to a cheaper tier
+    let (tickets, sent, shed) = offer(&coord, &mut rng, high_rps, Duration::from_secs_f64(high_s));
+    a_sent += sent;
+    a_shed += shed;
+    let descended = ap.current(App::Gdf);
+    let (tiers, mq) = drain(tickets);
+    min_q = min_q.min(mq);
+    assert_ne!(descended, Quality::Precise, "saturation must push the serving tier down");
+    assert!(ap.transitions() > 0, "the controller must have moved");
+    assert!(
+        tiers.keys().any(|&q| q != Quality::Precise),
+        "some saturated answers come from a cheaper tier, got {tiers:?}"
+    );
+    assert!(
+        !tiers.contains_key(&Quality::Economy),
+        "psnr>=32 floors the descent above economy (31 dB), got {tiers:?}"
+    );
+
+    // load removed: the controller recovers to full precision
+    let (tickets, sent, shed) = offer(&coord, &mut rng, low_rps, Duration::from_secs_f64(low_s));
+    a_sent += sent;
+    a_shed += shed;
+    let (_, mq) = drain(tickets);
+    min_q = min_q.min(mq);
+    let t0 = Instant::now();
+    let recover_limit = Duration::from_secs(3);
+    while ap.current(App::Gdf) != Quality::Precise && t0.elapsed() < recover_limit {
+        thread::sleep(Duration::from_millis(20));
+    }
+    let recovery = t0.elapsed();
+    assert_eq!(
+        ap.current(App::Gdf),
+        Quality::Precise,
+        "the controller recovers to Precise within {recover_limit:?} of load removal"
+    );
+    assert!(min_q >= 32.0, "no answer below the psnr>=32 floor (min seen {min_q:.1})");
+
+    let a_rate = a_shed as f64 / a_sent.max(1) as f64;
+    println!(
+        "adaptive autopilot:  {a_shed}/{a_sent} shed ({:.1}%), {} tier moves, \
+         recovered in {:.0}ms",
+        a_rate * 100.0,
+        ap.transitions(),
+        recovery.as_secs_f64() * 1e3
+    );
+    assert!(
+        a_shed < s_shed,
+        "adaptive serving must shed strictly less than the static baseline ({a_shed} vs {s_shed})"
+    );
+
+    let ratio = a_rate / s_rate.max(1e-9);
+    println!("adaptive_vs_static_shed_ratio = {ratio:.3} (lower is better)");
+    let no_rows: [&BenchResult; 0] = [];
+    let json = bench::summary_json(
+        &no_rows,
+        &[
+            ("adaptive_vs_static_shed_ratio", ratio),
+            ("autopilot_adaptive_shed_rate", a_rate),
+            ("autopilot_static_shed_rate", s_rate),
+            ("autopilot_tier_transitions", ap.transitions() as f64),
+            ("autopilot_recovery_ms", recovery.as_secs_f64() * 1e3),
+        ],
+    );
+    bench::write_summary("BENCH_autopilot.json", &json);
+    bench::append_history("BENCH_history.jsonl", &json);
+}

@@ -71,6 +71,7 @@ fn main() {
         shards: 1,
         overload: OverloadPolicy::Reject,
         fair_share: 1.0,
+        autopilot: None,
     };
     let gated = Coordinator::start(overload_cfg, |_shard| {
         let mut m = MockExecutor::full_catalog();

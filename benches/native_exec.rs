@@ -318,6 +318,7 @@ fn main() {
         shards: 1,
         overload: OverloadPolicy::Degrade,
         fair_share: 0.5, // gdf/ds16 holds at most half the pool
+        autopilot: None,
     };
     let adm_exec = NativeExecutor::new()
         .register(ModelKey::parse("gdf/ds16").unwrap())

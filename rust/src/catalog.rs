@@ -189,11 +189,125 @@ impl Quality {
             Quality::Economy => None,
         }
     }
+
+    /// The next-higher tier — what the quality autopilot recovers
+    /// toward once load drops. `Precise` has nowhere higher to go.
+    pub fn higher(self) -> Option<Quality> {
+        match self {
+            Quality::Precise => None,
+            Quality::Balanced => Some(Quality::Precise),
+            Quality::Economy => Some(Quality::Balanced),
+        }
+    }
 }
 
 impl fmt::Display for Quality {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.name())
+    }
+}
+
+/// Which application-level quality metric a [`QualityProfile`] value
+/// is measured in — the paper's per-application figures of merit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QualityMetric {
+    /// Peak signal-to-noise ratio in dB vs the precise tier (GDF and
+    /// blend — the paper's image-app metric).
+    Psnr,
+    /// Top-1 correct-classification rate in [0, 1] on the eval split
+    /// (FRNN — the paper's CCR).
+    Accuracy,
+}
+
+impl QualityMetric {
+    /// Canonical lower-case name (the wire/CLI spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            QualityMetric::Psnr => "psnr",
+            QualityMetric::Accuracy => "acc",
+        }
+    }
+
+    /// Parse the canonical [`QualityMetric::name`] spelling.
+    pub fn parse(s: &str) -> Result<QualityMetric> {
+        match s {
+            "psnr" => Ok(QualityMetric::Psnr),
+            "acc" => Ok(QualityMetric::Accuracy),
+            other => bail!("unknown quality metric {other:?} (want psnr|acc)"),
+        }
+    }
+}
+
+impl fmt::Display for QualityMetric {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// PSNR values are capped here so the precise tier's self-comparison
+/// (infinite PSNR — the paper reports it as "Ideal") stays a finite,
+/// JSON-expressible number.
+pub const PSNR_CAP: f64 = 99.0;
+
+/// A *measured* quality number for one servable model: metric kind,
+/// value, and the reference tier the measurement compared against.
+/// Attached to [`crate::runtime::ModelInfo`] at registration and
+/// carried on the wire next to the served tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QualityProfile {
+    pub metric: QualityMetric,
+    pub value: f64,
+    /// The tier the measurement is relative to (PSNR is "vs this
+    /// tier's output"; accuracy is absolute but keeps the field so
+    /// every profile names its baseline).
+    pub reference: Quality,
+}
+
+impl QualityProfile {
+    /// Compact `metric=value` rendering (the `--list-models` cell and
+    /// log spelling).
+    pub fn render(&self) -> String {
+        match self.metric {
+            QualityMetric::Psnr => format!("psnr={:.1}", self.value),
+            QualityMetric::Accuracy => format!("acc={:.3}", self.value),
+        }
+    }
+
+    /// Wire form: `{"metric": "...", "value": N, "reference": "..."}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("metric", Json::Str(self.metric.name().to_string())),
+            ("value", Json::Num(self.value)),
+            ("reference", Json::Str(self.reference.name().to_string())),
+        ])
+    }
+
+    /// Decode the wire form (inverse of [`QualityProfile::to_json`]).
+    pub fn from_json(j: &Json) -> Result<QualityProfile> {
+        let metric = QualityMetric::parse(
+            j.get("metric")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("quality profile wants a \"metric\" string"))?,
+        )?;
+        let value = j
+            .get("value")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("quality profile wants a \"value\" number"))?;
+        if !value.is_finite() {
+            bail!("quality profile value {value} is not finite");
+        }
+        let reference = Quality::parse(
+            j.get("reference")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("quality profile wants a \"reference\" string"))?,
+        )?;
+        Ok(QualityProfile { metric, value, reference })
+    }
+}
+
+impl fmt::Display for QualityProfile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
     }
 }
 
@@ -237,6 +351,17 @@ impl ModelKey {
             (_, Quality::Economy) => PpcConfig::Ds32,
         };
         ModelKey { app, config }
+    }
+
+    /// The quality tier this key serves — the inverse of
+    /// [`ModelKey::route`], total on the catalog because every config
+    /// belongs to exactly one tier.
+    pub fn tier(self) -> Quality {
+        match self.config {
+            PpcConfig::Conv => Quality::Precise,
+            PpcConfig::Ds16 | PpcConfig::Th48Ds16 => Quality::Balanced,
+            PpcConfig::Ds32 => Quality::Economy,
+        }
     }
 
     /// Every valid key, in catalog order (apps × their configs).
@@ -477,6 +602,77 @@ mod tests {
         }
         assert_eq!(walk, Quality::ALL.to_vec());
         assert_eq!(Quality::Balanced.to_string(), "balanced");
+    }
+
+    #[test]
+    fn higher_is_the_exact_inverse_of_lower() {
+        assert_eq!(Quality::Precise.higher(), None);
+        for q in Quality::ALL {
+            if let Some(lower) = q.lower() {
+                assert_eq!(lower.higher(), Some(q), "{q} -> {lower} must walk back up");
+            }
+            if let Some(higher) = q.higher() {
+                assert_eq!(higher.lower(), Some(q), "{q} -> {higher} must walk back down");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_inverts_route_for_the_whole_catalog() {
+        // route(app, key.tier()) == key for every key the router can
+        // produce, and tier() is total on the full catalog
+        for key in ModelKey::catalog() {
+            let q = key.tier();
+            assert_eq!(ModelKey::route(key.app, q), key, "{key} must be its tier's route");
+        }
+        assert_eq!(ModelKey::parse("frnn/th48ds16").unwrap().tier(), Quality::Balanced);
+        assert_eq!(ModelKey::parse("gdf/conv").unwrap().tier(), Quality::Precise);
+    }
+
+    #[test]
+    fn quality_profiles_round_trip_the_wire_form() {
+        for profile in [
+            QualityProfile {
+                metric: QualityMetric::Psnr,
+                value: 34.25,
+                reference: Quality::Precise,
+            },
+            QualityProfile {
+                metric: QualityMetric::Accuracy,
+                value: 0.921875,
+                reference: Quality::Precise,
+            },
+            QualityProfile {
+                metric: QualityMetric::Psnr,
+                value: PSNR_CAP,
+                reference: Quality::Balanced,
+            },
+        ] {
+            let j = profile.to_json();
+            assert_eq!(QualityProfile::from_json(&j).unwrap(), profile);
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(QualityProfile::from_json(&reparsed).unwrap(), profile);
+        }
+        // malformed wire forms are structured errors, not panics
+        assert!(QualityProfile::from_json(&Json::Null).is_err());
+        let bad_metric = Json::obj(vec![
+            ("metric", Json::Str("vibes".into())),
+            ("value", Json::Num(1.0)),
+            ("reference", Json::Str("precise".into())),
+        ]);
+        assert!(QualityProfile::from_json(&bad_metric).is_err());
+        let non_finite = Json::obj(vec![
+            ("metric", Json::Str("psnr".into())),
+            ("value", Json::Num(f64::INFINITY)),
+            ("reference", Json::Str("precise".into())),
+        ]);
+        assert!(QualityProfile::from_json(&non_finite).is_err());
+        let acc = QualityProfile {
+            metric: QualityMetric::Accuracy,
+            value: 0.9,
+            reference: Quality::Precise,
+        };
+        assert_eq!(acc.render(), "acc=0.900");
     }
 
     #[test]

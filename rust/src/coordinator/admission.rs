@@ -34,6 +34,7 @@
 //!     └ otherwise ──► Shed
 //! ```
 
+use super::autopilot::Autopilot;
 use super::metrics::{ExpiredAt, Metrics};
 use crate::catalog::{App, ModelKey, Quality};
 use anyhow::{bail, Result};
@@ -218,6 +219,10 @@ pub struct Admission {
     /// failures.
     registered: Vec<ModelKey>,
     metrics: Arc<Metrics>,
+    /// When set (`serve --quality auto`), the closed-loop controller
+    /// whose current tier every admission starts from — steering
+    /// composes with the degrade walk rather than replacing it.
+    autopilot: Option<Arc<Autopilot>>,
     state: Mutex<State>,
     freed: Condvar,
 }
@@ -254,9 +259,22 @@ impl Admission {
             policy,
             registered,
             metrics,
+            autopilot: None,
             state: Mutex::new(State::default()),
             freed: Condvar::new(),
         }
+    }
+
+    /// Attach the quality autopilot: every subsequent admission starts
+    /// its tier walk from [`Autopilot::clamp`] of the requested tier.
+    pub fn with_autopilot(mut self, autopilot: Arc<Autopilot>) -> Admission {
+        self.autopilot = Some(autopilot);
+        self
+    }
+
+    /// The attached autopilot, if serving in adaptive-quality mode.
+    pub fn autopilot(&self) -> Option<&Arc<Autopilot>> {
+        self.autopilot.as_ref()
     }
 
     /// The total in-flight cap.
@@ -285,10 +303,18 @@ impl Admission {
 
     /// The admissible `(key, quality)` right now: the requested tier
     /// when it has headroom; under [`OverloadPolicy::Degrade`], the
-    /// first lower *registered* tier with headroom.
+    /// first lower *registered* tier with headroom. With an autopilot
+    /// attached, the walk starts from the controller's current tier
+    /// instead of the requested one (never above the request), so
+    /// steady-state steering and instantaneous degrading compose.
     fn pick(&self, st: &State, app: App, quality: Quality) -> Option<(ModelKey, Quality)> {
-        let mut q = quality;
-        let mut requested = true;
+        let mut q = match &self.autopilot {
+            Some(ap) => ap.clamp(app, quality),
+            None => quality,
+        };
+        // the autopilot only steers onto registered tiers, so a steered
+        // start is held to the same registration check as a degrade
+        let mut requested = q == quality;
         loop {
             let key = ModelKey::route(app, q);
             if (requested || self.registered.contains(&key)) && self.headroom(st, key) {

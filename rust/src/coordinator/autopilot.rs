@@ -1,0 +1,628 @@
+//! The quality autopilot: closed-loop precision scaling for the
+//! serving stack.
+//!
+//! PR 5's `degrade` admission policy reacts to *instantaneous*
+//! capacity — a request degrades only at the moment its tier is out of
+//! permits. This module adds the telemetry-driven layer the dynamic
+//! precision-scaling literature calls for: a per-[`App`] controller
+//! that watches the PR 8 queue-wait/execute latency split and the
+//! in-flight depth from [`Metrics`], and moves each app between its
+//! *registered* tiers — descending under sustained saturation,
+//! recovering to [`Quality::Precise`] when load drops.
+//!
+//! ```text
+//!             pressure = max(queue-wait share, in-flight fraction)
+//!
+//!   1.0 ┤ ███ descend band (pressure ≥ descend_above)
+//!       ┤
+//!       ┤ ░░░ deadband — hold the current tier (hysteresis)
+//!       ┤
+//!   0.0 ┤ ▒▒▒ ascend band (pressure ≤ ascend_below)
+//! ```
+//!
+//! Two mechanisms stop the controller from flapping:
+//!
+//! - the **hysteresis deadband** between `ascend_below` and
+//!   `descend_above` — no transition happens inside it, so a pressure
+//!   signal oscillating around one threshold cannot bounce tiers;
+//! - the **refractory period** — after any transition the app's tier is
+//!   frozen for `refractory`, so even a signal jumping across both
+//!   bands moves at most one tier per window.
+//!
+//! Descent is additionally gated by the [`QualityFloor`]: a tier whose
+//! *measured* [`QualityProfile`] (PSNR for the image apps, accuracy for
+//! FRNN) falls below the configured floor is never served, no matter
+//! the load — shedding is preferable to silently serving garbage.
+//!
+//! The controller plugs into serving at the admission gate:
+//! [`Autopilot::clamp`] lowers a request's effective tier to the app's
+//! current one (never raises it), and the `degrade` overload walk then
+//! starts *from* that tier — so the two mechanisms compose instead of
+//! fighting.
+
+use super::metrics::Metrics;
+use crate::catalog::{App, ModelKey, Quality, QualityMetric, QualityProfile};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Minimum measured quality the autopilot may serve, per metric kind.
+/// Parsed from `--quality-floor psnr>=30,acc>=0.9`; an unset metric is
+/// unconstrained.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QualityFloor {
+    /// Minimum PSNR in dB (image apps).
+    pub psnr: Option<f64>,
+    /// Minimum top-1 accuracy in [0, 1] (FRNN).
+    pub acc: Option<f64>,
+}
+
+impl QualityFloor {
+    /// No floor: every registered tier is fair game.
+    pub fn none() -> QualityFloor {
+        QualityFloor::default()
+    }
+
+    /// Parse the CLI spelling: comma-separated `metric>=value` terms,
+    /// e.g. `psnr>=30,acc>=0.9`. An empty string is the empty floor.
+    pub fn parse(s: &str) -> Result<QualityFloor> {
+        let mut floor = QualityFloor::none();
+        for term in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let Some((name, value)) = term.split_once(">=") else {
+                bail!("bad quality-floor term {term:?} (want metric>=value)");
+            };
+            let v: f64 = value.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad quality-floor value {value:?} in {term:?}")
+            })?;
+            if !v.is_finite() {
+                bail!("quality-floor value in {term:?} must be finite");
+            }
+            match QualityMetric::parse(name.trim())? {
+                QualityMetric::Psnr => floor.psnr = Some(v),
+                QualityMetric::Accuracy => floor.acc = Some(v),
+            }
+        }
+        Ok(floor)
+    }
+
+    /// True when no metric is constrained.
+    pub fn is_empty(&self) -> bool {
+        self.psnr.is_none() && self.acc.is_none()
+    }
+
+    /// May a tier with this measured profile be served? An
+    /// unconstrained metric always passes; a constrained metric with
+    /// *no measurement* fails closed (an unmeasured tier cannot prove
+    /// it clears the floor).
+    pub fn allows(&self, profile: Option<&QualityProfile>) -> bool {
+        if self.is_empty() {
+            return true;
+        }
+        let Some(p) = profile else {
+            return false;
+        };
+        match p.metric {
+            QualityMetric::Psnr => self.psnr,
+            QualityMetric::Accuracy => self.acc,
+        }
+        .map_or(true, |min| p.value >= min)
+    }
+
+    /// The canonical CLI spelling back, e.g. `psnr>=30,acc>=0.9`.
+    pub fn render(&self) -> String {
+        let mut terms = Vec::new();
+        if let Some(p) = self.psnr {
+            terms.push(format!("psnr>={p}"));
+        }
+        if let Some(a) = self.acc {
+            terms.push(format!("acc>={a}"));
+        }
+        terms.join(",")
+    }
+}
+
+impl fmt::Display for QualityFloor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// Controller knobs. The defaults suit the in-process serving demo
+/// (millisecond batches); benches and tests tighten them.
+#[derive(Clone, Copy, Debug)]
+pub struct AutopilotConfig {
+    /// How often the dispatcher calls [`Autopilot::tick`].
+    pub tick: Duration,
+    /// Pressure at or above this descends one tier (when allowed).
+    pub descend_above: f64,
+    /// Pressure at or below this ascends one tier. Must sit below
+    /// `descend_above`; the gap is the hysteresis deadband.
+    pub ascend_below: f64,
+    /// Minimum time between two transitions of the same app.
+    pub refractory: Duration,
+    /// Quality floor no served tier may fall below.
+    pub floor: QualityFloor,
+}
+
+impl Default for AutopilotConfig {
+    fn default() -> Self {
+        AutopilotConfig {
+            tick: Duration::from_millis(50),
+            descend_above: 0.6,
+            ascend_below: 0.2,
+            refractory: Duration::from_millis(300),
+            floor: QualityFloor::none(),
+        }
+    }
+}
+
+/// Per-app controller state.
+struct TierState {
+    current: Quality,
+    /// Best (highest) registered tier — where recovery stops.
+    best: Quality,
+    last_transition: Option<Instant>,
+    transitions: u64,
+    /// Cumulative queue-wait / execute sums (seconds) at the last tick,
+    /// so each tick steers on the *window since the previous tick*, not
+    /// the whole history.
+    prev_queue_sum: f64,
+    prev_exec_sum: f64,
+}
+
+/// The closed-loop precision controller. One instance is shared (via
+/// `Arc`) between the admission gate (which consults
+/// [`Autopilot::clamp`] per request) and the dispatcher thread (which
+/// drives [`Autopilot::tick`]).
+pub struct Autopilot {
+    cfg: AutopilotConfig,
+    /// Tiers the controller may serve, per key, with their measured
+    /// quality (when the backend measured one at registration).
+    registered: Vec<ModelKey>,
+    profiles: BTreeMap<ModelKey, QualityProfile>,
+    /// The admission gate's in-flight cap — the depth-pressure
+    /// denominator.
+    cap: u64,
+    state: Mutex<BTreeMap<App, TierState>>,
+}
+
+impl Autopilot {
+    /// Build a controller over the `registered` catalog with its
+    /// measured `profiles`. `cap` is the serving in-flight cap (the
+    /// coordinator's `queue_capacity`). Every app present in
+    /// `registered` starts at its best registered tier.
+    pub fn new(
+        cfg: AutopilotConfig,
+        registered: Vec<ModelKey>,
+        profiles: BTreeMap<ModelKey, QualityProfile>,
+        cap: usize,
+    ) -> Autopilot {
+        let mut state = BTreeMap::new();
+        for app in App::ALL {
+            let best = Quality::ALL
+                .into_iter()
+                .find(|&q| registered.contains(&ModelKey::route(app, q)));
+            if let Some(best) = best {
+                state.insert(
+                    app,
+                    TierState {
+                        current: best,
+                        best,
+                        last_transition: None,
+                        transitions: 0,
+                        prev_queue_sum: 0.0,
+                        prev_exec_sum: 0.0,
+                    },
+                );
+            }
+        }
+        Autopilot {
+            cfg,
+            registered,
+            profiles,
+            cap: cap.max(1) as u64,
+            state: Mutex::new(state),
+        }
+    }
+
+    /// The controller knobs this instance runs with.
+    pub fn config(&self) -> &AutopilotConfig {
+        &self.cfg
+    }
+
+    /// The measured quality of a registered key, if known.
+    pub fn profile(&self, key: ModelKey) -> Option<QualityProfile> {
+        self.profiles.get(&key).copied()
+    }
+
+    /// The tier `app` is currently steered to (its best registered tier
+    /// for an app the controller does not manage).
+    pub fn current(&self, app: App) -> Quality {
+        self.state
+            .lock()
+            .unwrap()
+            .get(&app)
+            .map(|s| s.current)
+            .unwrap_or(Quality::Precise)
+    }
+
+    /// Tier transitions taken so far, across all apps.
+    pub fn transitions(&self) -> u64 {
+        self.state.lock().unwrap().values().map(|s| s.transitions).sum()
+    }
+
+    /// The effective tier for a request: the *lower* of what was asked
+    /// and where the controller currently sits. Steering never upgrades
+    /// a request — a client asking for economy gets economy even when
+    /// the controller idles at precise.
+    pub fn clamp(&self, app: App, requested: Quality) -> Quality {
+        // Quality orders best-first (Precise < Balanced < Economy), so
+        // the lower tier is the Ord-larger one
+        requested.max(self.current(app))
+    }
+
+    /// One controller step for `app` with an already-computed pressure
+    /// in [0, 1], at time `now`. Split out from [`Autopilot::tick`] so
+    /// hysteresis/refractory dynamics are unit-testable with an
+    /// injected clock. Returns the transition taken, if any.
+    pub fn observe(&self, app: App, pressure: f64, now: Instant) -> Option<(Quality, Quality)> {
+        let mut state = self.state.lock().unwrap();
+        let st = state.get_mut(&app)?;
+        // refractory: freeze after any transition, whatever the signal
+        if let Some(t) = st.last_transition {
+            if now.saturating_duration_since(t) < self.cfg.refractory {
+                return None;
+            }
+        }
+        let next = if pressure >= self.cfg.descend_above {
+            // descend one tier — but only onto a registered tier whose
+            // measured quality clears the floor
+            st.current.lower().filter(|&q| {
+                let key = ModelKey::route(app, q);
+                self.registered.contains(&key)
+                    && self.cfg.floor.allows(self.profiles.get(&key))
+            })
+        } else if pressure <= self.cfg.ascend_below {
+            // recover one tier toward the best registered one
+            st.current.higher().filter(|&q| {
+                q >= st.best && self.registered.contains(&ModelKey::route(app, q))
+            })
+        } else {
+            // hysteresis deadband: hold
+            None
+        }?;
+        let from = st.current;
+        st.current = next;
+        st.last_transition = Some(now);
+        st.transitions += 1;
+        Some((from, next))
+    }
+
+    /// One closed-loop tick: derive each managed app's pressure from
+    /// the live [`Metrics`] and run [`Autopilot::observe`] on it.
+    ///
+    /// Pressure is the max of two signals in [0, 1]:
+    ///
+    /// - **queue-wait share** — of the batch latency this app accrued
+    ///   since the last tick, the fraction spent waiting for dispatch
+    ///   rather than executing (the PR 8 split). A saturated system
+    ///   queues; a healthy one executes.
+    /// - **in-flight fraction** — permits held over the admission cap.
+    ///   Catches the saturated-but-not-completing case (a full gate
+    ///   with no batch stream to measure).
+    ///
+    /// Returns every transition taken this tick.
+    pub fn tick(&self, metrics: &Metrics) -> Vec<(App, Quality, Quality)> {
+        let now = Instant::now();
+        let depth = metrics.in_flight() as f64 / self.cap as f64;
+        let sums = metrics.batch_summaries();
+        // cumulative queue/execute seconds per app (sum = mean · n)
+        let mut totals: BTreeMap<App, (f64, f64)> = BTreeMap::new();
+        for ((_, key, _), b) in &sums {
+            let t = totals.entry(key.app).or_insert((0.0, 0.0));
+            t.0 += b.queue_wait.mean * b.queue_wait.n as f64;
+            t.1 += b.execute.mean * b.execute.n as f64;
+        }
+        let apps: Vec<App> = self.state.lock().unwrap().keys().copied().collect();
+        let mut out = Vec::new();
+        for app in apps {
+            let (qsum, esum) = totals.get(&app).copied().unwrap_or((0.0, 0.0));
+            let (dq, de) = {
+                let mut state = self.state.lock().unwrap();
+                let st = state.get_mut(&app).unwrap();
+                let dq = (qsum - st.prev_queue_sum).max(0.0);
+                let de = (esum - st.prev_exec_sum).max(0.0);
+                st.prev_queue_sum = qsum;
+                st.prev_exec_sum = esum;
+                (dq, de)
+            };
+            let wait_share = if dq + de > 0.0 { dq / (dq + de) } else { 0.0 };
+            let pressure = wait_share.max(depth).clamp(0.0, 1.0);
+            if let Some((from, to)) = self.observe(app, pressure, now) {
+                out.push((app, from, to));
+            }
+        }
+        out
+    }
+
+    /// One status line per managed app, for reports:
+    /// `autopilot: gdf=economy(psnr=31.0) frnn=precise(acc=0.950) …`
+    pub fn report(&self) -> String {
+        let state = self.state.lock().unwrap();
+        let mut parts = Vec::new();
+        for (app, st) in state.iter() {
+            let key = ModelKey::route(*app, st.current);
+            let quality = self
+                .profiles
+                .get(&key)
+                .map(|p| format!("({p})"))
+                .unwrap_or_default();
+            parts.push(format!("{app}={}{quality}[{} moves]", st.current, st.transitions));
+        }
+        format!("autopilot: {}", parts.join(" "))
+    }
+}
+
+impl fmt::Debug for Autopilot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Autopilot")
+            .field("cfg", &self.cfg)
+            .field("registered", &self.registered.len())
+            .field("cap", &self.cap)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profiles() -> BTreeMap<ModelKey, QualityProfile> {
+        // mirror the MockExecutor's deterministic stand-in numbers
+        let mut out = BTreeMap::new();
+        for key in ModelKey::catalog() {
+            let (metric, value) = match (key.app, key.tier()) {
+                (App::Frnn, Quality::Precise) => (QualityMetric::Accuracy, 0.95),
+                (App::Frnn, Quality::Balanced) => (QualityMetric::Accuracy, 0.92),
+                (App::Frnn, Quality::Economy) => (QualityMetric::Accuracy, 0.85),
+                (_, Quality::Precise) => (QualityMetric::Psnr, crate::catalog::PSNR_CAP),
+                (_, Quality::Balanced) => (QualityMetric::Psnr, 36.0),
+                (_, Quality::Economy) => (QualityMetric::Psnr, 31.0),
+            };
+            out.insert(key, QualityProfile { metric, value, reference: Quality::Precise });
+        }
+        out
+    }
+
+    fn pilot(cfg: AutopilotConfig) -> Autopilot {
+        Autopilot::new(cfg, ModelKey::catalog(), profiles(), 16)
+    }
+
+    #[test]
+    fn quality_floor_parses_and_gates() {
+        let f = QualityFloor::parse("psnr>=30,acc>=0.9").unwrap();
+        assert_eq!(f.psnr, Some(30.0));
+        assert_eq!(f.acc, Some(0.9));
+        assert_eq!(f.render(), "psnr>=30,acc>=0.9");
+        assert_eq!(QualityFloor::parse(&f.render()).unwrap(), f);
+        assert!(QualityFloor::parse("").unwrap().is_empty());
+        assert!(QualityFloor::parse("psnr>30").is_err(), "only >= is a floor");
+        assert!(QualityFloor::parse("vibes>=1").is_err());
+        assert!(QualityFloor::parse("psnr>=NaN").is_err());
+
+        let good = QualityProfile {
+            metric: QualityMetric::Psnr,
+            value: 31.0,
+            reference: Quality::Precise,
+        };
+        let bad = QualityProfile { value: 28.0, ..good };
+        assert!(f.allows(Some(&good)));
+        assert!(!f.allows(Some(&bad)));
+        assert!(!f.allows(None), "a constrained floor fails closed on unmeasured tiers");
+        assert!(QualityFloor::none().allows(None));
+        // a floor on one metric leaves the other unconstrained
+        let acc_only = QualityFloor::parse("acc>=0.9").unwrap();
+        assert!(acc_only.allows(Some(&bad)), "psnr is unconstrained here");
+    }
+
+    #[test]
+    fn no_transition_inside_the_deadband() {
+        let p = pilot(AutopilotConfig::default());
+        let t0 = Instant::now();
+        // anywhere strictly between the bands: hold, forever
+        for (i, pr) in [0.3, 0.5, 0.59, 0.21].into_iter().enumerate() {
+            let now = t0 + Duration::from_secs(i as u64 + 1);
+            assert_eq!(p.observe(App::Gdf, pr, now), None, "pressure {pr} is deadband");
+            assert_eq!(p.current(App::Gdf), Quality::Precise);
+        }
+        assert_eq!(p.transitions(), 0);
+    }
+
+    #[test]
+    fn sustained_pressure_descends_one_tier_per_refractory_window() {
+        let cfg = AutopilotConfig::default();
+        let p = pilot(cfg);
+        let t0 = Instant::now();
+        assert_eq!(
+            p.observe(App::Gdf, 0.9, t0),
+            Some((Quality::Precise, Quality::Balanced))
+        );
+        // the same saturating signal inside the refractory window: no flap
+        let inside = t0 + cfg.refractory / 2;
+        assert_eq!(p.observe(App::Gdf, 1.0, inside), None);
+        assert_eq!(p.current(App::Gdf), Quality::Balanced);
+        // once the window passes, the next step descends again
+        let after = t0 + cfg.refractory;
+        assert_eq!(
+            p.observe(App::Gdf, 0.9, after),
+            Some((Quality::Balanced, Quality::Economy))
+        );
+        // economy is the floor of the tier ladder: nowhere lower
+        let later = after + cfg.refractory;
+        assert_eq!(p.observe(App::Gdf, 1.0, later), None);
+        assert_eq!(p.current(App::Gdf), Quality::Economy);
+        assert_eq!(p.transitions(), 2);
+    }
+
+    #[test]
+    fn low_pressure_recovers_to_precise_and_no_further() {
+        let cfg = AutopilotConfig::default();
+        let p = pilot(cfg);
+        let t0 = Instant::now();
+        p.observe(App::Blend, 0.9, t0).unwrap();
+        p.observe(App::Blend, 0.9, t0 + cfg.refractory).unwrap();
+        assert_eq!(p.current(App::Blend), Quality::Economy);
+        let up1 = t0 + cfg.refractory * 2;
+        assert_eq!(
+            p.observe(App::Blend, 0.0, up1),
+            Some((Quality::Economy, Quality::Balanced))
+        );
+        let up2 = up1 + cfg.refractory;
+        assert_eq!(
+            p.observe(App::Blend, 0.1, up2),
+            Some((Quality::Balanced, Quality::Precise))
+        );
+        // fully recovered: zero pressure cannot ascend past the best tier
+        assert_eq!(p.observe(App::Blend, 0.0, up2 + cfg.refractory), None);
+        assert_eq!(p.current(App::Blend), Quality::Precise);
+    }
+
+    #[test]
+    fn flapping_pressure_is_rate_limited_by_the_refractory_period() {
+        let cfg = AutopilotConfig::default();
+        let p = pilot(cfg);
+        let t0 = Instant::now();
+        // a worst-case signal alternating across both bands every
+        // observation: at most one transition per refractory window
+        let mut transitions = 0;
+        for i in 0u32..20 {
+            let pressure = if i % 2 == 0 { 1.0 } else { 0.0 };
+            let now = t0 + cfg.refractory / 4 * i;
+            if p.observe(App::Frnn, pressure, now).is_some() {
+                transitions += 1;
+            }
+        }
+        // 20 observations spanning ~5 refractory windows → at most 6
+        // transitions ever (one per window, however the signal flaps)
+        assert!(transitions <= 6, "flapped {transitions} times");
+    }
+
+    #[test]
+    fn quality_floor_blocks_descent_below_it() {
+        // economy measures psnr=31 (mock numbers): a 32dB floor allows
+        // balanced (36dB) but pins the controller above economy
+        let cfg = AutopilotConfig {
+            floor: QualityFloor::parse("psnr>=32").unwrap(),
+            ..AutopilotConfig::default()
+        };
+        let p = pilot(cfg);
+        let t0 = Instant::now();
+        assert_eq!(
+            p.observe(App::Gdf, 1.0, t0),
+            Some((Quality::Precise, Quality::Balanced))
+        );
+        // sustained saturation cannot push below the floor
+        for i in 1u32..5 {
+            let now = t0 + cfg.refractory * i;
+            assert_eq!(p.observe(App::Gdf, 1.0, now), None);
+        }
+        assert_eq!(p.current(App::Gdf), Quality::Balanced);
+        // frnn has its own metric: an accuracy floor of 0.9 stops at
+        // balanced (0.92) and never serves economy (0.85)
+        let cfg = AutopilotConfig {
+            floor: QualityFloor::parse("acc>=0.9").unwrap(),
+            ..AutopilotConfig::default()
+        };
+        let p = pilot(cfg);
+        p.observe(App::Frnn, 1.0, t0).unwrap();
+        assert_eq!(p.observe(App::Frnn, 1.0, t0 + cfg.refractory), None);
+        assert_eq!(p.current(App::Frnn), Quality::Balanced);
+    }
+
+    #[test]
+    fn descent_only_targets_registered_tiers() {
+        // only gdf/conv + gdf/ds32 registered: balanced is not a legal
+        // stop, but economy (registered, two steps down) is unreachable
+        // because descent moves one *registered* tier at a time — the
+        // controller holds at precise rather than route off-catalog
+        let keys = vec![
+            ModelKey::parse("gdf/conv").unwrap(),
+            ModelKey::parse("gdf/ds32").unwrap(),
+        ];
+        let p = Autopilot::new(AutopilotConfig::default(), keys, profiles(), 8);
+        assert_eq!(p.observe(App::Gdf, 1.0, Instant::now()), None);
+        assert_eq!(p.current(App::Gdf), Quality::Precise);
+    }
+
+    #[test]
+    fn clamp_never_upgrades_a_request() {
+        let cfg = AutopilotConfig::default();
+        let p = pilot(cfg);
+        // controller idling at precise: requests pass through untouched
+        assert_eq!(p.clamp(App::Gdf, Quality::Precise), Quality::Precise);
+        assert_eq!(p.clamp(App::Gdf, Quality::Economy), Quality::Economy);
+        // steer gdf down to balanced
+        let t0 = Instant::now();
+        p.observe(App::Gdf, 1.0, t0).unwrap();
+        assert_eq!(p.clamp(App::Gdf, Quality::Precise), Quality::Balanced);
+        assert_eq!(p.clamp(App::Gdf, Quality::Balanced), Quality::Balanced);
+        // a request already below the controller stays where it asked
+        assert_eq!(p.clamp(App::Gdf, Quality::Economy), Quality::Economy);
+        // other apps are independent
+        assert_eq!(p.clamp(App::Frnn, Quality::Precise), Quality::Precise);
+    }
+
+    #[test]
+    fn tick_derives_pressure_from_the_latency_split() {
+        use std::time::Duration as D;
+        let cfg = AutopilotConfig { refractory: Duration::ZERO, ..AutopilotConfig::default() };
+        let p = pilot(cfg);
+        let m = Metrics::new();
+        let key = ModelKey::parse("gdf/conv").unwrap();
+        // a queue-dominated window: waits dwarf executes → descend
+        m.record_batch(0, key, Quality::Precise, 4, D::from_millis(90), D::from_millis(10), false);
+        let moved = p.tick(&m);
+        assert_eq!(moved, vec![(App::Gdf, Quality::Precise, Quality::Balanced)]);
+        // no new batches since the last tick and an empty gate → the
+        // *windowed* signal is calm, so the controller recovers — the
+        // historical backlog must not pin it down forever
+        let moved = p.tick(&m);
+        assert_eq!(moved, vec![(App::Gdf, Quality::Balanced, Quality::Precise)]);
+        // an execute-dominated window is healthy: no descent
+        m.record_batch(0, key, Quality::Precise, 4, D::from_millis(1), D::from_millis(99), false);
+        assert_eq!(p.tick(&m), vec![]);
+        assert_eq!(p.current(App::Gdf), Quality::Precise);
+    }
+
+    #[test]
+    fn tick_sees_saturation_through_the_in_flight_fraction() {
+        let cfg = AutopilotConfig { refractory: Duration::ZERO, ..AutopilotConfig::default() };
+        let p = Autopilot::new(cfg, ModelKey::catalog(), profiles(), 4);
+        let m = Metrics::new();
+        // a full gate with no batch stream at all (nothing completing):
+        // the depth signal alone must trigger descent
+        for _ in 0..4 {
+            m.record_submitted();
+        }
+        let moved = p.tick(&m);
+        assert!(
+            moved.iter().any(|&(app, from, to)| {
+                app == App::Gdf && from == Quality::Precise && to == Quality::Balanced
+            }),
+            "{moved:?}"
+        );
+    }
+
+    #[test]
+    fn report_names_every_managed_app() {
+        let p = pilot(AutopilotConfig::default());
+        let rep = p.report();
+        for app in App::ALL {
+            assert!(rep.contains(&format!("{app}=precise")), "{rep}");
+        }
+        assert!(rep.contains("psnr=99.0"), "{rep}");
+        assert!(rep.contains("acc=0.950"), "{rep}");
+    }
+}

@@ -34,7 +34,7 @@ use super::admission::{Permit, Rejection};
 use super::metrics::{ExpiredAt, Metrics};
 use super::placement::Placement;
 use super::server::Response;
-use crate::catalog::{self, App, ModelKey, Tensor};
+use crate::catalog::{self, App, ModelKey, Quality, QualityMetric, QualityProfile, Tensor, PSNR_CAP};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -63,6 +63,15 @@ pub trait Executor {
     /// exactly what it registered.
     fn resident_keys(&self) -> Vec<ModelKey> {
         self.keys()
+    }
+
+    /// The measured quality of `key`'s tier (PSNR vs the precise tier
+    /// for the image apps, absolute top-1 accuracy for FRNN), when the
+    /// backend measured one at registration. Rides on every response so
+    /// clients see the quality they were actually served at, and gates
+    /// the autopilot's tier descent against the quality floor.
+    fn quality(&self, _key: ModelKey) -> Option<QualityProfile> {
+        None
     }
 }
 
@@ -250,6 +259,24 @@ impl Executor for MockExecutor {
 
     fn keys(&self) -> Vec<ModelKey> {
         self.keys.clone()
+    }
+
+    /// Deterministic stand-in quality numbers, decreasing per tier, so
+    /// coordinator and wire tests can assert measured-quality plumbing
+    /// without running the apps' eval harness.
+    fn quality(&self, key: ModelKey) -> Option<QualityProfile> {
+        if !self.keys.contains(&key) {
+            return None;
+        }
+        let (metric, value) = match (key.app, key.tier()) {
+            (App::Frnn, Quality::Precise) => (QualityMetric::Accuracy, 0.95),
+            (App::Frnn, Quality::Balanced) => (QualityMetric::Accuracy, 0.92),
+            (App::Frnn, Quality::Economy) => (QualityMetric::Accuracy, 0.85),
+            (_, Quality::Precise) => (QualityMetric::Psnr, PSNR_CAP),
+            (_, Quality::Balanced) => (QualityMetric::Psnr, 36.0),
+            (_, Quality::Economy) => (QualityMetric::Psnr, 31.0),
+        };
+        Some(QualityProfile { metric, value, reference: Quality::Precise })
     }
 }
 
@@ -683,6 +710,12 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
         return;
     }
     let size = items.len();
+    // the tier this batch is *served at* (the routed key's tier — after
+    // any degrade) and its measured quality: both ride on every reply,
+    // and batch stats land under this tier so per-tier latency streams
+    // stay attributable
+    let tier = key.tier();
+    let quality = executor.quality(key);
     let mut inputs = Vec::with_capacity(size);
     let mut waiters = Vec::with_capacity(size);
     for it in items {
@@ -706,17 +739,18 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
         .unwrap_or_else(|_| Err(anyhow!("executor panicked on a {size}-request batch")));
     match batch_result {
         Ok(outs) if outs.len() == size => {
-            metrics.record_batch(shard, key, size, queue_wait, t0.elapsed(), false);
+            metrics.record_batch(shard, key, tier, size, queue_wait, t0.elapsed(), false);
             for ((reply, enqueued, degraded, _permit), outputs) in waiters.into_iter().zip(outs) {
                 metrics.record_latency(key, enqueued.elapsed());
-                let _ = reply.send(Ok(Response { outputs, route: key, degraded }));
+                let _ =
+                    reply.send(Ok(Response { outputs, route: key, tier, quality, degraded }));
             }
         }
         Ok(outs) => {
             // executor contract violation — fail every request loudly,
             // but still record the batch (degraded) so the stream stays
             // complete in the per-shard stats
-            metrics.record_batch(shard, key, size, queue_wait, t0.elapsed(), true);
+            metrics.record_batch(shard, key, tier, size, queue_wait, t0.elapsed(), true);
             let msg = format!(
                 "{key}: executor answered {} of {size} batch requests",
                 outs.len()
@@ -731,7 +765,8 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
                 match catch_unwind(AssertUnwindSafe(|| executor.exec(key, &ins))) {
                     Ok(Ok(outputs)) => {
                         metrics.record_latency(key, enqueued.elapsed());
-                        let _ = reply.send(Ok(Response { outputs, route: key, degraded }));
+                        let _ = reply
+                            .send(Ok(Response { outputs, route: key, tier, quality, degraded }));
                     }
                     Ok(Err(e)) => {
                         metrics.record_error();
@@ -748,7 +783,7 @@ fn run_batch<E: Executor>(shard: usize, executor: &E, metrics: &Metrics, job: Ba
             // so a shard that always falls back to the scalar path
             // shows its real batch stream instead of zero batches and
             // inflated lane stats
-            metrics.record_batch(shard, key, size, queue_wait, t0.elapsed(), true);
+            metrics.record_batch(shard, key, tier, size, queue_wait, t0.elapsed(), true);
         }
     }
 }
@@ -960,7 +995,7 @@ mod tests {
         assert_eq!(metrics.errors(), 1);
         // the retried batch is still a batch: it must appear in the
         // stream (size 3, degraded), not vanish from the lane stats
-        let b = &metrics.batch_summaries()[&(0, mk("gdf/conv"))];
+        let b = &metrics.batch_summaries()[&(0, mk("gdf/conv"), Quality::Precise)];
         assert_eq!(b.batches, 1);
         assert_eq!(b.degraded, 1);
         assert_eq!(b.mean_size, 3.0);
@@ -1126,7 +1161,7 @@ mod tests {
         // every batch landed on the sticky shard, none spilled
         let b = metrics.batch_summaries();
         assert_eq!(b.len(), 1);
-        assert_eq!(b[&(2, mk("gdf/conv"))].batches, 6);
+        assert_eq!(b[&(2, mk("gdf/conv"), Quality::Precise)].batches, 6);
         assert_eq!(metrics.spills(), 0);
         assert_eq!(metrics.placements()[&mk("gdf/conv")], vec![2]);
         // per-shard residency reflects the subset build
@@ -1172,8 +1207,9 @@ mod tests {
         }
         drop(pool);
         let sums = metrics.batch_summaries();
-        assert_eq!(sums[&(0, mk("gdf/conv"))].batches, 2, "sticky shard ran A and C");
-        assert_eq!(sums[&(1, mk("gdf/conv"))].batches, 1, "spill shard ran B");
+        let q = Quality::Precise;
+        assert_eq!(sums[&(0, mk("gdf/conv"), q)].batches, 2, "sticky shard ran A and C");
+        assert_eq!(sums[&(1, mk("gdf/conv"), q)].batches, 1, "spill shard ran B");
     }
 
     #[test]
@@ -1196,7 +1232,7 @@ mod tests {
         let out = pool.exec(mk("gdf/conv"), vec![Tensor::vector(vec![8])]).unwrap();
         assert_eq!(out[0].data, vec![4]);
         assert_eq!(metrics.spills(), 1);
-        assert_eq!(metrics.batch_summaries()[&(0, mk("gdf/conv"))].batches, 1);
+        assert_eq!(metrics.batch_summaries()[&(0, mk("gdf/conv"), Quality::Precise)].batches, 1);
         // keys()/resident_keys() skip the dead shard instead of hanging
         assert_eq!(pool.keys().unwrap(), ModelKey::catalog());
         assert!(pool.resident_keys().unwrap()[1].is_empty());

@@ -6,7 +6,7 @@
 //! across threads behind a mutex (request rates here are far below
 //! contention territory; the hot path is model execution).
 
-use crate::catalog::{ModelKey, LANES};
+use crate::catalog::{ModelKey, Quality, LANES};
 use crate::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -82,8 +82,12 @@ struct Inner {
     completed: u64,
     rejected: u64,
     errors: u64,
-    /// Per (shard, model): batch execution records.
-    batches: BTreeMap<(usize, ModelKey), BatchStats>,
+    /// Per (shard, model, served tier): batch execution records. The
+    /// tier is the quality the batch was *served at* (the routed key's
+    /// tier), not the one requested — degraded work must not pollute
+    /// the original tier's latency stream, because the quality
+    /// autopilot steers on exactly these per-tier signals.
+    batches: BTreeMap<(usize, ModelKey, Quality), BatchStats>,
     /// Per shard: peak queued-batch depth observed at submit time.
     peak_depth: BTreeMap<usize, usize>,
     /// Sticky placement: each placed key's replica shard set.
@@ -266,24 +270,28 @@ impl Metrics {
         Summary::of(self.inner.lock().unwrap().admission_waits.clone())
     }
 
-    /// One batch of `size` requests executed on `shard` for `key`.
-    /// `queue_wait` is how long the batch's oldest request sat queued
-    /// before dispatch; `execute` is the dispatch → reply wall-clock
-    /// time; `degraded` marks a batch that fell back to the per-request
-    /// scalar retry. Keeping the two halves separate tells a saturated
-    /// datapath (execute grows) apart from a backed-up batcher
-    /// (queue_wait grows) at a glance.
+    /// One batch of `size` requests executed on `shard` for `key`,
+    /// served at `tier` (the routed key's tier — degraded work lands
+    /// under the tier it actually ran at, keeping each tier's latency
+    /// stream attributable). `queue_wait` is how long the batch's
+    /// oldest request sat queued before dispatch; `execute` is the
+    /// dispatch → reply wall-clock time; `degraded` marks a batch that
+    /// fell back to the per-request scalar retry. Keeping the two
+    /// halves separate tells a saturated datapath (execute grows)
+    /// apart from a backed-up batcher (queue_wait grows) at a glance.
+    #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &self,
         shard: usize,
         key: ModelKey,
+        tier: Quality,
         size: usize,
         queue_wait: Duration,
         execute: Duration,
         degraded: bool,
     ) {
         let mut m = self.inner.lock().unwrap();
-        let s = m.batches.entry((shard, key)).or_default();
+        let s = m.batches.entry((shard, key, tier)).or_default();
         s.sizes.push(size);
         s.queue_waits.push(queue_wait.as_secs_f64());
         s.executes.push(execute.as_secs_f64());
@@ -401,8 +409,8 @@ impl Metrics {
             .collect()
     }
 
-    /// Per-(shard, model) batch summaries.
-    pub fn batch_summaries(&self) -> BTreeMap<(usize, ModelKey), BatchSummary> {
+    /// Per-(shard, model, served tier) batch summaries.
+    pub fn batch_summaries(&self) -> BTreeMap<(usize, ModelKey, Quality), BatchSummary> {
         let m = self.inner.lock().unwrap();
         m.batches
             .iter()
@@ -569,12 +577,12 @@ impl Metrics {
             ));
         }
         let depths = self.peak_queue_depths();
-        for ((shard, key), b) in self.batch_summaries() {
+        for ((shard, key, tier), b) in self.batch_summaries() {
             s.push_str(&format!(
-                "  shard{shard} {:<14} batches={:<5} mean_batch={:<5.1} \
+                "  shard{shard} {:<23} batches={:<5} mean_batch={:<5.1} \
                  occ={:.0}% degraded={} queue_p50={:.3}ms exec_p50={:.3}ms \
                  peak_depth={}\n",
-                key.to_string(),
+                format!("{key}@{tier}"),
                 b.batches,
                 b.mean_size,
                 b.lane_occupancy * 100.0,
@@ -604,6 +612,7 @@ mod tests {
         m.record_batch(
             0,
             mk("gdf/conv"),
+            Quality::Precise,
             8,
             Duration::from_millis(1),
             Duration::from_millis(3),
@@ -617,11 +626,11 @@ mod tests {
         let sums = m.latency_summaries();
         assert!((sums[&mk("gdf/conv")].mean - 0.003).abs() < 1e-9);
         // queue wait and execute are recorded separately, not summed
-        let b = &m.batch_summaries()[&(0, mk("gdf/conv"))];
+        let b = &m.batch_summaries()[&(0, mk("gdf/conv"), Quality::Precise)];
         assert!((b.queue_wait.p50 - 0.001).abs() < 1e-9);
         assert!((b.execute.p50 - 0.003).abs() < 1e-9);
         let rep = m.report();
-        assert!(rep.contains("gdf/conv"));
+        assert!(rep.contains("gdf/conv@precise"), "{rep}");
         assert!(rep.contains("queue_p50=1.000ms"), "{rep}");
         assert!(rep.contains("exec_p50=3.000ms"), "{rep}");
     }
@@ -643,6 +652,7 @@ mod tests {
             m.record_batch(
                 0,
                 mk("gdf/ds16"),
+                Quality::Balanced,
                 size,
                 Duration::ZERO,
                 Duration::from_millis(1),
@@ -652,7 +662,7 @@ mod tests {
         let want =
             [1usize, 256, 257, 512, 513].iter().map(|&s| occupancy(s)).sum::<f64>() / 5.0;
         assert!((m.lane_occupancy() - want).abs() < 1e-12);
-        let b = &m.batch_summaries()[&(0, mk("gdf/ds16"))];
+        let b = &m.batch_summaries()[&(0, mk("gdf/ds16"), Quality::Balanced)];
         assert!((b.lane_occupancy - want).abs() < 1e-12);
         assert!(b.lane_occupancy < 1.0, "257/513-sized batches are not 100% occupied");
     }
@@ -660,9 +670,10 @@ mod tests {
     #[test]
     fn degraded_batches_are_counted() {
         let m = Metrics::new();
-        m.record_batch(0, mk("gdf/ds16"), 3, Duration::ZERO, Duration::from_millis(1), true);
-        m.record_batch(0, mk("gdf/ds16"), 4, Duration::ZERO, Duration::from_millis(1), false);
-        let b = &m.batch_summaries()[&(0, mk("gdf/ds16"))];
+        let t = Quality::Balanced;
+        m.record_batch(0, mk("gdf/ds16"), t, 3, Duration::ZERO, Duration::from_millis(1), true);
+        m.record_batch(0, mk("gdf/ds16"), t, 4, Duration::ZERO, Duration::from_millis(1), false);
+        let b = &m.batch_summaries()[&(0, mk("gdf/ds16"), t)];
         assert_eq!(b.batches, 2);
         assert_eq!(b.degraded, 1);
         assert!(m.report().contains("degraded=1"), "{}", m.report());
@@ -748,32 +759,75 @@ mod tests {
     #[test]
     fn per_shard_batch_stats_partition() {
         let m = Metrics::new();
-        m.record_batch(0, mk("gdf/ds16"), 4, Duration::ZERO, Duration::from_millis(1), false);
+        let bal = Quality::Balanced;
+        m.record_batch(0, mk("gdf/ds16"), bal, 4, Duration::ZERO, Duration::from_millis(1), false);
         m.record_batch(
             1,
             mk("gdf/ds16"),
+            bal,
             8,
             Duration::from_millis(5),
             Duration::from_millis(2),
             false,
         );
-        m.record_batch(1, mk("frnn/ds32"), 2, Duration::ZERO, Duration::from_millis(1), false);
+        m.record_batch(
+            1,
+            mk("frnn/ds32"),
+            Quality::Economy,
+            2,
+            Duration::ZERO,
+            Duration::from_millis(1),
+            false,
+        );
         m.record_queue_depth(1, 3);
         m.record_queue_depth(1, 1);
         let b = m.batch_summaries();
         assert_eq!(b.len(), 3);
-        assert_eq!(b[&(0, mk("gdf/ds16"))].batches, 1);
-        assert_eq!(b[&(1, mk("gdf/ds16"))].mean_size, 8.0);
-        assert!((b[&(1, mk("gdf/ds16"))].lane_occupancy - 8.0 / 256.0).abs() < 1e-12);
+        assert_eq!(b[&(0, mk("gdf/ds16"), bal)].batches, 1);
+        assert_eq!(b[&(1, mk("gdf/ds16"), bal)].mean_size, 8.0);
+        assert!((b[&(1, mk("gdf/ds16"), bal)].lane_occupancy - 8.0 / 256.0).abs() < 1e-12);
         // a backed-up queue shows in queue_wait without inflating execute
-        assert!((b[&(1, mk("gdf/ds16"))].queue_wait.p50 - 0.005).abs() < 1e-9);
-        assert!((b[&(1, mk("gdf/ds16"))].execute.p50 - 0.002).abs() < 1e-9);
+        assert!((b[&(1, mk("gdf/ds16"), bal)].queue_wait.p50 - 0.005).abs() < 1e-9);
+        assert!((b[&(1, mk("gdf/ds16"), bal)].execute.p50 - 0.002).abs() < 1e-9);
         assert_eq!(m.peak_queue_depths()[&1], 3);
         // mean over all batches: (4 + 8 + 2) / 3
         assert!((m.mean_batch_size() - 14.0 / 3.0).abs() < 1e-12);
         let rep = m.report();
         assert!(rep.contains("shard0"), "{rep}");
         assert!(rep.contains("shard1"), "{rep}");
+    }
+
+    #[test]
+    fn batch_stats_partition_by_served_tier() {
+        // the autopilot's input signal: work served at economy after a
+        // degrade must not pollute the precise tier's latency stream,
+        // even on the same shard
+        let m = Metrics::new();
+        m.record_batch(
+            0,
+            mk("gdf/conv"),
+            Quality::Precise,
+            4,
+            Duration::from_millis(9),
+            Duration::from_millis(6),
+            false,
+        );
+        m.record_batch(
+            0,
+            mk("gdf/ds32"),
+            Quality::Economy,
+            4,
+            Duration::from_millis(1),
+            Duration::from_millis(1),
+            false,
+        );
+        let b = m.batch_summaries();
+        assert_eq!(b.len(), 2);
+        assert!((b[&(0, mk("gdf/conv"), Quality::Precise)].execute.p50 - 0.006).abs() < 1e-9);
+        assert!((b[&(0, mk("gdf/ds32"), Quality::Economy)].execute.p50 - 0.001).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("gdf/conv@precise"), "{rep}");
+        assert!(rep.contains("gdf/ds32@economy"), "{rep}");
     }
 
     #[test]

@@ -61,6 +61,7 @@
 //! lifecycle in detail.
 
 pub mod admission;
+pub mod autopilot;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -69,6 +70,7 @@ pub mod server;
 
 pub use crate::catalog::{App, ModelKey, PpcConfig, Quality, Tensor};
 pub use admission::{AdmitError, Admission, Admitted, OverloadPolicy, Permit, Rejection};
+pub use autopilot::{Autopilot, AutopilotConfig, QualityFloor};
 pub use engine::{BatchItem, BatchJob, EnginePool, Executor, MockExecutor};
 pub use metrics::{BatchSummary, ExpiredAt, Metrics};
 pub use placement::Placement;

@@ -17,11 +17,12 @@
 //! per-request replies themselves.
 
 use super::admission::{AdmitError, Admission, OverloadPolicy, Permit, Rejection};
+use super::autopilot::Autopilot;
 use super::batcher::{Batcher, Pending};
 use super::engine::{BatchItem, BatchJob, EnginePool, Executor};
 use super::metrics::{ExpiredAt, Metrics};
 use super::placement::Placement;
-use crate::catalog::{App, ModelKey, Quality, Tensor, LANES};
+use crate::catalog::{App, ModelKey, Quality, QualityProfile, Tensor, LANES};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -57,8 +58,16 @@ pub struct Response {
     pub outputs: Vec<Tensor>,
     /// The catalog key that served the request.
     pub route: ModelKey,
-    /// True when the overload policy degraded the request below its
-    /// requested quality tier (`route` names the tier that answered).
+    /// The quality tier that actually answered (`route`'s tier) —
+    /// explicit so callers need not re-derive it from the key.
+    pub tier: Quality,
+    /// The serving tier's *measured* quality (PSNR vs the precise tier
+    /// for the image apps, top-1 accuracy for FRNN), when the backend
+    /// measured one at registration.
+    pub quality: Option<QualityProfile>,
+    /// True when the request was answered below its requested quality
+    /// tier — by the overload degrade policy or by autopilot steering
+    /// (`route`/`tier` name what answered).
     pub degraded: bool,
 }
 
@@ -130,6 +139,11 @@ pub struct CoordinatorConfig {
     /// when protecting a mixed catalog, or to give the `degrade`
     /// policy per-tier headroom to degrade into.
     pub fair_share: f64,
+    /// Closed-loop quality controller (`serve --quality auto`): when
+    /// set, the dispatcher drives [`Autopilot::tick`] and the admission
+    /// gate starts every tier walk from the controller's current tier.
+    /// `None` is fixed-quality serving (the pre-autopilot behavior).
+    pub autopilot: Option<Arc<Autopilot>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -142,6 +156,7 @@ impl Default for CoordinatorConfig {
             shards: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4),
             overload: OverloadPolicy::Wait,
             fair_share: 1.0,
+            autopilot: None,
         }
     }
 }
@@ -266,13 +281,17 @@ impl Coordinator {
         // the servable catalog at startup — what a `degrade` admission
         // may fall back to (off-catalog tiers are never degrade targets)
         let registered = pool.keys().unwrap_or_default();
-        let admission = Arc::new(Admission::new(
+        let mut admission = Admission::new(
             config.queue_capacity,
             config.overload,
             config.fair_share,
             registered,
             metrics.clone(),
-        ));
+        );
+        if let Some(ap) = &config.autopilot {
+            admission = admission.with_autopilot(ap.clone());
+        }
+        let admission = Arc::new(admission);
         // the gate clamps its cap to >= 1, so the channel must match or
         // a zero-capacity (rendezvous) channel would let the
         // never-sleeps submit() block on send
@@ -477,6 +496,11 @@ impl Coordinator {
         &self.admission
     }
 
+    /// The quality autopilot, when serving in adaptive mode.
+    pub fn autopilot(&self) -> Option<&Arc<Autopilot>> {
+        self.admission.autopilot()
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -506,12 +530,18 @@ fn dispatch_loop(
 ) {
     let mut batcher: Batcher<Result<Response>> =
         Batcher::new(config.batch_size.min(LANES), config.batch_max_wait);
+    let mut next_tick = config.autopilot.as_ref().map(|ap| Instant::now() + ap.config().tick);
     loop {
-        // wait until next batch deadline (or idle poll)
+        // wait until next batch deadline (or idle poll), bounded by the
+        // next autopilot tick so steering keeps running while idle
         let timeout = batcher
             .next_deadline()
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(20));
+        let timeout = match next_tick {
+            Some(t) => timeout.min(t.saturating_duration_since(Instant::now())),
+            None => timeout,
+        };
         match rx.recv_timeout(timeout) {
             Ok(item) => {
                 handle_item(&config, &mut batcher, &metrics, item);
@@ -528,6 +558,14 @@ fn dispatch_loop(
         }
         expire_due(&mut batcher, &metrics);
         flush_due(&pool, &mut batcher, &metrics);
+        // drive the closed loop: one controller step per tick interval
+        if let (Some(ap), Some(t)) = (&config.autopilot, &mut next_tick) {
+            let now = Instant::now();
+            if now >= *t {
+                ap.tick(&metrics);
+                *t = now + ap.config().tick;
+            }
+        }
     }
     // drain remaining batches before exit
     expire_due(&mut batcher, &metrics);
@@ -951,6 +989,7 @@ mod tests {
             shards: 1,
             overload: OverloadPolicy::Degrade,
             fair_share: 0.5,
+            autopilot: None,
         };
         let c = Coordinator::start(cfg, |_shard| {
             let mut m = MockExecutor::full_catalog();
@@ -993,6 +1032,7 @@ mod tests {
             shards: 1,
             overload: OverloadPolicy::Reject,
             fair_share: 1.0,
+            autopilot: None,
         };
         let c = Coordinator::start(cfg, |_shard| {
             let mut m = MockExecutor::full_catalog();
@@ -1025,6 +1065,7 @@ mod tests {
             shards: 1,
             overload: OverloadPolicy::Reject,
             fair_share: 1.0,
+            autopilot: None,
         };
         let c = Coordinator::start(cfg, |_shard| {
             let mut m = MockExecutor::full_catalog();

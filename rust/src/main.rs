@@ -34,6 +34,7 @@ Pipeline:
         [--placement KEY=S+S,..] [--spill-threshold N]
         [--overload reject|wait|degrade] [--deadline-ms N]
         [--queue-capacity N] [--fair-share F]
+        [--quality auto|fixed] [--quality-floor SPEC]
         [--cache-dir DIR] [--no-cache] [--list-models] [--artifacts DIR]
         [--listen ADDR] [--unit-backend tape|lut|auto]
         [--threads-per-shard N]
@@ -79,6 +80,20 @@ Pipeline:
                                          --deadline-ms when set), degrade retries one
                                          quality tier lower and marks the response
                                          degraded.
+                                         --quality auto attaches the closed-loop
+                                         quality autopilot (native backend only):
+                                         every registered tier's quality is
+                                         measured once (PSNR vs the precise tier
+                                         for gdf/blend, top-1 accuracy for frnn;
+                                         cached next to the netlists) and a
+                                         per-app controller walks serving down
+                                         the registered tiers under sustained
+                                         queue pressure and back up when it
+                                         clears — never below --quality-floor
+                                         (comma-separated metric>=value terms,
+                                         e.g. psnr>=30,acc>=0.9). fixed
+                                         (default) serves the requested tier,
+                                         subject only to --overload degrade.
                                          --listen ADDR binds the TCP front door
                                          instead of running the demo workload:
                                          length-prefixed JSON frames in, typed
@@ -91,7 +106,7 @@ Pipeline:
   loadgen --connect HOST:PORT [--clients N] [--rps F] [--duration-s F]
           [--app gdf|blend|frnn] [--quality Q] [--deadline-ms N]
           [--image-size N] [--classify-row N] [--seed N]
-          [--quick] [--shutdown]
+          [--ramp LOW:HIGH:STEPS] [--quick] [--shutdown]
                                          open-loop load generator against a
                                          `serve --listen` front door: fixed
                                          arrival schedule (honest under
@@ -100,6 +115,13 @@ Pipeline:
                                          Prints p50/p99/p999 + shed/degrade
                                          rates, writes BENCH_loadgen.json and
                                          appends to BENCH_history.jsonl.
+                                         --ramp LOW:HIGH:STEPS sweeps the
+                                         arrival rate instead of holding --rps:
+                                         --duration-s is split into STEPS
+                                         phases with the rate linearly
+                                         interpolated LOW..HIGH, and each
+                                         phase's summary lands phase-tagged
+                                         (ramp_stepN_*) in BENCH_loadgen.json.
                                          --shutdown sends the control frame that
                                          drains the server afterwards; exits
                                          nonzero on any protocol error.
@@ -385,6 +407,20 @@ fn serve_demo(args: &Args) -> Result<()> {
         Some(v) => Some(v.parse()?),
         None => None,
     };
+    // Adaptive quality serving: parse the mode and the floor up front
+    // so a bad spec fails before anything synthesizes.
+    let quality_auto = match args.get_or("quality", "fixed") {
+        "auto" => true,
+        "fixed" => false,
+        other => bail!("unknown --quality {other:?} (auto|fixed)"),
+    };
+    let floor = match args.get("quality-floor") {
+        Some(spec) => ppc::coordinator::QualityFloor::parse(spec)?,
+        None => ppc::coordinator::QualityFloor::none(),
+    };
+    if quality_auto && !native {
+        bail!("--quality auto needs the native backend (tier quality is measured at registration)");
+    }
     // The fair share is a hard reservation, so it defaults off (1.0 =
     // cap only); the gate itself normalizes a full-pool share to 0.5
     // under `degrade`, where lower tiers must keep headroom.
@@ -435,6 +471,35 @@ fn serve_demo(args: &Args) -> Result<()> {
         } else {
             None
         };
+        // --quality auto: measure every registered tier's quality once
+        // (cache-backed, the same numbers the executors publish on
+        // their responses) and hand the controller the registered tier
+        // list, the profiles, and the floor.
+        let autopilot = if quality_auto {
+            use ppc::coordinator::{Autopilot, AutopilotConfig};
+            let dir = cache_dir.as_deref().map(Path::new);
+            let mut profiles = std::collections::BTreeMap::new();
+            for key in &keys {
+                let profile = match key.app {
+                    App::Frnn => ppc::apps::quality::measure_frnn_cached(
+                        dir,
+                        key.config,
+                        quant.as_ref().expect("frnn weights were trained above"),
+                    ),
+                    _ => ppc::apps::quality::measure_image_app_cached(dir, key.app, key.config)?,
+                };
+                profiles.insert(*key, profile);
+            }
+            Some(std::sync::Arc::new(Autopilot::new(
+                AutopilotConfig { floor, ..AutopilotConfig::default() },
+                keys.clone(),
+                profiles,
+                coord_cfg.queue_capacity,
+            )))
+        } else {
+            None
+        };
+        let coord_cfg = CoordinatorConfig { autopilot, ..coord_cfg.clone() };
         // Each shard declares the whole catalog (so spill/failover
         // traffic can lazily register any key from the shared cache)
         // but eagerly builds only its assigned subset.
@@ -465,18 +530,19 @@ fn serve_demo(args: &Args) -> Result<()> {
             println!("building the native catalog…");
             let exec = build(0, &keys)?;
             println!(
-                "{:<16} {:>11} {:>8} {:>9} {:>6} {:>8}  {:<8}",
-                "model", "build(ms)", "cached", "gates", "lanes", "backend", "shards"
+                "{:<16} {:>11} {:>8} {:>9} {:>6} {:>8}  {:<12} {:<8}",
+                "model", "build(ms)", "cached", "gates", "lanes", "backend", "quality", "shards"
             );
             for info in exec.model_infos() {
                 println!(
-                    "{:<16} {:>11.1} {:>8} {:>9} {:>6} {:>8}  {:<8}",
+                    "{:<16} {:>11.1} {:>8} {:>9} {:>6} {:>8}  {:<12} {:<8}",
                     info.key.to_string(),
                     info.build_time.as_secs_f64() * 1e3,
                     if info.cached { "yes" } else { "no" },
                     info.gates,
                     info.lanes,
                     info.backend,
+                    info.quality.map(|q| q.render()).unwrap_or_else(|| "-".into()),
                     placement
                         .shards_of(info.key)
                         .map(Placement::render_shards)
@@ -508,6 +574,15 @@ fn serve_demo(args: &Args) -> Result<()> {
             coord.admission().cap(),
             coord.admission().key_cap()
         );
+        if let Some(ap) = coord.autopilot() {
+            let floor = ap.config().floor;
+            println!(
+                "quality autopilot: tick {:.0}ms, refractory {:.0}ms, floor {}",
+                ap.config().tick.as_secs_f64() * 1e3,
+                ap.config().refractory.as_secs_f64() * 1e3,
+                if floor.is_empty() { "none".to_string() } else { floor.render() }
+            );
+        }
         // per-shard residency after the subset builds
         for (shard, resident) in coord.resident_keys()?.iter().enumerate() {
             println!(
@@ -546,6 +621,9 @@ fn serve_demo(args: &Args) -> Result<()> {
         server.join();
         println!("shutdown frame received; drained");
         println!("{}", coord.metrics().report());
+        if let Some(ap) = coord.autopilot() {
+            println!("{}", ap.report());
+        }
         // dropping the last Coordinator handle drains the engine pool
         return Ok(());
     }
@@ -634,6 +712,9 @@ fn serve_demo(args: &Args) -> Result<()> {
         n as f64 / dt.as_secs_f64()
     );
     println!("{}", coord.metrics().report());
+    if let Some(ap) = coord.autopilot() {
+        println!("{}", ap.report());
+    }
     Ok(())
 }
 
@@ -667,32 +748,62 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         classify_row: args.usize_or("classify-row", 960),
         seed: args.u64_or("seed", 0x10AD),
     };
-    println!(
-        "open-loop loadgen -> {}: {} clients, {:.0} req/s target for {:.1}s ({} @ {})",
-        cfg.addr,
-        cfg.clients,
-        cfg.rps,
-        cfg.duration.as_secs_f64(),
-        cfg.app.name(),
-        cfg.quality.name(),
-    );
-    let report = loadgen::run(&cfg)?;
-    print!("{}", report.render());
-    let json = report.summary_json("open-loop e2e latency (scheduled->response)");
-    bench::write_summary("BENCH_loadgen.json", &json);
-    bench::append_history("BENCH_history.jsonl", &json);
+    // --ramp sweeps the arrival rate over phases; otherwise one
+    // fixed-rate pass. Both paths share the shutdown/exit-code tail.
+    let steps = match args.get("ramp") {
+        Some(spec) => {
+            let (low, high, n) = loadgen::parse_ramp(spec)?;
+            println!(
+                "open-loop ramp -> {}: {} clients, {:.0}->{:.0} req/s over {} steps of \
+                 {:.1}s ({} @ {})",
+                cfg.addr,
+                cfg.clients,
+                low,
+                high,
+                n,
+                cfg.duration.as_secs_f64() / n as f64,
+                cfg.app.name(),
+                cfg.quality.name(),
+            );
+            let steps = loadgen::run_ramp(&cfg, low, high, n)?;
+            for (i, step) in steps.iter().enumerate() {
+                println!("-- ramp step {i} @ {:.0} req/s --", step.rps);
+                print!("{}", step.report.render());
+            }
+            let json = loadgen::ramp_summary_json(&steps);
+            bench::write_summary("BENCH_loadgen.json", &json);
+            bench::append_history("BENCH_history.jsonl", &json);
+            steps
+        }
+        None => {
+            println!(
+                "open-loop loadgen -> {}: {} clients, {:.0} req/s target for {:.1}s ({} @ {})",
+                cfg.addr,
+                cfg.clients,
+                cfg.rps,
+                cfg.duration.as_secs_f64(),
+                cfg.app.name(),
+                cfg.quality.name(),
+            );
+            let report = loadgen::run(&cfg)?;
+            print!("{}", report.render());
+            let json = report.summary_json("open-loop e2e latency (scheduled->response)");
+            bench::write_summary("BENCH_loadgen.json", &json);
+            bench::append_history("BENCH_history.jsonl", &json);
+            vec![loadgen::RampStep { rps: cfg.rps, report }]
+        }
+    };
     if args.flag("shutdown") {
         loadgen::send_shutdown(addr)?;
         println!("server drained (shutdown frame acked)");
     }
-    if report.protocol_errors > 0 {
-        bail!(
-            "{} protocol error(s) across {} sent requests",
-            report.protocol_errors,
-            report.sent
-        );
+    let protocol_errors: usize = steps.iter().map(|s| s.report.protocol_errors).sum();
+    let sent: usize = steps.iter().map(|s| s.report.sent).sum();
+    let answered: usize = steps.iter().map(|s| s.report.answered).sum();
+    if protocol_errors > 0 {
+        bail!("{protocol_errors} protocol error(s) across {sent} sent requests");
     }
-    if report.answered == 0 {
+    if answered == 0 {
         bail!("no requests answered — is the server reachable and the model registered?");
     }
     Ok(())

@@ -174,6 +174,95 @@ impl LoadReport {
     }
 }
 
+/// One phase of an arrival-rate ramp: the offered rate and the full
+/// open-loop report measured while it held.
+#[derive(Clone, Debug)]
+pub struct RampStep {
+    /// Offered aggregate arrival rate during this phase, requests/s.
+    pub rps: f64,
+    /// Outcome of the phase.
+    pub report: LoadReport,
+}
+
+/// Parse the CLI ramp spelling `LOW:HIGH:STEPS` (e.g. `50:400:4`).
+pub fn parse_ramp(spec: &str) -> Result<(f64, f64, usize)> {
+    let mut it = spec.split(':');
+    let (low, high, steps) = match (it.next(), it.next(), it.next(), it.next()) {
+        (Some(l), Some(h), Some(s), None) => (
+            l.trim().parse::<f64>().map_err(|e| anyhow!("ramp LOW {l:?}: {e}"))?,
+            h.trim().parse::<f64>().map_err(|e| anyhow!("ramp HIGH {h:?}: {e}"))?,
+            s.trim().parse::<usize>().map_err(|e| anyhow!("ramp STEPS {s:?}: {e}"))?,
+        ),
+        _ => return Err(anyhow!("--ramp wants LOW:HIGH:STEPS (e.g. 50:400:4)")),
+    };
+    if !low.is_finite() || !high.is_finite() || low <= 0.0 || high <= 0.0 {
+        return Err(anyhow!("ramp rates must be positive and finite (got {low}:{high})"));
+    }
+    if steps == 0 {
+        return Err(anyhow!("ramp wants at least one step"));
+    }
+    Ok((low, high, steps))
+}
+
+/// Run an arrival-rate ramp: `steps` open-loop passes with the target
+/// rate linearly interpolated from `low` to `high`, each holding for
+/// `cfg.duration / steps`. Every step is a complete [`run`] — its own
+/// schedule, connections, and report — so per-phase shed/degrade/
+/// latency stay attributable to the rate that produced them; that
+/// phase split is the raw material for the adaptive-vs-static serving
+/// comparison.
+pub fn run_ramp(cfg: &LoadgenConfig, low: f64, high: f64, steps: usize) -> Result<Vec<RampStep>> {
+    let per_step = cfg.duration.div_f64(steps.max(1) as f64);
+    let mut out = Vec::with_capacity(steps);
+    for i in 0..steps {
+        let frac = if steps > 1 { i as f64 / (steps - 1) as f64 } else { 0.0 };
+        let rps = low + (high - low) * frac;
+        // distinct payload streams per phase, deterministic overall
+        let step_cfg = LoadgenConfig {
+            rps,
+            duration: per_step,
+            seed: cfg.seed.wrapping_add(i as u64),
+            ..cfg.clone()
+        };
+        out.push(RampStep { rps, report: run(&step_cfg)? });
+    }
+    Ok(out)
+}
+
+/// Phase-tagged machine summary for a ramp run: one latency row and a
+/// `ramp_stepN_*` metric group per phase, plus whole-ramp totals —
+/// same `{"results", "metrics"}` shape the fixed-rate summary uses.
+pub fn ramp_summary_json(steps: &[RampStep]) -> Json {
+    let rows: Vec<BenchResult> = steps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| BenchResult {
+            name: format!("ramp_step{i} @ {:.0} req/s (scheduled->response)", s.rps),
+            iters: s.report.latency.n,
+            summary: s.report.latency.clone(),
+        })
+        .collect();
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    for (i, s) in steps.iter().enumerate() {
+        metrics.push((format!("ramp_step{i}_rps"), s.rps));
+        metrics.push((format!("ramp_step{i}_throughput_rps"), s.report.throughput_rps()));
+        metrics.push((format!("ramp_step{i}_shed_rate"), s.report.shed_rate()));
+        metrics.push((format!("ramp_step{i}_degrade_rate"), s.report.degrade_rate()));
+        metrics.push((format!("ramp_step{i}_p99_ms"), s.report.latency.p99 * 1e3));
+    }
+    let sent: usize = steps.iter().map(|s| s.report.sent).sum();
+    let shed: usize = steps.iter().map(|s| s.report.shed).sum();
+    let answered: usize = steps.iter().map(|s| s.report.answered).sum();
+    let protocol: usize = steps.iter().map(|s| s.report.protocol_errors).sum();
+    metrics.push(("ramp_steps".to_string(), steps.len() as f64));
+    metrics.push(("ramp_shed_rate".to_string(), shed as f64 / sent.max(1) as f64));
+    metrics.push(("ramp_answered".to_string(), answered as f64));
+    metrics.push(("ramp_protocol_errors".to_string(), protocol as f64));
+    let row_refs: Vec<&BenchResult> = rows.iter().collect();
+    let metric_refs: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    bench::summary_json(&row_refs, &metric_refs)
+}
+
 #[derive(Default)]
 struct ClientStats {
     sent: usize,
@@ -395,5 +484,43 @@ pub fn send_shutdown(addr: &str) -> Result<()> {
             Err(FrameError::Closed) | Err(FrameError::Truncated) => return Ok(()),
             Err(e) => return Err(anyhow!("waiting for shutdown ack: {e}")),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ramp_spec_parses_and_rejects_nonsense() {
+        assert_eq!(parse_ramp("50:400:4").unwrap(), (50.0, 400.0, 4));
+        assert_eq!(parse_ramp(" 10 : 20 : 1 ").unwrap(), (10.0, 20.0, 1));
+        for bad in ["", "50:400", "50:400:4:9", "0:400:4", "50:-1:4", "50:400:0", "a:b:c"] {
+            assert!(parse_ramp(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn ramp_summary_tags_every_phase() {
+        let mk = |rps: f64, shed: usize| RampStep {
+            rps,
+            report: LoadReport {
+                sent: 100,
+                answered: 100 - shed,
+                shed,
+                latency: Summary::of(vec![0.001, 0.002, 0.003]),
+                wall: Duration::from_secs(1),
+                ..LoadReport::default()
+            },
+        };
+        let steps = vec![mk(50.0, 0), mk(400.0, 30)];
+        let j = ramp_summary_json(&steps);
+        let m = |k: &str| j.get("metrics").unwrap().get(k).unwrap().as_f64().unwrap();
+        assert_eq!(m("ramp_steps"), 2.0);
+        assert_eq!(m("ramp_step0_rps"), 50.0);
+        assert_eq!(m("ramp_step0_shed_rate"), 0.0);
+        assert!((m("ramp_step1_shed_rate") - 0.3).abs() < 1e-12);
+        assert!((m("ramp_shed_rate") - 30.0 / 200.0).abs() < 1e-12);
+        assert_eq!(j.get("results").unwrap().as_arr().unwrap().len(), 2);
     }
 }

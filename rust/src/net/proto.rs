@@ -23,7 +23,7 @@
 //! control acks). Tensors travel as `{"shape": [...], "data": [...]}`
 //! via [`Tensor::to_json`] / [`Tensor::from_json`].
 
-use crate::catalog::{App, ModelKey, Quality, Tensor};
+use crate::catalog::{App, ModelKey, Quality, QualityProfile, Tensor};
 use crate::coordinator::{Job, Rejection};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -333,9 +333,18 @@ impl ClientFrame {
 #[derive(Clone, Debug)]
 pub enum ServerFrame {
     /// The request executed; `route` names the catalog key that
-    /// answered and `degraded` is set when the overload policy served
-    /// a lower tier than requested.
-    Response { id: u64, route: ModelKey, degraded: bool, outputs: Vec<Tensor> },
+    /// answered, `tier` its quality tier, and `quality` that tier's
+    /// *measured* quality (when the backend measured one at
+    /// registration). `degraded` is set when the overload policy or
+    /// the quality autopilot served a lower tier than requested.
+    Response {
+        id: u64,
+        route: ModelKey,
+        tier: Quality,
+        quality: Option<QualityProfile>,
+        degraded: bool,
+        outputs: Vec<Tensor>,
+    },
     /// The request was refused with a typed [`Rejection`]
     /// (shed / expired / unknown-model — see [`Rejection::wire_name`]).
     Rejected { id: u64, rejection: Rejection, message: String },
@@ -350,13 +359,19 @@ pub enum ServerFrame {
 impl ServerFrame {
     pub fn to_json(&self) -> Json {
         match self {
-            ServerFrame::Response { id, route, degraded, outputs } => Json::obj(vec![
-                ("type", Json::Str("response".to_string())),
-                ("id", Json::Num(*id as f64)),
-                ("route", Json::Str(route.to_string())),
-                ("degraded", Json::Bool(*degraded)),
-                ("outputs", Json::Arr(outputs.iter().map(Tensor::to_json).collect())),
-            ]),
+            ServerFrame::Response { id, route, tier, quality, degraded, outputs } => {
+                Json::obj(vec![
+                    ("type", Json::Str("response".to_string())),
+                    ("id", Json::Num(*id as f64)),
+                    ("route", Json::Str(route.to_string())),
+                    ("tier", Json::Str(tier.to_string())),
+                    // an unmeasured tier travels as null, not absent,
+                    // so the wire form round-trips exactly
+                    ("quality", quality.as_ref().map_or(Json::Null, QualityProfile::to_json)),
+                    ("degraded", Json::Bool(*degraded)),
+                    ("outputs", Json::Arr(outputs.iter().map(Tensor::to_json).collect())),
+                ])
+            }
             ServerFrame::Rejected { id, rejection, message } => Json::obj(vec![
                 ("type", Json::Str("rejection".to_string())),
                 ("id", Json::Num(*id as f64)),
@@ -387,9 +402,22 @@ impl ServerFrame {
                 for t in raw {
                     outputs.push(Tensor::from_json(t)?);
                 }
+                let route = ModelKey::parse(str_field(j, "route")?)?;
                 Ok(ServerFrame::Response {
                     id: u64_field(j, "id")?,
-                    route: ModelKey::parse(str_field(j, "route")?)?,
+                    route,
+                    // tolerate pre-quality-plumbing peers: an absent
+                    // tier is derivable from the serving key
+                    tier: match j.get("tier") {
+                        Some(t) => Quality::parse(
+                            t.as_str().ok_or_else(|| anyhow!("response \"tier\" is not a string"))?,
+                        )?,
+                        None => route.tier(),
+                    },
+                    quality: match j.get("quality") {
+                        None | Some(Json::Null) => None,
+                        Some(q) => Some(QualityProfile::from_json(q)?),
+                    },
                     degraded: matches!(j.get("degraded"), Some(Json::Bool(true))),
                     outputs,
                 })
@@ -506,14 +534,34 @@ mod tests {
     }
 
     fn random_server_frame(rng: &mut Rng) -> ServerFrame {
+        use crate::catalog::QualityMetric;
         let keys = ModelKey::catalog();
         match rng.below(3) {
-            0 => ServerFrame::Response {
-                id: rng.below(1 << 32),
-                route: keys[rng.below(keys.len() as u64) as usize],
-                degraded: rng.below(2) == 0,
-                outputs: (0..rng.below(3)).map(|_| random_tensor(rng)).collect(),
-            },
+            0 => {
+                let route = keys[rng.below(keys.len() as u64) as usize];
+                ServerFrame::Response {
+                    id: rng.below(1 << 32),
+                    route,
+                    tier: route.tier(),
+                    // unmeasured tiers travel as null; measured ones
+                    // carry metric + value + reference tier
+                    quality: if rng.below(2) == 0 {
+                        None
+                    } else {
+                        Some(QualityProfile {
+                            metric: if rng.below(2) == 0 {
+                                QualityMetric::Psnr
+                            } else {
+                                QualityMetric::Accuracy
+                            },
+                            value: rng.below(1000) as f64 / 10.0,
+                            reference: Quality::Precise,
+                        })
+                    },
+                    degraded: rng.below(2) == 0,
+                    outputs: (0..rng.below(3)).map(|_| random_tensor(rng)).collect(),
+                }
+            }
             1 => ServerFrame::Rejected {
                 id: rng.below(1 << 32),
                 rejection: Rejection::ALL[rng.below(3) as usize],

@@ -295,6 +295,8 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>, coord: Arc<Coordi
                 Ok(r) => ServerFrame::Response {
                     id,
                     route: r.route,
+                    tier: r.tier,
+                    quality: r.quality,
                     degraded: r.degraded,
                     outputs: r.outputs,
                 }

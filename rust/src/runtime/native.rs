@@ -44,7 +44,8 @@ use crate::apps::blend::{BlendConfig, BlendHardware};
 use crate::apps::frnn::hw::FrnnHardware;
 use crate::apps::frnn::net::QuantFrnn;
 use crate::apps::gdf::GdfHardware;
-use crate::catalog::{self, App, Datapath, ModelKey, PpcConfig, Tensor};
+use crate::apps::quality;
+use crate::catalog::{self, App, Datapath, ModelKey, PpcConfig, QualityProfile, Tensor};
 use crate::coordinator::engine::Executor;
 use crate::logic::map::Objective;
 use crate::ppc::preprocess::ValueSet;
@@ -76,6 +77,10 @@ pub struct ModelInfo {
     /// Execution backend of the datapath's units: `"lut"`, `"tape"`, or
     /// `"mixed"` (per-unit selection under `--unit-backend auto`).
     pub backend: String,
+    /// Measured quality of this tier (PSNR vs the precise tier for the
+    /// image apps, top-1 accuracy on the in-tree eval split for FRNN),
+    /// measured at declaration against the bit-exact fixed-point sims.
+    pub quality: Option<QualityProfile>,
 }
 
 struct Model {
@@ -94,6 +99,10 @@ pub struct NativeExecutor {
     objective: Objective,
     cache: Option<NetlistCache>,
     recipes: BTreeMap<ModelKey, Recipe>,
+    /// Measured quality per declared key — computed once at declaration
+    /// (cached alongside the BLIF entries when a cache is attached), so
+    /// lazy builds and `--list-models` report it without re-measuring.
+    qualities: BTreeMap<ModelKey, QualityProfile>,
     models: Mutex<BTreeMap<ModelKey, Arc<Model>>>,
 }
 
@@ -110,6 +119,7 @@ impl NativeExecutor {
             objective: Objective::Area,
             cache: None,
             recipes: BTreeMap::new(),
+            qualities: BTreeMap::new(),
             models: Mutex::new(BTreeMap::new()),
         }
     }
@@ -162,6 +172,12 @@ impl NativeExecutor {
                 bail!("{key}: the FRNN datapath carries weights — declare it with declare_frnn")
             }
         };
+        // measure the tier's quality against the fixed-point sims
+        // (serving is bit-exact with them), drawing from / feeding the
+        // persistent cache so warm starts don't re-measure
+        let dir = self.cache.as_ref().map(|c| c.dir());
+        let profile = quality::measure_image_app_cached(dir, key.app, config)?;
+        self.qualities.insert(key, profile);
         self.recipes.insert(key, recipe);
         Ok(self)
     }
@@ -170,6 +186,11 @@ impl NativeExecutor {
     /// with the given quantized weights, without building it.
     pub fn declare_frnn(mut self, config: PpcConfig, net: QuantFrnn) -> Result<NativeExecutor> {
         let key = ModelKey::new(App::Frnn, config)?;
+        // measured accuracy is weight-dependent, so the cache entry is
+        // fingerprinted by the quantized weights
+        let dir = self.cache.as_ref().map(|c| c.dir());
+        let profile = quality::measure_frnn_cached(dir, config, &net);
+        self.qualities.insert(key, profile);
         let recipe: Recipe = Box::new(move |src, obj| {
             Box::new(FrnnHardware::synthesize_via(
                 net.clone(),
@@ -198,6 +219,7 @@ impl NativeExecutor {
                 self.objective,
                 self.cache.as_ref(),
                 false,
+                self.qualities.get(&key).copied(),
             ));
             self.models.lock().unwrap().insert(key, model);
         }
@@ -252,7 +274,14 @@ impl NativeExecutor {
         let recipe = self.recipes.get(&key).ok_or_else(|| self.unknown(key))?;
         // build outside the lock: synthesis/cache-load can take a
         // while, and an executor is driven by one shard thread anyway
-        let model = Arc::new(build_model(key, recipe, self.objective, self.cache.as_ref(), true));
+        let model = Arc::new(build_model(
+            key,
+            recipe,
+            self.objective,
+            self.cache.as_ref(),
+            true,
+            self.qualities.get(&key).copied(),
+        ));
         eprintln!(
             "lazy-registered {key} in {:.1} ms ({})",
             model.info.build_time.as_secs_f64() * 1e3,
@@ -271,6 +300,7 @@ fn build_model(
     objective: Objective,
     cache: Option<&NetlistCache>,
     lazy: bool,
+    quality: Option<QualityProfile>,
 ) -> Model {
     let t0 = Instant::now();
     let (datapath, cached) = match cache {
@@ -290,6 +320,7 @@ fn build_model(
         lazy,
         lanes: catalog::LANES,
         backend: datapath.backend_name().to_string(),
+        quality,
     };
     Model { datapath, info }
 }
@@ -314,6 +345,10 @@ impl Executor for NativeExecutor {
 
     fn resident_keys(&self) -> Vec<ModelKey> {
         self.registered_keys()
+    }
+
+    fn quality(&self, key: ModelKey) -> Option<QualityProfile> {
+        self.qualities.get(&key).copied()
     }
 }
 
@@ -374,6 +409,27 @@ mod tests {
         // wrong arity
         let t = Tensor::vector(vec![0; 16]);
         assert!(ex.exec(mk("gdf/ds32"), &[t.clone(), t]).is_err());
+    }
+
+    #[test]
+    fn every_registered_tier_carries_a_measured_quality() {
+        use crate::catalog::{Quality, QualityMetric, PSNR_CAP};
+        let ex = NativeExecutor::new()
+            .register(mk("gdf/conv"))
+            .unwrap()
+            .register(mk("gdf/ds32"))
+            .unwrap();
+        let infos = ex.model_infos();
+        let conv = infos.iter().find(|i| i.key == mk("gdf/conv")).unwrap();
+        let ds32 = infos.iter().find(|i| i.key == mk("gdf/ds32")).unwrap();
+        let (cq, dq) = (conv.quality.unwrap(), ds32.quality.unwrap());
+        assert_eq!(cq.metric, QualityMetric::Psnr);
+        assert_eq!(cq.reference, Quality::Precise);
+        assert_eq!(cq.value, PSNR_CAP, "the precise tier measures at the identity cap");
+        assert!(dq.value < cq.value, "ds32 must measure below conv: {dq} vs {cq}");
+        // the Executor surface reports the same numbers the infos carry
+        assert_eq!(ex.quality(mk("gdf/ds32")), Some(dq));
+        assert_eq!(ex.quality(mk("blend/ds16")), None, "undeclared keys are unmeasured");
     }
 
     #[test]

@@ -880,6 +880,7 @@ fn stress_every_submit_path_respects_the_inflight_cap() {
         shards: 1,
         overload: OverloadPolicy::Wait,
         fair_share: 1.0,
+        autopilot: None,
     };
     let coord = Arc::new(
         Coordinator::start(cfg, |_shard| {
@@ -1030,6 +1031,7 @@ fn stress_degrade_overload_serves_bit_exact_lower_tiers() {
         shards: 1,
         overload: OverloadPolicy::Degrade,
         fair_share: 0.5, // one key holds at most 1 of the 2 permits
+        autopilot: None,
     };
     let cache = dir.clone();
     let coord = Arc::new(
@@ -1102,6 +1104,107 @@ fn stress_degrade_overload_serves_bit_exact_lower_tiers() {
     );
     assert_eq!(coord.metrics().errors(), 0);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Controller dynamics end to end: a steady saturating load makes the
+/// autopilot walk the serving tier down until it settles on one tier
+/// (no flapping while the pressure holds), and removing the load
+/// brings it back to `Precise` within a bounded number of ticks.
+#[test]
+fn autopilot_settles_under_saturation_and_recovers_on_idle() {
+    use ppc::catalog::App;
+    use ppc::coordinator::{
+        Autopilot, AutopilotConfig, Executor, MockExecutor, OverloadPolicy, SubmitError,
+    };
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let keys = vec![mk("gdf/conv"), mk("gdf/ds16"), mk("gdf/ds32")];
+    let probe = MockExecutor::full_catalog();
+    let mut profiles = BTreeMap::new();
+    for k in &keys {
+        profiles.insert(*k, probe.quality(*k).unwrap());
+    }
+    let ap = Arc::new(Autopilot::new(
+        AutopilotConfig {
+            tick: Duration::from_millis(5),
+            refractory: Duration::from_millis(30),
+            ..AutopilotConfig::default()
+        },
+        keys,
+        profiles,
+        4,
+    ));
+    let cfg = CoordinatorConfig {
+        queue_capacity: 4,
+        batch_size: 4,
+        classify_row: 960,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        overload: OverloadPolicy::Reject,
+        fair_share: 1.0,
+        autopilot: Some(ap.clone()),
+    };
+    let coord = Coordinator::start(cfg, |_shard| {
+        let mut m = MockExecutor::full_catalog();
+        m.delay = Duration::from_millis(5);
+        Ok(m)
+    })
+    .unwrap();
+
+    // saturate: submit far faster than the shard drains; the gate
+    // pins in-flight at the cap, so the tick sees pressure 1.0
+    let t_load = Instant::now();
+    let mut rng = Rng::new(0xA9);
+    let mut tickets = Vec::new();
+    let mut settled: Option<(Quality, u64)> = None;
+    while t_load.elapsed() < Duration::from_millis(400) {
+        let px: Vec<i32> = (0..16).map(|_| rng.below(256) as i32).collect();
+        let image = Tensor::matrix(4, 4, px).unwrap();
+        match coord.submit(Job::Denoise { image }, Quality::Precise) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Busy) | Err(SubmitError::Shed) => {}
+            Err(e) => panic!("unexpected submit outcome {e:?}"),
+        }
+        if t_load.elapsed() > Duration::from_millis(250) && settled.is_none() {
+            settled = Some((ap.current(App::Gdf), ap.transitions()));
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let (tier_under_load, moves_by_250ms) = settled.unwrap();
+    assert_eq!(
+        tier_under_load,
+        Quality::Economy,
+        "steady saturation settles on the lowest registered tier"
+    );
+    assert_eq!(ap.current(App::Gdf), Quality::Economy, "still settled at the window's end");
+    assert_eq!(ap.transitions(), moves_by_250ms, "no flapping under steady pressure");
+
+    // every answer names the tier that actually served it, with its
+    // measured quality riding along
+    let mut below_precise = 0usize;
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.tier, r.route.tier(), "response tier names the serving key");
+        assert!(r.quality.is_some(), "a measured tier reports quality");
+        if r.tier != Quality::Precise {
+            below_precise += 1;
+        }
+    }
+    assert!(below_precise > 0, "saturated traffic was steered below Precise");
+
+    // load removed: recovery to Precise within a bounded tick budget
+    let tick = ap.config().tick;
+    let deadline = Instant::now() + tick * 400;
+    while ap.current(App::Gdf) != Quality::Precise && Instant::now() < deadline {
+        std::thread::sleep(tick);
+    }
+    assert_eq!(
+        ap.current(App::Gdf),
+        Quality::Precise,
+        "the controller recovers to Precise within 400 ticks of load removal"
+    );
 }
 
 #[test]

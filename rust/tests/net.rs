@@ -130,7 +130,9 @@ fn concurrent_wire_clients_match_in_process_submit_for_every_key() {
                 let mut got = Vec::new();
                 for _ in 0..combos.len() {
                     match read_frame_within(&mut reader, Duration::from_secs(20)) {
-                        ServerFrame::Response { id, route, degraded, outputs } => {
+                        ServerFrame::Response { id, route, tier, quality, degraded, outputs } => {
+                            assert_eq!(tier, route.tier(), "wire tier names the serving key");
+                            assert!(quality.is_some(), "a measured tier reports quality");
                             got.push((id, route, degraded, outputs))
                         }
                         other => panic!("wanted a response, got {other:?}"),
@@ -188,6 +190,7 @@ fn overload_and_deadlines_are_typed_over_the_wire_not_hangs() {
         // each tier holds at most 1 in-flight request, so the burst
         // forces both a degrade (balanced -> economy) and sheds
         fair_share: 0.5,
+        autopilot: None,
     };
     let (coord, server) =
         spawn_mock(cfg, None, Duration::from_millis(50), NetServerConfig::default());
@@ -208,10 +211,14 @@ fn overload_and_deadlines_are_typed_over_the_wire_not_hangs() {
     let (mut answered, mut degraded, mut shed) = (0, 0, 0);
     for _ in 0..BURST {
         match read_frame_within(&mut reader, Duration::from_secs(20)) {
-            ServerFrame::Response { degraded: d, .. } => {
+            ServerFrame::Response { degraded: d, tier, quality, .. } => {
                 answered += 1;
                 if d {
                     degraded += 1;
+                    // a degraded response names the tier that actually
+                    // answered, with its measured quality
+                    assert_eq!(tier, Quality::Economy, "balanced degrades one tier down");
+                    assert!(quality.is_some(), "degraded tier carries its measured quality");
                 }
             }
             ServerFrame::Rejected { rejection: Rejection::Shed, .. } => shed += 1,
