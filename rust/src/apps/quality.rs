@@ -125,9 +125,21 @@ fn cache_path(dir: &Path, key: ModelKey) -> PathBuf {
     dir.join(format!("{}-{}.quality.json", key.app, key.config))
 }
 
-/// Load a cached measurement for `key`, if one exists, parses, and its
-/// fingerprint matches. Any failure is a silent miss (the caller
-/// re-measures), never an error.
+/// A cached profile is only served when its number is plausible for
+/// its metric. The cache file is untrusted input (disk rot, hand
+/// edits, partial writes): a garbled-but-well-formed entry must cost
+/// one re-measure, never a bogus quality claim on the wire.
+fn plausible(p: &QualityProfile) -> bool {
+    match p.metric {
+        QualityMetric::Psnr => p.value > 0.0 && p.value <= PSNR_CAP,
+        QualityMetric::Accuracy => (0.0..=1.0).contains(&p.value),
+    }
+}
+
+/// Load a cached measurement for `key`, if one exists, parses, its
+/// fingerprint matches, and its value is in the metric's plausible
+/// range. Any failure is a silent miss (the caller re-measures),
+/// never an error.
 pub fn load_cached(dir: &Path, key: ModelKey, fingerprint: u64) -> Option<QualityProfile> {
     let text = std::fs::read_to_string(cache_path(dir, key)).ok()?;
     let j = Json::parse(&text).ok()?;
@@ -135,7 +147,8 @@ pub fn load_cached(dir: &Path, key: ModelKey, fingerprint: u64) -> Option<Qualit
     if fp != format!("{fingerprint:016x}") {
         return None;
     }
-    QualityProfile::from_json(j.get("profile")?).ok()
+    let p = QualityProfile::from_json(j.get("profile")?).ok()?;
+    plausible(&p).then_some(p)
 }
 
 /// Best-effort cache write (temp file + rename, like the BLIF
@@ -266,6 +279,51 @@ mod tests {
         // a vandalized entry is a silent miss, never a panic
         std::fs::write(dir.join("gdf-ds16.quality.json"), "not json").unwrap();
         assert!(load_cached(&dir, key, 7).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_cache_entries_are_misses_and_trigger_a_re_measure() {
+        let dir = std::env::temp_dir().join(format!("ppc_quality_rot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = ModelKey::parse("gdf/ds32").unwrap();
+        let path = dir.join("gdf-ds32.quality.json");
+        let good = QualityProfile {
+            metric: QualityMetric::Psnr,
+            value: 28.0,
+            reference: Quality::Precise,
+        };
+        store_cached(&dir, key, STATIC_FINGERPRINT, &good);
+        let stored = std::fs::read_to_string(&path).unwrap();
+
+        // a truncated entry (torn write) is a miss
+        std::fs::write(&path, &stored[..stored.len() / 2]).unwrap();
+        assert!(load_cached(&dir, key, STATIC_FINGERPRINT).is_none(), "truncated");
+        // garbled bytes are a miss
+        std::fs::write(&path, "\u{1}\u{2}garbage\u{3}").unwrap();
+        assert!(load_cached(&dir, key, STATIC_FINGERPRINT).is_none(), "garbled");
+        // well-formed JSON with out-of-range numbers is a miss too:
+        // negative or over-cap PSNR, accuracy outside [0, 1]
+        for (metric, value) in
+            [("psnr", -5.0), ("psnr", 500.0), ("acc", 7.5), ("acc", -0.1), ("psnr", 0.0)]
+        {
+            let fp = format!("{STATIC_FINGERPRINT:016x}");
+            let bogus = format!(
+                "{{\"fingerprint\": \"{fp}\", \"profile\": {{\"metric\": \"{metric}\", \
+                 \"value\": {value}, \"reference\": \"precise\"}}}}"
+            );
+            std::fs::write(&path, bogus).unwrap();
+            assert!(
+                load_cached(&dir, key, STATIC_FINGERPRINT).is_none(),
+                "{metric}={value} must not be served"
+            );
+            // and the cached front door re-measures a sane number
+            // instead of trusting the file
+            let p = measure_image_app_cached(Some(&dir), App::Gdf, PpcConfig::Ds32).unwrap();
+            assert!(p.value > 0.0 && p.value <= PSNR_CAP, "re-measured {}", p.value);
+            // the re-measure also repaired the cache entry in place
+            assert_eq!(load_cached(&dir, key, STATIC_FINGERPRINT), Some(p));
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -129,6 +129,15 @@ struct Inner {
     /// Wire-protocol violations observed (malformed / oversized /
     /// truncated frames).
     net_protocol_errors: u64,
+    /// Requests this front door relayed to the owning peer.
+    forwards_out: u64,
+    /// `Forward` frames served locally on behalf of a peer front door.
+    forwards_in: u64,
+    /// Forward attempts abandoned for the next candidate peer.
+    forward_retries: u64,
+    /// Forwards that exhausted every candidate and fell back to local
+    /// serving (or a typed rejection when the key is not local).
+    forward_fallbacks: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -472,6 +481,46 @@ impl Metrics {
         self.inner.lock().unwrap().net_protocol_errors += 1;
     }
 
+    /// One request relayed to the owning peer.
+    pub fn record_forward_out(&self) {
+        self.inner.lock().unwrap().forwards_out += 1;
+    }
+
+    /// One `Forward` frame served locally for a peer front door.
+    pub fn record_forward_in(&self) {
+        self.inner.lock().unwrap().forwards_in += 1;
+    }
+
+    /// One forward attempt abandoned for the next candidate peer.
+    pub fn record_forward_retry(&self) {
+        self.inner.lock().unwrap().forward_retries += 1;
+    }
+
+    /// One forward that exhausted its candidates and fell back.
+    pub fn record_forward_fallback(&self) {
+        self.inner.lock().unwrap().forward_fallbacks += 1;
+    }
+
+    /// Requests relayed to owning peers.
+    pub fn forwards_out(&self) -> u64 {
+        self.inner.lock().unwrap().forwards_out
+    }
+
+    /// `Forward` frames served locally for peers.
+    pub fn forwards_in(&self) -> u64 {
+        self.inner.lock().unwrap().forwards_in
+    }
+
+    /// Forward attempts abandoned for the next candidate.
+    pub fn forward_retries(&self) -> u64 {
+        self.inner.lock().unwrap().forward_retries
+    }
+
+    /// Forwards that exhausted every candidate.
+    pub fn forward_fallbacks(&self) -> u64 {
+        self.inner.lock().unwrap().forward_fallbacks
+    }
+
     /// Connections ever accepted by the front door.
     pub fn net_connections(&self) -> u64 {
         self.inner.lock().unwrap().net_conns_opened
@@ -548,6 +597,15 @@ impl Metrics {
                 self.net_frames_out(),
                 self.net_protocol_errors()
             ));
+        }
+        {
+            let m = self.inner.lock().unwrap();
+            if m.forwards_out + m.forwards_in + m.forward_retries + m.forward_fallbacks > 0 {
+                s.push_str(&format!(
+                    "cluster: forwards_out={} forwards_in={} retries={} fallbacks={}\n",
+                    m.forwards_out, m.forwards_in, m.forward_retries, m.forward_fallbacks
+                ));
+            }
         }
         let placements = self.placements();
         if !placements.is_empty() {
@@ -828,6 +886,23 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("gdf/conv@precise"), "{rep}");
         assert!(rep.contains("gdf/ds32@economy"), "{rep}");
+    }
+
+    #[test]
+    fn forward_counters_partition_by_direction() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("cluster:"), "{}", m.report());
+        m.record_forward_out();
+        m.record_forward_out();
+        m.record_forward_in();
+        m.record_forward_retry();
+        m.record_forward_fallback();
+        assert_eq!(m.forwards_out(), 2);
+        assert_eq!(m.forwards_in(), 1);
+        assert_eq!(m.forward_retries(), 1);
+        assert_eq!(m.forward_fallbacks(), 1);
+        let rep = m.report();
+        assert!(rep.contains("cluster: forwards_out=2 forwards_in=1 retries=1 fallbacks=1"), "{rep}");
     }
 
     #[test]

@@ -207,17 +207,61 @@ impl fmt::Display for Placement {
 /// FNV-1a over the key's canonical spelling and the shard index — the
 /// rendezvous weight of placing `key` on `shard`.
 fn rendezvous_score(key: ModelKey, shard: usize) -> u64 {
+    fnv_avalanche(key.to_string().bytes().chain([b'#']).chain((shard as u64).to_le_bytes()))
+}
+
+/// The same FNV-1a + avalanche mix, over arbitrary label bytes. Shared
+/// by the shard-level scores above and the node-level ring below.
+fn fnv_avalanche(bytes: impl Iterator<Item = u8>) -> u64 {
     const OFFSET: u64 = 0xcbf29ce484222325;
     const PRIME: u64 = 0x100000001b3;
     let mut h = OFFSET;
-    for b in key.to_string().bytes().chain([b'#']).chain((shard as u64).to_le_bytes()) {
+    for b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(PRIME);
     }
-    // final avalanche so consecutive shard indices decorrelate
+    // final avalanche so near-identical labels decorrelate
     h ^= h >> 33;
     h = h.wrapping_mul(0xff51afd7ed558ccd);
     h ^ (h >> 33)
+}
+
+/// Rendezvous weight of `(node, slot)` for `key`: the multi-node ring
+/// scores every node through `slots_per_node` virtual `(node, shard)`
+/// slots (a node's weight is its best slot), hashing the node *name* —
+/// not its index — so membership changes never reshuffle the survivors.
+pub fn rendezvous_node_score(key: ModelKey, node: &str, slots_per_node: usize) -> u64 {
+    (0..slots_per_node.max(1))
+        .map(|slot| {
+            fnv_avalanche(
+                key.to_string()
+                    .bytes()
+                    .chain([b'#'])
+                    .chain(node.bytes())
+                    .chain([b'#'])
+                    .chain((slot as u64).to_le_bytes()),
+            )
+        })
+        .max()
+        .expect("at least one slot")
+}
+
+/// Rank `nodes` for `key`, best owner first: indices into `nodes` in
+/// descending [`rendezvous_node_score`] order (node name breaks the
+/// improbable score tie, so every member computes the same order from
+/// the same membership list regardless of how it was collected).
+///
+/// This is the cluster ownership rule: `nodes[rank[0]]` owns `key`,
+/// and the tail is the retry-on-next-replica order when the owner is
+/// down. Because scores hash node names, adding or removing a member
+/// moves only the keys that member wins — the rendezvous-stability
+/// property the membership tests pin down.
+pub fn rank_nodes(key: ModelKey, nodes: &[String], slots_per_node: usize) -> Vec<usize> {
+    let mut ranked: Vec<usize> = (0..nodes.len()).collect();
+    let scores: Vec<u64> =
+        nodes.iter().map(|n| rendezvous_node_score(key, n, slots_per_node)).collect();
+    ranked.sort_by(|&a, &b| scores[b].cmp(&scores[a]).then_with(|| nodes[a].cmp(&nodes[b])));
+    ranked
 }
 
 #[cfg(test)]
@@ -329,5 +373,79 @@ mod tests {
     fn unplaced_keys_have_no_shard_set() {
         let p = Placement::spread(&[mk("gdf/ds16")], 2, 1);
         assert!(p.shards_of(mk("blend/ds32")).is_none());
+    }
+
+    // -- node-level ring (multi-node serving) --
+
+    fn random_members(rng: &mut crate::util::prng::Rng) -> Vec<String> {
+        let n = rng.below(6) as usize + 2;
+        (0..n).map(|_| format!("10.0.{}.{}:{}", rng.below(256), rng.below(256), rng.below(60000) + 1024)).collect()
+    }
+
+    #[test]
+    fn node_rank_is_a_total_order_every_member_agrees_on() {
+        crate::util::propcheck::forall(0xA11C, 64, random_members, |members| {
+            ModelKey::catalog().iter().all(|&key| {
+                let rank = rank_nodes(key, members, 8);
+                // a permutation of every member: no key is ever unowned
+                let mut seen = rank.clone();
+                seen.sort_unstable();
+                if seen != (0..members.len()).collect::<Vec<_>>() {
+                    return false;
+                }
+                // order is a pure function of (key, names): a member
+                // that collected the same membership in another order
+                // ranks the same owners
+                let mut shuffled: Vec<String> = members.clone();
+                shuffled.rotate_left(1);
+                let r2 = rank_nodes(key, &shuffled, 8);
+                rank.iter().map(|&i| &members[i]).collect::<Vec<_>>()
+                    == r2.iter().map(|&i| &shuffled[i]).collect::<Vec<_>>()
+            })
+        });
+    }
+
+    #[test]
+    fn adding_a_node_moves_only_the_keys_it_wins() {
+        crate::util::propcheck::forall(0x90DE, 64, random_members, |members| {
+            let newcomer = "192.168.7.7:7777".to_string();
+            if members.contains(&newcomer) {
+                return true;
+            }
+            let mut grown = members.clone();
+            grown.push(newcomer.clone());
+            ModelKey::catalog().iter().all(|&key| {
+                let before = members[rank_nodes(key, members, 8)[0]].clone();
+                let after = grown[rank_nodes(key, &grown, 8)[0]].clone();
+                // rendezvous stability: a key either stays put or moves
+                // to the new member — never between two survivors
+                after == before || after == newcomer
+            })
+        });
+    }
+
+    #[test]
+    fn removing_a_node_moves_only_the_keys_it_owned() {
+        crate::util::propcheck::forall(0xDEAD, 64, random_members, |members| {
+            if members.len() < 2 {
+                return true;
+            }
+            let gone = members[0].clone();
+            let survivors: Vec<String> = members[1..].to_vec();
+            ModelKey::catalog().iter().all(|&key| {
+                let before = members[rank_nodes(key, members, 8)[0]].clone();
+                let after = survivors[rank_nodes(key, &survivors, 8)[0]].clone();
+                if before == gone {
+                    // the departed member's keys land on its next
+                    // replica in the old ranking — exactly the
+                    // retry-on-next-replica failover order
+                    let old_rank = rank_nodes(key, members, 8);
+                    after == members[old_rank[1]]
+                } else {
+                    // survivors' keys never move
+                    after == before
+                }
+            })
+        });
     }
 }

@@ -36,7 +36,8 @@ Pipeline:
         [--queue-capacity N] [--fair-share F]
         [--quality auto|fixed] [--quality-floor SPEC]
         [--cache-dir DIR] [--no-cache] [--list-models] [--artifacts DIR]
-        [--listen ADDR] [--unit-backend tape|lut|auto]
+        [--listen ADDR] [--peer ADDR,..] [--probe-interval-ms N]
+        [--probe-timeout-ms N] [--unit-backend tape|lut|auto]
         [--threads-per-shard N]
                                          run the coordinator demo:
                                          native = synthesized netlists (offline),
@@ -103,10 +104,25 @@ Pipeline:
                                          metrics report). The readiness line is
                                          `listening on HOST:PORT` (use port 0 to
                                          pick a free port).
+                                         --peer ADDR,.. joins a serving ring:
+                                         all members (self + peers) rank key
+                                         ownership by the same rendezvous hash,
+                                         requests for keys this node does not
+                                         own are forwarded to the owner over
+                                         the existing framing (bounded retry
+                                         on the next replica, deadline budget
+                                         carried across the hop), and peers
+                                         are health-checked with ping frames
+                                         every --probe-interval-ms (default
+                                         500) with --probe-timeout-ms (default
+                                         250) per probe: a silent peer walks
+                                         alive -> suspect -> dead and drops
+                                         out of routing until it pongs again.
   loadgen --connect HOST:PORT [--clients N] [--rps F] [--duration-s F]
           [--app gdf|blend|frnn] [--quality Q] [--deadline-ms N]
           [--image-size N] [--classify-row N] [--seed N]
-          [--ramp LOW:HIGH:STEPS] [--quick] [--shutdown]
+          [--ramp LOW:HIGH:STEPS] [--baseline-connect HOST:PORT]
+          [--quick] [--shutdown]
                                          open-loop load generator against a
                                          `serve --listen` front door: fixed
                                          arrival schedule (honest under
@@ -122,8 +138,16 @@ Pipeline:
                                          interpolated LOW..HIGH, and each
                                          phase's summary lands phase-tagged
                                          (ramp_stepN_*) in BENCH_loadgen.json.
+                                         --baseline-connect runs a second,
+                                         identical fixed-rate pass against a
+                                         node that owns the keys locally and
+                                         writes forwarded_vs_local_p99_ratio
+                                         (forward-hop overhead) into
+                                         BENCH_loadgen.json next to the usual
+                                         loadgen metrics.
                                          --shutdown sends the control frame that
-                                         drains the server afterwards; exits
+                                         drains the server afterwards (and the
+                                         baseline server, when given); exits
                                          nonzero on any protocol error.
   synth --block adder|mult --wl N [--ds X | --th X,Y]  ad-hoc PPC block
 ";
@@ -610,16 +634,54 @@ fn serve_demo(args: &Args) -> Result<()> {
         let listener = std::net::TcpListener::bind(listen)
             .map_err(|e| anyhow!("bind {listen}: {e}"))?;
         let coord = std::sync::Arc::new(coord);
-        let server = ppc::net::NetServer::spawn(
+        // --peer joins the serving ring. The node advertises its
+        // *resolved* bound address (port 0 only becomes a real port at
+        // bind time) so every member ranks identical node strings.
+        let cluster = match args.get("peer") {
+            Some(spec) => {
+                let peers: Vec<String> = spec
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if peers.is_empty() {
+                    bail!("--peer wants a comma-separated list of HOST:PORT addresses");
+                }
+                let node = listener.local_addr()?.to_string();
+                let ccfg = ppc::net::ClusterConfig {
+                    node: node.clone(),
+                    peers,
+                    probe_interval: Duration::from_millis(
+                        args.u64_or("probe-interval-ms", 500),
+                    ),
+                    probe_timeout: Duration::from_millis(args.u64_or("probe-timeout-ms", 250)),
+                    ..ppc::net::ClusterConfig::default()
+                };
+                let cluster = std::sync::Arc::new(ppc::net::Cluster::start(ccfg));
+                println!(
+                    "cluster: node {node}, {} member(s) [{}]",
+                    cluster.members().len(),
+                    cluster.members().join(", ")
+                );
+                Some(cluster)
+            }
+            None => None,
+        };
+        let server = ppc::net::NetServer::spawn_cluster(
             listener,
             coord.clone(),
             ppc::net::NetServerConfig::default(),
+            cluster.clone(),
         )?;
         // this exact line is the readiness signal scripts poll for
         println!("listening on {}", server.local_addr());
         let _ = std::io::Write::flush(&mut std::io::stdout());
         server.join();
         println!("shutdown frame received; drained");
+        if let Some(c) = &cluster {
+            c.stop();
+            println!("{}", c.report());
+        }
         println!("{}", coord.metrics().report());
         if let Some(ap) = coord.autopilot() {
             println!("{}", ap.report());
@@ -748,6 +810,9 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         classify_row: args.usize_or("classify-row", 960),
         seed: args.u64_or("seed", 0x10AD),
     };
+    if args.get("baseline-connect").is_some() && args.get("ramp").is_some() {
+        bail!("--baseline-connect compares fixed-rate passes; drop --ramp");
+    }
     // --ramp sweeps the arrival rate over phases; otherwise one
     // fixed-rate pass. Both paths share the shutdown/exit-code tail.
     let steps = match args.get("ramp") {
@@ -787,14 +852,47 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
             );
             let report = loadgen::run(&cfg)?;
             print!("{}", report.render());
-            let json = report.summary_json("open-loop e2e latency (scheduled->response)");
+            // --baseline-connect: the same fixed-rate pass against a
+            // node that owns the keys locally; p99(forwarded) over
+            // p99(local) is the forward-hop overhead number the
+            // regression gate tracks.
+            let baseline = match args.get("baseline-connect") {
+                Some(baddr) => {
+                    println!(
+                        "baseline loadgen -> {baddr} (same schedule, locally owned keys)"
+                    );
+                    let base = loadgen::run(&LoadgenConfig {
+                        addr: baddr.to_string(),
+                        ..cfg.clone()
+                    })?;
+                    print!("{}", base.render());
+                    println!(
+                        "forwarded_vs_local_p99_ratio {:.3} (forwarded p99 {:.3}ms / \
+                         local p99 {:.3}ms)",
+                        loadgen::forwarded_vs_local_p99_ratio(&report, &base),
+                        report.latency.p99 * 1e3,
+                        base.latency.p99 * 1e3
+                    );
+                    Some(base)
+                }
+                None => None,
+            };
+            let json = match &baseline {
+                Some(base) => loadgen::comparison_summary_json(&report, base),
+                None => report.summary_json("open-loop e2e latency (scheduled->response)"),
+            };
             bench::write_summary("BENCH_loadgen.json", &json);
             bench::append_history("BENCH_history.jsonl", &json);
-            vec![loadgen::RampStep { rps: cfg.rps, report }]
+            let mut steps = vec![loadgen::RampStep { rps: cfg.rps, report }];
+            steps.extend(baseline.map(|report| loadgen::RampStep { rps: cfg.rps, report }));
+            steps
         }
     };
     if args.flag("shutdown") {
         loadgen::send_shutdown(addr)?;
+        if let Some(baddr) = args.get("baseline-connect") {
+            loadgen::send_shutdown(baddr)?;
+        }
         println!("server drained (shutdown frame acked)");
     }
     let protocol_errors: usize = steps.iter().map(|s| s.report.protocol_errors).sum();

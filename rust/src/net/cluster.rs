@@ -1,0 +1,744 @@
+//! Multi-node serving: ring membership, request forwarding, and peer
+//! health for a set of `serve --listen` processes naming each other
+//! with `--peer`.
+//!
+//! **Ownership.** Every member sorts the full membership (its own
+//! advertised address plus its peers) and ranks it per [`ModelKey`]
+//! with [`placement::rank_nodes`] — the same rendezvous hash the
+//! engine-shard placement uses, scored over `(node, shard)` virtual
+//! slots. The top-ranked member owns the key; the rest of the ranking
+//! is the retry-on-next-replica order. Because scores hash node
+//! *names*, every member computes the same ranking from the same
+//! membership, with no coordination traffic.
+//!
+//! **Forwarding.** A front door that receives a request for a key it
+//! does not own opens a connection to the owner and relays the request
+//! as a [`ClientFrame::Forward`] — original id, *remaining* deadline
+//! budget, quality hint intact — and unwraps the peer's
+//! [`ServerFrame::Forwarded`] reply. Transport failures and
+//! unknown-model rejections walk down the ranking (bounded by
+//! `max_forward_tries`); when every candidate fails, the caller serves
+//! locally if it can, or answers a typed rejection. Forwards are never
+//! re-forwarded, so the hop count is at most one.
+//!
+//! **Health.** A prober thread pings every peer each `probe_interval`
+//! with the ordinary `ping` control frame. A missed probe (connect
+//! failure or no `pong` within `probe_timeout`) moves the peer
+//! `Alive → Suspect`; `dead_after_misses` consecutive misses move it
+//! to `Dead`, which removes it from forward candidate lists until a
+//! probe succeeds again (`→ Alive`, misses reset). A refused forward
+//! connection marks the peer `Dead` immediately — that is what makes
+//! drain-on-shutdown rehome keys promptly: the drained process closed
+//! its listener, the next forward gets `ECONNREFUSED`, and survivors
+//! take over its keys on the spot.
+//!
+//! Every outbound connection (forward and probe alike) passes through
+//! the [`FaultPolicy`] installed with [`Cluster::set_fault_policy`] —
+//! the deterministic fault-injection shim the cluster test harness
+//! drives (see [`crate::net::fault`]).
+
+use crate::catalog::ModelKey;
+use crate::coordinator::{placement, Rejection};
+use crate::net::fault::{FaultPolicy, FaultedStream};
+use crate::net::proto::{self, ClientFrame, FrameReader, Request, ServerFrame, MAX_FRAME};
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Cluster membership and failure-detection knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// This node's advertised `host:port` (what peers dial).
+    pub node: String,
+    /// The other members' advertised addresses.
+    pub peers: Vec<String>,
+    /// Virtual `(node, shard)` slots per member on the ownership ring.
+    pub slots_per_node: usize,
+    /// How often the prober pings every peer.
+    pub probe_interval: Duration,
+    /// Connect + pong budget of one probe.
+    pub probe_timeout: Duration,
+    /// Consecutive missed probes before a `Suspect` peer is `Dead`.
+    pub dead_after_misses: u32,
+    /// TCP connect budget of one forward attempt.
+    pub forward_connect_timeout: Duration,
+    /// Reply budget of one forward attempt (clamped to the request's
+    /// remaining deadline when it has one).
+    pub forward_read_timeout: Duration,
+    /// Upper bound on peers tried per request (the "bounded" in
+    /// bounded retry-on-next-replica).
+    pub max_forward_tries: usize,
+    /// Largest accepted reply frame.
+    pub max_frame: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            node: String::new(),
+            peers: Vec::new(),
+            slots_per_node: 8,
+            probe_interval: Duration::from_millis(500),
+            probe_timeout: Duration::from_millis(250),
+            dead_after_misses: 2,
+            forward_connect_timeout: Duration::from_millis(500),
+            forward_read_timeout: Duration::from_secs(5),
+            max_forward_tries: 2,
+            max_frame: MAX_FRAME,
+        }
+    }
+}
+
+/// Failure-detector verdict on one peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerState {
+    /// Answering probes; a full forward candidate.
+    Alive,
+    /// Missed at least one probe; still routed to (it may just be
+    /// slow), but one more miss streak away from `Dead`.
+    Suspect,
+    /// Missed `dead_after_misses` probes (or refused a connection);
+    /// removed from candidate lists until it pongs again.
+    Dead,
+}
+
+struct PeerInfo {
+    state: PeerState,
+    misses: u32,
+}
+
+/// Counters the cluster tests and the metrics report read.
+#[derive(Default)]
+pub struct ClusterStats {
+    /// Forward attempts that got a `Forwarded` reply back.
+    pub forwards_ok: AtomicU64,
+    /// Attempts abandoned for the next candidate (transport failure,
+    /// timeout, or an unknown-model rejection from the peer).
+    pub forward_retries: AtomicU64,
+    /// Requests whose deadline budget ran out before or during the
+    /// forward hop.
+    pub forward_expired: AtomicU64,
+    /// Requests that exhausted every candidate (the caller falls back
+    /// to local serving or a typed rejection).
+    pub forward_exhausted: AtomicU64,
+    /// Successful probe round-trips.
+    pub probes_ok: AtomicU64,
+    /// Missed probes.
+    pub probes_missed: AtomicU64,
+    /// `Dead → Alive` recoveries observed (probe or forward).
+    pub peer_recoveries: AtomicU64,
+}
+
+struct Inner {
+    cfg: ClusterConfig,
+    /// Sorted full membership (self included) — the canonical slot
+    /// order every member agrees on.
+    members: Vec<String>,
+    peers: Mutex<BTreeMap<String, PeerInfo>>,
+    fault: Mutex<Option<Arc<FaultPolicy>>>,
+    stop: AtomicBool,
+    stats: ClusterStats,
+}
+
+/// How one request should be served, per the ring.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RoutePlan {
+    /// This node owns the key (or is its best live fallback).
+    Local,
+    /// Try these peers in order; on exhaustion fall back to local
+    /// serving when the key is registered here.
+    Forward(Vec<String>),
+}
+
+/// Terminal outcome of a forward walk. `retries` counts the candidates
+/// abandoned along the way (transport failures or unknown-model
+/// refusals) so the caller can mirror them into its own metrics.
+pub enum ForwardOutcome {
+    /// A peer answered: the unwrapped reply to relay (original id).
+    Replied { node: String, frame: ServerFrame, retries: usize },
+    /// The deadline budget ran out en route.
+    Expired,
+    /// Every candidate failed or refused the key.
+    Exhausted { retries: usize },
+}
+
+/// A running cluster member: ring routing + health prober. Dropping it
+/// stops and joins the prober.
+pub struct Cluster {
+    inner: Arc<Inner>,
+    prober: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Cluster {
+    /// Start a member: membership is `cfg.node` + `cfg.peers`, and the
+    /// prober begins pinging immediately (peers start `Alive` — a new
+    /// member assumes the ring is up until told otherwise).
+    pub fn start(cfg: ClusterConfig) -> Cluster {
+        let mut members: Vec<String> = cfg.peers.iter().cloned().chain([cfg.node.clone()]).collect();
+        members.sort();
+        members.dedup();
+        let peers: BTreeMap<String, PeerInfo> = cfg
+            .peers
+            .iter()
+            .filter(|p| **p != cfg.node)
+            .map(|p| (p.clone(), PeerInfo { state: PeerState::Alive, misses: 0 }))
+            .collect();
+        let inner = Arc::new(Inner {
+            cfg,
+            members,
+            peers: Mutex::new(peers),
+            fault: Mutex::new(None),
+            stop: AtomicBool::new(false),
+            stats: ClusterStats::default(),
+        });
+        let prober = if inner.cfg.peers.is_empty() {
+            None
+        } else {
+            let probe_inner = inner.clone();
+            Some(
+                thread::Builder::new()
+                    .name("ppc-cluster-probe".to_string())
+                    .spawn(move || probe_loop(probe_inner))
+                    .expect("spawn prober"),
+            )
+        };
+        Cluster { inner, prober: Mutex::new(prober) }
+    }
+
+    /// This node's advertised address.
+    pub fn node(&self) -> &str {
+        &self.inner.cfg.node
+    }
+
+    /// The sorted full membership, self included.
+    pub fn members(&self) -> &[String] {
+        &self.inner.members
+    }
+
+    /// Counters for tests and the report line.
+    pub fn stats(&self) -> &ClusterStats {
+        &self.inner.stats
+    }
+
+    /// Failure-detector verdict on `peer` (`None` for non-members).
+    pub fn peer_state(&self, peer: &str) -> Option<PeerState> {
+        self.inner.peers.lock().unwrap_or_else(|e| e.into_inner()).get(peer).map(|p| p.state)
+    }
+
+    /// Install the deterministic fault shim on every future outbound
+    /// connection (tests only; production never calls this).
+    pub fn set_fault_policy(&self, policy: Arc<FaultPolicy>) {
+        *self.inner.fault.lock().unwrap_or_else(|e| e.into_inner()) = Some(policy);
+    }
+
+    /// Stop and join the prober (also done on drop). Forwarding keeps
+    /// working — a draining node may still need to flush in-flight
+    /// forwards — but no more probes are sent.
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.prober.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            let _ = h.join();
+        }
+    }
+
+    /// The ring owner of `key` — purely positional, ignoring liveness
+    /// (every member answers the same; the liveness-aware view is
+    /// [`Cluster::plan`]).
+    pub fn owner(&self, key: ModelKey) -> &str {
+        let rank = placement::rank_nodes(key, &self.inner.members, self.inner.cfg.slots_per_node);
+        &self.inner.members[rank[0]]
+    }
+
+    /// Decide how to serve `key` given whether this node registers it:
+    /// walk the ring ranking, skipping `Dead` peers and (when
+    /// unregistered) ourselves; the first live stop is either us
+    /// (`Local`) or a bounded candidate list (`Forward`).
+    pub fn plan(&self, key: ModelKey, locally_registered: bool) -> RoutePlan {
+        let rank = placement::rank_nodes(key, &self.inner.members, self.inner.cfg.slots_per_node);
+        let peers = self.inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+        let mut tries = Vec::new();
+        for &idx in &rank {
+            let member = &self.inner.members[idx];
+            if *member == self.inner.cfg.node {
+                if locally_registered && tries.is_empty() {
+                    return RoutePlan::Local;
+                }
+                continue;
+            }
+            let dead = peers.get(member).map(|p| p.state == PeerState::Dead).unwrap_or(false);
+            if !dead {
+                tries.push(member.clone());
+                if tries.len() >= self.inner.cfg.max_forward_tries {
+                    break;
+                }
+            }
+        }
+        if tries.is_empty() {
+            // every peer ahead of us is dead: we are the survivor
+            RoutePlan::Local
+        } else {
+            RoutePlan::Forward(tries)
+        }
+    }
+
+    /// Walk `candidates` with `req`, shrinking the deadline budget by
+    /// the time already spent (`received` is when the front door took
+    /// the request in). Returns the first peer reply, or a typed
+    /// expiry/exhaustion for the caller to translate.
+    pub fn forward(&self, req: &Request, received: Instant, candidates: &[String]) -> ForwardOutcome {
+        let mut retries = 0usize;
+        for peer in candidates {
+            // the budget shrinks at every hop: what is left when this
+            // attempt starts is what the peer gets to spend
+            let remaining_ms = match req.deadline_ms {
+                Some(ms) => {
+                    let spent = received.elapsed().as_millis() as u64;
+                    if spent >= ms {
+                        self.inner.stats.forward_expired.fetch_add(1, Ordering::Relaxed);
+                        return ForwardOutcome::Expired;
+                    }
+                    Some(ms - spent)
+                }
+                None => None,
+            };
+            match self.forward_once(req, remaining_ms, peer) {
+                Ok(ServerFrame::Forwarded { node, frame }) => {
+                    self.mark_alive(peer);
+                    if let ServerFrame::Rejected { rejection: Rejection::UnknownModel, .. } = *frame
+                    {
+                        // the peer is healthy but does not serve this
+                        // key: keep walking the ranking
+                        retries += 1;
+                        self.inner.stats.forward_retries.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    self.inner.stats.forwards_ok.fetch_add(1, Ordering::Relaxed);
+                    return ForwardOutcome::Replied { node, frame: *frame, retries };
+                }
+                Ok(_) => {
+                    // a peer that answers a Forward with anything but
+                    // Forwarded is not speaking the cluster protocol
+                    retries += 1;
+                    self.inner.stats.forward_retries.fetch_add(1, Ordering::Relaxed);
+                    self.mark_suspect(peer);
+                }
+                Err(e) => {
+                    retries += 1;
+                    self.inner.stats.forward_retries.fetch_add(1, Ordering::Relaxed);
+                    if e.kind() == io::ErrorKind::ConnectionRefused {
+                        // nothing is listening: the peer drained or
+                        // died — rehome its keys immediately
+                        self.mark_dead(peer);
+                    } else {
+                        self.mark_suspect(peer);
+                    }
+                }
+            }
+        }
+        self.inner.stats.forward_exhausted.fetch_add(1, Ordering::Relaxed);
+        ForwardOutcome::Exhausted { retries }
+    }
+
+    /// One attempt against one peer: connect, send the `Forward`
+    /// frame (with the shrunk budget), wait for the `Forwarded` reply.
+    fn forward_once(
+        &self,
+        req: &Request,
+        remaining_ms: Option<u64>,
+        peer: &str,
+    ) -> io::Result<ServerFrame> {
+        let fault = self.inner.fault.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let poll = Duration::from_millis(50);
+        let mut stream = FaultedStream::connect(
+            peer,
+            fault.as_deref(),
+            self.inner.cfg.forward_connect_timeout,
+            poll,
+        )?;
+        stream.set_read_timeout(Some(poll))?;
+        let hop = Request {
+            id: req.id,
+            job: req.job.clone(),
+            quality: req.quality,
+            deadline_ms: remaining_ms,
+        };
+        let frame = ClientFrame::Forward { from: self.inner.cfg.node.clone(), req: hop };
+        proto::write_frame(&mut stream, &frame.to_json())?;
+        // the reply budget is the smaller of the configured forward
+        // timeout and the request's remaining deadline
+        let budget = match remaining_ms {
+            Some(ms) => self.inner.cfg.forward_read_timeout.min(Duration::from_millis(ms)),
+            None => self.inner.cfg.forward_read_timeout,
+        };
+        let give_up = Instant::now() + budget;
+        let mut reader = FrameReader::new(stream, self.inner.cfg.max_frame);
+        loop {
+            match reader.poll_frame() {
+                Ok(Some(json)) => match ServerFrame::from_json(&json) {
+                    Ok(f @ ServerFrame::Forwarded { .. }) => return Ok(f),
+                    Ok(_) | Err(_) => {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            "peer answered a forward with a non-forwarded frame",
+                        ))
+                    }
+                },
+                Ok(None) => {
+                    if Instant::now() >= give_up {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!("no forwarded reply from {peer} within {budget:?}"),
+                        ));
+                    }
+                }
+                Err(e) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        format!("forward reply stream from {peer}: {e}"),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn mark_alive(&self, peer: &str) {
+        let mut peers = self.inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = peers.get_mut(peer) {
+            if p.state == PeerState::Dead {
+                self.inner.stats.peer_recoveries.fetch_add(1, Ordering::Relaxed);
+            }
+            p.state = PeerState::Alive;
+            p.misses = 0;
+        }
+    }
+
+    fn mark_suspect(&self, peer: &str) {
+        let mut peers = self.inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = peers.get_mut(peer) {
+            p.misses += 1;
+            p.state = if p.misses >= self.inner.cfg.dead_after_misses {
+                PeerState::Dead
+            } else {
+                PeerState::Suspect
+            };
+        }
+    }
+
+    fn mark_dead(&self, peer: &str) {
+        let mut peers = self.inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = peers.get_mut(peer) {
+            p.misses = p.misses.max(self.inner.cfg.dead_after_misses);
+            p.state = PeerState::Dead;
+        }
+    }
+
+    /// One-line health + forwarding summary for the metrics report.
+    pub fn report(&self) -> String {
+        let peers = self.inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+        let states: Vec<String> =
+            peers.iter().map(|(a, p)| format!("{a}={:?}", p.state).to_lowercase()).collect();
+        let s = &self.inner.stats;
+        format!(
+            "cluster: node={} peers=[{}] forwards_ok={} retries={} expired={} exhausted={} \
+             probes_ok={} probes_missed={} recoveries={}",
+            self.inner.cfg.node,
+            states.join(", "),
+            s.forwards_ok.load(Ordering::Relaxed),
+            s.forward_retries.load(Ordering::Relaxed),
+            s.forward_expired.load(Ordering::Relaxed),
+            s.forward_exhausted.load(Ordering::Relaxed),
+            s.probes_ok.load(Ordering::Relaxed),
+            s.probes_missed.load(Ordering::Relaxed),
+            s.peer_recoveries.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The failure detector: ping every peer each interval, walking the
+/// `Alive → Suspect → Dead` machine on misses and straight back to
+/// `Alive` on a pong.
+fn probe_loop(inner: Arc<Inner>) {
+    let nap = Duration::from_millis(20);
+    loop {
+        if inner.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let peers: Vec<String> = {
+            inner.peers.lock().unwrap_or_else(|e| e.into_inner()).keys().cloned().collect()
+        };
+        for peer in &peers {
+            if inner.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            if probe_once(&inner, peer) {
+                inner.stats.probes_ok.fetch_add(1, Ordering::Relaxed);
+                let mut map = inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(p) = map.get_mut(peer) {
+                    if p.state == PeerState::Dead {
+                        inner.stats.peer_recoveries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    p.state = PeerState::Alive;
+                    p.misses = 0;
+                }
+            } else {
+                inner.stats.probes_missed.fetch_add(1, Ordering::Relaxed);
+                let mut map = inner.peers.lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(p) = map.get_mut(peer) {
+                    p.misses += 1;
+                    p.state = if p.misses >= inner.cfg.dead_after_misses {
+                        PeerState::Dead
+                    } else {
+                        PeerState::Suspect
+                    };
+                }
+            }
+        }
+        // nap in small slices so stop() never waits a whole interval
+        let wake = Instant::now() + inner.cfg.probe_interval;
+        while Instant::now() < wake {
+            if inner.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            thread::sleep(nap);
+        }
+    }
+}
+
+/// One ping/pong round trip under the probe budget.
+fn probe_once(inner: &Inner, peer: &str) -> bool {
+    let fault = inner.fault.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let poll = Duration::from_millis(20);
+    let mut stream =
+        match FaultedStream::connect(peer, fault.as_deref(), inner.cfg.probe_timeout, poll) {
+            Ok(s) => s,
+            Err(_) => return false,
+        };
+    if stream.set_read_timeout(Some(poll)).is_err() {
+        return false;
+    }
+    if proto::write_frame(&mut stream, &ClientFrame::Ping.to_json()).is_err() {
+        return false;
+    }
+    let give_up = Instant::now() + inner.cfg.probe_timeout;
+    let mut reader = FrameReader::new(stream, inner.cfg.max_frame);
+    loop {
+        match reader.poll_frame() {
+            Ok(Some(json)) => {
+                return matches!(ServerFrame::from_json(&json), Ok(ServerFrame::Pong))
+            }
+            Ok(None) => {
+                if Instant::now() >= give_up {
+                    return false;
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catalog::{Quality, Tensor};
+    use crate::coordinator::Job;
+    use std::net::TcpListener;
+
+    fn fast_cfg(node: &str, peers: Vec<String>) -> ClusterConfig {
+        ClusterConfig {
+            node: node.to_string(),
+            peers,
+            probe_interval: Duration::from_millis(30),
+            probe_timeout: Duration::from_millis(120),
+            forward_connect_timeout: Duration::from_millis(200),
+            forward_read_timeout: Duration::from_millis(500),
+            ..ClusterConfig::default()
+        }
+    }
+
+    #[test]
+    fn members_agree_on_owners_regardless_of_peer_listing_order() {
+        let addrs =
+            ["127.0.0.1:4501".to_string(), "127.0.0.1:4502".to_string(), "127.0.0.1:4503".to_string()];
+        // no prober traffic: peers are unreachable, but owner() is
+        // positional and never dials
+        let a = Cluster::start(ClusterConfig {
+            node: addrs[0].clone(),
+            peers: vec![addrs[2].clone(), addrs[1].clone()],
+            probe_interval: Duration::from_secs(3600),
+            ..ClusterConfig::default()
+        });
+        let b = Cluster::start(ClusterConfig {
+            node: addrs[1].clone(),
+            peers: vec![addrs[0].clone(), addrs[2].clone()],
+            probe_interval: Duration::from_secs(3600),
+            ..ClusterConfig::default()
+        });
+        assert_eq!(a.members(), b.members(), "sorted membership is canonical");
+        let mut owners = std::collections::BTreeSet::new();
+        for key in ModelKey::catalog() {
+            assert_eq!(a.owner(key), b.owner(key), "{key}: split-brain ownership");
+            owners.insert(a.owner(key).to_string());
+        }
+        assert!(owners.len() > 1, "9 keys over 3 nodes should spread, got {owners:?}");
+    }
+
+    #[test]
+    fn plan_routes_owned_keys_local_and_foreign_keys_to_the_owner() {
+        let me = "127.0.0.1:4601".to_string();
+        let other = "127.0.0.1:4602".to_string();
+        let c = Cluster::start(ClusterConfig {
+            node: me.clone(),
+            peers: vec![other.clone()],
+            probe_interval: Duration::from_secs(3600),
+            ..ClusterConfig::default()
+        });
+        for key in ModelKey::catalog() {
+            let plan = c.plan(key, true);
+            if c.owner(key) == me {
+                assert_eq!(plan, RoutePlan::Local, "{key} is ours");
+            } else {
+                assert_eq!(plan, RoutePlan::Forward(vec![other.clone()]), "{key} is theirs");
+            }
+            // a key we do not register never plans Local while a live
+            // peer exists
+            assert_eq!(c.plan(key, false), RoutePlan::Forward(vec![other.clone()]));
+        }
+    }
+
+    #[test]
+    fn dead_peers_drop_out_of_plans_until_they_recover() {
+        let me = "127.0.0.1:4701".to_string();
+        let other = "127.0.0.1:4702".to_string();
+        let c = Cluster::start(ClusterConfig {
+            node: me.clone(),
+            peers: vec![other.clone()],
+            probe_interval: Duration::from_secs(3600),
+            ..ClusterConfig::default()
+        });
+        let theirs = ModelKey::catalog()
+            .into_iter()
+            .find(|&k| c.owner(k) != me)
+            .expect("some key lands on the peer");
+        assert_eq!(c.plan(theirs, true), RoutePlan::Forward(vec![other.clone()]));
+        c.mark_dead(&other);
+        assert_eq!(c.plan(theirs, true), RoutePlan::Local, "dead owner: we are the survivor");
+        c.mark_alive(&other);
+        assert_eq!(c.plan(theirs, true), RoutePlan::Forward(vec![other]), "recovered");
+    }
+
+    /// A scripted peer for the failure-detector test: answers pings
+    /// while `answer` is set, otherwise accepts and stays silent.
+    fn scripted_pinger(answer: Arc<AtomicBool>) -> (String, Arc<AtomicBool>, thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_stop = stop.clone();
+        listener.set_nonblocking(true).unwrap();
+        let h = thread::spawn(move || {
+            while !t_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        if answer.load(Ordering::Relaxed) {
+                            let _ = s.set_read_timeout(Some(Duration::from_millis(100)));
+                            let mut rd = FrameReader::new(s.try_clone().unwrap(), MAX_FRAME);
+                            if rd.next_frame().is_ok() {
+                                let _ = proto::write_frame(&mut s, &ServerFrame::Pong.to_json());
+                            }
+                        }
+                        // silent mode: accept and drop replies entirely
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(5)),
+                }
+            }
+        });
+        (addr, stop, h)
+    }
+
+    #[test]
+    fn probe_misses_walk_alive_suspect_dead_and_a_pong_recovers() {
+        let answer = Arc::new(AtomicBool::new(true));
+        let (addr, stop, h) = scripted_pinger(answer.clone());
+        let c = Cluster::start(fast_cfg("127.0.0.1:1", vec![addr.clone()]));
+        let wait_for = |want: PeerState, within: Duration| {
+            let give_up = Instant::now() + within;
+            while Instant::now() < give_up {
+                if c.peer_state(&addr) == Some(want) {
+                    return true;
+                }
+                thread::sleep(Duration::from_millis(10));
+            }
+            false
+        };
+        // answering: stays (or becomes) Alive
+        assert!(wait_for(PeerState::Alive, Duration::from_secs(5)), "never alive");
+        // go silent: Suspect after one miss, Dead after the streak
+        answer.store(false, Ordering::Relaxed);
+        assert!(wait_for(PeerState::Dead, Duration::from_secs(10)), "never died");
+        // resume: straight back to Alive, recovery counted
+        answer.store(true, Ordering::Relaxed);
+        assert!(wait_for(PeerState::Alive, Duration::from_secs(10)), "never recovered");
+        assert!(c.stats().peer_recoveries.load(Ordering::Relaxed) >= 1);
+        assert!(c.stats().probes_missed.load(Ordering::Relaxed) >= 2);
+        c.stop();
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn forwarding_an_already_expired_budget_is_a_typed_expiry_without_dialing() {
+        let c = Cluster::start(ClusterConfig {
+            node: "127.0.0.1:1".to_string(),
+            peers: vec!["127.0.0.1:2".to_string()],
+            probe_interval: Duration::from_secs(3600),
+            ..ClusterConfig::default()
+        });
+        let req = Request {
+            id: 9,
+            job: Job::Denoise { image: Tensor::scalar(4) },
+            quality: Quality::Balanced,
+            deadline_ms: Some(5),
+        };
+        let received = Instant::now() - Duration::from_millis(50);
+        match c.forward(&req, received, &["127.0.0.1:2".to_string()]) {
+            ForwardOutcome::Expired => {}
+            _ => panic!("a spent budget must expire, not dial"),
+        }
+        assert_eq!(c.stats().forward_expired.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn refused_forwards_mark_the_peer_dead_and_exhaust() {
+        // bind-then-drop guarantees nothing listens on the port
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let c = Cluster::start(ClusterConfig {
+            node: "127.0.0.1:1".to_string(),
+            peers: vec![dead_addr.clone()],
+            probe_interval: Duration::from_secs(3600),
+            ..ClusterConfig::default()
+        });
+        let req = Request {
+            id: 1,
+            job: Job::Denoise { image: Tensor::scalar(2) },
+            quality: Quality::Economy,
+            deadline_ms: None,
+        };
+        match c.forward(&req, Instant::now(), &[dead_addr.clone()]) {
+            ForwardOutcome::Exhausted { retries: 1 } => {}
+            _ => panic!("refused peer must exhaust after one retry"),
+        }
+        assert_eq!(c.peer_state(&dead_addr), Some(PeerState::Dead), "refused => dead");
+        assert_eq!(c.stats().forward_exhausted.load(Ordering::Relaxed), 1);
+    }
+}

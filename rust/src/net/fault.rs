@@ -1,0 +1,331 @@
+//! Deterministic fault injection for cluster connections.
+//!
+//! The cluster test harness needs to ask "what happens to forwarded
+//! traffic when the wire misbehaves?" without depending on timing luck.
+//! A [`FaultPolicy`] is a small ordered rule table a test installs on a
+//! [`crate::net::cluster::Cluster`]; every **outbound** cluster
+//! connection (forward or health probe) consults it at connect time and
+//! gets a [`FaultAction`]:
+//!
+//! - `Delay(d)` — the connection works, but its first write stalls `d`
+//!   (one stall per connection = one per forwarded request, since the
+//!   cluster opens a fresh link per forward; the deadline-budget tests
+//!   use it to burn the forward hop's budget).
+//! - `Drop` — the connect fails immediately with a refused-style error
+//!   (models a dead peer before SYN).
+//! - `Truncate(n)` — the connection delivers `n` bytes and is then
+//!   severed mid-frame (models a crash between header and body).
+//! - `BlackHole` — the connect "succeeds" but writes go nowhere and
+//!   reads time out forever (models a partitioned peer: no RST, no
+//!   data; only probe/read timeouts can detect it).
+//!
+//! Rules match on a peer-address substring and carry a use budget and a
+//! seeded probability, so a test can say "the first 2 connections to
+//! 127.0.0.1:4501 black-hole, everything else is clean" and get exactly
+//! that on every run. With probability 1.0 (the default) the policy is
+//! fully deterministic; fractional probabilities draw from the policy's
+//! own seeded [`Rng`], so a run is reproducible for a fixed seed and
+//! connect order.
+
+use crate::util::prng::Rng;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What to do to one matched connection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Stall every frame write by this much.
+    Delay(Duration),
+    /// Refuse the connection outright.
+    Drop,
+    /// Deliver this many bytes (writes), then sever the connection.
+    Truncate(usize),
+    /// Accept writes into the void and never produce a byte back.
+    BlackHole,
+}
+
+struct Rule {
+    /// Substring of the peer address this rule applies to ("" = all).
+    peer: String,
+    action: FaultAction,
+    /// Connections left for this rule (`usize::MAX` = unlimited).
+    remaining: usize,
+    /// Chance the rule fires on a matched connection, 0.0..=1.0.
+    probability: f64,
+}
+
+/// An ordered, seeded fault-rule table. First matching rule with budget
+/// left wins; unmatched connections pass through untouched.
+pub struct FaultPolicy {
+    inner: Mutex<PolicyState>,
+}
+
+struct PolicyState {
+    rules: Vec<Rule>,
+    rng: Rng,
+    injected: u64,
+}
+
+impl FaultPolicy {
+    /// An empty policy (every connection clean) drawing probability
+    /// coins from `seed`.
+    pub fn new(seed: u64) -> FaultPolicy {
+        FaultPolicy { inner: Mutex::new(PolicyState { rules: Vec::new(), rng: Rng::new(seed), injected: 0 }) }
+    }
+
+    /// Apply `action` to every connection whose peer address contains
+    /// `peer` (empty string matches all), without a use limit.
+    pub fn rule(self, peer: &str, action: FaultAction) -> FaultPolicy {
+        self.rule_n(peer, action, usize::MAX)
+    }
+
+    /// Like [`FaultPolicy::rule`], but the rule expires after `n`
+    /// matched connections (later connections fall through to the next
+    /// rule, or run clean).
+    pub fn rule_n(self, peer: &str, action: FaultAction, n: usize) -> FaultPolicy {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).rules.push(Rule {
+            peer: peer.to_string(),
+            action,
+            remaining: n,
+            probability: 1.0,
+        });
+        self
+    }
+
+    /// Like [`FaultPolicy::rule`], but the rule only fires with
+    /// probability `p` per matched connection (seeded: same seed, same
+    /// connect order, same outcome).
+    pub fn rule_p(self, peer: &str, action: FaultAction, p: f64) -> FaultPolicy {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).rules.push(Rule {
+            peer: peer.to_string(),
+            action,
+            remaining: usize::MAX,
+            probability: p.clamp(0.0, 1.0),
+        });
+        self
+    }
+
+    /// Decide the fate of one outbound connection to `peer`.
+    pub fn decide(&self, peer: &str) -> Option<FaultAction> {
+        let mut st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        for i in 0..st.rules.len() {
+            if st.rules[i].remaining == 0 || !peer.contains(st.rules[i].peer.as_str()) {
+                continue;
+            }
+            if st.rules[i].probability < 1.0 {
+                let coin = st.rng.below(1 << 24) as f64 / (1u64 << 24) as f64;
+                if coin >= st.rules[i].probability {
+                    continue;
+                }
+            }
+            if st.rules[i].remaining != usize::MAX {
+                st.rules[i].remaining -= 1;
+            }
+            st.injected += 1;
+            return Some(st.rules[i].action);
+        }
+        None
+    }
+
+    /// How many connections a rule has been applied to so far.
+    pub fn injected(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).injected
+    }
+}
+
+/// A cluster-side connection with a [`FaultAction`] applied. Created by
+/// [`FaultedStream::connect`]; behaves like a `TcpStream` for the clean
+/// and `Delay` cases and emulates the failure for the rest.
+pub enum FaultedStream {
+    Real {
+        stream: TcpStream,
+        /// Per-write stall, if any.
+        delay: Option<Duration>,
+        /// Bytes still deliverable before the connection severs.
+        truncate_left: Option<usize>,
+    },
+    /// Writes vanish; reads time out forever (after `poll` per call, so
+    /// a reader with a deadline can give up instead of spinning).
+    BlackHole { poll: Duration },
+}
+
+impl FaultedStream {
+    /// Connect to `addr` under `policy` (pass `None` for a clean
+    /// production connection). `timeout` bounds the TCP connect;
+    /// `poll` is the simulated read-timeout cadence of a black hole.
+    pub fn connect(
+        addr: &str,
+        policy: Option<&FaultPolicy>,
+        timeout: Duration,
+        poll: Duration,
+    ) -> io::Result<FaultedStream> {
+        let action = policy.and_then(|p| p.decide(addr));
+        if action == Some(FaultAction::Drop) {
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionRefused,
+                format!("fault injection: connection to {addr} dropped"),
+            ));
+        }
+        if action == Some(FaultAction::BlackHole) {
+            // no real socket at all: the peer never sees this "connection"
+            return Ok(FaultedStream::BlackHole { poll });
+        }
+        let sock_addr = addr
+            .parse::<std::net::SocketAddr>()
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, format!("{addr}: {e}")))?;
+        let stream = TcpStream::connect_timeout(&sock_addr, timeout)?;
+        let _ = stream.set_nodelay(true);
+        Ok(FaultedStream::Real {
+            stream,
+            delay: match action {
+                Some(FaultAction::Delay(d)) => Some(d),
+                _ => None,
+            },
+            truncate_left: match action {
+                Some(FaultAction::Truncate(n)) => Some(n),
+                _ => None,
+            },
+        })
+    }
+
+    /// Set the read timeout of the underlying socket (no-op for a
+    /// black hole, whose reads always time out).
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            FaultedStream::Real { stream, .. } => stream.set_read_timeout(t),
+            FaultedStream::BlackHole { .. } => Ok(()),
+        }
+    }
+}
+
+impl Write for FaultedStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            FaultedStream::Real { stream, delay, truncate_left } => {
+                if let Some(d) = delay {
+                    std::thread::sleep(*d);
+                    // one stall per connection: the cluster opens a
+                    // fresh link per forward, so this is one stall per
+                    // forwarded request
+                    *delay = None;
+                }
+                if let Some(left) = truncate_left {
+                    if *left == 0 {
+                        let _ = stream.shutdown(Shutdown::Both);
+                        return Err(io::Error::new(
+                            io::ErrorKind::BrokenPipe,
+                            "fault injection: connection truncated",
+                        ));
+                    }
+                    let n = stream.write(&buf[..buf.len().min(*left)])?;
+                    *left -= n;
+                    if *left == 0 {
+                        let _ = stream.shutdown(Shutdown::Both);
+                    }
+                    return Ok(n);
+                }
+                stream.write(buf)
+            }
+            FaultedStream::BlackHole { .. } => Ok(buf.len()),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            FaultedStream::Real { stream, .. } => stream.flush(),
+            FaultedStream::BlackHole { .. } => Ok(()),
+        }
+    }
+}
+
+impl Read for FaultedStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            FaultedStream::Real { stream, .. } => stream.read(buf),
+            FaultedStream::BlackHole { poll } => {
+                std::thread::sleep(*poll);
+                Err(io::Error::new(io::ErrorKind::TimedOut, "fault injection: black hole"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn rules_match_in_order_with_budgets() {
+        let p = FaultPolicy::new(7)
+            .rule_n("127.0.0.1:9999", FaultAction::Drop, 2)
+            .rule("", FaultAction::Delay(Duration::from_millis(1)));
+        assert_eq!(p.decide("127.0.0.1:9999"), Some(FaultAction::Drop));
+        assert_eq!(p.decide("127.0.0.1:9999"), Some(FaultAction::Drop));
+        // budget exhausted: falls through to the catch-all
+        assert_eq!(p.decide("127.0.0.1:9999"), Some(FaultAction::Delay(Duration::from_millis(1))));
+        assert_eq!(p.decide("10.0.0.1:1"), Some(FaultAction::Delay(Duration::from_millis(1))));
+        assert_eq!(p.injected(), 4);
+    }
+
+    #[test]
+    fn seeded_probability_is_reproducible() {
+        let run = || {
+            let p = FaultPolicy::new(0x5EED).rule_p("", FaultAction::Drop, 0.5);
+            (0..64).map(|_| p.decide("x").is_some()).collect::<Vec<bool>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed, same coin flips");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!(hits > 10 && hits < 54, "p=0.5 over 64 draws lands mid-range, got {hits}");
+    }
+
+    #[test]
+    fn drop_refuses_and_black_hole_times_out() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let p = FaultPolicy::new(1).rule_n(&addr, FaultAction::Drop, 1).rule(&addr, FaultAction::BlackHole);
+        let e = FaultedStream::connect(&addr, Some(&p), Duration::from_secs(1), Duration::from_millis(5))
+            .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::ConnectionRefused);
+        let mut bh =
+            FaultedStream::connect(&addr, Some(&p), Duration::from_secs(1), Duration::from_millis(5))
+                .unwrap();
+        assert!(bh.write(b"hello").is_ok(), "black-hole writes are swallowed");
+        let mut buf = [0u8; 4];
+        assert_eq!(bh.read(&mut buf).unwrap_err().kind(), io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn truncate_severs_after_the_budget() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let p = FaultPolicy::new(1).rule(&addr, FaultAction::Truncate(3));
+        let mut s =
+            FaultedStream::connect(&addr, Some(&p), Duration::from_secs(1), Duration::from_millis(5))
+                .unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        assert_eq!(s.write(b"abcdef").unwrap(), 3, "only the budget goes through");
+        let mut got = [0u8; 8];
+        let n = peer.read(&mut got).unwrap();
+        assert_eq!(&got[..n], b"abc");
+        assert!(s.write(b"more").is_err(), "severed after the budget");
+    }
+
+    #[test]
+    fn clean_connections_pass_through() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut s =
+            FaultedStream::connect(&addr, None, Duration::from_secs(1), Duration::from_millis(5))
+                .unwrap();
+        let (mut peer, _) = listener.accept().unwrap();
+        s.write_all(b"ping").unwrap();
+        let mut got = [0u8; 4];
+        peer.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"ping");
+    }
+}

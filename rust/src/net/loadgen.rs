@@ -174,6 +174,53 @@ impl LoadReport {
     }
 }
 
+/// p99 of the forwarded-path run over the p99 of the local-baseline
+/// run — the headline overhead number for the cluster smoke step. A
+/// degenerate baseline (no samples, zero p99) yields 0.0 rather than
+/// an infinity that would wreck the regression gate's history math.
+pub fn forwarded_vs_local_p99_ratio(forwarded: &LoadReport, local: &LoadReport) -> f64 {
+    if local.latency.p99 <= 0.0 || forwarded.latency.n == 0 || local.latency.n == 0 {
+        return 0.0;
+    }
+    forwarded.latency.p99 / local.latency.p99
+}
+
+/// Machine summary for a forwarded-vs-local comparison (`loadgen
+/// --baseline-connect`): the usual fixed-rate metrics for the
+/// forwarded run, one latency row per side, plus the
+/// `forwarded_vs_local_p99_ratio` the regression gate tracks.
+pub fn comparison_summary_json(forwarded: &LoadReport, local: &LoadReport) -> Json {
+    let fwd_row = BenchResult {
+        name: "forwarded (scheduled->response)".to_string(),
+        iters: forwarded.latency.n,
+        summary: forwarded.latency.clone(),
+    };
+    let local_row = BenchResult {
+        name: "local baseline (scheduled->response)".to_string(),
+        iters: local.latency.n,
+        summary: local.latency.clone(),
+    };
+    bench::summary_json(
+        &[&fwd_row, &local_row],
+        &[
+            ("loadgen_throughput_rps", forwarded.throughput_rps()),
+            ("loadgen_p50_ms", forwarded.latency.p50 * 1e3),
+            ("loadgen_p99_ms", forwarded.latency.p99 * 1e3),
+            ("loadgen_p999_ms", forwarded.latency.p999 * 1e3),
+            ("loadgen_shed_rate", forwarded.shed_rate()),
+            ("loadgen_degrade_rate", forwarded.degrade_rate()),
+            ("loadgen_expired_rate", forwarded.expired_rate()),
+            ("loadgen_answered", forwarded.answered as f64),
+            (
+                "loadgen_protocol_errors",
+                (forwarded.protocol_errors + local.protocol_errors) as f64,
+            ),
+            ("baseline_p99_ms", local.latency.p99 * 1e3),
+            ("forwarded_vs_local_p99_ratio", forwarded_vs_local_p99_ratio(forwarded, local)),
+        ],
+    )
+}
+
 /// One phase of an arrival-rate ramp: the offered rate and the full
 /// open-loop report measured while it held.
 #[derive(Clone, Debug)]
@@ -498,6 +545,29 @@ mod tests {
         for bad in ["", "50:400", "50:400:4:9", "0:400:4", "50:-1:4", "50:400:0", "a:b:c"] {
             assert!(parse_ramp(bad).is_err(), "{bad:?} should not parse");
         }
+    }
+
+    #[test]
+    fn comparison_summary_carries_the_ratio_and_both_rows() {
+        let mk = |p99: f64, n: usize| LoadReport {
+            sent: n,
+            answered: n,
+            latency: Summary::of((0..n).map(|_| p99).collect::<Vec<_>>()),
+            wall: Duration::from_secs(1),
+            ..LoadReport::default()
+        };
+        let fwd = mk(0.004, 50);
+        let local = mk(0.002, 50);
+        let r = forwarded_vs_local_p99_ratio(&fwd, &local);
+        assert!((r - 2.0).abs() < 1e-9, "ratio {r}");
+        let j = comparison_summary_json(&fwd, &local);
+        let m = |k: &str| j.get("metrics").unwrap().get(k).unwrap().as_f64().unwrap();
+        assert!((m("forwarded_vs_local_p99_ratio") - 2.0).abs() < 1e-9);
+        assert!((m("baseline_p99_ms") - 2.0).abs() < 1e-9);
+        assert_eq!(j.get("results").unwrap().as_arr().unwrap().len(), 2);
+        // degenerate baseline must not divide by zero
+        let empty = LoadReport::default();
+        assert_eq!(forwarded_vs_local_p99_ratio(&fwd, &empty), 0.0);
     }
 
     #[test]

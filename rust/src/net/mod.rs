@@ -21,12 +21,23 @@
 //!   [`crate::coordinator::Metrics::report`];
 //! - [`loadgen`] — the multi-client open-loop load generator
 //!   (`loadgen` subcommand) whose percentiles stay honest under
-//!   coordinated omission.
+//!   coordinated omission;
+//! - [`cluster`] — multi-node serving: rendezvous-ring key ownership
+//!   over the members, peer-to-peer request forwarding
+//!   (`Forward`/`Forwarded` frames, bounded retry-on-next-replica),
+//!   and ping-based health checking (alive → suspect → dead);
+//! - [`fault`] — the deterministic fault-injection shim the cluster
+//!   test harness installs on outbound connections (delay, drop,
+//!   truncate, black-hole — by seeded rule table).
 
+pub mod cluster;
+pub mod fault;
 pub mod loadgen;
 pub mod proto;
 pub mod server;
 
+pub use cluster::{Cluster, ClusterConfig, ForwardOutcome, PeerState, RoutePlan};
+pub use fault::{FaultAction, FaultPolicy, FaultedStream};
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use proto::{ClientFrame, FrameError, FrameReader, Request, ServerFrame, MAX_FRAME};
 pub use server::{NetServer, NetServerConfig};

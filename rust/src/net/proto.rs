@@ -303,6 +303,19 @@ impl Request {
 #[derive(Clone, Debug)]
 pub enum ClientFrame {
     Request(Request),
+    /// A request relayed peer-to-peer by a cluster front door. Carries
+    /// the forwarding node's advertised address and the original
+    /// request with its **original id** and the **remaining** deadline
+    /// budget (the forwarder subtracts the time the request already
+    /// spent on its floor before re-anchoring, so budgets shrink across
+    /// every hop). The quality hint rides inside the request unchanged.
+    /// Never re-forwarded: the receiver serves it locally or answers
+    /// with a typed rejection.
+    Forward {
+        /// Advertised `host:port` of the forwarding node.
+        from: String,
+        req: Request,
+    },
     /// Ask the server to drain and exit (answered with
     /// [`ServerFrame::ShutdownAck`] after all pipelined replies).
     Shutdown,
@@ -314,6 +327,14 @@ impl ClientFrame {
     pub fn to_json(&self) -> Json {
         match self {
             ClientFrame::Request(r) => r.to_json(),
+            ClientFrame::Forward { from, req } => {
+                let mut j = req.to_json();
+                if let Json::Obj(o) = &mut j {
+                    o.insert("type".to_string(), Json::Str("forward".to_string()));
+                    o.insert("from".to_string(), Json::Str(from.clone()));
+                }
+                j
+            }
             ClientFrame::Shutdown => Json::obj(vec![("type", Json::Str("shutdown".to_string()))]),
             ClientFrame::Ping => Json::obj(vec![("type", Json::Str("ping".to_string()))]),
         }
@@ -322,6 +343,10 @@ impl ClientFrame {
     pub fn from_json(j: &Json) -> Result<ClientFrame> {
         match str_field(j, "type")? {
             "request" => Ok(ClientFrame::Request(Request::from_json(j)?)),
+            "forward" => Ok(ClientFrame::Forward {
+                from: str_field(j, "from")?.to_string(),
+                req: Request::from_json(j)?,
+            }),
             "shutdown" => Ok(ClientFrame::Shutdown),
             "ping" => Ok(ClientFrame::Ping),
             other => bail!("unknown client frame type {other:?}"),
@@ -352,6 +377,12 @@ pub enum ServerFrame {
     /// could not be tied to a request (e.g. malformed bytes). `kind`
     /// is one of the stable `ERR_*` discriminants.
     Error { id: Option<u64>, kind: String, message: String },
+    /// The peer-to-peer reply to a [`ClientFrame::Forward`]: the
+    /// answering node's advertised address wrapped around the ordinary
+    /// reply frame (response / rejection / error, original id intact).
+    /// The forwarding front door unwraps it and relays `frame` to the
+    /// client, so forwarding is invisible on the client's wire.
+    Forwarded { node: String, frame: Box<ServerFrame> },
     ShutdownAck,
     Pong,
 }
@@ -383,6 +414,11 @@ impl ServerFrame {
                 ("id", id.map_or(Json::Null, |v| Json::Num(v as f64))),
                 ("kind", Json::Str(kind.clone())),
                 ("message", Json::Str(message.clone())),
+            ]),
+            ServerFrame::Forwarded { node, frame } => Json::obj(vec![
+                ("type", Json::Str("forwarded".to_string())),
+                ("node", Json::Str(node.clone())),
+                ("frame", frame.to_json()),
             ]),
             ServerFrame::ShutdownAck => {
                 Json::obj(vec![("type", Json::Str("shutdown_ack".to_string()))])
@@ -435,6 +471,21 @@ impl ServerFrame {
                 kind: str_field(j, "kind").unwrap_or("protocol").to_string(),
                 message: str_field(j, "message").unwrap_or_default().to_string(),
             }),
+            "forwarded" => {
+                let inner = j
+                    .get("frame")
+                    .ok_or_else(|| anyhow!("forwarded frame wants an inner \"frame\""))?;
+                let frame = Box::new(ServerFrame::from_json(inner)?);
+                // a nested forwarded-in-forwarded would mean a routing
+                // loop: forwards are never re-forwarded
+                if matches!(*frame, ServerFrame::Forwarded { .. }) {
+                    bail!("forwarded frames do not nest");
+                }
+                Ok(ServerFrame::Forwarded {
+                    node: str_field(j, "node")?.to_string(),
+                    frame,
+                })
+            }
             "shutdown_ack" => Ok(ServerFrame::ShutdownAck),
             "pong" => Ok(ServerFrame::Pong),
             other => bail!("unknown server frame type {other:?}"),
@@ -672,6 +723,129 @@ mod tests {
         // EOF on the boundary
         let mut rd = FrameReader::new(Cursor::new(Vec::new()), MAX_FRAME);
         assert!(matches!(rd.next_frame(), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn forward_wire_form_round_trips_with_the_original_id() {
+        forall(0xF0E4, 128, random_request, |req| {
+            let f = ClientFrame::Forward { from: "10.1.2.3:4000".to_string(), req: req.clone() };
+            let j = f.to_json();
+            match ClientFrame::from_json(&j) {
+                Ok(ClientFrame::Forward { from, req: back }) => {
+                    from == "10.1.2.3:4000"
+                        && back.id == req.id
+                        && back.deadline_ms == req.deadline_ms
+                        && back.quality == req.quality
+                        && ClientFrame::Forward { from, req: back }.to_json() == j
+                }
+                _ => false,
+            }
+        });
+    }
+
+    #[test]
+    fn forwarded_wraps_any_reply_and_refuses_to_nest() {
+        forall(0xFAD0, 64, random_server_frame, |inner| {
+            let f = ServerFrame::Forwarded {
+                node: "10.9.9.9:4501".to_string(),
+                frame: Box::new(inner.clone()),
+            };
+            let j = f.to_json();
+            match ServerFrame::from_json(&j) {
+                Ok(decoded) => decoded.to_json() == j,
+                Err(_) => false,
+            }
+        });
+        // nesting is a routing loop, not a valid wire form
+        let once = ServerFrame::Forwarded {
+            node: "a:1".to_string(),
+            frame: Box::new(ServerFrame::Pong),
+        };
+        let twice = Json::obj(vec![
+            ("type", Json::Str("forwarded".to_string())),
+            ("node", Json::Str("b:2".to_string())),
+            ("frame", once.to_json()),
+        ]);
+        assert!(ServerFrame::from_json(&twice).is_err());
+    }
+
+    /// The satellite fuzz harness: a seeded byte-level mutator over
+    /// valid frame streams. Whatever the mutation — bit flips,
+    /// truncations, or a length prefix lying anywhere up to (and past)
+    /// `MAX_FRAME` — the reader must always terminate with a typed
+    /// error, a clean close, or a (possibly garbage but well-framed)
+    /// frame. Never a panic, never a busy loop.
+    #[test]
+    fn mutated_byte_streams_always_yield_typed_errors_or_clean_close() {
+        forall(0xB17F, 512, |rng: &mut Rng| {
+            // a couple of honest frames to mutate
+            let mut bytes = frame_bytes(&ClientFrame::Request(random_request(rng)).to_json());
+            bytes.extend(frame_bytes(&random_server_frame(rng).to_json()));
+            bytes.extend(frame_bytes(&ClientFrame::Ping.to_json()));
+            let mutations = rng.below(6) + 1;
+            for _ in 0..mutations {
+                if bytes.is_empty() {
+                    break;
+                }
+                match rng.below(3) {
+                    // bit flip anywhere (header or body)
+                    0 => {
+                        let i = rng.below(bytes.len() as u64) as usize;
+                        bytes[i] ^= 1 << rng.below(8);
+                    }
+                    // truncation
+                    1 => {
+                        let keep = rng.below(bytes.len() as u64 + 1) as usize;
+                        bytes.truncate(keep);
+                    }
+                    // length-prefix lie: rewrite a 4-byte window with a
+                    // claimed length anywhere up to just past MAX_FRAME
+                    _ => {
+                        let lie = rng.below(MAX_FRAME as u64 + 2) as u32;
+                        let i = rng.below(bytes.len().saturating_sub(3).max(1) as u64) as usize;
+                        let end = (i + 4).min(bytes.len());
+                        bytes[i..end].copy_from_slice(&lie.to_be_bytes()[..end - i]);
+                    }
+                }
+            }
+            (bytes, rng.below(2) == 0)
+        }, |(bytes, trickle)| {
+            let run = |mut poll: Box<dyn FnMut() -> Result<Option<Json>, FrameError>>| {
+                // a finite stream yields at most len/4 well-formed
+                // headers plus errors; 4 × frames + slack bounds any
+                // non-busy-looping reader. `Ok(None)` can only come
+                // from WouldBlock/TimedOut, which a Cursor never
+                // returns — seeing it would itself be a bug.
+                let budget = bytes.len() / 4 + 16;
+                for _ in 0..budget {
+                    match poll() {
+                        Ok(Some(_)) => {}                          // a surviving frame
+                        Ok(None) => return false,                  // impossible on EOF streams
+                        Err(FrameError::Closed) => return true,    // clean close
+                        Err(FrameError::Truncated) => return true, // typed, terminal
+                        Err(FrameError::Io(_)) => return true,     // typed, terminal
+                        // survivable: the reader must keep going and
+                        // still terminate within budget
+                        Err(FrameError::Oversized { .. }) | Err(FrameError::Malformed(_)) => {}
+                    }
+                }
+                false // never terminated: busy loop
+            };
+            let whole = {
+                let mut rd = FrameReader::new(Cursor::new(bytes.clone()), MAX_FRAME);
+                run(Box::new(move || rd.poll_frame()))
+            };
+            if !*trickle {
+                return whole;
+            }
+            // the same stream delivered one byte at a time must settle
+            // identically-typed (state machine is split-invariant)
+            let dribble = {
+                let mut rd = FrameReader::new(Trickle(Cursor::new(bytes.clone())), MAX_FRAME);
+                run(Box::new(move || rd.poll_frame()))
+            };
+            whole && dribble
+        });
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use crate::catalog::{join, ModelKey};
 use crate::coordinator::{Coordinator, Rejection, SubmitError, Ticket};
+use crate::net::cluster::{Cluster, ForwardOutcome, RoutePlan};
 use crate::net::proto::{
     self, ClientFrame, FrameError, FrameReader, Request, ServerFrame, MAX_FRAME,
 };
@@ -63,14 +64,33 @@ impl NetServer {
         coord: Arc<Coordinator>,
         cfg: NetServerConfig,
     ) -> Result<NetServer> {
+        NetServer::spawn_cluster(listener, coord, cfg, None)
+    }
+
+    /// Like [`NetServer::spawn`], but as a member of a multi-node
+    /// cluster: requests for keys the ring assigns to a peer are
+    /// forwarded to it (and incoming `Forward` frames from peers are
+    /// served locally). Note every server — clustered or not — answers
+    /// `Forward` frames: a member may receive forwarded traffic before
+    /// it has been told about any peers.
+    pub fn spawn_cluster(
+        listener: TcpListener,
+        coord: Arc<Coordinator>,
+        cfg: NetServerConfig,
+        cluster: Option<Arc<Cluster>>,
+    ) -> Result<NetServer> {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let registered = Arc::new(coord.registered_keys().unwrap_or_default());
+        // the name this node signs Forwarded replies with: its
+        // advertised cluster address, or the bound one when peerless
+        let node_name =
+            cluster.as_ref().map(|c| c.node().to_string()).unwrap_or_else(|| addr.to_string());
         let accept = {
             let stop = stop.clone();
             thread::Builder::new().name("ppc-net-accept".to_string()).spawn(move || {
-                accept_loop(listener, coord, registered, cfg, stop)
+                accept_loop(listener, coord, registered, cfg, stop, cluster, node_name)
             })?
         };
         Ok(NetServer { addr, stop, accept: Some(accept) })
@@ -106,12 +126,15 @@ impl Drop for NetServer {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
     coord: Arc<Coordinator>,
     registered: Arc<Vec<ModelKey>>,
     cfg: NetServerConfig,
     stop: Arc<AtomicBool>,
+    cluster: Option<Arc<Cluster>>,
+    node_name: String,
 ) {
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     let nap = cfg.poll.min(Duration::from_millis(20));
@@ -123,9 +146,15 @@ fn accept_loop(
                 let registered = registered.clone();
                 let cfg = cfg.clone();
                 let stop = stop.clone();
-                let spawned = thread::Builder::new()
-                    .name(format!("ppc-net-conn-{peer}"))
-                    .spawn(move || handle_connection(stream, conn_coord, registered, cfg, stop));
+                let cluster = cluster.clone();
+                let node_name = node_name.clone();
+                let spawned = thread::Builder::new().name(format!("ppc-net-conn-{peer}")).spawn(
+                    move || {
+                        handle_connection(
+                            stream, conn_coord, registered, cfg, stop, cluster, node_name,
+                        )
+                    },
+                );
                 match spawned {
                     Ok(h) => conns.push(h),
                     // thread exhaustion: count the connection closed and
@@ -145,20 +174,27 @@ fn accept_loop(
     }
 }
 
-/// What the reader queues for the writer: an immediate frame, or a
-/// ticket whose response is still in flight (FIFO per connection —
-/// this ordering is the pipelining contract).
+/// What the reader queues for the writer: an immediate frame, a ticket
+/// whose response is still in flight, or a forward worker's pending
+/// reply (FIFO per connection — this ordering is the pipelining
+/// contract). `Later`'s optional node name wraps the resolved reply in
+/// a [`ServerFrame::Forwarded`] — set when the request arrived as a
+/// peer's `Forward` frame.
 enum Out {
     Now(Json),
-    Later(u64, Ticket),
+    Later(u64, Ticket, Option<String>),
+    Wait(u64, mpsc::Receiver<Json>),
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     stream: TcpStream,
     coord: Arc<Coordinator>,
     registered: Arc<Vec<ModelKey>>,
     cfg: NetServerConfig,
     stop: Arc<AtomicBool>,
+    cluster: Option<Arc<Cluster>>,
+    node_name: String,
 ) {
     let _ = stream.set_read_timeout(Some(cfg.poll));
     let _ = stream.set_nodelay(true);
@@ -182,7 +218,40 @@ fn handle_connection(
                 coord.metrics().record_net_frame_in();
                 match ClientFrame::from_json(&json) {
                     Ok(ClientFrame::Request(req)) => {
-                        handle_request(&coord, &registered, &out_tx, req)
+                        let received = Instant::now();
+                        let route = ModelKey::route(req.job.app(), req.quality);
+                        let plan = match &cluster {
+                            Some(c) => c.plan(route, registered.contains(&route)),
+                            None => RoutePlan::Local,
+                        };
+                        match plan {
+                            RoutePlan::Local => {
+                                handle_request(&coord, &registered, &out_tx, req, received, None)
+                            }
+                            RoutePlan::Forward(tries) => spawn_forward(
+                                cluster.as_ref().expect("forward plans need a cluster").clone(),
+                                &coord,
+                                &registered,
+                                &out_tx,
+                                req,
+                                received,
+                                tries,
+                            ),
+                        }
+                    }
+                    Ok(ClientFrame::Forward { from: _, req }) => {
+                        // a peer front door relayed this: serve it
+                        // locally (never re-forward — at most one hop)
+                        // and sign the reply with our node name
+                        coord.metrics().record_forward_in();
+                        handle_request(
+                            &coord,
+                            &registered,
+                            &out_tx,
+                            req,
+                            Instant::now(),
+                            Some(node_name.clone()),
+                        );
                     }
                     Ok(ClientFrame::Shutdown) => {
                         // ack *after* every reply already queued, then
@@ -233,38 +302,46 @@ fn handle_connection(
     coord.metrics().record_conn_closed();
 }
 
+/// Submit `req` to the local coordinator, queueing the outcome on the
+/// writer. The relative deadline is anchored at `received` — for a
+/// forwarded request that is the *remaining* budget the forwarder sent,
+/// re-anchored at local receipt. `wrap` (a node name) marks a reply
+/// that must travel back inside a [`ServerFrame::Forwarded`].
 fn handle_request(
     coord: &Coordinator,
     registered: &[ModelKey],
     out_tx: &mpsc::Sender<Out>,
     req: Request,
+    received: Instant,
+    wrap: Option<String>,
 ) {
+    let wrapped = |frame: ServerFrame| match &wrap {
+        Some(node) => {
+            ServerFrame::Forwarded { node: node.clone(), frame: Box::new(frame) }.to_json()
+        }
+        None => frame.to_json(),
+    };
     let route = ModelKey::route(req.job.app(), req.quality);
     if !registered.contains(&route) {
-        let _ = out_tx.send(Out::Now(
-            ServerFrame::Rejected {
-                id: req.id,
-                rejection: Rejection::UnknownModel,
-                message: format!(
-                    "no {route} in the registered catalog (registered: {})",
-                    join(registered.iter())
-                ),
-            }
-            .to_json(),
-        ));
+        let _ = out_tx.send(Out::Now(wrapped(ServerFrame::Rejected {
+            id: req.id,
+            rejection: Rejection::UnknownModel,
+            message: format!(
+                "no {route} in the registered catalog (registered: {})",
+                join(registered.iter())
+            ),
+        })));
         return;
     }
     let submitted = match req.deadline_ms {
-        Some(ms) => coord.submit_deadline(
-            req.job,
-            req.quality,
-            Instant::now() + Duration::from_millis(ms),
-        ),
+        Some(ms) => {
+            coord.submit_deadline(req.job, req.quality, received + Duration::from_millis(ms))
+        }
         None => coord.submit_blocking(req.job, req.quality),
     };
     let frame = match submitted {
         Ok(ticket) => {
-            let _ = out_tx.send(Out::Later(req.id, ticket));
+            let _ = out_tx.send(Out::Later(req.id, ticket, wrap));
             return;
         }
         Err(e @ SubmitError::Shed) | Err(e @ SubmitError::Busy) => ServerFrame::Rejected {
@@ -283,7 +360,134 @@ fn handle_request(
             message: e.to_string(),
         },
     };
-    let _ = out_tx.send(Out::Now(frame.to_json()));
+    let _ = out_tx.send(Out::Now(wrapped(frame)));
+}
+
+/// Relay `req` to the owning peer on a worker thread. The writer gets
+/// an [`Out::Wait`] slot *first* (still on the reader thread, so the
+/// per-connection reply order is preserved); the worker fills it with
+/// whatever the forward walk produces — a peer's reply, a typed
+/// expiry, or the local fallback when every candidate is down.
+fn spawn_forward(
+    cluster: Arc<Cluster>,
+    coord: &Arc<Coordinator>,
+    registered: &Arc<Vec<ModelKey>>,
+    out_tx: &mpsc::Sender<Out>,
+    req: Request,
+    received: Instant,
+    tries: Vec<String>,
+) {
+    coord.metrics().record_forward_out();
+    let (tx, rx) = mpsc::channel::<Json>();
+    let _ = out_tx.send(Out::Wait(req.id, rx));
+    let coord = coord.clone();
+    let registered = registered.clone();
+    let worker = thread::Builder::new().name("ppc-net-forward".to_string()).spawn(move || {
+        let metrics = coord.metrics();
+        let reply = match cluster.forward(&req, received, &tries) {
+            ForwardOutcome::Replied { frame, retries, .. } => {
+                for _ in 0..retries {
+                    metrics.record_forward_retry();
+                }
+                frame.to_json()
+            }
+            ForwardOutcome::Expired => ServerFrame::Rejected {
+                id: req.id,
+                rejection: Rejection::DeadlineExpired,
+                message: "deadline budget spent before the forward hop".to_string(),
+            }
+            .to_json(),
+            ForwardOutcome::Exhausted { retries } => {
+                for _ in 0..retries {
+                    metrics.record_forward_retry();
+                }
+                metrics.record_forward_fallback();
+                if registered.contains(&ModelKey::route(req.job.app(), req.quality)) {
+                    // every replica is down but we can serve the key:
+                    // survivors absorb the dead peer's traffic
+                    serve_fallback(&coord, req, received)
+                } else {
+                    ServerFrame::Rejected {
+                        id: req.id,
+                        rejection: Rejection::UnknownModel,
+                        message: format!(
+                            "no reachable peer serves this key (tried {})",
+                            tries.join(", ")
+                        ),
+                    }
+                    .to_json()
+                }
+            }
+        };
+        let _ = tx.send(reply);
+    });
+    if worker.is_err() {
+        // thread exhaustion: the Wait slot's sender is gone; the writer
+        // answers with a typed exec error
+        coord.metrics().record_forward_fallback();
+    }
+}
+
+/// The local fallback of an exhausted forward walk: submit here and
+/// block for the outcome (the worker thread owns the wait).
+fn serve_fallback(coord: &Coordinator, req: Request, received: Instant) -> Json {
+    let submitted = match req.deadline_ms {
+        Some(ms) => {
+            coord.submit_deadline(req.job, req.quality, received + Duration::from_millis(ms))
+        }
+        None => coord.submit_blocking(req.job, req.quality),
+    };
+    let ticket = match submitted {
+        Ok(t) => t,
+        Err(e @ SubmitError::Shed) | Err(e @ SubmitError::Busy) => {
+            return ServerFrame::Rejected {
+                id: req.id,
+                rejection: Rejection::Shed,
+                message: e.to_string(),
+            }
+            .to_json()
+        }
+        Err(e @ SubmitError::Expired) => {
+            return ServerFrame::Rejected {
+                id: req.id,
+                rejection: Rejection::DeadlineExpired,
+                message: e.to_string(),
+            }
+            .to_json()
+        }
+        Err(e @ SubmitError::Down) => {
+            return ServerFrame::Error {
+                id: Some(req.id),
+                kind: proto::ERR_DOWN.to_string(),
+                message: e.to_string(),
+            }
+            .to_json()
+        }
+    };
+    resolve_ticket(req.id, ticket).to_json()
+}
+
+/// Wait out a ticket and translate the outcome into its reply frame
+/// (shared by the writer loop and the forward fallback path).
+fn resolve_ticket(id: u64, ticket: Ticket) -> ServerFrame {
+    match ticket.wait() {
+        Ok(r) => ServerFrame::Response {
+            id,
+            route: r.route,
+            tier: r.tier,
+            quality: r.quality,
+            degraded: r.degraded,
+            outputs: r.outputs,
+        },
+        Err(e) => match e.downcast_ref::<Rejection>() {
+            Some(&rej) => ServerFrame::Rejected { id, rejection: rej, message: format!("{e:#}") },
+            None => ServerFrame::Error {
+                id: Some(id),
+                kind: proto::ERR_EXEC.to_string(),
+                message: format!("{e:#}"),
+            },
+        },
+    }
 }
 
 fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>, coord: Arc<Coordinator>) {
@@ -291,29 +495,25 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Out>, coord: Arc<Coordi
     while let Ok(out) = rx.recv() {
         let frame = match out {
             Out::Now(j) => j,
-            Out::Later(id, ticket) => match ticket.wait() {
-                Ok(r) => ServerFrame::Response {
-                    id,
-                    route: r.route,
-                    tier: r.tier,
-                    quality: r.quality,
-                    degraded: r.degraded,
-                    outputs: r.outputs,
+            Out::Later(id, ticket, wrap) => {
+                let frame = resolve_ticket(id, ticket);
+                match wrap {
+                    Some(node) => {
+                        ServerFrame::Forwarded { node, frame: Box::new(frame) }.to_json()
+                    }
+                    None => frame.to_json(),
                 }
-                .to_json(),
-                Err(e) => match e.downcast_ref::<Rejection>() {
-                    Some(&rej) => {
-                        ServerFrame::Rejected { id, rejection: rej, message: format!("{e:#}") }
-                            .to_json()
-                    }
-                    None => ServerFrame::Error {
-                        id: Some(id),
-                        kind: proto::ERR_EXEC.to_string(),
-                        message: format!("{e:#}"),
-                    }
-                    .to_json(),
-                },
-            },
+            }
+            // a forward worker's pending reply; a dead worker (thread
+            // exhaustion) degrades to a typed exec error
+            Out::Wait(id, worker_rx) => worker_rx.recv().unwrap_or_else(|_| {
+                ServerFrame::Error {
+                    id: Some(id),
+                    kind: proto::ERR_EXEC.to_string(),
+                    message: "forward worker died before replying".to_string(),
+                }
+                .to_json()
+            }),
         };
         // even after a dead client we keep draining the channel so
         // every in-flight ticket resolves (permits release on drop)
@@ -356,6 +556,39 @@ mod tests {
         assert_eq!(coord.metrics().net_frames_in(), 1);
         assert_eq!(coord.metrics().net_frames_out(), 1);
         assert_eq!(coord.metrics().net_protocol_errors(), 0);
+    }
+
+    #[test]
+    fn peerless_servers_answer_forward_frames_with_wrapped_replies() {
+        use crate::catalog::{Quality, Tensor};
+        use crate::coordinator::Job;
+        // node A of the two-process bootstrap: it has no --peer flags
+        // yet, but node B already forwards to it
+        let (coord, server) = mock_server();
+        let mut w = TcpStream::connect(server.local_addr()).unwrap();
+        let r = w.try_clone().unwrap();
+        let req = Request {
+            id: 41,
+            job: Job::Denoise { image: Tensor::scalar(8) },
+            quality: Quality::Balanced,
+            deadline_ms: Some(5_000),
+        };
+        let f = ClientFrame::Forward { from: "10.0.0.9:4500".to_string(), req };
+        proto::write_frame(&mut w, &f.to_json()).unwrap();
+        let mut rd = FrameReader::new(r, MAX_FRAME);
+        match ServerFrame::from_json(&rd.next_frame().unwrap()).unwrap() {
+            ServerFrame::Forwarded { node, frame } => {
+                assert_eq!(node, server.local_addr().to_string());
+                assert!(
+                    matches!(*frame, ServerFrame::Response { id: 41, .. }),
+                    "wanted the original id back, got {frame:?}"
+                );
+            }
+            other => panic!("wanted a Forwarded reply, got {other:?}"),
+        }
+        assert_eq!(coord.metrics().forwards_in(), 1);
+        server.shutdown();
+        server.join();
     }
 
     #[test]

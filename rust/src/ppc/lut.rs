@@ -252,6 +252,20 @@ mod tests {
     }
 
     #[test]
+    fn unit_backend_override_round_trips_under_the_shared_guard() {
+        // BACKEND is process-global state: hold the shared override
+        // lock so this test cannot interleave with anything else that
+        // reads or asserts a specific default, then restore.
+        let _guard = crate::util::pool::process_override_test_lock();
+        let prev = unit_backend();
+        for b in [UnitBackend::Tape, UnitBackend::Lut, UnitBackend::Auto] {
+            set_unit_backend(b);
+            assert_eq!(unit_backend(), b);
+        }
+        set_unit_backend(prev);
+    }
+
+    #[test]
     fn sweep_tape_matches_interpreted_eval_on_every_minterm() {
         // a 9-input netlist (the adder-segment shape)
         let lib = cells90();

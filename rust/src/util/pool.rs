@@ -50,13 +50,24 @@ pub fn batch_threads() -> usize {
     }
 }
 
-/// Serializes tests that mutate the process-global batch-thread override —
-/// any thread count is bit-exact, but a test asserting a *specific* count
-/// must not interleave with another test's override.
+/// Serializes tests that mutate *any* process-global override — the
+/// batch-thread count here and the unit-backend default in
+/// `crate::ppc::lut`. Every value is bit-exact, but a test asserting a
+/// *specific* global must not interleave with another test's override,
+/// at any `--test-threads`. One shared lock (rather than one per
+/// global) keeps the suite order-independent even when a single test
+/// touches several overrides.
 #[doc(hidden)]
-pub fn batch_threads_test_lock() -> std::sync::MutexGuard<'static, ()> {
+pub fn process_override_test_lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The batch-thread spelling of [`process_override_test_lock`] (same
+/// lock — kept so existing guard sites read naturally).
+#[doc(hidden)]
+pub fn batch_threads_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    process_override_test_lock()
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`

@@ -1,0 +1,429 @@
+//! Multi-node serving integration tests: an in-process ring of real
+//! `NetServer` listeners (port 0, one process, no subprocesses) wired
+//! together with per-node [`Cluster`] routers, driven over real
+//! loopback sockets.
+//!
+//! What must hold, per the multi-node contract:
+//!
+//! - forwarded execution is **bit-exact** with local execution for
+//!   every registered catalog key (the wire hop may not perturb
+//!   payloads, routes, tiers, or measured quality);
+//! - killing a peer mid-burst loses **zero** requests — every
+//!   scheduled request settles with a typed frame (response or
+//!   rejection), never a hang or a bare disconnect;
+//! - draining a node over the wire (`shutdown` frame) rehomes its
+//!   keys onto survivors with no protocol errors;
+//! - deadline budgets **shrink across the forward hop**: time spent
+//!   on a failed candidate is gone, and the local fallback refuses
+//!   with a typed expiry rather than serving late.
+//!
+//! Fault injection goes through the seeded [`FaultPolicy`] shim
+//! (delay / drop / truncate / black-hole), installed per-cluster —
+//! never process-global — so the suite is deterministic and
+//! order-independent at any `--test-threads`.
+
+use ppc::catalog::{App, ModelKey, Tensor};
+use ppc::coordinator::{Coordinator, CoordinatorConfig, Job, MockExecutor, Rejection};
+use ppc::net::cluster::{Cluster, ClusterConfig};
+use ppc::net::fault::{FaultAction, FaultPolicy};
+use ppc::net::loadgen;
+use ppc::net::proto::{self, ClientFrame, FrameReader, Request, ServerFrame, MAX_FRAME};
+use ppc::net::server::{NetServer, NetServerConfig};
+use ppc::net::PeerState;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// FRNN row length for every node (small keeps frames cheap).
+const ROW: usize = 8;
+
+fn base_config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        queue_capacity: 64,
+        batch_size: 4,
+        classify_row: ROW,
+        batch_max_wait: Duration::from_millis(1),
+        shards: 1,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// One ring member: a real listener + coordinator + cluster router.
+struct Node {
+    addr: String,
+    coord: Arc<Coordinator>,
+    cluster: Arc<Cluster>,
+    server: Option<NetServer>,
+}
+
+impl Node {
+    /// Hard-stop the front door (drains in-flight connections, then
+    /// closes the listener — new connects get refused). The
+    /// coordinator and cluster stay alive, like a crashed-but-held
+    /// process image.
+    fn kill(&mut self) {
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+            s.join();
+        }
+    }
+}
+
+/// Boot an `n`-member ring in this process: bind every listener first
+/// (so port 0 resolves before anyone lists peers), then start each
+/// member's cluster + server with the full peer list. Every node
+/// registers the full mock catalog, so any member can serve any key —
+/// which keys actually forward is decided purely by ring ownership.
+fn ring(n: usize) -> Vec<Node> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, listener)| {
+            let coord = Arc::new(
+                Coordinator::start(base_config(), |_shard| Ok(MockExecutor::full_catalog()))
+                    .unwrap(),
+            );
+            let peers: Vec<String> = addrs
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| j != i)
+                .map(|(_, a)| a.clone())
+                .collect();
+            let cluster = Arc::new(Cluster::start(ClusterConfig {
+                node: addrs[i].clone(),
+                peers,
+                // liveness is driven through forwards in these tests; a
+                // quiet prober keeps every state transition deterministic
+                probe_interval: Duration::from_secs(3600),
+                forward_connect_timeout: Duration::from_millis(300),
+                forward_read_timeout: Duration::from_millis(700),
+                ..ClusterConfig::default()
+            }));
+            let server = NetServer::spawn_cluster(
+                listener,
+                coord.clone(),
+                NetServerConfig::default(),
+                Some(cluster.clone()),
+            )
+            .unwrap();
+            Node { addr: addrs[i].clone(), coord, cluster, server: Some(server) }
+        })
+        .collect()
+}
+
+/// Deterministic payload for `(app, seed)` — identical on every call,
+/// so the forwarded and the local run score the exact same job.
+fn job_for(app: App, seed: i32) -> Job {
+    let base: Vec<i32> = (0..4).map(|i| (seed + i).rem_euclid(256)).collect();
+    match app {
+        App::Gdf => Job::Denoise { image: Tensor::matrix(2, 2, base).unwrap() },
+        App::Blend => Job::Blend {
+            p1: Tensor::matrix(2, 2, base.clone()).unwrap(),
+            p2: Tensor::matrix(2, 2, base.iter().map(|v| (v + 7) % 256).collect()).unwrap(),
+            alpha: 64,
+        },
+        App::Frnn => {
+            Job::Classify { pixels: (0..ROW as i32).map(|i| (seed + i).rem_euclid(160)).collect() }
+        }
+    }
+}
+
+/// Read one server frame, bounded so a wedged node fails the test
+/// instead of hanging it (needs a read timeout on the stream).
+fn read_frame_within(reader: &mut FrameReader<TcpStream>, within: Duration) -> ServerFrame {
+    let t0 = Instant::now();
+    loop {
+        match reader.poll_frame() {
+            Ok(Some(j)) => return ServerFrame::from_json(&j).unwrap(),
+            Ok(None) => assert!(t0.elapsed() < within, "no frame within {within:?}"),
+            Err(e) => panic!("read failed: {e}"),
+        }
+    }
+}
+
+/// One request, one fresh connection, one typed reply (bounded).
+fn roundtrip(addr: &str, req: Request) -> ServerFrame {
+    let mut w = TcpStream::connect(addr).unwrap();
+    let r = w.try_clone().unwrap();
+    let _ = r.set_read_timeout(Some(Duration::from_millis(50)));
+    proto::write_frame(&mut w, &ClientFrame::Request(req).to_json()).unwrap();
+    let mut rd = FrameReader::new(r, MAX_FRAME);
+    read_frame_within(&mut rd, Duration::from_secs(20))
+}
+
+/// Index of the ring owner of `key` in `nodes`.
+fn owner_index(nodes: &[Node], key: ModelKey) -> usize {
+    let owner = nodes[0].cluster.owner(key).to_string();
+    nodes.iter().position(|n| n.addr == owner).expect("owner is a ring member")
+}
+
+/// Some catalog key the first node does NOT own (so sending it there
+/// forwards), together with its owner's index.
+fn foreign_key(nodes: &[Node], sender: usize) -> (ModelKey, usize) {
+    for key in ModelKey::catalog() {
+        let o = owner_index(nodes, key);
+        if o != sender {
+            return (key, o);
+        }
+    }
+    panic!("rendezvous hashing put all 9 keys on one node");
+}
+
+#[test]
+fn every_catalog_key_is_bit_exact_across_the_forward_hop() {
+    let nodes = ring(3);
+    let mut forwarded = 0u64;
+    for (i, key) in ModelKey::catalog().into_iter().enumerate() {
+        let owner = owner_index(&nodes, key);
+        // any non-owner front door will do as the forwarding sender
+        let sender = (0..nodes.len()).find(|&s| s != owner).unwrap();
+        let mk_req = || Request {
+            id: 7_000 + i as u64,
+            job: job_for(key.app, 31 * i as i32 + 5),
+            quality: key.tier(),
+            deadline_ms: Some(30_000),
+        };
+        let via_forward = roundtrip(&nodes[sender].addr, mk_req());
+        let via_local = roundtrip(&nodes[owner].addr, mk_req());
+        match (via_forward, via_local) {
+            (
+                ServerFrame::Response {
+                    id: fid,
+                    route: froute,
+                    tier: ftier,
+                    quality: fq,
+                    degraded: fdeg,
+                    outputs: fout,
+                },
+                ServerFrame::Response {
+                    id: lid,
+                    route: lroute,
+                    tier: ltier,
+                    quality: lq,
+                    degraded: ldeg,
+                    outputs: lout,
+                },
+            ) => {
+                assert_eq!(fid, lid, "{key}: the forward hop must keep the original id");
+                assert_eq!(froute, lroute, "{key}: route drifted across the hop");
+                assert_eq!(ftier, ltier, "{key}: tier drifted across the hop");
+                assert_eq!(fq, lq, "{key}: measured quality drifted across the hop");
+                assert_eq!(fdeg, ldeg, "{key}: degraded flag drifted across the hop");
+                assert_eq!(fout, lout, "{key}: forwarded outputs are not bit-exact");
+            }
+            (f, l) => panic!("{key}: wanted two responses, got {f:?} / {l:?}"),
+        }
+        forwarded += 1;
+    }
+    // every key really crossed the wire boundary once
+    let total_in: u64 = nodes.iter().map(|n| n.coord.metrics().forwards_in()).sum();
+    let total_out: u64 = nodes.iter().map(|n| n.coord.metrics().forwards_out()).sum();
+    assert_eq!(total_in, forwarded, "every request must have taken the forward path");
+    assert_eq!(total_out, forwarded);
+    for n in &nodes {
+        assert_eq!(n.coord.metrics().net_protocol_errors(), 0, "{}", n.addr);
+    }
+}
+
+#[test]
+fn a_peer_killed_mid_burst_loses_zero_requests() {
+    let mut nodes = ring(2);
+    let (key, owner) = foreign_key(&nodes, 0);
+    assert_eq!(owner, 1);
+    let total = 40u64;
+    let half = 20u64;
+
+    let mut w = TcpStream::connect(&nodes[0].addr).unwrap();
+    let r = w.try_clone().unwrap();
+    let _ = r.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut rd = FrameReader::new(r, MAX_FRAME);
+    let send = |w: &mut TcpStream, id: u64| {
+        let req = Request {
+            id,
+            job: job_for(key.app, id as i32),
+            quality: key.tier(),
+            deadline_ms: None,
+        };
+        proto::write_frame(w, &ClientFrame::Request(req).to_json()).unwrap();
+    };
+    let mut got = Vec::new();
+    // phase 1: everything forwards to the (live) owner
+    for id in 0..half {
+        send(&mut w, id);
+    }
+    while (got.len() as u64) < half {
+        got.push(read_frame_within(&mut rd, Duration::from_secs(20)));
+    }
+    // kill the owner mid-burst: its listener closes, so the survivor's
+    // next forward is refused, marks it dead, and serves locally
+    nodes[1].kill();
+    for id in half..total {
+        send(&mut w, id);
+    }
+    let _ = w.shutdown(Shutdown::Write);
+    while (got.len() as u64) < total {
+        got.push(read_frame_within(&mut rd, Duration::from_secs(20)));
+    }
+
+    // zero lost: every id settled, typed, and in pipeline order
+    assert_eq!(got.len() as u64, total);
+    for (want_id, frame) in (0..total).zip(&got) {
+        match frame {
+            ServerFrame::Response { id, route, .. } => {
+                assert_eq!(*id, want_id, "replies must keep pipeline order");
+                assert_eq!(*route, key);
+            }
+            ServerFrame::Rejected { id, .. } => {
+                panic!("id {id}: no request should be rejected here (no deadlines, idle queue)")
+            }
+            other => panic!("id {want_id}: untyped outcome {other:?}"),
+        }
+    }
+    assert_eq!(nodes[0].coord.metrics().net_protocol_errors(), 0);
+    assert_eq!(
+        nodes[0].cluster.peer_state(&nodes[1].addr),
+        Some(PeerState::Dead),
+        "the killed owner must be failure-detected"
+    );
+    assert!(
+        nodes[0].coord.metrics().forward_fallbacks() >= 1,
+        "post-kill requests must have rehomed locally"
+    );
+}
+
+#[test]
+fn wire_drain_rehomes_keys_onto_survivors_without_protocol_errors() {
+    let nodes = ring(2);
+    let (key, owner) = foreign_key(&nodes, 0);
+    // warm path: the key really lives on the other node
+    let req = |id: u64| Request {
+        id,
+        job: job_for(key.app, id as i32),
+        quality: key.tier(),
+        deadline_ms: None,
+    };
+    assert!(matches!(roundtrip(&nodes[0].addr, req(1)), ServerFrame::Response { id: 1, .. }));
+    assert_eq!(nodes[owner].coord.metrics().forwards_in(), 1);
+
+    // drain the owner over the wire, exactly like `loadgen --shutdown`
+    loadgen::send_shutdown(&nodes[owner].addr).unwrap();
+
+    // survivors absorb the drained node's keys: every follow-up request
+    // is answered, and the drained peer walks to Dead (refused connects
+    // kill it instantly; a still-closing listener costs timeout misses)
+    let give_up = Instant::now() + Duration::from_secs(30);
+    let mut id = 100u64;
+    loop {
+        match roundtrip(&nodes[0].addr, req(id)) {
+            ServerFrame::Response { .. } => {}
+            other => panic!("rehomed request must be answered, got {other:?}"),
+        }
+        if nodes[0].cluster.peer_state(&nodes[owner].addr) == Some(PeerState::Dead) {
+            break;
+        }
+        assert!(Instant::now() < give_up, "drained peer never failure-detected");
+        id += 1;
+    }
+    // and once Dead, routing is purely local: no more forward attempts
+    let retries_settled = nodes[0].coord.metrics().forward_retries();
+    assert!(matches!(roundtrip(&nodes[0].addr, req(999)), ServerFrame::Response { id: 999, .. }));
+    assert_eq!(nodes[0].coord.metrics().forward_retries(), retries_settled);
+    assert_eq!(nodes[0].coord.metrics().net_protocol_errors(), 0);
+    assert!(nodes[0].coord.metrics().forward_fallbacks() >= 1);
+}
+
+#[test]
+fn a_black_holed_owner_spends_the_budget_and_expires_typed() {
+    let nodes = ring(2);
+    let (key, owner) = foreign_key(&nodes, 0);
+    // every connection to the owner vanishes: no RST, no bytes back —
+    // only the shrinking deadline budget can end the attempt
+    let policy =
+        Arc::new(FaultPolicy::new(0xB1AC).rule(&nodes[owner].addr, FaultAction::BlackHole));
+    nodes[0].cluster.set_fault_policy(policy.clone());
+
+    let deadline_ms = 150u64;
+    let t0 = Instant::now();
+    let reply = roundtrip(
+        &nodes[0].addr,
+        Request {
+            id: 5,
+            job: job_for(key.app, 9),
+            quality: key.tier(),
+            deadline_ms: Some(deadline_ms),
+        },
+    );
+    let elapsed = t0.elapsed();
+    // the budget died on the wire: the local fallback must refuse with
+    // a typed expiry (serving late would violate the deadline contract)
+    match reply {
+        ServerFrame::Rejected { id: 5, rejection: Rejection::DeadlineExpired, .. } => {}
+        other => panic!("wanted a typed deadline expiry, got {other:?}"),
+    }
+    assert!(
+        elapsed >= Duration::from_millis(deadline_ms),
+        "expiry cannot precede the budget ({elapsed:?})"
+    );
+    assert!(policy.injected() >= 1, "the fault shim never fired");
+    assert_eq!(nodes[0].coord.metrics().net_protocol_errors(), 0);
+    assert!(nodes[0].coord.metrics().forward_retries() >= 1);
+}
+
+#[test]
+fn a_slow_wire_inside_the_budget_still_answers() {
+    let nodes = ring(2);
+    let (key, owner) = foreign_key(&nodes, 0);
+    let stall = Duration::from_millis(60);
+    let policy =
+        Arc::new(FaultPolicy::new(0xDE1A).rule(&nodes[owner].addr, FaultAction::Delay(stall)));
+    nodes[0].cluster.set_fault_policy(policy.clone());
+
+    let t0 = Instant::now();
+    let reply = roundtrip(
+        &nodes[0].addr,
+        Request {
+            id: 6,
+            job: job_for(key.app, 11),
+            quality: key.tier(),
+            deadline_ms: Some(5_000),
+        },
+    );
+    assert!(matches!(&reply, ServerFrame::Response { id: 6, .. }), "{reply:?}");
+    assert!(t0.elapsed() >= stall, "the stall must have been on the serving path");
+    assert!(policy.injected() >= 1);
+    assert_eq!(nodes[owner].coord.metrics().forwards_in(), 1, "still served by the owner");
+}
+
+#[test]
+fn truncated_forward_streams_fail_over_to_a_typed_local_reply() {
+    let nodes = ring(2);
+    let (key, owner) = foreign_key(&nodes, 0);
+    // first forward connection severs 10 bytes in (mid-header/body);
+    // later connections run clean
+    let policy = Arc::new(
+        FaultPolicy::new(0x7C0C).rule_n(&nodes[owner].addr, FaultAction::Truncate(10), 1),
+    );
+    nodes[0].cluster.set_fault_policy(policy.clone());
+
+    let req = |id: u64| Request {
+        id,
+        job: job_for(key.app, id as i32),
+        quality: key.tier(),
+        deadline_ms: None,
+    };
+    // the severed hop is retried out of candidates, then served locally
+    assert!(matches!(roundtrip(&nodes[0].addr, req(21)), ServerFrame::Response { id: 21, .. }));
+    assert_eq!(policy.injected(), 1);
+    assert!(nodes[0].coord.metrics().forward_retries() >= 1);
+    assert!(nodes[0].coord.metrics().forward_fallbacks() >= 1);
+    // a truncated stream is a Suspect, not a Dead: the next request
+    // forwards again over the now-clean wire and the peer recovers
+    let before = nodes[owner].coord.metrics().forwards_in();
+    assert!(matches!(roundtrip(&nodes[0].addr, req(22)), ServerFrame::Response { id: 22, .. }));
+    assert_eq!(nodes[owner].coord.metrics().forwards_in(), before + 1);
+    assert_eq!(nodes[0].cluster.peer_state(&nodes[owner].addr), Some(PeerState::Alive));
+}
